@@ -1,0 +1,55 @@
+//! Quickstart: load the AOT artifacts, run one batch through the PJRT
+//! runtime, and print the logits — the smallest possible end-to-end check
+//! that the three layers compose (Pallas kernel → JAX model → HLO text →
+//! rust PJRT execution).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use orloj::core::request::{AppId, Request};
+use orloj::runtime::executor::PjrtWorker;
+use orloj::runtime::ModelRuntime;
+use orloj::sim::worker::Worker;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    println!("loading artifacts from {dir}/ ...");
+    let rt = Arc::new(ModelRuntime::load(Path::new(&dir))?);
+    println!(
+        "platform={} variants={} (depths 1..{} × batch sizes {:?})",
+        rt.platform(),
+        rt.variant_count(),
+        rt.manifest.model.max_depth,
+        rt.manifest.batch_sizes
+    );
+
+    // Run one real batch at depth 2.
+    let seq = rt.manifest.model.seq;
+    let tokens: Vec<i32> = (0..2 * seq).map(|i| (i % 7) as i32).collect();
+    let logits = rt.execute(2, 2, &tokens)?;
+    println!(
+        "executed (depth=2, batch=2): {} logits, first row = {:?}",
+        logits.len(),
+        &logits[..rt.manifest.model.classes.min(8)]
+    );
+
+    // Calibrate per-depth solo latency — the numbers the serving examples
+    // feed to the schedulers' profilers.
+    let mut worker = PjrtWorker::new(rt.clone());
+    println!("calibrating per-depth latency (bs=1):");
+    for (depth, ms) in worker.calibrate(20) {
+        println!("  depth {depth}: {ms:.3} ms");
+    }
+
+    // And one timed batch through the Worker interface.
+    let batch: Vec<Request> = (0..4)
+        .map(|i| Request::new(i, AppId(0), 0, 1_000_000, 1.0).with_variant(1 + (i % 2) as u32))
+        .collect();
+    let ms = worker.execute(&batch);
+    println!("mixed-depth batch of 4 executed in {ms:.3} ms (ran at depth 2)");
+    println!("quickstart OK");
+    Ok(())
+}

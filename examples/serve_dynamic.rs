@@ -1,0 +1,178 @@
+//! END-TO-END driver: serve the real early-exit transformer through the
+//! full stack — AOT artifacts → PJRT runtime → rust coordinator — under an
+//! open-loop trace with data-dependent depths, and report finish rate /
+//! latency / throughput for Orloj vs a baseline.
+//!
+//! This is the proof that all layers compose: the Pallas-kernel model
+//! compiled by `make artifacts` really executes on the request path, batch
+//! latency genuinely varies with the batch's max early-exit depth, and the
+//! schedulers react to measured (not simulated) time.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_dynamic [-- --requests 400]`
+
+use orloj::baselines;
+use orloj::clock::ms_to_us;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::histogram::Histogram;
+use orloj::core::request::{AppId, Request};
+use orloj::runtime::executor::PjrtWorker;
+use orloj::runtime::ModelRuntime;
+use orloj::scheduler::{Scheduler, SchedulerConfig};
+use orloj::server::metrics::RunReport;
+use orloj::server::Server;
+use orloj::sim::worker::Worker;
+use orloj::util::cli::Args;
+use orloj::util::rng::Rng;
+use orloj::util::stats;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Workload {
+    /// (delay before submit µs, depth)
+    arrivals: Vec<(u64, u32)>,
+    slo_ms: f64,
+}
+
+fn build_workload(n: usize, max_depth: usize, mean_gap_us: f64, slo_ms: f64, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    let arrivals = (0..n)
+        .map(|_| {
+            // Two "apps": shallow-exit traffic and deep-exit traffic.
+            let depth = if rng.chance(0.6) {
+                1 + rng.index(2) as u32 // depths 1-2
+            } else {
+                max_depth as u32 // deep path
+            };
+            (rng.exponential(1.0 / mean_gap_us) as u64, depth)
+        })
+        .collect();
+    Workload { arrivals, slo_ms }
+}
+
+fn run_system(
+    system: &str,
+    rt: &Arc<ModelRuntime>,
+    wl: &Workload,
+    calib: &[(usize, f64)],
+    cost: BatchCostModel,
+) -> (RunReport, f64) {
+    let cfg = SchedulerConfig {
+        cost_model: cost,
+        batch_sizes: rt.manifest.batch_sizes.clone(),
+        refresh_every: 200_000,
+        ..Default::default()
+    };
+    let mut sched = baselines::by_name(system, cfg, 7).expect("system");
+    for (depth, ms) in calib {
+        // App d-1 ↔ early-exit depth d; seed with the calibrated solo time.
+        sched.seed_app_profile(AppId(*depth as u32 - 1), &Histogram::constant(*ms), 100);
+    }
+    let worker = PjrtWorker::new(rt.clone());
+    let (submitter, rx) = Server::<Box<dyn Scheduler>, PjrtWorker>::channel();
+    let server = Server::new(sched, worker);
+    let handle = std::thread::spawn(move || server.run(rx));
+    let t0 = Instant::now();
+    for (i, (gap_us, depth)) in wl.arrivals.iter().enumerate() {
+        std::thread::sleep(Duration::from_micros(*gap_us));
+        let release = t0.elapsed().as_micros() as u64;
+        let exec_ms = calib
+            .iter()
+            .find(|(d, _)| *d == *depth as usize)
+            .map(|(_, m)| *m)
+            .unwrap_or(1.0);
+        let req = Request::new(i as u64, AppId(depth - 1), release, ms_to_us(wl.slo_ms), exec_ms)
+            .with_variant(*depth);
+        submitter.submit(req);
+    }
+    drop(submitter);
+    let completions = handle.join().unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = RunReport::from_completions(&completions);
+    let throughput = report.total as f64 / wall_s;
+    (report, throughput)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let n = args.get_usize("requests", 400);
+    let rt = Arc::new(ModelRuntime::load(Path::new(&dir))?);
+    println!(
+        "loaded {} variants on {} (depths 1..{}, batch sizes {:?})",
+        rt.variant_count(),
+        rt.platform(),
+        rt.manifest.model.max_depth,
+        rt.manifest.batch_sizes
+    );
+
+    // Calibrate real per-depth latencies and fit the linear batch model
+    // from measured batch runs.
+    let mut worker = PjrtWorker::new(rt.clone());
+    let calib = worker.calibrate(30);
+    println!("per-depth solo latency: {calib:?}");
+    let mean_solo = stats::mean(&calib.iter().map(|(_, m)| *m).collect::<Vec<_>>());
+    // Measure batch latency at max depth for each supported size → fit c0/c1.
+    let max_depth = rt.manifest.model.max_depth;
+    let deep_ms = calib.last().map(|(_, m)| *m).unwrap_or(mean_solo);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &bs in &rt.manifest.batch_sizes {
+        let batch: Vec<Request> = (0..bs)
+            .map(|i| {
+                Request::new(i as u64, AppId(0), 0, 1_000_000, deep_ms)
+                    .with_variant(max_depth as u32)
+            })
+            .collect();
+        let _ = worker.execute(&batch); // warm
+        let t0 = Instant::now();
+        let reps = 10;
+        for _ in 0..reps {
+            let _ = worker.execute(&batch);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / reps as f64;
+        println!("  measured batch (depth={max_depth}, bs={bs}): {ms:.3} ms");
+        xs.push(bs as f64 * deep_ms);
+        ys.push(ms);
+    }
+    // Least-squares fit ms = c0 + c1·(k·l).
+    let xm = stats::mean(&xs);
+    let ym = stats::mean(&ys);
+    let c1 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| (x - xm) * (y - ym))
+        .sum::<f64>()
+        / xs.iter().map(|x| (x - xm) * (x - xm)).sum::<f64>().max(1e-9);
+    let c0 = (ym - c1 * xm).max(0.0);
+    let c1 = c1.max(0.01);
+    println!("fitted batch cost model: c0={c0:.3} ms, c1={c1:.3}");
+    let cost = BatchCostModel::new(c0, c1);
+
+    // Open-loop workload: SLO = 12× the deep solo latency; arrival rate
+    // ~70% of fitted bs=8 capacity.
+    let cap8 = 8.0 / (cost.latency(8, deep_ms) / 1000.0);
+    let rate = 0.7 * cap8;
+    let gap_us = 1e6 / rate;
+    let slo_ms = args.get_f64("slo-ms", 12.0 * deep_ms);
+    println!("offered rate ≈ {rate:.0} req/s (70% of bs=8 capacity), SLO = {slo_ms:.1} ms");
+    let wl = build_workload(n, max_depth, gap_us, slo_ms, 2024);
+
+    println!("\n{:>10} {:>12} {:>12} {:>12} {:>12} {:>10}", "system", "finish_rate", "p50(ms)", "p99(ms)", "thru(r/s)", "mean_bs");
+    let mut rows = Vec::new();
+    for system in ["clockwork", "edf", "orloj"] {
+        let (report, thru) = run_system(system, &rt, &wl, &calib, cost);
+        println!(
+            "{:>10} {:>12.3} {:>12.2} {:>12.2} {:>12.0} {:>10.1}",
+            system,
+            report.finish_rate(),
+            report.latency.p50,
+            report.latency.p99,
+            thru,
+            report.mean_batch_size
+        );
+        rows.push((system, report.finish_rate()));
+    }
+    println!("\nserve_dynamic OK — record these rows in EXPERIMENTS.md §End-to-end");
+    Ok(())
+}

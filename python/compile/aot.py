@@ -1,0 +1,122 @@
+"""AOT lowering: early-exit transformer → HLO text artifacts + manifest.
+
+Emits one HLO **text** file per (depth, batch-size) variant — text, NOT
+``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids that the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as:  cd python && python -m compile.aot --out ../artifacts
+The Makefile `artifacts` target does exactly that and is a no-op when the
+inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, init_params, make_apply
+
+BATCH_SIZES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    ``print_large_constants`` is essential: the model weights are baked into
+    the graph as constants, and the default printer elides anything big as
+    ``constant({...})``, which the rust-side text parser cannot reconstruct.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax ≥ 0.8 emits source_end_line/source_end_column metadata attributes
+    # that xla_extension 0.5.1's text parser rejects; metadata is debug-only.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_variant(params, cfg: ModelConfig, depth: int, batch: int) -> str:
+    apply = make_apply(params, cfg, depth, interpret=True)
+    spec = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    lowered = jax.jit(apply).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, cfg: ModelConfig, batch_sizes=None, verbose=True) -> dict:
+    batch_sizes = batch_sizes or BATCH_SIZES
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg)
+    variants = []
+    t0 = time.time()
+    for depth in range(1, cfg.max_depth + 1):
+        for bs in batch_sizes:
+            name = f"model_d{depth}_b{bs}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            text = lower_variant(params, cfg, depth, bs)
+            with open(path, "w") as f:
+                f.write(text)
+            variants.append(
+                {"depth": depth, "batch": bs, "path": name, "bytes": len(text)}
+            )
+            if verbose:
+                print(f"  wrote {name} ({len(text)//1024} KiB)")
+    # Golden outputs: canonical tokens → logits per depth at bs=1, so the
+    # rust runtime can assert numerics parity with the python build path.
+    golden_tokens = [(i * 7 + 3) % cfg.vocab for i in range(cfg.seq)]
+    golden = []
+    tok = jnp.asarray([golden_tokens], dtype=jnp.int32)
+    for depth in range(1, cfg.max_depth + 1):
+        logits = make_apply(params, cfg, depth)(tok)[0]
+        golden.append(
+            {"depth": depth, "logits": [float(x) for x in logits[0]]}
+        )
+    manifest = {
+        "model": "early-exit-transformer",
+        "golden": {"tokens": golden_tokens, "outputs": golden},
+        "config": {
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "d_model": cfg.d_model,
+            "ffn": cfg.ffn,
+            "heads": cfg.heads,
+            "classes": cfg.classes,
+            "max_depth": cfg.max_depth,
+            "seed": cfg.seed,
+        },
+        "batch_sizes": batch_sizes,
+        "variants": variants,
+        "build_seconds": round(time.time() - t0, 2),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"manifest: {len(variants)} variants in {manifest['build_seconds']}s")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--max-depth", type=int, default=4)
+    ap.add_argument(
+        "--batch-sizes", default="1,2,4,8", help="comma-separated batch sizes"
+    )
+    ap.add_argument("--smoke", action="store_true", help="tiny grid for CI")
+    args = ap.parse_args()
+    cfg = ModelConfig(max_depth=1 if args.smoke else args.max_depth)
+    bss = [1] if args.smoke else [int(x) for x in args.batch_sizes.split(",")]
+    build(args.out, cfg, bss)
+
+
+if __name__ == "__main__":
+    main()

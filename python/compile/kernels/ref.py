@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas transformer block kernel.
+
+The CORE correctness signal (pytest asserts kernel ≡ ref across shapes and
+dtypes). Intentionally written independently of the kernel: batched einsum
+formulation instead of the kernel's per-example grid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + EPS) * g + b
+
+
+def transformer_block_ref(x, params, *, heads: int):
+    """Reference pre-LN transformer block. x: (batch, seq, d)."""
+    bs, seq, d = x.shape
+    dh = d // heads
+
+    h = _ln(x, params["ln1_g"], params["ln1_b"])
+    q = h @ params["wq"]
+    k = h @ params["wk"]
+    v = h @ params["wv"]
+
+    def split(t):  # (bs, seq, d) -> (bs, heads, seq, dh)
+        return t.reshape(bs, seq, heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, x.dtype)
+    )
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bs, seq, d)
+    x = x + ctx @ params["wo"]
+
+    h2 = _ln(x, params["ln2_g"], params["ln2_b"])
+    f = jax.nn.gelu(h2 @ params["w1"] + params["b1"])
+    return x + f @ params["w2"] + params["b2"]

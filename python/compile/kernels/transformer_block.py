@@ -1,0 +1,148 @@
+"""L1 — Pallas kernel: one pre-LN transformer block (attention + FFN).
+
+This is the compute hot-spot of the served early-exit transformer. The
+kernel fuses LayerNorm → multi-head self-attention → residual → LayerNorm →
+FFN → residual for one batch element per grid step.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over the
+batch dimension and each grid step's operand blocks — the (seq, d) activation
+tile plus the weight matrices — are the VMEM working set; the matmuls
+(QKᵀ, attention·V, and the FFN GEMMs) are MXU work. BlockSpec expresses the
+HBM↔VMEM schedule a CUDA implementation would write with threadblocks.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode (which lowers to plain HLO) is the
+correctness/serving path; real-TPU numbers are estimated analytically in
+DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _layernorm(x, gamma, beta):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + EPS) * gamma + beta
+
+
+def _block_kernel(
+    x_ref,
+    wq_ref,
+    wk_ref,
+    wv_ref,
+    wo_ref,
+    w1_ref,
+    b1_ref,
+    w2_ref,
+    b2_ref,
+    g1_ref,
+    be1_ref,
+    g2_ref,
+    be2_ref,
+    o_ref,
+    *,
+    heads: int,
+):
+    """One batch element: x (1, seq, d) -> o (1, seq, d)."""
+    x = x_ref[0]  # (seq, d)
+    seq, d = x.shape
+    dh = d // heads
+
+    # --- attention sub-layer (pre-LN) ---
+    h = _layernorm(x, g1_ref[...], be1_ref[...])
+    q = h @ wq_ref[...]
+    k = h @ wk_ref[...]
+    v = h @ wv_ref[...]
+    # (seq, d) -> (heads, seq, dh)
+    q = q.reshape(seq, heads, dh).transpose(1, 0, 2)
+    k = k.reshape(seq, heads, dh).transpose(1, 0, 2)
+    v = v.reshape(seq, heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, v)
+    ctx = ctx.transpose(1, 0, 2).reshape(seq, d)
+    x = x + ctx @ wo_ref[...]
+
+    # --- FFN sub-layer (pre-LN) ---
+    h2 = _layernorm(x, g2_ref[...], be2_ref[...])
+    f = jax.nn.gelu(h2 @ w1_ref[...] + b1_ref[...])
+    x = x + f @ w2_ref[...] + b2_ref[...]
+
+    o_ref[0] = x
+
+
+def transformer_block(x, params, *, heads: int, interpret: bool = True):
+    """Apply one transformer block via the Pallas kernel.
+
+    x: (batch, seq, d) activations.
+    params: dict with wq/wk/wv/wo (d,d), w1 (d,f), b1 (f,), w2 (f,d),
+            b2 (d,), ln1_g/ln1_b/ln2_g/ln2_b (d,).
+    """
+    bs, seq, d = x.shape
+    f = params["w1"].shape[1]
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    kernel = functools.partial(_block_kernel, heads=heads)
+    return pl.pallas_call(
+        kernel,
+        grid=(bs,),
+        in_specs=[
+            pl.BlockSpec((1, seq, d), lambda i: (i, 0, 0)),
+            whole((d, d)),
+            whole((d, d)),
+            whole((d, d)),
+            whole((d, d)),
+            whole((d, f)),
+            whole((f,)),
+            whole((f, d)),
+            whole((d,)),
+            whole((d,)),
+            whole((d,)),
+            whole((d,)),
+            whole((d,)),
+        ],
+        out_specs=pl.BlockSpec((1, seq, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, seq, d), x.dtype),
+        interpret=interpret,
+    )(
+        x,
+        params["wq"],
+        params["wk"],
+        params["wv"],
+        params["wo"],
+        params["w1"],
+        params["b1"],
+        params["w2"],
+        params["b2"],
+        params["ln1_g"],
+        params["ln1_b"],
+        params["ln2_g"],
+        params["ln2_b"],
+    )
+
+
+def init_block_params(key, d: int, f: int, dtype=jnp.float32):
+    """Deterministic block parameter initialization."""
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    return {
+        "wq": (jax.random.normal(ks[0], (d, d)) * scale).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, d)) * scale).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, d)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (d, d)) * scale).astype(dtype),
+        "w1": (jax.random.normal(ks[4], (d, f)) * scale).astype(dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": (jax.random.normal(ks[5], (f, d)) * scale).astype(dtype),
+        "b2": jnp.zeros((d,), dtype),
+        "ln1_g": jnp.ones((d,), dtype),
+        "ln1_b": jnp.zeros((d,), dtype),
+        "ln2_g": jnp.ones((d,), dtype),
+        "ln2_b": jnp.zeros((d,), dtype),
+    }

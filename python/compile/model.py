@@ -1,0 +1,88 @@
+"""L2 — the served model: an early-exit transformer classifier in JAX.
+
+The paper's *dynamic DNN* stand-in (SkipNet / RDI-Nets class): the model has
+``max_depth`` transformer blocks and an exit head after every block. A
+request "needs" some depth ``d`` (data-dependent in the real systems); a
+batch must run at the max depth of its members — the straggler effect Orloj
+schedules around. Serving-side, each (depth, batch) pair is one AOT-compiled
+PJRT executable (see ``aot.py``); the rust coordinator picks the variant.
+
+Parameters are generated deterministically from a seed at AOT time and baked
+into the HLO as constants, so the rust runtime needs nothing but the
+artifact files (python never runs on the request path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.transformer_block import init_block_params, transformer_block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 128
+    seq: int = 16
+    d_model: int = 64
+    ffn: int = 128
+    heads: int = 4
+    classes: int = 16
+    max_depth: int = 4
+    seed: int = 0
+
+    def validate(self):
+        assert self.d_model % self.heads == 0
+        assert self.max_depth >= 1
+
+
+def init_params(cfg: ModelConfig):
+    """All model parameters from the config seed."""
+    cfg.validate()
+    root = jax.random.PRNGKey(cfg.seed)
+    k_embed, k_pos, k_blocks, k_heads = jax.random.split(root, 4)
+    blocks = [
+        init_block_params(k, cfg.d_model, cfg.ffn)
+        for k in jax.random.split(k_blocks, cfg.max_depth)
+    ]
+    # One classifier head per exit depth (RDI-Nets style multi-exit).
+    head_keys = jax.random.split(k_heads, cfg.max_depth)
+    heads = [
+        {
+            "w": jax.random.normal(k, (cfg.d_model, cfg.classes))
+            / jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)),
+            "b": jnp.zeros((cfg.classes,), jnp.float32),
+        }
+        for k in head_keys
+    ]
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(k_pos, (cfg.seq, cfg.d_model)) * 0.02,
+        "blocks": blocks,
+        "heads": heads,
+    }
+
+
+def forward(params, tokens, *, cfg: ModelConfig, depth: int, interpret: bool = True):
+    """Run the model to exit `depth` (1-based). tokens: (bs, seq) int32."""
+    assert 1 <= depth <= cfg.max_depth
+    x = params["embed"][tokens] + params["pos"][None, :, :]
+    for i in range(depth):
+        x = transformer_block(
+            x, params["blocks"][i], heads=cfg.heads, interpret=interpret
+        )
+    head = params["heads"][depth - 1]
+    pooled = jnp.mean(x, axis=1)  # (bs, d)
+    logits = pooled @ head["w"] + head["b"]
+    return logits
+
+
+def make_apply(params, cfg: ModelConfig, depth: int, interpret: bool = True):
+    """Closure over params (baked as HLO constants when lowered)."""
+
+    def apply(tokens):
+        return (forward(params, tokens, cfg=cfg, depth=depth, interpret=interpret),)
+
+    return apply

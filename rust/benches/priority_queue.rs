@@ -1,0 +1,87 @@
+//! Fig. 12 — efficiency of the priority queue.
+//!
+//! Measures per-request insertion time and query time of the dynamic
+//! convex hull for queue sizes 10..10000 (the paper's x-axis), next to the
+//! naive O(n) scan queue. Expectation (paper §5.5): insertion grows ~
+//! O(log² n) and stays well under 0.5 ms at n = 10⁴; query time is ~flat.
+//!
+//! Run: `cargo bench --bench priority_queue`
+
+use orloj::ds::hull::point::Point;
+use orloj::ds::hull::DynamicHull;
+use orloj::ds::naive::NaiveMaxQueue;
+use orloj::util::benchmark::time_batched;
+use orloj::util::rng::Rng;
+
+fn random_points(n: usize, seed: u64) -> Vec<Point> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|i| Point::new(rng.f64() * 1000.0, rng.f64() * 1000.0, i))
+        .collect()
+}
+
+fn main() {
+    println!("### Fig. 12 — priority queue insertion / query time");
+    println!(
+        "{:>8} {:>16} {:>16} {:>16} {:>16}  {:>10}",
+        "n", "hull_insert(ns)", "hull_query(ns)", "naive_query(ns)", "hull_delete(ns)", "log2^2(n)"
+    );
+    let sizes = [10usize, 30, 100, 300, 1_000, 3_000, 10_000];
+    let mut log2sq_base = 0.0;
+    let mut insert_base = 0.0;
+    for (si, &n) in sizes.iter().enumerate() {
+        let pts = random_points(n + 2_000, 1234);
+
+        // Insertion: amortized over filling from n to n+1000.
+        let mut hull = DynamicHull::new();
+        for p in &pts[..n] {
+            hull.insert(*p);
+        }
+        let ins = time_batched(100, 1_000, |i| {
+            hull.insert(pts[n + (i % 1_000)]);
+            if i >= 1_000 {
+                // keep size bounded: delete an earlier extra
+                hull.delete(&pts[n + (i - 1_000) % 1_000]);
+            }
+        });
+
+        // Query with random slopes (paper: "a line of random slope").
+        let mut rng = Rng::new(77);
+        let slopes: Vec<f64> = (0..1024).map(|_| rng.f64() * 100.0).collect();
+        let q = time_batched(100, 5_000, |i| hull.query_max(slopes[i % 1024]));
+
+        // Naive scan baseline.
+        let mut naive = NaiveMaxQueue::new();
+        for p in &pts[..n] {
+            naive.insert(*p);
+        }
+        let nq = time_batched(10, 1_000, |i| naive.query_max(slopes[i % 1024]));
+
+        // Deletion.
+        let mut hull2 = DynamicHull::new();
+        for p in &pts[..n + 1_000] {
+            hull2.insert(*p);
+        }
+        let del = time_batched(0, 1_000, |i| hull2.delete(&pts[n + (i % 1_000)]));
+
+        let log2 = (n as f64).log2();
+        let log2sq = log2 * log2;
+        if si == 0 {
+            log2sq_base = log2sq;
+            insert_base = ins;
+        }
+        println!(
+            "{n:>8} {ins:>16.0} {q:>16.0} {nq:>16.0} {del:>16.0}  {:>10.1}",
+            log2sq
+        );
+    }
+    // Scaling check: insertion at 10k vs 10 should grow no faster than
+    // ~3× the log²n ratio (constant factors + cache effects allowed).
+    let ratio_bound = {
+        let l_small = (10f64).log2().powi(2);
+        let l_big = (10_000f64).log2().powi(2);
+        3.0 * l_big / l_small
+    };
+    println!("\n(log²n growth 10→10000 is {:.1}×; paper's fit line)", ratio_bound / 3.0);
+    let _ = (log2sq_base, insert_base);
+}

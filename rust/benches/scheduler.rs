@@ -1,0 +1,158 @@
+//! Scheduler hot-path benchmarks (§5.7 overheads + §Perf):
+//!
+//! * Orloj `on_arrival` cost vs pending-queue depth (schedule build +
+//!   5-queue hull insert);
+//! * `next_batch` iteration cost (milestones + feasibility pruning +
+//!   candidate selection + PopBatch);
+//! * estimator precompute cost (the §4.3 off-critical-path work);
+//! * whole-simulation throughput in virtual requests/second.
+//!
+//! Run: `cargo bench --bench scheduler`
+
+use orloj::clock::ms_to_us;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::histogram::Histogram;
+use orloj::core::request::{AppId, Request};
+use orloj::scheduler::estimator::Estimator;
+use orloj::scheduler::orloj::OrlojScheduler;
+use orloj::scheduler::profiler::OnlineProfiler;
+use orloj::scheduler::{Scheduler, SchedulerConfig};
+use orloj::util::benchmark::time_batched;
+use orloj::util::rng::Rng;
+use std::time::Instant;
+
+fn cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        cost_model: BatchCostModel::calibrated(30.0),
+        ..Default::default()
+    }
+}
+
+fn seeded(n_apps: u32) -> OrlojScheduler {
+    let mut s = OrlojScheduler::new(cfg(), 42);
+    let mut rng = Rng::new(5);
+    for a in 0..n_apps {
+        let samples: Vec<f64> = (0..4000)
+            .map(|_| rng.lognormal(3.0 + a as f64 * 0.4, 0.6))
+            .collect();
+        let h = Histogram::from_samples(&samples, 64);
+        s.seed_profile(AppId(a), &h, 1000);
+    }
+    s
+}
+
+fn fill(s: &mut OrlojScheduler, n: usize, rng: &mut Rng) -> u64 {
+    let mut id = 1_000_000;
+    for _ in 0..n {
+        let app = AppId(rng.index(3) as u32);
+        let slo = ms_to_us(500.0 + rng.f64() * 4_000.0);
+        s.on_arrival(Request::new(id, app, 0, slo, 30.0), 0);
+        id += 1;
+    }
+    id
+}
+
+fn main() {
+    println!("### scheduler hot-path benchmarks");
+
+    // --- on_arrival vs pending depth ---
+    println!("\non_arrival (schedule build + hull insert into |S|=5 queues):");
+    for &n in &[100usize, 1_000, 5_000, 10_000] {
+        let mut s = seeded(3);
+        let mut rng = Rng::new(9);
+        let mut id = fill(&mut s, n, &mut rng);
+        let ns = time_batched(50, 500, |i| {
+            let app = AppId((i % 3) as u32);
+            s.on_arrival(
+                Request::new(id + i as u64, app, 0, ms_to_us(2_000.0), 30.0),
+                0,
+            );
+        });
+        id += 500;
+        let _ = id;
+        println!("  pending={n:>6}: {:.1} µs/arrival", ns / 1000.0);
+    }
+
+    // --- next_batch iteration ---
+    println!("\nnext_batch (one Algorithm-1 iteration incl. PopBatch):");
+    for &n in &[100usize, 1_000, 5_000, 10_000] {
+        let mut s = seeded(3);
+        let mut rng = Rng::new(11);
+        fill(&mut s, n, &mut rng);
+        let mut t = 1_000u64;
+        let ns = time_batched(5, 200, |_| {
+            t += 500;
+            s.next_batch(t)
+        });
+        println!("  pending={n:>6}: {:.1} µs/iteration", ns / 1000.0);
+    }
+
+    // --- estimator precompute ---
+    println!("\nestimator precompute (per (app, bs) batch-latency distribution):");
+    let mut profiler = OnlineProfiler::new(4096, 1.0, 64, 3);
+    let mut rng = Rng::new(13);
+    for a in 0..4u32 {
+        for _ in 0..2000 {
+            profiler.record(AppId(a), rng.lognormal(3.0 + a as f64 * 0.3, 0.7));
+        }
+    }
+    let snap = profiler.snapshot();
+    for &bs in &[1usize, 4, 16] {
+        let ns = time_batched(3, 50, |i| {
+            let mut e = Estimator::new(BatchCostModel::calibrated(30.0), 64, 0.5);
+            e.refresh(snap.clone());
+            e.batch_latency(AppId((i % 4) as u32), bs).mean
+        });
+        println!("  bs={bs:>3}: {:.1} µs (cold compute incl. refresh)", ns / 1000.0);
+    }
+
+    // --- whole-sim throughput ---
+    println!("\nend-to-end simulation throughput:");
+    {
+        use orloj::sim::{engine, worker::SimWorker};
+        use orloj::workload::azure::AzureTraceConfig;
+        use orloj::workload::exectime::ExecTimeDist;
+        use orloj::workload::trace::TraceSpec;
+        let mut spec = TraceSpec {
+            name: "bench".into(),
+            dists: vec![ExecTimeDist::multimodal("m3", 3, 10.0, 100.0, 1.0, None)],
+            arrivals: AzureTraceConfig {
+                apps: 1,
+                rate_per_s: 0.0,
+                duration_s: 60.0,
+                ..Default::default()
+            },
+            seed: 1,
+        };
+        let model = BatchCostModel::calibrated(35.0);
+        spec.scale_rate_to_load(model, 0.9, 8);
+        let trace = spec.generate();
+        for system in ["clockwork", "orloj"] {
+            let mut sched = orloj::baselines::by_name(
+                system,
+                SchedulerConfig {
+                    cost_model: model,
+                    ..Default::default()
+                },
+                1,
+            )
+            .unwrap();
+            for (app, hist) in spec.seed_histograms(64) {
+                sched.seed_app_profile(app, &hist, 1000);
+            }
+            let mut worker = SimWorker::new(model, 0.0, 2);
+            let reqs = trace.requests(3.0);
+            let n = reqs.len();
+            let t0 = Instant::now();
+            let res = engine::run(sched.as_mut(), &mut worker, reqs);
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "  {system:>10}: {n} virtual requests in {:.3}s wall = {:.0} req/s ({} batches)",
+                wall,
+                n as f64 / wall,
+                res.batches
+            );
+        }
+    }
+    println!("\nscheduler bench OK");
+}

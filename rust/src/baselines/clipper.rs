@@ -1,0 +1,194 @@
+//! Clipper-style reactive scheduler (Crankshaw et al., NSDI'17; paper §2.3).
+//!
+//! Clipper has no plan-ahead: it serves FIFO with an *adaptively tuned*
+//! batch size. The adaptive batching controller is an AIMD loop on the
+//! measured batch latency versus the SLO budget (Clipper's actual design:
+//! explore batch size upward until latency violates the objective, then
+//! back off multiplicatively). Clipper has no deadline awareness inside
+//! the batching queue: requests are served FIFO even when already late
+//! (lateness only shows up in the finish-rate metric; only hopelessly old
+//! entries are shed as overflow protection). That is exactly why its
+//! finish rate collapses under tight SLOs on high-variance workloads in
+//! the paper's §2.3/§5 experiments: by the time the measured latency
+//! reacts, the queue is full of doomed requests.
+
+use crate::clock::{us_to_ms, Micros};
+use crate::core::request::{Outcome, Request};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use std::collections::VecDeque;
+
+pub struct ClipperScheduler {
+    cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    dropped: Vec<(Request, Outcome)>,
+    /// Current AIMD batch-size target (float so additive increase is
+    /// fractional and robust).
+    target: f64,
+    /// Exponentially weighted p99-ish latency tracker (max-decay).
+    lat_track: f64,
+    /// Mean observed SLO (budget reference), EWMA.
+    slo_track_ms: f64,
+}
+
+impl ClipperScheduler {
+    pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
+        ClipperScheduler {
+            cfg,
+            queue: VecDeque::new(),
+            dropped: Vec::new(),
+            target: 1.0,
+            lat_track: 0.0,
+            slo_track_ms: 0.0,
+        }
+    }
+
+    fn max_bs(&self) -> usize {
+        *self.cfg.batch_sizes.iter().max().unwrap_or(&1)
+    }
+
+    /// Shed only requests that are *hopelessly* late (one full SLO past
+    /// their deadline) — queue-overflow protection, not deadline awareness.
+    fn drop_expired(&mut self, now: Micros) {
+        while let Some(front) = self.queue.front() {
+            if now > front.deadline + front.slo() {
+                let r = self.queue.pop_front().unwrap();
+                self.dropped.push((r, Outcome::TimedOut));
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl Scheduler for ClipperScheduler {
+    fn name(&self) -> &'static str {
+        "clipper"
+    }
+
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        if req.expired(now) {
+            self.dropped.push((req, Outcome::TimedOut));
+            return;
+        }
+        if self.slo_track_ms == 0.0 {
+            self.slo_track_ms = us_to_ms(req.slo());
+        } else {
+            self.slo_track_ms = 0.95 * self.slo_track_ms + 0.05 * us_to_ms(req.slo());
+        }
+        self.queue.push_back(req);
+    }
+
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        self.drop_expired(now);
+        if self.queue.is_empty() {
+            return None;
+        }
+        let want = (self.target.floor() as usize).clamp(1, self.max_bs());
+        let take = want.min(self.queue.len());
+        let batch: Vec<Request> = self.queue.drain(..take).collect();
+        Some(batch)
+    }
+
+    fn on_batch_complete(&mut self, _batch: &[Request], batch_ms: f64, _now: Micros) {
+        // Latency tracker: decaying max (approximates the p99 Clipper's
+        // controller uses).
+        self.lat_track = (self.lat_track * 0.95).max(batch_ms);
+        let budget = self.slo_track_ms.max(1e-3);
+        if self.lat_track > budget {
+            // Multiplicative decrease.
+            self.target = (self.target * 0.5).max(1.0);
+        } else {
+            // Additive increase.
+            self.target = (self.target + 1.0).min(self.max_bs() as f64);
+        }
+    }
+
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    fn wake_hint(&self, _now: Micros) -> Option<Micros> {
+        self.queue.front().map(|r| r.deadline)
+    }
+
+    fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ms_to_us;
+    use crate::core::request::AppId;
+
+    fn req(id: u64, release: Micros, slo_ms: f64) -> Request {
+        Request::new(id, AppId(0), release, ms_to_us(slo_ms), 10.0)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        s.target = 4.0;
+        for i in 0..4 {
+            s.on_arrival(req(i, i * 10, 1000.0), i * 10);
+        }
+        let b = s.next_batch(100).unwrap();
+        assert_eq!(b.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn aimd_backoff_and_growth() {
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        s.on_arrival(req(0, 0, 100.0), 0); // SLO 100 ms
+        let t0 = s.target;
+        // Fast batches → grow.
+        for _ in 0..5 {
+            s.on_batch_complete(&[], 10.0, 0);
+        }
+        assert!(s.target > t0);
+        let grown = s.target;
+        // One slow batch above budget → halve.
+        s.on_batch_complete(&[], 500.0, 0);
+        assert!(s.target < grown);
+    }
+
+    #[test]
+    fn late_requests_still_served_fifo() {
+        // Clipper has no deadline awareness: a request past its deadline
+        // is still served (and will count as Late), it is only shed once
+        // hopelessly old.
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        s.target = 4.0;
+        s.on_arrival(req(0, 0, 5.0), 0);
+        s.on_arrival(req(1, 0, 1000.0), 0);
+        let b = s.next_batch(ms_to_us(8.0)).unwrap();
+        assert_eq!(b.len(), 2, "late head still batched");
+        assert_eq!(b[0].id.0, 0);
+    }
+
+    #[test]
+    fn hopeless_requests_shed() {
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        s.on_arrival(req(0, 0, 5.0), 0);
+        s.on_arrival(req(1, 0, 1000.0), 0);
+        // 0 is > 2×SLO past release → shed at dequeue.
+        let b = s.next_batch(ms_to_us(11.0)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id.0, 1);
+        let d = s.drain_dropped();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].1, Outcome::TimedOut);
+    }
+
+    #[test]
+    fn batch_capped_by_target() {
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        for i in 0..20 {
+            s.on_arrival(req(i, 0, 1000.0), 0);
+        }
+        let b = s.next_batch(0).unwrap();
+        assert_eq!(b.len(), 1, "initial target is 1");
+        assert_eq!(s.pending(), 19);
+    }
+}

@@ -1,0 +1,273 @@
+//! Clockwork-style plan-ahead scheduler (Gujarati et al., OSDI'20; §2.3).
+//!
+//! Clockwork's premise is *predictability from the bottom up*: every batch
+//! size has a profiled, near-deterministic latency, and the central
+//! controller plans execution windows against those point estimates,
+//! rejecting work that would miss its window. With static DNNs the
+//! estimates are essentially exact and the approach excels. With dynamic
+//! DNNs the point estimate mispredicts most batches; an overrunning batch
+//! blows its window and "caus[es] the subsequent batch to fail" (§2.3) —
+//! the planned slot for the next batch has already passed when the GPU
+//! frees, so its requests are aborted. That misfire-every-other-batch
+//! pattern is why Clockwork pins to ≈0.5 finish rate on dynamic workloads
+//! regardless of the distribution's shape (paper Fig. 8–10).
+//!
+//! The policy here reproduces that control loop: EDF admission against
+//! point estimates, largest batch that fits the earliest deadline, strict
+//! window accounting, abort of the batch planned into a blown window.
+
+use crate::clock::{us_to_ms, Micros};
+use crate::core::request::{Outcome, Request};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+pub struct ClockworkScheduler {
+    cfg: SchedulerConfig,
+    /// EDF queue: (deadline, seq) → request.
+    queue: BinaryHeap<Reverse<(Micros, u64)>>,
+    by_seq: std::collections::HashMap<u64, Request>,
+    dropped: Vec<(Request, Outcome)>,
+    /// Point estimate of the solo execution time (ms). Clockwork profiles
+    /// once offline; we keep a slowly-converging estimate of the mean to
+    /// mirror its calibration runs.
+    exec_point_ms: f64,
+    calibrated: bool,
+    /// The window promised to the currently executing batch: planned
+    /// completion time.
+    window_end: Option<Micros>,
+    /// Tolerance before declaring an overrun (fraction of the estimate).
+    overrun_tol: f64,
+    /// True when the previous batch blew its window: the next planned
+    /// batch fails.
+    misfire: bool,
+}
+
+impl ClockworkScheduler {
+    pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
+        ClockworkScheduler {
+            cfg,
+            queue: BinaryHeap::new(),
+            by_seq: std::collections::HashMap::new(),
+            dropped: Vec::new(),
+            exec_point_ms: 10.0,
+            calibrated: false,
+            window_end: None,
+            overrun_tol: 0.10,
+            misfire: false,
+        }
+    }
+
+    /// Install the offline profile (point estimate of solo exec, ms).
+    pub fn seed_exec_point(&mut self, ms: f64) {
+        self.exec_point_ms = ms;
+        self.calibrated = true;
+    }
+
+    fn est(&self, bs: usize) -> f64 {
+        self.cfg.cost_model.latency(bs, self.exec_point_ms)
+    }
+
+    fn pop_head(&mut self) -> Option<Request> {
+        while let Some(Reverse((_, seq))) = self.queue.pop() {
+            if let Some(r) = self.by_seq.remove(&seq) {
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    fn peek_deadline(&mut self) -> Option<Micros> {
+        while let Some(&Reverse((d, seq))) = self.queue.peek() {
+            if self.by_seq.contains_key(&seq) {
+                return Some(d);
+            }
+            self.queue.pop();
+        }
+        None
+    }
+}
+
+impl Scheduler for ClockworkScheduler {
+    fn name(&self) -> &'static str {
+        "clockwork"
+    }
+
+    fn seed_app_profile(
+        &mut self,
+        _app: crate::core::request::AppId,
+        hist: &crate::core::histogram::Histogram,
+        _weight: u64,
+    ) {
+        // Clockwork profiles a point estimate per model. Multiple apps
+        // blend into one number — precisely its limitation on dynamic DNNs.
+        let m = hist.mean();
+        self.exec_point_ms = if self.calibrated {
+            0.5 * self.exec_point_ms + 0.5 * m
+        } else {
+            m
+        };
+        self.calibrated = true;
+    }
+
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        // Admission control: reject requests that cannot meet their SLO
+        // even at batch size 1 under the point estimate.
+        if us_to_ms(now) + self.est(1) > us_to_ms(req.deadline) {
+            self.dropped.push((req, Outcome::TimedOut));
+            return;
+        }
+        let seq = req.id.0;
+        self.queue.push(Reverse((req.deadline, seq)));
+        self.by_seq.insert(seq, req);
+    }
+
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        // Drop requests whose window can no longer be met.
+        loop {
+            match self.peek_deadline() {
+                Some(d) if us_to_ms(now) + self.est(1) > us_to_ms(d) => {
+                    let r = self.pop_head().unwrap();
+                    self.dropped.push((r, Outcome::TimedOut));
+                }
+                _ => break,
+            }
+        }
+        let head_deadline = self.peek_deadline()?;
+        let slack_ms = us_to_ms(head_deadline) - us_to_ms(now);
+        // Largest batch size whose estimated window fits the head's slack.
+        let mut bs = 1usize;
+        for &cand in &self.cfg.batch_sizes {
+            if self.est(cand) <= slack_ms && cand > bs {
+                bs = cand;
+            }
+        }
+        let take = bs.min(self.by_seq.len());
+        let mut batch = Vec::with_capacity(take);
+        for _ in 0..take {
+            if let Some(r) = self.pop_head() {
+                batch.push(r);
+            }
+        }
+        if batch.is_empty() {
+            return None;
+        }
+        if self.misfire {
+            // The slot this batch was planned into has already been blown
+            // by the previous overrun: it fails (§2.3).
+            self.misfire = false;
+            for r in batch {
+                self.dropped.push((r, Outcome::Aborted));
+            }
+            return None;
+        }
+        let est = self.est(batch.len());
+        self.window_end = Some(now + crate::clock::ms_to_us(est * (1.0 + self.overrun_tol)));
+        Some(batch)
+    }
+
+    fn on_batch_complete(&mut self, batch: &[Request], _batch_ms: f64, now: Micros) {
+        if let Some(end) = self.window_end.take() {
+            if now > end {
+                self.misfire = true;
+            }
+        }
+        // Calibration: converge the point estimate slowly (profiling runs).
+        if !self.calibrated {
+            for r in batch {
+                self.exec_point_ms = 0.9 * self.exec_point_ms + 0.1 * r.exec_ms;
+            }
+        }
+    }
+
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    fn wake_hint(&self, _now: Micros) -> Option<Micros> {
+        self.queue.peek().map(|Reverse((d, _))| *d)
+    }
+
+    fn pending(&self) -> usize {
+        self.by_seq.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ms_to_us;
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::core::request::AppId;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            cost_model: BatchCostModel::new(0.0, 1.0),
+            batch_sizes: vec![1, 2, 4],
+            ..Default::default()
+        }
+    }
+
+    fn req(id: u64, release: Micros, slo_ms: f64, exec_ms: f64) -> Request {
+        Request::new(id, AppId(0), release, ms_to_us(slo_ms), exec_ms)
+    }
+
+    fn seeded() -> ClockworkScheduler {
+        let mut s = ClockworkScheduler::new(cfg(), 0);
+        s.seed_exec_point(10.0);
+        s
+    }
+
+    #[test]
+    fn edf_order_and_batch_fit() {
+        let mut s = seeded();
+        s.on_arrival(req(1, 0, 500.0, 10.0), 0);
+        s.on_arrival(req(2, 0, 50.0, 10.0), 0);
+        s.on_arrival(req(3, 0, 200.0, 10.0), 0);
+        // Head slack 50ms → est(4)=40 fits → bs 4, take 3.
+        let b = s.next_batch(0).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].id.0, 2, "EDF head first");
+    }
+
+    #[test]
+    fn admission_control_rejects_impossible() {
+        let mut s = seeded();
+        s.on_arrival(req(1, 0, 5.0, 10.0), 0); // est(1)=10 > 5
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.drain_dropped().len(), 1);
+    }
+
+    #[test]
+    fn overrun_aborts_next_batch() {
+        let mut s = seeded();
+        for i in 0..8 {
+            s.on_arrival(req(i, 0, 10_000.0, 10.0), 0);
+        }
+        let b1 = s.next_batch(0).unwrap();
+        assert_eq!(b1.len(), 4);
+        let est = s.est(b1.len());
+        // Batch takes 3× its estimate → window blown.
+        let done = ms_to_us(est * 3.0);
+        s.on_batch_complete(&b1, est * 3.0, done);
+        // Next planned batch is aborted.
+        assert!(s.next_batch(done).is_none());
+        let d = s.drain_dropped();
+        assert!(!d.is_empty());
+        assert!(d.iter().all(|(_, o)| *o == Outcome::Aborted));
+    }
+
+    #[test]
+    fn on_time_completion_keeps_planning() {
+        let mut s = seeded();
+        for i in 0..8 {
+            s.on_arrival(req(i, 0, 10_000.0, 10.0), 0);
+        }
+        let b1 = s.next_batch(0).unwrap();
+        let est = s.est(b1.len());
+        let done = ms_to_us(est * 0.99);
+        s.on_batch_complete(&b1, est * 0.99, done);
+        let b2 = s.next_batch(done);
+        assert!(b2.is_some(), "no misfire on accurate prediction");
+    }
+}

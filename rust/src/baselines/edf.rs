@@ -1,0 +1,155 @@
+//! Plain earliest-deadline-first max-batch policy — an ablation baseline
+//! (not in the paper's comparison set) isolating how much of Orloj's win
+//! comes from the distribution-aware score versus simply being
+//! deadline-aware and work-conserving.
+
+use crate::clock::{us_to_ms, Micros};
+use crate::core::request::{Outcome, Request};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::util::stats::Welford;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+pub struct EdfScheduler {
+    cfg: SchedulerConfig,
+    queue: BinaryHeap<Reverse<(Micros, u64)>>,
+    by_seq: HashMap<u64, Request>,
+    dropped: Vec<(Request, Outcome)>,
+    exec_mean: Welford,
+}
+
+impl EdfScheduler {
+    pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
+        EdfScheduler {
+            cfg,
+            queue: BinaryHeap::new(),
+            by_seq: HashMap::new(),
+            dropped: Vec::new(),
+            exec_mean: Welford::new(),
+        }
+    }
+
+    pub fn seed_exec_mean(&mut self, ms: f64) {
+        self.exec_mean.push(ms);
+    }
+
+    fn est(&self, bs: usize) -> f64 {
+        let exec = if self.exec_mean.count() > 0 {
+            self.exec_mean.mean()
+        } else {
+            10.0
+        };
+        self.cfg.cost_model.latency(bs, exec)
+    }
+
+    fn peek(&mut self) -> Option<(Micros, u64)> {
+        while let Some(&Reverse((d, seq))) = self.queue.peek() {
+            if self.by_seq.contains_key(&seq) {
+                return Some((d, seq));
+            }
+            self.queue.pop();
+        }
+        None
+    }
+}
+
+impl Scheduler for EdfScheduler {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn seed_app_profile(
+        &mut self,
+        _app: crate::core::request::AppId,
+        hist: &crate::core::histogram::Histogram,
+        _weight: u64,
+    ) {
+        self.exec_mean.push(hist.mean());
+    }
+
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        if req.expired(now) {
+            self.dropped.push((req, Outcome::TimedOut));
+            return;
+        }
+        self.queue.push(Reverse((req.deadline, req.id.0)));
+        self.by_seq.insert(req.id.0, req);
+    }
+
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        // Drop heads that can't make it even solo.
+        while let Some((d, seq)) = self.peek() {
+            if us_to_ms(now) + self.est(1) > us_to_ms(d) {
+                let r = self.by_seq.remove(&seq).unwrap();
+                self.queue.pop();
+                self.dropped.push((r, Outcome::TimedOut));
+            } else {
+                break;
+            }
+        }
+        let (head_deadline, _) = self.peek()?;
+        let slack = us_to_ms(head_deadline) - us_to_ms(now);
+        let mut bs = 1usize;
+        for &cand in &self.cfg.batch_sizes {
+            if self.est(cand) <= slack && cand > bs {
+                bs = cand;
+            }
+        }
+        let take = bs.min(self.by_seq.len());
+        let mut batch = Vec::with_capacity(take);
+        for _ in 0..take {
+            match self.peek() {
+                Some((_, seq)) => {
+                    self.queue.pop();
+                    batch.push(self.by_seq.remove(&seq).unwrap());
+                }
+                None => break,
+            }
+        }
+        if batch.is_empty() {
+            None
+        } else {
+            Some(batch)
+        }
+    }
+
+    fn on_batch_complete(&mut self, batch: &[Request], _batch_ms: f64, _now: Micros) {
+        for r in batch {
+            self.exec_mean.push(r.exec_ms);
+        }
+    }
+
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    fn wake_hint(&self, _now: Micros) -> Option<Micros> {
+        self.queue.peek().map(|Reverse((d, _))| *d)
+    }
+
+    fn pending(&self) -> usize {
+        self.by_seq.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ms_to_us;
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::core::request::AppId;
+
+    #[test]
+    fn serves_in_deadline_order() {
+        let cfg = SchedulerConfig {
+            cost_model: BatchCostModel::new(0.0, 1.0),
+            ..Default::default()
+        };
+        let mut s = EdfScheduler::new(cfg, 0);
+        s.seed_exec_mean(5.0);
+        s.on_arrival(Request::new(1, AppId(0), 0, ms_to_us(300.0), 5.0), 0);
+        s.on_arrival(Request::new(2, AppId(0), 0, ms_to_us(100.0), 5.0), 0);
+        let b = s.next_batch(0).unwrap();
+        assert_eq!(b[0].id.0, 2);
+    }
+}

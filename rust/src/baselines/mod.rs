@@ -1,0 +1,32 @@
+//! Baseline serving policies the paper evaluates against (§2.3, §5):
+//! Clipper (reactive), Nexus (precomputed plan from means), Clockwork
+//! (point-estimate plan-ahead with strict execution windows), plus a plain
+//! EDF max-batch policy used in ablations.
+//!
+//! These are re-implementations of each system's *scheduling policy* on the
+//! shared [`Scheduler`](crate::scheduler::Scheduler) trait — the level at
+//! which the paper's comparison operates — not ports of their full
+//! codebases.
+
+pub mod clipper;
+pub mod clockwork;
+pub mod edf;
+pub mod nexus;
+
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::scheduler::orloj::OrlojScheduler;
+
+/// Construct any of the four systems by name.
+pub fn by_name(name: &str, cfg: SchedulerConfig, seed: u64) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "orloj" => Some(Box::new(OrlojScheduler::new(cfg, seed))),
+        "clipper" => Some(Box::new(clipper::ClipperScheduler::new(cfg, seed))),
+        "nexus" => Some(Box::new(nexus::NexusScheduler::new(cfg, seed))),
+        "clockwork" => Some(Box::new(clockwork::ClockworkScheduler::new(cfg, seed))),
+        "edf" => Some(Box::new(edf::EdfScheduler::new(cfg, seed))),
+        _ => None,
+    }
+}
+
+/// The four systems of the paper's evaluation, in its plotting order.
+pub const PAPER_SYSTEMS: [&str; 4] = ["clipper", "nexus", "clockwork", "orloj"];

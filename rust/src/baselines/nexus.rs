@@ -1,0 +1,244 @@
+//! Nexus-style plan-based scheduler (Shen et al., SOSP'19; paper §2.3).
+//!
+//! Nexus pre-computes an execution plan per epoch using the *mean*
+//! execution time ("squishy bin-packing"): pick the largest batch size
+//! whose planned batch latency fits within half the SLO (the other half is
+//! the queuing budget), then execute fixed-size batches on that cadence.
+//! The plan is only re-derived at epoch boundaries. Under high-variance
+//! dynamic workloads the mean mispredicts almost every batch, the cadence
+//! drifts, and "it cannot reach a stable state" (paper §2.3).
+
+use crate::clock::{us_to_ms, Micros};
+use crate::core::request::{Outcome, Request};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::util::stats::Welford;
+use std::collections::VecDeque;
+
+pub struct NexusScheduler {
+    cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    dropped: Vec<(Request, Outcome)>,
+    /// Mean solo exec time (ms) from observation (epoch input).
+    exec_mean: Welford,
+    /// Mean SLO (ms) from observation.
+    slo_mean: Welford,
+    /// Current plan: fixed batch size.
+    plan_bs: usize,
+    /// Planned batch latency (ms) under the mean-exec assumption.
+    plan_latency_ms: f64,
+    /// Epoch bookkeeping.
+    last_plan: Micros,
+    epoch: Micros,
+}
+
+impl NexusScheduler {
+    pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
+        NexusScheduler {
+            cfg,
+            queue: VecDeque::new(),
+            dropped: Vec::new(),
+            exec_mean: Welford::new(),
+            slo_mean: Welford::new(),
+            plan_bs: 1,
+            plan_latency_ms: 10.0,
+            last_plan: 0,
+            epoch: 1_000_000, // 1 s epochs
+        }
+    }
+
+    /// Seed the mean-exec estimate (deployment-time profile, mirroring how
+    /// the experiments seed Orloj's profiler).
+    pub fn seed_exec_mean(&mut self, mean_ms: f64) {
+        self.exec_mean.push(mean_ms);
+    }
+
+    fn replan(&mut self, now: Micros) {
+        self.last_plan = now;
+        let exec = if self.exec_mean.count() > 0 {
+            self.exec_mean.mean()
+        } else {
+            10.0
+        };
+        let slo = if self.slo_mean.count() > 0 {
+            self.slo_mean.mean()
+        } else {
+            100.0
+        };
+        let m = self.cfg.cost_model;
+        // Largest supported batch size whose planned latency fits half the
+        // SLO (queueing gets the other half).
+        let mut best = (1usize, m.latency(1, exec));
+        for &bs in &self.cfg.batch_sizes {
+            let lat = m.latency(bs, exec);
+            if lat <= slo * 0.5 && bs > best.0 {
+                best = (bs, lat);
+            }
+        }
+        self.plan_bs = best.0;
+        self.plan_latency_ms = best.1;
+    }
+
+    fn drop_expired(&mut self, now: Micros) {
+        // Nexus drops requests that cannot make it under the *planned*
+        // latency.
+        let lat = self.plan_latency_ms;
+        while let Some(front) = self.queue.front() {
+            if us_to_ms(now) + lat > us_to_ms(front.deadline) {
+                let r = self.queue.pop_front().unwrap();
+                self.dropped.push((r, Outcome::TimedOut));
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl Scheduler for NexusScheduler {
+    fn name(&self) -> &'static str {
+        "nexus"
+    }
+
+    fn seed_app_profile(
+        &mut self,
+        _app: crate::core::request::AppId,
+        hist: &crate::core::histogram::Histogram,
+        weight: u64,
+    ) {
+        // Nexus plans on the mean: fold each app's mean in, traffic-weighted.
+        for _ in 0..weight.clamp(1, 64) {
+            self.exec_mean.push(hist.mean());
+        }
+    }
+
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        if req.expired(now) {
+            self.dropped.push((req, Outcome::TimedOut));
+            return;
+        }
+        self.slo_mean.push(us_to_ms(req.slo()));
+        if self.exec_mean.count() == 0 {
+            self.replan(now);
+        }
+        self.queue.push_back(req);
+    }
+
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        if now.saturating_sub(self.last_plan) >= self.epoch {
+            self.replan(now);
+        }
+        self.drop_expired(now);
+        if self.queue.is_empty() {
+            return None;
+        }
+        // Execute only full planned batches, except when the head's
+        // deadline forces a partial batch now.
+        let head_deadline = self.queue.front().unwrap().deadline;
+        let forced = us_to_ms(now) + 2.0 * self.plan_latency_ms > us_to_ms(head_deadline);
+        if self.queue.len() < self.plan_bs && !forced {
+            return None; // wait for the plan's batch to fill
+        }
+        let take = self.plan_bs.min(self.queue.len());
+        Some(self.queue.drain(..take).collect())
+    }
+
+    fn on_batch_complete(&mut self, batch: &[Request], _batch_ms: f64, _now: Micros) {
+        for r in batch {
+            self.exec_mean.push(r.exec_ms);
+        }
+    }
+
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    fn wake_hint(&self, now: Micros) -> Option<Micros> {
+        // Wake when the head would be forced, or at the epoch boundary.
+        let epoch_end = self.last_plan + self.epoch;
+        let head = self.queue.front().map(|r| {
+            let forced_at_ms =
+                us_to_ms(r.deadline) - 2.0 * self.plan_latency_ms;
+            crate::clock::ms_to_us(forced_at_ms.max(0.0)).max(now + 100)
+        });
+        match head {
+            Some(h) => Some(h.min(epoch_end)),
+            None => Some(epoch_end),
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ms_to_us;
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::core::request::AppId;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            cost_model: BatchCostModel::new(0.0, 1.0),
+            ..Default::default()
+        }
+    }
+
+    fn req(id: u64, release: Micros, slo_ms: f64, exec_ms: f64) -> Request {
+        Request::new(id, AppId(0), release, ms_to_us(slo_ms), exec_ms)
+    }
+
+    #[test]
+    fn plan_respects_slo_budget() {
+        let mut s = NexusScheduler::new(cfg(), 0);
+        s.seed_exec_mean(10.0);
+        // SLO 100 ms → budget 50 ms → with exec 10: bs=4 (40ms) fits, 8 (80) not.
+        s.on_arrival(req(0, 0, 100.0, 10.0), 0);
+        s.replan(0);
+        assert_eq!(s.plan_bs, 4);
+    }
+
+    #[test]
+    fn waits_for_full_plan_batch() {
+        let mut s = NexusScheduler::new(cfg(), 0);
+        s.seed_exec_mean(10.0);
+        for i in 0..2 {
+            s.on_arrival(req(i, 0, 400.0, 10.0), 0);
+        }
+        s.replan(0);
+        assert!(s.plan_bs > 2);
+        assert!(s.next_batch(0).is_none(), "waits to fill planned batch");
+        // But a forced head executes partially: forced once
+        // now + 2·plan_latency > deadline, while still feasible
+        // (now + plan_latency ≤ deadline).
+        let late = ms_to_us(150.0);
+        let b = s.next_batch(late);
+        assert!(b.is_some(), "deadline pressure forces partial batch");
+        assert_eq!(b.unwrap().len(), 2);
+    }
+
+    #[test]
+    fn drops_by_planned_latency() {
+        let mut s = NexusScheduler::new(cfg(), 0);
+        s.seed_exec_mean(50.0);
+        s.on_arrival(req(0, 0, 60.0, 50.0), 0);
+        s.replan(0);
+        // planned latency at bs=1 is 50 ms; at t=20ms, 20+50 > 60 → drop.
+        assert!(s.next_batch(ms_to_us(20.0)).is_none());
+        assert_eq!(s.drain_dropped().len(), 1);
+    }
+
+    #[test]
+    fn replans_each_epoch_from_means() {
+        let mut s = NexusScheduler::new(cfg(), 0);
+        s.seed_exec_mean(10.0);
+        s.on_arrival(req(0, 0, 100.0, 10.0), 0);
+        s.replan(0);
+        let bs0 = s.plan_bs;
+        // Feed much slower measurements, cross the epoch.
+        let slow: Vec<Request> = (0..50).map(|i| req(100 + i, 0, 100.0, 45.0)).collect();
+        s.on_batch_complete(&slow, 45.0, 500_000);
+        let _ = s.next_batch(1_100_000);
+        assert!(s.plan_bs < bs0, "plan shrinks when exec mean grows");
+    }
+}

@@ -1,0 +1,126 @@
+//! Time abstraction: the same scheduler code runs against real wall-clock
+//! time (PJRT serving path) and virtual time (discrete-event simulator /
+//! evaluation sweeps).
+//!
+//! All times in Orloj are `Micros` — microseconds relative to a process- or
+//! simulation-local epoch. The paper's overflow discussion (Section 4.4)
+//! is exactly about *not* using absolute UNIX timestamps inside e^{bt};
+//! using a local epoch is the first half of that mitigation, the score
+//! base-time reset in `core::priority` is the second half.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Microseconds since the local epoch.
+pub type Micros = u64;
+
+/// Convert milliseconds (f64, the paper's natural unit) to Micros.
+#[inline]
+pub fn ms_to_us(ms: f64) -> Micros {
+    (ms * 1000.0).round().max(0.0) as Micros
+}
+
+/// Convert Micros to milliseconds.
+#[inline]
+pub fn us_to_ms(us: Micros) -> f64 {
+    us as f64 / 1000.0
+}
+
+/// Clock interface used by schedulers, profilers and the serving loop.
+pub trait Clock: Send + Sync {
+    /// Current time in microseconds since this clock's epoch.
+    fn now(&self) -> Micros;
+}
+
+/// Wall clock anchored at construction time.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Micros {
+        self.start.elapsed().as_micros() as Micros
+    }
+}
+
+/// Virtual clock for the simulator: time advances only when the engine says
+/// so. Cloneable handle (Arc inside) so the engine, scheduler and workers
+/// share one timeline.
+#[derive(Clone)]
+pub struct VirtualClock {
+    now: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock {
+            now: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Advance to an absolute time; must be monotonic (panics on regress in
+    /// debug builds; saturates in release).
+    pub fn advance_to(&self, t: Micros) {
+        let prev = self.now.swap(t, Ordering::SeqCst);
+        debug_assert!(prev <= t, "virtual clock moved backwards: {prev} -> {t}");
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Micros {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(ms_to_us(1.5), 1500);
+        assert_eq!(ms_to_us(0.0), 0);
+        assert!((us_to_ms(2500) - 2.5).abs() < 1e-12);
+        assert_eq!(ms_to_us(-1.0), 0); // clamped
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance_to(100);
+        assert_eq!(c.now(), 100);
+        let c2 = c.clone();
+        c2.advance_to(250);
+        assert_eq!(c.now(), 250); // shared timeline
+    }
+}

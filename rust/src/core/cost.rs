@@ -1,0 +1,149 @@
+//! SLO cost functions (paper §4.1 Fig. 5, Appendix B).
+//!
+//! The scheduler models SLOs with a step cost: finishing at or before the
+//! deadline costs 0, finishing after costs `c`. Appendix B generalizes to
+//! piecewise-step functions (multiple deadlines with increasing penalties)
+//! by decomposing them into a sum of single steps — the priority score of
+//! the multi-step function is the sum of the single-step scores.
+
+use crate::clock::Micros;
+
+/// A single-step SLO cost: 0 before `deadline`, `penalty` after.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCost {
+    pub deadline: Micros,
+    pub penalty: f64,
+}
+
+impl StepCost {
+    pub fn new(deadline: Micros, penalty: f64) -> Self {
+        assert!(penalty >= 0.0);
+        StepCost { deadline, penalty }
+    }
+
+    /// Cost of finishing at time `t`.
+    pub fn at(&self, t: Micros) -> f64 {
+        if t > self.deadline {
+            self.penalty
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A piecewise-step cost function: non-decreasing penalties at increasing
+/// deadlines. `C(t) = max penalty among steps with deadline < t` — i.e.
+/// cumulative as t passes each deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PiecewiseStepCost {
+    /// (deadline, cumulative penalty after it), sorted by deadline strictly
+    /// increasing, penalties strictly increasing.
+    steps: Vec<(Micros, f64)>,
+}
+
+impl PiecewiseStepCost {
+    pub fn new(steps: Vec<(Micros, f64)>) -> Self {
+        assert!(!steps.is_empty());
+        for w in steps.windows(2) {
+            assert!(w[0].0 < w[1].0, "deadlines must be strictly increasing");
+            assert!(
+                w[0].1 < w[1].1,
+                "cumulative penalties must be strictly increasing"
+            );
+        }
+        assert!(steps[0].1 > 0.0);
+        PiecewiseStepCost { steps }
+    }
+
+    pub fn single(deadline: Micros, penalty: f64) -> Self {
+        PiecewiseStepCost::new(vec![(deadline, penalty)])
+    }
+
+    /// Cost of finishing at time `t`.
+    pub fn at(&self, t: Micros) -> f64 {
+        let mut cost = 0.0;
+        for &(d, c) in &self.steps {
+            if t > d {
+                cost = c;
+            } else {
+                break;
+            }
+        }
+        cost
+    }
+
+    /// Appendix B: decompose into single-step components whose costs sum to
+    /// this function. Deadlines d1<d2<d3 with cumulative costs c1<c2<c3
+    /// decompose as (d1,c1), (d2,c2−c1), (d3,c3−c2).
+    pub fn decompose(&self) -> Vec<StepCost> {
+        let mut out = Vec::with_capacity(self.steps.len());
+        let mut prev = 0.0;
+        for &(d, c) in &self.steps {
+            out.push(StepCost::new(d, c - prev));
+            prev = c;
+        }
+        out
+    }
+
+    /// Final (largest) deadline.
+    pub fn last_deadline(&self) -> Micros {
+        self.steps.last().unwrap().0
+    }
+
+    pub fn steps(&self) -> &[(Micros, f64)] {
+        &self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_cost_basic() {
+        let s = StepCost::new(100, 5.0);
+        assert_eq!(s.at(99), 0.0);
+        assert_eq!(s.at(100), 0.0);
+        assert_eq!(s.at(101), 5.0);
+    }
+
+    #[test]
+    fn piecewise_evaluation() {
+        let p = PiecewiseStepCost::new(vec![(10, 1.0), (20, 3.0), (30, 7.0)]);
+        assert_eq!(p.at(5), 0.0);
+        assert_eq!(p.at(10), 0.0);
+        assert_eq!(p.at(15), 1.0);
+        assert_eq!(p.at(25), 3.0);
+        assert_eq!(p.at(100), 7.0);
+    }
+
+    #[test]
+    fn decomposition_sums_to_original() {
+        // Appendix B: sum of single-step costs == piecewise cost, everywhere.
+        let p = PiecewiseStepCost::new(vec![(10, 1.0), (20, 3.0), (30, 7.0)]);
+        let parts = p.decompose();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[1].penalty, 2.0);
+        assert_eq!(parts[2].penalty, 4.0);
+        for t in [0u64, 10, 11, 20, 21, 30, 31, 1000] {
+            let sum: f64 = parts.iter().map(|s| s.at(t)).sum();
+            assert_eq!(sum, p.at(t), "t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_increasing_penalties() {
+        PiecewiseStepCost::new(vec![(10, 3.0), (20, 2.0)]);
+    }
+
+    #[test]
+    fn single_matches_step() {
+        let p = PiecewiseStepCost::single(50, 2.0);
+        let s = StepCost::new(50, 2.0);
+        for t in [0u64, 50, 51, 99] {
+            assert_eq!(p.at(t), s.at(t));
+        }
+        assert_eq!(p.last_deadline(), 50);
+    }
+}

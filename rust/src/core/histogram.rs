@@ -1,0 +1,365 @@
+//! Empirical execution-time distributions (paper §3.2, §4.1).
+//!
+//! Orloj "does not assume any pre-defined distribution for its input and
+//! only tracks empirical distributions": a fixed-width histogram over
+//! milliseconds. This module provides the distribution algebra the
+//! scheduler needs — pdf/cdf, mean, quantiles, mixtures, affine scaling —
+//! and is the representation on which the order-statistics and priority
+//! math (Eq. 2, 5–9) operates bin-by-bin.
+
+/// An empirical distribution over execution time in milliseconds,
+/// represented as a normalized histogram with uniform bin width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Left edge of the first bin (ms).
+    lo: f64,
+    /// Bin width (ms), > 0.
+    width: f64,
+    /// Normalized bin masses; sum == 1 (unless empty).
+    mass: Vec<f64>,
+}
+
+impl Histogram {
+    /// Build from bin range and *unnormalized* weights.
+    pub fn from_weights(lo: f64, width: f64, weights: &[f64]) -> Histogram {
+        assert!(width > 0.0, "bin width must be positive");
+        assert!(!weights.is_empty(), "histogram needs at least one bin");
+        let total: f64 = weights.iter().sum();
+        let mass = if total > 0.0 {
+            weights.iter().map(|w| w / total).collect()
+        } else {
+            vec![0.0; weights.len()]
+        };
+        Histogram { lo, width, mass }
+    }
+
+    /// Build from raw samples with `bins` uniform bins spanning the sample
+    /// range (slightly widened so the max lands inside the last bin).
+    pub fn from_samples(samples: &[f64], bins: usize) -> Histogram {
+        assert!(!samples.is_empty(), "cannot build histogram from no samples");
+        assert!(bins > 0);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &s in samples {
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+        if hi <= lo {
+            // Degenerate: all samples equal. One spike bin of small width.
+            let width = (lo.abs() * 1e-3).max(1e-6);
+            return Histogram {
+                lo,
+                width,
+                mass: vec![1.0],
+            };
+        }
+        let span = (hi - lo) * 1.0000001; // ensure max falls inside
+        let width = span / bins as f64;
+        let mut weights = vec![0.0; bins];
+        for &s in samples {
+            let idx = (((s - lo) / width) as usize).min(bins - 1);
+            weights[idx] += 1.0;
+        }
+        Histogram::from_weights(lo, width, &weights)
+    }
+
+    /// A distribution with all mass at `value` (static-DNN case: constant
+    /// execution time). Width is kept tiny so E and quantiles are exact to
+    /// within a microsecond.
+    pub fn constant(value: f64) -> Histogram {
+        Histogram {
+            lo: value,
+            width: (value.abs() * 1e-4).max(1e-4),
+            mass: vec![1.0],
+        }
+    }
+
+    pub fn num_bins(&self) -> usize {
+        self.mass.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        self.width
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.lo + self.width * self.mass.len() as f64
+    }
+
+    /// Left edge of bin `i`.
+    #[inline]
+    pub fn edge(&self, i: usize) -> f64 {
+        self.lo + self.width * i as f64
+    }
+
+    /// (l1, l2, h): bin range and mass — the quantities Eq. (2) consumes.
+    #[inline]
+    pub fn bin(&self, i: usize) -> (f64, f64, f64) {
+        (self.edge(i), self.edge(i + 1), self.mass[i])
+    }
+
+    pub fn masses(&self) -> &[f64] {
+        &self.mass
+    }
+
+    /// Midpoint-rule expectation.
+    pub fn mean(&self) -> f64 {
+        self.mass
+            .iter()
+            .enumerate()
+            .map(|(i, m)| m * (self.edge(i) + 0.5 * self.width))
+            .sum()
+    }
+
+    /// Variance (midpoint rule).
+    pub fn variance(&self) -> f64 {
+        let mu = self.mean();
+        self.mass
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let x = self.edge(i) + 0.5 * self.width;
+                m * (x - mu) * (x - mu)
+            })
+            .sum()
+    }
+
+    /// CDF evaluated at `x`, linearly interpolated within bins.
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x <= self.lo {
+            return 0.0;
+        }
+        if x >= self.hi() {
+            return 1.0;
+        }
+        let pos = (x - self.lo) / self.width;
+        let idx = pos as usize;
+        let frac = pos - idx as f64;
+        let below: f64 = self.mass[..idx].iter().sum();
+        below + self.mass[idx] * frac
+    }
+
+    /// CDF at the right edge of bin `i` (exact, no interpolation).
+    pub fn cdf_at_edge(&self, i: usize) -> f64 {
+        self.mass[..=i.min(self.mass.len() - 1)].iter().sum()
+    }
+
+    /// Quantile (inverse CDF), q in [0,1]; linear interpolation.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let mut acc = 0.0;
+        for (i, m) in self.mass.iter().enumerate() {
+            if acc + m >= q {
+                let frac = if *m > 0.0 { (q - acc) / m } else { 0.0 };
+                return self.edge(i) + frac * self.width;
+            }
+            acc += m;
+        }
+        self.hi()
+    }
+
+    /// P99 in ms — the paper's SLO reference point (§5.2 Metrics).
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Mixture of distributions with the given unnormalized weights,
+    /// re-binned onto a common uniform grid of `bins` bins. Used for the
+    /// model-wide "all applications" distribution of §4.3.
+    pub fn mixture(parts: &[(&Histogram, f64)], bins: usize) -> Histogram {
+        assert!(!parts.is_empty());
+        let wsum: f64 = parts.iter().map(|(_, w)| *w).sum();
+        assert!(wsum > 0.0, "mixture weights must be positive");
+        let lo = parts.iter().map(|(h, _)| h.lo()).fold(f64::INFINITY, f64::min);
+        let hi = parts
+            .iter()
+            .map(|(h, _)| h.hi())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let width = ((hi - lo) / bins as f64).max(1e-9);
+        let mut weights = vec![0.0; bins];
+        for (h, w) in parts {
+            let scale = w / wsum;
+            for i in 0..h.num_bins() {
+                // Spread bin mass across overlapping target bins.
+                let (a, b, m) = h.bin(i);
+                if m == 0.0 {
+                    continue;
+                }
+                let t0 = ((a - lo) / width).max(0.0);
+                let t1 = ((b - lo) / width).min(bins as f64);
+                let i0 = t0 as usize;
+                let i1 = (t1.ceil() as usize).min(bins);
+                for j in i0..i1.max(i0 + 1).min(bins) {
+                    let seg_lo = (j as f64).max(t0);
+                    let seg_hi = ((j + 1) as f64).min(t1);
+                    let overlap = ((seg_hi - seg_lo) / (t1 - t0).max(1e-12)).max(0.0);
+                    weights[j] += scale * m * overlap;
+                }
+            }
+        }
+        Histogram::from_weights(lo, width, &weights)
+    }
+
+    /// Re-bin to `bins` uniform bins over the same support (coarsening for
+    /// the priority-score schedules: fewer bins → fewer milestones → less
+    /// hull churn, §Perf).
+    pub fn coarsen(&self, bins: usize) -> Histogram {
+        assert!(bins > 0);
+        if bins >= self.num_bins() {
+            return self.clone();
+        }
+        let width = (self.hi() - self.lo()) / bins as f64;
+        let mut weights = vec![0.0; bins];
+        for i in 0..self.num_bins() {
+            let (a, b, m) = self.bin(i);
+            if m == 0.0 {
+                continue;
+            }
+            let t0 = (a - self.lo()) / width;
+            let t1 = ((b - self.lo()) / width).min(bins as f64);
+            let i0 = t0 as usize;
+            let i1 = (t1.ceil() as usize).min(bins);
+            for j in i0..i1.max(i0 + 1).min(bins) {
+                let seg_lo = (j as f64).max(t0);
+                let seg_hi = ((j + 1) as f64).min(t1);
+                let overlap = ((seg_hi - seg_lo) / (t1 - t0).max(1e-12)).max(0.0);
+                weights[j] += m * overlap;
+            }
+        }
+        Histogram::from_weights(self.lo(), width, &weights)
+    }
+
+    /// Affine map of the random variable: Y = a·X + b (a > 0). Used by the
+    /// batch cost model (Eq. 9): L_B = c0 + c1·k·max.
+    pub fn affine(&self, a: f64, b: f64) -> Histogram {
+        assert!(a > 0.0, "affine scale must be positive");
+        Histogram {
+            lo: a * self.lo + b,
+            width: a * self.width,
+            mass: self.mass.clone(),
+        }
+    }
+
+    /// Multiply all x-coordinates by `s` (> 0) — used by the Fig. 14
+    /// overhead sweep ("scale the whole execution time distribution down").
+    pub fn scaled(&self, s: f64) -> Histogram {
+        self.affine(s, 0.0)
+    }
+
+    /// Check total mass ≈ 1.
+    pub fn is_normalized(&self) -> bool {
+        (self.mass.iter().sum::<f64>() - 1.0).abs() < 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_weights_normalizes() {
+        let h = Histogram::from_weights(0.0, 1.0, &[1.0, 3.0]);
+        assert_eq!(h.masses(), &[0.25, 0.75]);
+        assert!(h.is_normalized());
+    }
+
+    #[test]
+    fn from_samples_covers_range() {
+        let samples = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let h = Histogram::from_samples(&samples, 4);
+        assert!(h.lo() <= 1.0 && h.hi() >= 5.0);
+        assert!(h.is_normalized());
+        assert!((h.mean() - 3.0).abs() < 0.6); // midpoint-rule tolerance
+    }
+
+    #[test]
+    fn degenerate_samples() {
+        let h = Histogram::from_samples(&[7.0, 7.0, 7.0], 10);
+        assert_eq!(h.num_bins(), 1);
+        assert!((h.mean() - 7.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn constant_histogram() {
+        let h = Histogram::constant(5.0);
+        assert!((h.mean() - 5.0).abs() < 1e-3);
+        assert!((h.quantile(0.99) - 5.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cdf_properties() {
+        let h = Histogram::from_weights(0.0, 1.0, &[1.0, 1.0, 2.0]);
+        assert_eq!(h.cdf(-1.0), 0.0);
+        assert_eq!(h.cdf(10.0), 1.0);
+        assert!((h.cdf(1.0) - 0.25).abs() < 1e-12);
+        assert!((h.cdf(2.0) - 0.5).abs() < 1e-12);
+        assert!((h.cdf(1.5) - 0.375).abs() < 1e-12);
+        assert!((h.cdf_at_edge(1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let h = Histogram::from_weights(0.0, 2.0, &[1.0, 2.0, 1.0]);
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let x = h.quantile(q);
+            assert!((h.cdf(x) - q).abs() < 1e-9, "q={q} x={x} cdf={}", h.cdf(x));
+        }
+    }
+
+    #[test]
+    fn mean_matches_sample_mean() {
+        let mut rng = Rng::new(5);
+        let samples: Vec<f64> = (0..50_000).map(|_| rng.lognormal(3.0, 0.5)).collect();
+        let h = Histogram::from_samples(&samples, 200);
+        let sm = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!(
+            (h.mean() - sm).abs() / sm < 0.01,
+            "hist={} sample={}",
+            h.mean(),
+            sm
+        );
+    }
+
+    #[test]
+    fn mixture_mass_and_mean() {
+        let a = Histogram::from_weights(0.0, 1.0, &[1.0]); // U-ish on [0,1]
+        let b = Histogram::from_weights(10.0, 1.0, &[1.0]); // on [10,11]
+        let m = Histogram::mixture(&[(&a, 1.0), (&b, 1.0)], 22);
+        assert!(m.is_normalized());
+        // mean = (0.5 + 10.5)/2
+        assert!((m.mean() - 5.5).abs() < 0.3, "mean={}", m.mean());
+        // bimodal: mass near 0 and near 10, nothing in the middle
+        assert!(m.cdf(5.0) > 0.49 && m.cdf(5.0) < 0.51);
+    }
+
+    #[test]
+    fn mixture_weighted() {
+        let a = Histogram::constant(1.0);
+        let b = Histogram::constant(3.0);
+        let m = Histogram::mixture(&[(&a, 3.0), (&b, 1.0)], 50);
+        assert!((m.mean() - 1.5).abs() < 0.1, "mean={}", m.mean());
+    }
+
+    #[test]
+    fn affine_map() {
+        let h = Histogram::from_weights(1.0, 1.0, &[1.0, 1.0]);
+        let g = h.affine(2.0, 3.0); // y = 2x+3, x in [1,3] -> y in [5,9]
+        assert!((g.lo() - 5.0).abs() < 1e-12);
+        assert!((g.hi() - 9.0).abs() < 1e-12);
+        assert!((g.mean() - (2.0 * h.mean() + 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_p99() {
+        let mut rng = Rng::new(6);
+        let samples: Vec<f64> = (0..20_000).map(|_| rng.lognormal(2.0, 1.0)).collect();
+        let h = Histogram::from_samples(&samples, 300);
+        let s = h.scaled(0.1);
+        assert!((s.p99() - 0.1 * h.p99()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Core domain math of Orloj: requests, empirical distributions, order
+//! statistics, the batch cost model, SLO cost functions, and the
+//! time-varying priority score (paper §3–4).
+
+pub mod batchmodel;
+pub mod cost;
+pub mod histogram;
+pub mod orderstats;
+pub mod priority;
+pub mod request;

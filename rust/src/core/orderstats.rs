@@ -1,0 +1,345 @@
+//! Max order statistics of execution-time distributions (paper §4.2).
+//!
+//! Batching means all requests in a batch finish together, so the batch's
+//! effective per-request length is `max_{r∈B} l_r` (Eq. 4). This module
+//! computes the distribution of that max:
+//!
+//! * **iid case** (Eq. 6): `F_(k)(l) = F(l)^k` — all k requests share one
+//!   distribution (e.g. the model-wide mixture of §4.3).
+//! * **non-iid case** (Eq. 8, Özbey et al.): the polarization-identity
+//!   expansion over subsets `s ⊆ B` with averaged CDFs
+//!   `F^s = (1/n_s) Σ_{i∈s} F_i`:
+//!
+//!   `f_(k) = Σ_{κ=1..k} (-1)^{k-κ} (κ^k / k!) Σ_{n_s=κ} k [F^s]^{k-1} f^s`
+//!
+//!   We implement Eq. 8 faithfully *and* the direct product rule
+//!   `f_max = Σ_i f_i Π_{j≠i} F_j` (mathematically identical, O(k²·bins)
+//!   instead of O(2^k·bins)); tests assert they agree and the scheduler
+//!   uses the direct form on larger batches.
+//!
+//! All computation is bin-wise on a shared uniform grid, producing the
+//! quantities Eq. (5) needs: `E[max]` and the max's histogram.
+
+use super::histogram::Histogram;
+
+/// Distribution of `max` of k iid draws from `h` (Eq. 6).
+///
+/// Bin masses of the max: `F(e_{i+1})^k − F(e_i)^k` using exact edge CDFs.
+pub fn max_iid(h: &Histogram, k: usize) -> Histogram {
+    assert!(k >= 1);
+    if k == 1 {
+        return h.clone();
+    }
+    let n = h.num_bins();
+    let mut weights = vec![0.0; n];
+    let mut prev = 0.0f64; // F(lo)^k = 0
+    let mut cum = 0.0f64;
+    for i in 0..n {
+        cum += h.masses()[i];
+        let cur = cum.min(1.0).powi(k as i32);
+        weights[i] = (cur - prev).max(0.0);
+        prev = cur;
+    }
+    Histogram::from_weights(h.lo(), h.bin_width(), &weights)
+}
+
+/// Re-bin a set of histograms onto one common uniform grid so bin-wise
+/// arithmetic is valid. Returns (lo, width, masses-per-input).
+fn common_grid(hs: &[&Histogram], bins: usize) -> (f64, f64, Vec<Vec<f64>>) {
+    let lo = hs.iter().map(|h| h.lo()).fold(f64::INFINITY, f64::min);
+    let hi = hs.iter().map(|h| h.hi()).fold(f64::NEG_INFINITY, f64::max);
+    let width = ((hi - lo) / bins as f64).max(1e-12);
+    let grids = hs
+        .iter()
+        .map(|h| {
+            let mut w = vec![0.0; bins];
+            for i in 0..h.num_bins() {
+                let (a, b, m) = h.bin(i);
+                if m == 0.0 {
+                    continue;
+                }
+                let t0 = ((a - lo) / width).max(0.0);
+                let t1 = ((b - lo) / width).min(bins as f64);
+                let i0 = t0 as usize;
+                let i1 = (t1.ceil() as usize).min(bins);
+                for j in i0..i1.max(i0 + 1).min(bins) {
+                    let seg_lo = (j as f64).max(t0);
+                    let seg_hi = ((j + 1) as f64).min(t1);
+                    let overlap = ((seg_hi - seg_lo) / (t1 - t0).max(1e-12)).max(0.0);
+                    w[j] += m * overlap;
+                }
+            }
+            w
+        })
+        .collect();
+    (lo, width, grids)
+}
+
+/// Direct product rule for the max of independent, non-identically
+/// distributed variables: mass of max in bin i =
+/// `Π_j F_j(e_{i+1}) − Π_j F_j(e_i)`.
+pub fn max_inid_direct(hs: &[&Histogram], bins: usize) -> Histogram {
+    assert!(!hs.is_empty());
+    if hs.len() == 1 {
+        return hs[0].clone();
+    }
+    let (lo, width, grids) = common_grid(hs, bins);
+    let k = grids.len();
+    // Edge CDFs per distribution.
+    let mut cdfs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for g in &grids {
+        let mut c = Vec::with_capacity(bins + 1);
+        c.push(0.0);
+        let mut acc = 0.0;
+        for m in g {
+            acc += m;
+            c.push(acc.min(1.0));
+        }
+        cdfs.push(c);
+    }
+    let mut weights = vec![0.0; bins];
+    let mut prev = 0.0;
+    for i in 0..bins {
+        let mut prod = 1.0;
+        for c in &cdfs {
+            prod *= c[i + 1];
+        }
+        weights[i] = (prod - prev).max(0.0);
+        prev = prod;
+    }
+    Histogram::from_weights(lo, width, &weights)
+}
+
+/// Eq. (8) of the paper (Özbey et al.): polarization-identity expansion of
+/// the max PDF over subsets of B. Exponential in k — kept for fidelity and
+/// as the differential-testing oracle for `max_inid_direct`. Panics for
+/// k > 20 (subset enumeration would be unreasonable).
+pub fn max_inid_ozbey(hs: &[&Histogram], bins: usize) -> Histogram {
+    let k = hs.len();
+    assert!(k >= 1 && k <= 20, "Eq. 8 enumeration limited to k<=20");
+    if k == 1 {
+        return hs[0].clone();
+    }
+    let (lo, width, grids) = common_grid(hs, bins);
+    // Edge CDFs per distribution (same convention as direct form).
+    let cdfs: Vec<Vec<f64>> = grids
+        .iter()
+        .map(|g| {
+            let mut c = Vec::with_capacity(bins + 1);
+            c.push(0.0);
+            let mut acc = 0.0;
+            for m in g {
+                acc += m;
+                c.push(acc.min(1.0));
+            }
+            c
+        })
+        .collect();
+
+    // k! as f64 (k <= 20 so exact in f64 up to 2^63 > 20!).
+    let kfact: f64 = (1..=k as u64).map(|x| x as f64).product();
+
+    // Accumulate the signed subset contributions on the *CDF of the max*:
+    // F_max = Σ_κ (-1)^{k-κ} (κ^k / k!) Σ_{|s|=κ} [F^s]^k
+    // then take per-bin differences (equivalent to integrating Eq. 8's pdf
+    // over each bin, but exact on the grid).
+    let mut f_max_edges = vec![0.0f64; bins + 1];
+    for mask in 1u32..(1u32 << k) {
+        let ns = mask.count_ones() as usize;
+        let sign = if (k - ns) % 2 == 0 { 1.0 } else { -1.0 };
+        let coeff = sign * (ns as f64).powi(k as i32) / kfact;
+        for e in 0..=bins {
+            let mut fsum = 0.0;
+            for (j, c) in cdfs.iter().enumerate() {
+                if mask & (1 << j) != 0 {
+                    fsum += c[e];
+                }
+            }
+            let favg = fsum / ns as f64;
+            f_max_edges[e] += coeff * favg.powi(k as i32);
+        }
+    }
+    let mut weights = vec![0.0; bins];
+    for i in 0..bins {
+        weights[i] = (f_max_edges[i + 1] - f_max_edges[i]).max(0.0);
+    }
+    Histogram::from_weights(lo, width, &weights)
+}
+
+/// Max of a batch drawn as: `counts[j]` iid draws from `hs[j]` for each j.
+/// This is the form the estimator actually needs (k requests, few distinct
+/// app distributions): `F_max = Π_j F_j^{counts[j]}`.
+pub fn max_grouped(hs: &[&Histogram], counts: &[usize], bins: usize) -> Histogram {
+    assert_eq!(hs.len(), counts.len());
+    assert!(counts.iter().all(|&c| c > 0));
+    let (lo, width, grids) = common_grid(hs, bins);
+    let mut cdf_edges: Vec<Vec<f64>> = Vec::with_capacity(grids.len());
+    for g in &grids {
+        let mut c = Vec::with_capacity(bins + 1);
+        c.push(0.0);
+        let mut acc = 0.0;
+        for m in g {
+            acc += m;
+            c.push(acc.min(1.0));
+        }
+        cdf_edges.push(c);
+    }
+    let mut weights = vec![0.0; bins];
+    let mut prev = 0.0;
+    for i in 0..bins {
+        let mut prod = 1.0;
+        for (j, c) in cdf_edges.iter().enumerate() {
+            prod *= c[i + 1].powi(counts[j] as i32);
+        }
+        weights[i] = (prod - prev).max(0.0);
+        prev = prod;
+    }
+    Histogram::from_weights(lo, width, &weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn max_iid_k1_is_identity() {
+        let h = Histogram::from_weights(0.0, 1.0, &[1.0, 2.0, 1.0]);
+        assert_eq!(max_iid(&h, 1), h);
+    }
+
+    #[test]
+    fn max_iid_shifts_right() {
+        let h = Histogram::from_weights(0.0, 1.0, &[1.0, 1.0, 1.0, 1.0]);
+        let m2 = max_iid(&h, 2);
+        let m8 = max_iid(&h, 8);
+        assert!(m2.mean() > h.mean());
+        assert!(m8.mean() > m2.mean());
+        assert!(m8.mean() < h.hi());
+        assert!(m2.is_normalized() && m8.is_normalized());
+    }
+
+    #[test]
+    fn max_iid_matches_monte_carlo() {
+        let mut rng = Rng::new(42);
+        let samples: Vec<f64> = (0..40_000).map(|_| rng.lognormal(2.0, 0.8)).collect();
+        let h = Histogram::from_samples(&samples, 250);
+        for k in [2usize, 4, 8] {
+            let analytic = max_iid(&h, k).mean();
+            // Monte Carlo from the same histogram (sample via quantile).
+            let mc: f64 = (0..20_000)
+                .map(|_| {
+                    (0..k)
+                        .map(|_| h.quantile(rng.f64()))
+                        .fold(f64::NEG_INFINITY, f64::max)
+                })
+                .sum::<f64>()
+                / 20_000.0;
+            assert!(
+                close(analytic, mc, 0.02),
+                "k={k} analytic={analytic} mc={mc}"
+            );
+        }
+    }
+
+    #[test]
+    fn direct_equals_ozbey_two_distributions() {
+        let a = Histogram::from_weights(0.0, 1.0, &[3.0, 1.0]);
+        let b = Histogram::from_weights(1.0, 1.0, &[1.0, 1.0, 2.0]);
+        let d = max_inid_direct(&[&a, &b], 64);
+        let o = max_inid_ozbey(&[&a, &b], 64);
+        for i in 0..64 {
+            assert!(
+                (d.masses()[i] - o.masses()[i]).abs() < 1e-9,
+                "bin {i}: {} vs {}",
+                d.masses()[i],
+                o.masses()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn direct_equals_ozbey_random_mix() {
+        let mut rng = Rng::new(7);
+        for trial in 0..10 {
+            let k = 2 + (trial % 3); // 2..4 distributions
+            let hs: Vec<Histogram> = (0..k)
+                .map(|_| {
+                    let w: Vec<f64> = (0..6).map(|_| rng.f64() + 0.01).collect();
+                    Histogram::from_weights(rng.f64() * 5.0, 0.5 + rng.f64(), &w)
+                })
+                .collect();
+            let refs: Vec<&Histogram> = hs.iter().collect();
+            let d = max_inid_direct(&refs, 96);
+            let o = max_inid_ozbey(&refs, 96);
+            for i in 0..96 {
+                assert!(
+                    (d.masses()[i] - o.masses()[i]).abs() < 1e-8,
+                    "trial {trial} bin {i}"
+                );
+            }
+            assert!(close(d.mean(), o.mean(), 1e-9));
+        }
+    }
+
+    #[test]
+    fn inid_reduces_to_iid_when_same() {
+        let h = Histogram::from_weights(0.0, 0.5, &[1.0, 2.0, 3.0, 2.0]);
+        let via_iid = max_iid(&h, 3);
+        let via_inid = max_inid_direct(&[&h, &h, &h], h.num_bins());
+        assert!(close(via_iid.mean(), via_inid.mean(), 1e-6));
+    }
+
+    #[test]
+    fn grouped_equals_direct() {
+        let a = Histogram::from_weights(0.0, 1.0, &[1.0, 1.0]);
+        let b = Histogram::from_weights(0.5, 1.0, &[1.0, 3.0]);
+        let g = max_grouped(&[&a, &b], &[2, 1], 64);
+        let d = max_inid_direct(&[&a, &a, &b], 64);
+        assert!(close(g.mean(), d.mean(), 1e-6), "{} vs {}", g.mean(), d.mean());
+    }
+
+    #[test]
+    fn grouped_matches_monte_carlo() {
+        let mut rng = Rng::new(99);
+        let a = Histogram::from_samples(
+            &(0..20_000).map(|_| rng.lognormal(1.0, 0.4)).collect::<Vec<_>>(),
+            150,
+        );
+        let b = Histogram::from_samples(
+            &(0..20_000).map(|_| rng.lognormal(2.0, 0.6)).collect::<Vec<_>>(),
+            150,
+        );
+        let g = max_grouped(&[&a, &b], &[3, 2], 300);
+        let mc: f64 = (0..20_000)
+            .map(|_| {
+                let ma = (0..3)
+                    .map(|_| a.quantile(rng.f64()))
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let mb = (0..2)
+                    .map(|_| b.quantile(rng.f64()))
+                    .fold(f64::NEG_INFINITY, f64::max);
+                ma.max(mb)
+            })
+            .sum::<f64>()
+            / 20_000.0;
+        assert!(close(g.mean(), mc, 0.02), "analytic={} mc={}", g.mean(), mc);
+    }
+
+    #[test]
+    fn toy_example_fig6_shape() {
+        // Paper Fig. 6: dist 1 concentrated at mean l; dist 2 bimodal
+        // (very early or very late), same mean. Batch-of-2 max skews right.
+        let d1 = Histogram::from_weights(4.0, 1.0, &[0.05, 0.9, 0.05]); // ~5
+        let d2 = Histogram::from_weights(1.0, 1.0, &[0.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.5]); // 1.5 or 8.5
+        let batch = max_inid_direct(&[&d1, &d2], 64);
+        assert!(batch.mean() > d1.mean());
+        assert!(batch.mean() > d2.mean());
+        // Short mode of d2 can never be the batch max: no mass below d1's lo.
+        assert!(batch.cdf(3.9) < 1e-9, "cdf(3.9)={}", batch.cdf(3.9));
+    }
+}

@@ -1,0 +1,480 @@
+//! Time-varying priority score (paper Eq. 1–2, §4.4).
+//!
+//! For a request with deadline `D`, miss penalty `c`, and batch execution
+//! time `L` described by a histogram with bins `[l1_i, l2_i)` of mass `h_i`,
+//! the Shepherd-style score is `p(t) = Σ_i p_i(t)` with
+//!
+//! ```text
+//! p_i(t) = (h_i c / (E[L] b)) (e^{b l2_i} − e^{b l1_i}) e^{−bD} e^{bt}   t < D−l2_i
+//!        = h_i c/(E[L] b) − (h_i c/(E[L] b)) e^{b l1_i} e^{−bD} e^{bt}   D−l2_i ≤ t < D−l1_i
+//!        = 0                                                             D−l1_i ≤ t
+//! ```
+//!
+//! **Normalization note.** The paper's Eq. (2) writes the bin weight as the
+//! raw frequency `h`, which is only dimensionally consistent when every
+//! histogram in the system shares one bin width. Deriving Eq. (1) directly
+//! (`E[C_delay]−E[C_now] = c·∫_{l≤D−t} f_L(l) e^{−b(D−t−l)} dl` with the
+//! bin's density `h/(l2−l1)`) yields the same three regimes with `h`
+//! replaced by `h/(l2−l1)`; this also makes the score converge to the
+//! correct point-mass limit `(c/E[L]) e^{b l} e^{−bD} e^{bt}` as the bin
+//! narrows. We implement the density-normalized form.
+//!
+//! Between *milestones* (the times `D−l2_i`, `D−l1_i` where a bin changes
+//! regime) the score is exactly `p(t) = α·e^{bt} + β` with constant (α, β)
+//! — the 2-D point the dynamic convex hull stores (§4.4). This module
+//! computes the per-request (α, β) pair, its milestone schedule, and the
+//! relative-timestamp bookkeeping that avoids `e^{bt}` overflow: all times
+//! entering the exponentials are milliseconds relative to a shared
+//! [`ScoreContext`] base that the scheduler resets periodically
+//! (Algorithm 1 lines 2–4).
+
+use super::histogram::Histogram;
+use crate::clock::{us_to_ms, Micros};
+
+/// Shared scoring parameters: `b` (1/ms) of the anticipated-delay
+/// exponential, and the current base time for relative timestamps.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreContext {
+    /// Anticipated-delay distribution parameter (paper: 1e-4 per ms).
+    pub b: f64,
+    /// Base timestamp; all exponentials see `t − base`.
+    pub base: Micros,
+}
+
+/// When `b · (t − base)` exceeds this, the scheduler must reset the base
+/// and recompute scores. e^40 ≈ 2.4e17 leaves ample headroom below f64
+/// overflow (e^709) while keeping e^{−bD} comfortably above underflow.
+pub const RESET_THRESHOLD: f64 = 40.0;
+
+impl ScoreContext {
+    pub fn new(b: f64) -> Self {
+        assert!(b > 0.0);
+        ScoreContext { b, base: 0 }
+    }
+
+    /// Relative milliseconds for a timestamp.
+    #[inline]
+    pub fn rel_ms(&self, t: Micros) -> f64 {
+        us_to_ms(t.saturating_sub(self.base)) - us_to_ms(self.base.saturating_sub(t))
+    }
+
+    /// The query multiplier `e^{bt}` for the hull.
+    #[inline]
+    pub fn multiplier(&self, t: Micros) -> f64 {
+        (self.b * self.rel_ms(t)).exp()
+    }
+
+    /// Does scoring need a base reset at time `t`? (paper §4.4: "about
+    /// 1000 s of scheduling before ... having to reset the relative
+    /// timestamps' reference point")
+    pub fn needs_reset(&self, t: Micros) -> bool {
+        self.b * self.rel_ms(t) > RESET_THRESHOLD
+    }
+
+    /// Reset the base to `t`. Existing scores must be recomputed.
+    pub fn reset(&mut self, t: Micros) {
+        self.base = t;
+    }
+}
+
+/// Piecewise-constant (α, β) pair for `p(t) = α e^{bt} + β`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Coeffs {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Coeffs {
+    pub const ZERO: Coeffs = Coeffs {
+        alpha: 0.0,
+        beta: 0.0,
+    };
+
+    /// Evaluate the score given the precomputed multiplier `e^{bt}`.
+    #[inline]
+    pub fn eval(&self, multiplier: f64) -> f64 {
+        self.alpha * multiplier + self.beta
+    }
+}
+
+/// The full score schedule of one request (for one batch-size queue):
+/// (α, β) segments separated by milestones.
+#[derive(Debug, Clone)]
+pub struct ScoreSchedule {
+    /// Segment boundaries in relative ms, strictly increasing. Segment `i`
+    /// covers `[boundary[i-1], boundary[i])` (segment 0 starts at −∞);
+    /// after the last boundary the score is identically 0.
+    boundaries: Vec<f64>,
+    /// `coeffs[i]` applies to segment `i` (len == boundaries.len() + 1;
+    /// the final entry is always ZERO).
+    coeffs: Vec<Coeffs>,
+}
+
+impl ScoreSchedule {
+    /// Build from the request's deadline (absolute Micros), its miss
+    /// penalty `c`, and the estimated batch latency distribution `l_b`.
+    ///
+    /// Within the schedule all times are relative ms (per `ctx.base`).
+    pub fn build(ctx: &ScoreContext, deadline: Micros, c: f64, l_b: &Histogram) -> ScoreSchedule {
+        let b = ctx.b;
+        let d_rel = ctx.rel_ms(deadline);
+        let e_l = l_b.mean().max(1e-9);
+        let scale = c / (e_l * b);
+        let exp_neg_bd = (-b * d_rel).exp();
+
+        // Histogram bins are contiguous with uniform width (`l1_i =
+        // edge_i`, `l2_i = edge_{i+1}`), so as t advances exactly one bin
+        // occupies regime B at a time: for t ∈ [D−edge_{j+1}, D−edge_j),
+        // bins 0..j are in regime A, bin j is in B, the rest in C. That
+        // turns schedule construction into prefix sums — O(bins), no
+        // incremental-delta drift (§Perf: this replaced an O(bins²) exact
+        // recomputation).
+        let nb = l_b.num_bins();
+        let mut a_coef = vec![0.0f64; nb];
+        let mut b_coef = vec![0.0f64; nb];
+        let mut beta_b = vec![0.0f64; nb];
+        for i in 0..nb {
+            let (l1, l2, h) = l_b.bin(i);
+            if h <= 0.0 {
+                continue;
+            }
+            let dens = h / (l2 - l1).max(1e-12);
+            a_coef[i] = scale * dens * ((b * l2).exp() - (b * l1).exp()) * exp_neg_bd;
+            b_coef[i] = -scale * dens * (b * l1).exp() * exp_neg_bd;
+            beta_b[i] = scale * dens;
+        }
+        // prefix_a[j] = Σ_{i<j} a_coef[i].
+        let mut prefix_a = vec![0.0f64; nb + 1];
+        for i in 0..nb {
+            prefix_a[i + 1] = prefix_a[i] + a_coef[i];
+        }
+        let mut boundaries = Vec::with_capacity(nb + 1);
+        let mut coeffs = Vec::with_capacity(nb + 2);
+        // Segment before the first boundary: all bins in regime A.
+        coeffs.push(Coeffs {
+            alpha: prefix_a[nb],
+            beta: 0.0,
+        });
+        // Walk boundaries in increasing t: t = D − edge_{nb−s}.
+        for s in 1..=nb {
+            let j = nb - s; // the single regime-B bin in this segment
+            let seg = Coeffs {
+                alpha: prefix_a[j] + b_coef[j],
+                beta: beta_b[j],
+            };
+            // Merge runs of identical segments (zero-mass bins) so the
+            // milestone machinery doesn't fire on empty transitions.
+            if *coeffs.last().unwrap() == seg {
+                continue;
+            }
+            boundaries.push(d_rel - l_b.edge(j + 1));
+            coeffs.push(seg);
+        }
+        // Terminal segment: everything past D − edge_0 scores zero.
+        if *coeffs.last().unwrap() != Coeffs::ZERO {
+            boundaries.push(d_rel - l_b.edge(0));
+            coeffs.push(Coeffs::ZERO);
+        }
+        ScoreSchedule { boundaries, coeffs }
+    }
+
+    /// Appendix B: schedule for a piecewise-step cost function — the sum
+    /// of the single-step schedules of its decomposition (deadline `d_i`
+    /// with incremental penalty `c_i − c_{i−1}`).
+    pub fn build_piecewise(
+        ctx: &ScoreContext,
+        cost: &crate::core::cost::PiecewiseStepCost,
+        l_b: &Histogram,
+    ) -> ScoreSchedule {
+        let parts: Vec<ScoreSchedule> = cost
+            .decompose()
+            .into_iter()
+            .map(|step| ScoreSchedule::build(ctx, step.deadline, step.penalty, l_b))
+            .collect();
+        if parts.len() == 1 {
+            return parts.into_iter().next().unwrap();
+        }
+        // Merge: union of boundaries; coefficients sum segment-wise.
+        let mut boundaries: Vec<f64> = parts
+            .iter()
+            .flat_map(|p| p.boundaries.iter().copied())
+            .collect();
+        boundaries.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        boundaries.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        let mut coeffs = Vec::with_capacity(boundaries.len() + 1);
+        for seg in 0..=boundaries.len() {
+            let rep = if seg == 0 {
+                boundaries.first().map(|&m| m - 1.0).unwrap_or(0.0)
+            } else {
+                boundaries[seg - 1]
+            };
+            let mut alpha = 0.0;
+            let mut beta = 0.0;
+            for p in &parts {
+                let c = p.coeffs_at(rep);
+                alpha += c.alpha;
+                beta += c.beta;
+            }
+            coeffs.push(Coeffs { alpha, beta });
+        }
+        ScoreSchedule { boundaries, coeffs }
+    }
+
+    /// Coefficients active at relative time `t_rel` (ms).
+    pub fn coeffs_at(&self, t_rel: f64) -> Coeffs {
+        let idx = self.boundaries.partition_point(|&m| m <= t_rel);
+        self.coeffs[idx]
+    }
+
+    /// Next milestone strictly after `t_rel`, if any (Algorithm 1 line 6's
+    /// `Milestone(r)`).
+    pub fn next_milestone(&self, t_rel: f64) -> Option<f64> {
+        let idx = self.boundaries.partition_point(|&m| m <= t_rel);
+        self.boundaries.get(idx).copied()
+    }
+
+    /// Evaluate `p(t)` at relative ms `t_rel` (for testing/plotting; the
+    /// hot path uses `coeffs_at` + the shared multiplier).
+    pub fn score_at(&self, b: f64, t_rel: f64) -> f64 {
+        self.coeffs_at(t_rel).eval((b * t_rel).exp())
+    }
+
+    /// Whether the score is identically zero from `t_rel` on.
+    pub fn exhausted(&self, t_rel: f64) -> bool {
+        self.boundaries
+            .last()
+            .map(|&m| t_rel >= m)
+            .unwrap_or(true)
+    }
+}
+
+/// Reference (slow) implementation of Eq. 2, used by tests to validate the
+/// segment construction: evaluates each bin's regime directly.
+pub fn reference_score(
+    b: f64,
+    deadline_rel_ms: f64,
+    c: f64,
+    l_b: &Histogram,
+    t_rel: f64,
+) -> f64 {
+    let e_l = l_b.mean().max(1e-9);
+    let scale = c / (e_l * b);
+    let mut p = 0.0;
+    for i in 0..l_b.num_bins() {
+        let (l1, l2, h) = l_b.bin(i);
+        if h <= 0.0 {
+            continue;
+        }
+        let d = deadline_rel_ms;
+        let dens = h / (l2 - l1).max(1e-12);
+        if t_rel < d - l2 {
+            p += scale * dens * ((b * l2).exp() - (b * l1).exp()) * (-b * d).exp()
+                * (b * t_rel).exp();
+        } else if t_rel < d - l1 {
+            p += scale * dens
+                - scale * dens * (b * l1).exp() * (-b * d).exp() * (b * t_rel).exp();
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ms_to_us;
+    use crate::util::rng::Rng;
+
+    const B: f64 = 1e-4;
+
+    fn ctx() -> ScoreContext {
+        ScoreContext::new(B)
+    }
+
+    #[test]
+    fn schedule_matches_reference() {
+        let c = ctx();
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 2.0, 1.0]); // [5,20) ms
+        let deadline = ms_to_us(100.0);
+        let s = ScoreSchedule::build(&c, deadline, 1.0, &l_b);
+        for t in [-50.0, 0.0, 40.0, 79.9, 80.1, 85.0, 90.1, 94.9, 95.1, 200.0] {
+            let fast = s.score_at(B, t);
+            let slow = reference_score(B, 100.0, 1.0, &l_b, t);
+            assert!(
+                (fast - slow).abs() < 1e-9 * (1.0 + slow.abs()),
+                "t={t}: fast={fast} slow={slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn score_rises_then_falls_to_zero() {
+        let c = ctx();
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 1.0]);
+        let s = ScoreSchedule::build(&c, ms_to_us(200.0), 1.0, &l_b);
+        // Rising while waiting (regime A: positive α, e^{bt} grows).
+        assert!(s.score_at(B, 50.0) > s.score_at(B, 0.0));
+        // Zero after the last milestone (t ≥ D − l1_min = 195).
+        assert_eq!(s.score_at(B, 196.0), 0.0);
+        assert!(s.exhausted(195.0));
+        assert!(!s.exhausted(100.0));
+    }
+
+    #[test]
+    fn milestones_are_bin_edges() {
+        let c = ctx();
+        // Unequal bin masses → the coefficients change at every edge.
+        let l_b = Histogram::from_weights(10.0, 10.0, &[1.0, 3.0]); // bins [10,20),[20,30)
+        let s = ScoreSchedule::build(&c, ms_to_us(100.0), 1.0, &l_b);
+        // Boundaries at D−edge: D−30=70, D−20=80, D−10=90.
+        assert_eq!(s.next_milestone(0.0), Some(70.0));
+        assert_eq!(s.next_milestone(70.0), Some(80.0));
+        assert_eq!(s.next_milestone(80.0), Some(90.0));
+        assert_eq!(s.next_milestone(90.0), None);
+    }
+
+    #[test]
+    fn equal_density_bins_merge_milestones() {
+        // p(t) is continuous across an edge between equal-mass bins, so no
+        // milestone (hull re-insert) is needed there.
+        let c = ctx();
+        let l_b = Histogram::from_weights(10.0, 10.0, &[1.0, 1.0]);
+        let s = ScoreSchedule::build(&c, ms_to_us(100.0), 1.0, &l_b);
+        assert_eq!(s.next_milestone(0.0), Some(70.0));
+        // The D−20=80 boundary is a no-op and is merged away.
+        assert_eq!(s.next_milestone(70.0), Some(90.0));
+        assert_eq!(s.next_milestone(90.0), None);
+        // The score still matches the reference everywhere.
+        for t in [60.0, 75.0, 79.9, 80.1, 85.0, 95.0] {
+            let slow = reference_score(B, 100.0, 1.0, &l_b, t);
+            assert!((s.score_at(B, t) - slow).abs() < 1e-9 * (1.0 + slow.abs()));
+        }
+    }
+
+    #[test]
+    fn urgency_ordering_near_deadline() {
+        // Two identical requests, different deadlines: the one with the
+        // nearer deadline scores higher "now" (more cost reduction).
+        let c = ctx();
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 1.0]);
+        let near = ScoreSchedule::build(&c, ms_to_us(50.0), 1.0, &l_b);
+        let far = ScoreSchedule::build(&c, ms_to_us(500.0), 1.0, &l_b);
+        let t = 10.0;
+        assert!(near.score_at(B, t) > far.score_at(B, t));
+    }
+
+    #[test]
+    fn shorter_expected_latency_scores_higher() {
+        // 1/E[L] weighting: cheaper batches win, all else equal.
+        let c = ctx();
+        let short = Histogram::constant(5.0);
+        let long = Histogram::constant(50.0);
+        let s_short = ScoreSchedule::build(&c, ms_to_us(500.0), 1.0, &short);
+        let s_long = ScoreSchedule::build(&c, ms_to_us(500.0), 1.0, &long);
+        assert!(s_short.score_at(B, 0.0) > s_long.score_at(B, 0.0));
+    }
+
+    #[test]
+    fn random_schedules_match_reference() {
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let c = ctx();
+            let nb = 1 + rng.index(8);
+            let w: Vec<f64> = (0..nb).map(|_| rng.f64() + 0.01).collect();
+            let l_b = Histogram::from_weights(rng.f64() * 20.0, 1.0 + rng.f64() * 10.0, &w);
+            // Quantize the deadline to whole µs the way the scheduler's
+            // clock does, so the reference sees the same value.
+            let d_ms = crate::clock::us_to_ms(ms_to_us(50.0 + rng.f64() * 2000.0));
+            let cost = 0.5 + rng.f64() * 2.0;
+            let s = ScoreSchedule::build(&c, ms_to_us(d_ms), cost, &l_b);
+            for _ in 0..20 {
+                let t = rng.f64() * d_ms * 1.2 - 10.0;
+                let fast = s.score_at(B, t);
+                let slow = reference_score(B, d_ms, cost, &l_b, t);
+                assert!(
+                    (fast - slow).abs() < 1e-7 * (1.0 + slow.abs()),
+                    "t={t}: {fast} vs {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn piecewise_cost_schedule_is_sum_of_steps() {
+        // Appendix B: p(t) of the multi-step cost equals the sum of the
+        // single-step scores of the decomposition, at every t.
+        use crate::core::cost::PiecewiseStepCost;
+        let c = ctx();
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 2.0, 1.0]);
+        let cost = PiecewiseStepCost::new(vec![
+            (ms_to_us(100.0), 1.0),
+            (ms_to_us(200.0), 3.0),
+            (ms_to_us(400.0), 7.0),
+        ]);
+        let multi = ScoreSchedule::build_piecewise(&c, &cost, &l_b);
+        for t in [-20.0, 0.0, 50.0, 85.0, 95.0, 150.0, 185.0, 250.0, 390.0, 500.0] {
+            let want = reference_score(B, 100.0, 1.0, &l_b, t)
+                + reference_score(B, 200.0, 2.0, &l_b, t)
+                + reference_score(B, 400.0, 4.0, &l_b, t);
+            let got = multi.score_at(B, t);
+            assert!(
+                (got - want).abs() < 1e-9 * (1.0 + want.abs()),
+                "t={t}: {got} vs {want}"
+            );
+        }
+        // Still exhibits milestones from every step's deadline.
+        assert!(multi.next_milestone(0.0).is_some());
+        assert!(multi.exhausted(396.0));
+    }
+
+    #[test]
+    fn piecewise_single_step_equals_plain_build() {
+        use crate::core::cost::PiecewiseStepCost;
+        let c = ctx();
+        let l_b = Histogram::from_weights(2.0, 3.0, &[1.0, 1.0, 2.0]);
+        let cost = PiecewiseStepCost::single(ms_to_us(150.0), 2.5);
+        let multi = ScoreSchedule::build_piecewise(&c, &cost, &l_b);
+        let single = ScoreSchedule::build(&c, ms_to_us(150.0), 2.5, &l_b);
+        for t in [0.0, 80.0, 120.0, 140.0, 160.0] {
+            assert_eq!(multi.score_at(B, t), single.score_at(B, t));
+        }
+    }
+
+    #[test]
+    fn context_reset_detection() {
+        let mut c = ScoreContext::new(1e-4);
+        // b·t > 40 → t > 400,000 ms = 400 s.
+        assert!(!c.needs_reset(ms_to_us(399_000.0)));
+        assert!(c.needs_reset(ms_to_us(400_001.0)));
+        c.reset(ms_to_us(400_001.0));
+        assert!(!c.needs_reset(ms_to_us(500_000.0)));
+        // Scores survive rebasing: same score at same absolute time.
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 1.0]);
+        let c0 = ScoreContext::new(1e-4);
+        let mut c1 = ScoreContext::new(1e-4);
+        c1.reset(ms_to_us(100_000.0));
+        let d = ms_to_us(100_500.0);
+        let t = ms_to_us(100_100.0);
+        let s0 = ScoreSchedule::build(&c0, d, 1.0, &l_b);
+        let s1 = ScoreSchedule::build(&c1, d, 1.0, &l_b);
+        let p0 = s0.coeffs_at(c0.rel_ms(t)).eval(c0.multiplier(t));
+        let p1 = s1.coeffs_at(c1.rel_ms(t)).eval(c1.multiplier(t));
+        assert!((p0 - p1).abs() < 1e-6 * (1.0 + p0.abs()), "{p0} vs {p1}");
+    }
+
+    #[test]
+    fn relative_ordering_invariant_to_b() {
+        // §5.6: for requests sharing a latency distribution, the nearer
+        // deadline scores higher at every b (the b-sensitivity experiment's
+        // underlying invariant).
+        let l_b = Histogram::from_weights(2.0, 2.0, &[1.0, 3.0]);
+        for b in [1e-6, 1e-5, 1e-4, 1e-3, 1e-2] {
+            let c = ScoreContext::new(b);
+            let s1 = ScoreSchedule::build(&c, ms_to_us(80.0), 1.0, &l_b);
+            let s2 = ScoreSchedule::build(&c, ms_to_us(120.0), 1.0, &l_b);
+            assert!(
+                s1.score_at(b, 0.0) > s2.score_at(b, 0.0),
+                "ordering flipped at b={b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Inference request model (paper §3.1).
+//!
+//! Each request is defined by its *release time* and *deadline* (release +
+//! SLO) and has a hidden minimum *execution time* — the time it takes when
+//! executed alone at batch size 1. The scheduler never sees `exec_ms`; it is
+//! carried on the struct so the simulator / worker can realize the actual
+//! execution, and so the online profiler can learn the distribution the way
+//! the real system would (paper: finished requests are sampled and profiled
+//! asynchronously).
+
+use crate::clock::Micros;
+
+/// Application identity. Requests are tagged per application (paper §3.2,
+/// step 2a); the profiler keeps one execution-time distribution per app.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppId(pub u32);
+
+/// Unique request id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// An inference request as seen by the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub app: AppId,
+    /// Arrival time.
+    pub release: Micros,
+    /// Deadline = release + SLO.
+    pub deadline: Micros,
+    /// Ground-truth solo execution time in milliseconds (hidden from the
+    /// scheduler; used by the worker/simulator and post-hoc profiling).
+    pub exec_ms: f64,
+    /// Opaque payload selector for the real-model path: which model variant
+    /// this request "needs" (e.g. early-exit depth). 0 for simulated runs.
+    pub variant: u32,
+}
+
+impl Request {
+    pub fn new(id: u64, app: AppId, release: Micros, slo: Micros, exec_ms: f64) -> Self {
+        Request {
+            id: RequestId(id),
+            app,
+            release,
+            deadline: release + slo,
+            exec_ms,
+            variant: 0,
+        }
+    }
+
+    pub fn with_variant(mut self, variant: u32) -> Self {
+        self.variant = variant;
+        self
+    }
+
+    /// SLO budget of this request.
+    pub fn slo(&self) -> Micros {
+        self.deadline - self.release
+    }
+
+    /// Remaining time before the deadline at time `t` (0 if past due).
+    pub fn slack(&self, t: Micros) -> Micros {
+        self.deadline.saturating_sub(t)
+    }
+
+    /// Whether the deadline has passed at time `t`.
+    pub fn expired(&self, t: Micros) -> bool {
+        t >= self.deadline
+    }
+}
+
+/// Terminal state of a request, for metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed at or before its deadline.
+    Finished,
+    /// Completed, but after the deadline.
+    Late,
+    /// Dropped by the scheduler (infeasible before execution).
+    TimedOut,
+    /// Failed because the executing system aborted the batch (Clockwork's
+    /// timeout-abort behaviour, §2.3).
+    Aborted,
+}
+
+impl Outcome {
+    pub fn met_slo(self) -> bool {
+        matches!(self, Outcome::Finished)
+    }
+}
+
+/// A completed request with its terminal state.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub request: Request,
+    pub outcome: Outcome,
+    /// Completion time (for Finished/Late) or drop time.
+    pub at: Micros,
+    /// Size of the batch it executed in (0 if never executed).
+    pub batch_size: usize,
+}
+
+impl Completion {
+    /// End-to-end latency in milliseconds (completion − release).
+    pub fn latency_ms(&self) -> f64 {
+        crate::clock::us_to_ms(self.at.saturating_sub(self.request.release))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_math() {
+        let r = Request::new(1, AppId(0), 1_000, 5_000, 3.0);
+        assert_eq!(r.deadline, 6_000);
+        assert_eq!(r.slo(), 5_000);
+        assert_eq!(r.slack(2_000), 4_000);
+        assert_eq!(r.slack(9_000), 0);
+        assert!(!r.expired(5_999));
+        assert!(r.expired(6_000));
+    }
+
+    #[test]
+    fn outcome_slo() {
+        assert!(Outcome::Finished.met_slo());
+        assert!(!Outcome::Late.met_slo());
+        assert!(!Outcome::TimedOut.met_slo());
+        assert!(!Outcome::Aborted.met_slo());
+    }
+
+    #[test]
+    fn completion_latency() {
+        let r = Request::new(1, AppId(0), 1_000, 5_000, 3.0);
+        let c = Completion {
+            request: r,
+            outcome: Outcome::Finished,
+            at: 4_500,
+            batch_size: 4,
+        };
+        assert!((c.latency_ms() - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,429 @@
+//! Concatenable queue for hull chains (paper §5.1: "we implemented the
+//! inner concatenate queue as a 2-3 tree ...").
+//!
+//! A hull chain is a sequence of points in chain order supporting
+//! `split`/`join` in O(log n) — the operations the Overmars–van Leeuwen
+//! hull tree needs to pass sub-chains up and down. We implement it as a
+//! join-based balanced tree (a treap with deterministic priorities derived
+//! from the point id — functionally equivalent to the paper's 2-3 tree:
+//! O(log n) expected split/join with seeded determinism, which record/
+//! replay requires). Descent helpers expose each visited node's chain
+//! neighbors, which the tangent searches need.
+
+use super::point::Point;
+use std::cmp::Ordering;
+
+fn prio(p: &Point) -> u64 {
+    // SplitMix64 over the id and coordinate bits: deterministic, well mixed.
+    let mut z = p
+        .id
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(p.x.to_bits())
+        .wrapping_add(p.y.to_bits().rotate_left(17));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    pt: Point,
+    prio: u64,
+    size: usize,
+    /// Cached subtree extremes: O(1) chain-neighbor lookup during descents
+    /// (§Perf: replaced per-step spine walks, which made every tangent
+    /// search O(log² n) instead of O(log n)).
+    min_pt: Point,
+    max_pt: Point,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+}
+
+impl Node {
+    fn new(pt: Point) -> Box<Node> {
+        Box::new(Node {
+            prio: prio(&pt),
+            pt,
+            size: 1,
+            min_pt: pt,
+            max_pt: pt,
+            left: None,
+            right: None,
+        })
+    }
+
+    fn update(&mut self) {
+        self.size = 1 + size(&self.left) + size(&self.right);
+        self.min_pt = self.left.as_ref().map(|l| l.min_pt).unwrap_or(self.pt);
+        self.max_pt = self.right.as_ref().map(|r| r.max_pt).unwrap_or(self.pt);
+    }
+}
+
+fn size(n: &Option<Box<Node>>) -> usize {
+    n.as_ref().map(|b| b.size).unwrap_or(0)
+}
+
+fn merge(a: Option<Box<Node>>, b: Option<Box<Node>>) -> Option<Box<Node>> {
+    match (a, b) {
+        (None, b) => b,
+        (a, None) => a,
+        (Some(mut a), Some(mut b)) => {
+            if a.prio >= b.prio {
+                a.right = merge(a.right.take(), Some(b));
+                a.update();
+                Some(a)
+            } else {
+                b.left = merge(Some(a), b.left.take());
+                b.update();
+                Some(b)
+            }
+        }
+    }
+}
+
+/// Split by count: first `n` elements vs rest.
+fn split_count(node: Option<Box<Node>>, n: usize) -> (Option<Box<Node>>, Option<Box<Node>>) {
+    match node {
+        None => (None, None),
+        Some(mut t) => {
+            let ls = size(&t.left);
+            if n <= ls {
+                let (a, b) = split_count(t.left.take(), n);
+                t.left = b;
+                t.update();
+                (a, Some(t))
+            } else {
+                let (a, b) = split_count(t.right.take(), n - ls - 1);
+                t.right = a;
+                t.update();
+                (Some(t), b)
+            }
+        }
+    }
+}
+
+/// Split by key: elements ≤ key (or < key if `inclusive` is false) vs rest.
+fn split_key(
+    node: Option<Box<Node>>,
+    key: &Point,
+    inclusive: bool,
+) -> (Option<Box<Node>>, Option<Box<Node>>) {
+    match node {
+        None => (None, None),
+        Some(mut t) => {
+            let goes_left = match t.pt.key_cmp(key) {
+                Ordering::Less => true,
+                Ordering::Equal => inclusive,
+                Ordering::Greater => false,
+            };
+            if goes_left {
+                let (a, b) = split_key(t.right.take(), key, inclusive);
+                t.right = a;
+                t.update();
+                (Some(t), b)
+            } else {
+                let (a, b) = split_key(t.left.take(), key, inclusive);
+                t.left = b;
+                t.update();
+                (a, Some(t))
+            }
+        }
+    }
+}
+
+/// Direction for a guided descent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    Left,
+    Stop,
+    Right,
+}
+
+/// A concatenable queue of points in strict chain order.
+#[derive(Debug, Clone, Default)]
+pub struct CQueue {
+    root: Option<Box<Node>>,
+}
+
+impl CQueue {
+    pub fn new() -> CQueue {
+        CQueue { root: None }
+    }
+
+    pub fn singleton(pt: Point) -> CQueue {
+        CQueue {
+            root: Some(Node::new(pt)),
+        }
+    }
+
+    /// Build from points already in chain order (O(n)).
+    pub fn from_sorted(pts: &[Point]) -> CQueue {
+        fn build(pts: &[Point]) -> Option<Box<Node>> {
+            if pts.is_empty() {
+                return None;
+            }
+            // Treap from sorted order: the max-priority element is the root.
+            let mut root_idx = 0;
+            let mut best = prio(&pts[0]);
+            for (i, p) in pts.iter().enumerate().skip(1) {
+                let pr = prio(p);
+                if pr > best {
+                    best = pr;
+                    root_idx = i;
+                }
+            }
+            let mut n = Node::new(pts[root_idx]);
+            n.left = build(&pts[..root_idx]);
+            n.right = build(&pts[root_idx + 1..]);
+            n.update();
+            Some(n)
+        }
+        CQueue { root: build(pts) }
+    }
+
+    pub fn len(&self) -> usize {
+        size(&self.root)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.root.is_none()
+    }
+
+    /// Concatenate: all points of `self` precede all points of `other`.
+    pub fn join(self, other: CQueue) -> CQueue {
+        debug_assert!(
+            self.root.is_none()
+                || other.root.is_none()
+                || self.last().unwrap().key_cmp(&other.first().unwrap()) == Ordering::Less,
+            "join requires disjoint ordered queues"
+        );
+        CQueue {
+            root: merge(self.root, other.root),
+        }
+    }
+
+    /// Split into (first n, rest).
+    pub fn split_at(self, n: usize) -> (CQueue, CQueue) {
+        let (a, b) = split_count(self.root, n);
+        (CQueue { root: a }, CQueue { root: b })
+    }
+
+    /// Split into (≤ key, > key) when inclusive, (< key, ≥ key) otherwise.
+    pub fn split_by(self, key: &Point, inclusive: bool) -> (CQueue, CQueue) {
+        let (a, b) = split_key(self.root, key, inclusive);
+        (CQueue { root: a }, CQueue { root: b })
+    }
+
+    pub fn first(&self) -> Option<Point> {
+        self.root.as_deref().map(|n| n.min_pt)
+    }
+
+    pub fn last(&self) -> Option<Point> {
+        self.root.as_deref().map(|n| n.max_pt)
+    }
+
+    /// Guided binary-search descent. At each node the callback sees the
+    /// node's point and its chain neighbors *within the whole queue*
+    /// (predecessor, successor) and returns which way to go. Returns the
+    /// point where the descent stopped (or the last node visited if it
+    /// runs off a nil edge — the chain is convex so this is the optimum for
+    /// monotone predicates).
+    pub fn descend<F>(&self, mut f: F) -> Option<Point>
+    where
+        F: FnMut(&Point, Option<&Point>, Option<&Point>) -> Step,
+    {
+        let mut cur = self.root.as_deref()?;
+        // Inherited neighbors from ancestors.
+        let mut inh_pred: Option<Point> = None;
+        let mut inh_succ: Option<Point> = None;
+        loop {
+            let local_pred = cur.left.as_deref().map(|l| l.max_pt).or(inh_pred);
+            let local_succ = cur.right.as_deref().map(|r| r.min_pt).or(inh_succ);
+            match f(&cur.pt, local_pred.as_ref(), local_succ.as_ref()) {
+                Step::Stop => return Some(cur.pt),
+                Step::Left => match cur.left.as_deref() {
+                    Some(l) => {
+                        inh_succ = Some(cur.pt);
+                        cur = l;
+                    }
+                    None => return Some(cur.pt),
+                },
+                Step::Right => match cur.right.as_deref() {
+                    Some(r) => {
+                        inh_pred = Some(cur.pt);
+                        cur = r;
+                    }
+                    None => return Some(cur.pt),
+                },
+            }
+        }
+    }
+
+    /// In-order contents (for tests / rebuilds).
+    pub fn to_vec(&self) -> Vec<Point> {
+        fn walk(n: &Option<Box<Node>>, out: &mut Vec<Point>) {
+            if let Some(b) = n {
+                walk(&b.left, out);
+                out.push(b.pt);
+                walk(&b.right, out);
+            }
+        }
+        let mut out = Vec::with_capacity(self.len());
+        walk(&self.root, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pts(n: usize, seed: u64) -> Vec<Point> {
+        let mut rng = Rng::new(seed);
+        let mut v: Vec<Point> = (0..n)
+            .map(|i| Point::new(rng.f64() * 100.0, rng.f64() * 100.0, i as u64))
+            .collect();
+        v.sort_by(Point::key_cmp);
+        v
+    }
+
+    #[test]
+    fn from_sorted_roundtrip() {
+        let v = pts(100, 1);
+        let q = CQueue::from_sorted(&v);
+        assert_eq!(q.len(), 100);
+        assert_eq!(q.to_vec(), v);
+        assert_eq!(q.first().unwrap().key_cmp(&v[0]), Ordering::Equal);
+        assert_eq!(q.last().unwrap().key_cmp(&v[99]), Ordering::Equal);
+    }
+
+    #[test]
+    fn split_at_and_join() {
+        let v = pts(50, 2);
+        let q = CQueue::from_sorted(&v);
+        for n in [0usize, 1, 10, 25, 49, 50] {
+            let (a, b) = q.clone().split_at(n);
+            assert_eq!(a.len(), n);
+            assert_eq!(b.len(), 50 - n);
+            assert_eq!(a.to_vec(), &v[..n]);
+            assert_eq!(b.to_vec(), &v[n..]);
+            let joined = a.join(b);
+            assert_eq!(joined.to_vec(), v);
+        }
+    }
+
+    #[test]
+    fn split_by_key() {
+        let v = pts(60, 3);
+        let q = CQueue::from_sorted(&v);
+        let key = v[30];
+        let (a, b) = q.clone().split_by(&key, true);
+        assert_eq!(a.len(), 31);
+        assert_eq!(b.len(), 29);
+        let (c, d) = q.clone().split_by(&key, false);
+        assert_eq!(c.len(), 30);
+        assert_eq!(d.len(), 30);
+        // Key absent from the queue: splits around it.
+        let ghost = Point::new(key.x, key.y, u64::MAX);
+        let (e, f) = q.clone().split_by(&ghost, true);
+        assert_eq!(e.len() + f.len(), 60);
+    }
+
+    #[test]
+    fn descend_finds_maximum_of_unimodal() {
+        // A concave sequence of y values: descend should find the peak.
+        let v: Vec<Point> = (0..101)
+            .map(|i| {
+                let x = i as f64;
+                Point::new(x, -(x - 37.0) * (x - 37.0), i as u64)
+            })
+            .collect();
+        let q = CQueue::from_sorted(&v);
+        let peak = q
+            .descend(|p, _prev, next| {
+                if let Some(nx) = next {
+                    if nx.y > p.y {
+                        return Step::Right;
+                    }
+                }
+                // move left if prev is better
+                Step::Stop
+            })
+            .unwrap();
+        // one-sided walk may stop early at a local right-edge; use both sides
+        let peak2 = q
+            .descend(|p, prev, next| {
+                if let Some(nx) = next {
+                    if nx.y > p.y {
+                        return Step::Right;
+                    }
+                }
+                if let Some(pv) = prev {
+                    if pv.y > p.y {
+                        return Step::Left;
+                    }
+                }
+                Step::Stop
+            })
+            .unwrap();
+        assert_eq!(peak2.x, 37.0, "two-sided descent finds the peak");
+        let _ = peak;
+    }
+
+    #[test]
+    fn descend_neighbors_are_chain_neighbors() {
+        let v = pts(64, 5);
+        let q = CQueue::from_sorted(&v);
+        // Stop at every element via split-points and verify neighbor pair.
+        for (i, target) in v.iter().enumerate() {
+            let mut seen = None;
+            q.descend(|p, prev, next| {
+                match p.key_cmp(target) {
+                    Ordering::Equal => {
+                        seen = Some((prev.copied(), next.copied()));
+                        Step::Stop
+                    }
+                    Ordering::Less => Step::Right,
+                    Ordering::Greater => Step::Left,
+                }
+            });
+            let (prev, next) = seen.expect("target found");
+            if i == 0 {
+                assert!(prev.is_none());
+            } else {
+                assert_eq!(prev.unwrap().key_cmp(&v[i - 1]), Ordering::Equal);
+            }
+            if i == 63 {
+                assert!(next.is_none());
+            } else {
+                assert_eq!(next.unwrap().key_cmp(&v[i + 1]), Ordering::Equal);
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_split_join_stress() {
+        let mut rng = Rng::new(9);
+        let v = pts(200, 10);
+        let mut q = CQueue::from_sorted(&v);
+        for _ in 0..100 {
+            let n = rng.index(q.len() + 1);
+            let (a, b) = q.split_at(n);
+            assert_eq!(a.len(), n);
+            q = a.join(b);
+            assert_eq!(q.len(), 200);
+        }
+        assert_eq!(q.to_vec(), v);
+    }
+
+    #[test]
+    fn empty_queue_behaviour() {
+        let q = CQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.first(), None);
+        assert_eq!(q.descend(|_, _, _| Step::Stop), None);
+        let (a, b) = q.split_at(0);
+        assert!(a.is_empty() && b.is_empty());
+    }
+}

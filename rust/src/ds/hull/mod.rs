@@ -1,0 +1,586 @@
+//! Dynamic upper convex hull — Overmars & van Leeuwen (1981), the priority
+//! queue at the heart of Orloj (paper §4.4, §5.1, Fig. 12).
+//!
+//! Requests map to 2-D points `(α, β)` whose score at time `t` is
+//! `α·e^{bt} + β`; the top-priority request is the point maximizing that
+//! linear functional, which lies on the upper hull. The hull must support
+//! online insertion *and deletion* as requests arrive, get scheduled, or
+//! time out.
+//!
+//! Structure: a weight-balanced (scapegoat-style, rebuild-on-imbalance)
+//! binary tree over points in chain order. Each node `v` owns a
+//! concatenable queue `Q(v)` holding the part of its subtree's hull that is
+//! *not* on its parent's hull; the root owns the full hull. Descending
+//! (`down`) re-materializes children's hulls by splitting `Q(v)` at the
+//! bridge; ascending (`up`) finds the bridge between the children's hulls
+//! (nested binary search over both chains) and passes the outer parts up.
+//! Updates touch O(log n) nodes; each bridge search costs O(log² n), giving
+//! O(log³ n) worst-case per update with the simple tangent search (the
+//! original paper's 9-case simultaneous descent achieves O(log² n); at the
+//! queue depths the serving workloads reach — 10⁴ requests, Fig. 12 — the
+//! measured difference is constant-factor noise, see the bench).
+
+pub mod cqueue;
+pub mod point;
+
+use cqueue::{CQueue, Step};
+use point::{cross, Point};
+
+/// Weight-balance threshold: rebuild a subtree when one child exceeds this
+/// fraction of the subtree size.
+const ALPHA: f64 = 0.72;
+
+#[derive(Debug)]
+enum Kind {
+    Leaf(Point),
+    Internal {
+        left: Box<HNode>,
+        right: Box<HNode>,
+        /// Max point of the left subtree (routing key).
+        split_key: Point,
+        /// Number of points of this node's hull contributed by the left
+        /// child (the split position used by `down`).
+        left_cnt: usize,
+    },
+}
+
+#[derive(Debug)]
+struct HNode {
+    size: usize,
+    /// The materialized part of this subtree's hull (full hull when this
+    /// node is the "highest materialized" node on its path).
+    q: CQueue,
+    kind: Kind,
+}
+
+impl HNode {
+    fn leaf(p: Point) -> Box<HNode> {
+        Box::new(HNode {
+            size: 1,
+            q: CQueue::singleton(p),
+            kind: Kind::Leaf(p),
+        })
+    }
+
+    fn max_leaf(&self) -> Point {
+        match &self.kind {
+            Kind::Leaf(p) => *p,
+            Kind::Internal { right, .. } => right.max_leaf(),
+        }
+    }
+
+    fn collect_points(&self, out: &mut Vec<Point>) {
+        match &self.kind {
+            Kind::Leaf(p) => out.push(*p),
+            Kind::Internal { left, right, .. } => {
+                left.collect_points(out);
+                right.collect_points(out);
+            }
+        }
+    }
+}
+
+/// Upper common tangent point on chain `v_chain` as seen from external
+/// point `p` (p lies strictly left or right of the chain in x): the point
+/// `q` such that no chain point is strictly above line(p, q).
+fn tangent_from(p: &Point, chain: &CQueue) -> Point {
+    chain
+        .descend(|v, prev, next| {
+            if let Some(s) = next {
+                if cross(p, v, s) > 0.0 {
+                    return Step::Right;
+                }
+            }
+            if let Some(q) = prev {
+                if cross(p, v, q) > 0.0 {
+                    return Step::Left;
+                }
+            }
+            Step::Stop
+        })
+        .expect("tangent_from on empty chain")
+}
+
+/// Find the upper bridge between two x-ordered hull chains
+/// (all points of `u_chain` precede all points of `v_chain`).
+fn find_bridge(u_chain: &CQueue, v_chain: &CQueue) -> (Point, Point) {
+    let u = u_chain
+        .descend(|u, prev, next| {
+            let q = tangent_from(u, v_chain);
+            if let Some(s) = next {
+                if cross(u, &q, s) > 0.0 {
+                    return Step::Right;
+                }
+            }
+            if let Some(p) = prev {
+                if cross(u, &q, p) > 0.0 {
+                    return Step::Left;
+                }
+            }
+            Step::Stop
+        })
+        .expect("find_bridge on empty left chain");
+    let v = tangent_from(&u, v_chain);
+    (u, v)
+}
+
+/// Materialize both children's hulls from a node in "up" state.
+fn down(v: &mut HNode) {
+    if let Kind::Internal {
+        left,
+        right,
+        left_cnt,
+        ..
+    } = &mut v.kind
+    {
+        let q = std::mem::take(&mut v.q);
+        let (a, b) = q.split_at(*left_cnt);
+        let lq = std::mem::take(&mut left.q);
+        left.q = a.join(lq);
+        let rq = std::mem::take(&mut right.q);
+        right.q = rq.join(b);
+    }
+}
+
+/// Recompute this node's hull from its (materialized) children.
+fn up(v: &mut HNode) {
+    if let Kind::Internal {
+        left,
+        right,
+        left_cnt,
+        ..
+    } = &mut v.kind
+    {
+        let hl = std::mem::take(&mut left.q);
+        let hr = std::mem::take(&mut right.q);
+        debug_assert!(!hl.is_empty() && !hr.is_empty(), "children must be materialized");
+        let (bl, br) = find_bridge(&hl, &hr);
+        let (a, a_rest) = hl.split_by(&bl, true);
+        let (b_rest, b) = hr.split_by(&br, false);
+        left.q = a_rest;
+        right.q = b_rest;
+        *left_cnt = a.len();
+        v.q = a.join(b);
+    }
+}
+
+/// Rebuild a subtree into perfect balance. The node must be in "up" state
+/// (owning its full hull); descendants' queues are recomputed from scratch.
+fn rebuild(v: Box<HNode>) -> Box<HNode> {
+    let mut pts = Vec::with_capacity(v.size);
+    v.collect_points(&mut pts);
+    build_balanced(&pts)
+}
+
+fn build_balanced(pts: &[Point]) -> Box<HNode> {
+    debug_assert!(!pts.is_empty());
+    if pts.len() == 1 {
+        return HNode::leaf(pts[0]);
+    }
+    let mid = pts.len() / 2;
+    let left = build_balanced(&pts[..mid]);
+    let right = build_balanced(&pts[mid..]);
+    let mut node = Box::new(HNode {
+        size: pts.len(),
+        q: CQueue::new(),
+        kind: Kind::Internal {
+            split_key: pts[mid - 1],
+            left,
+            right,
+            left_cnt: 0,
+        },
+    });
+    up(&mut node);
+    node
+}
+
+fn unbalanced(v: &HNode) -> bool {
+    if let Kind::Internal { left, right, .. } = &v.kind {
+        let n = v.size as f64;
+        n > 4.0 && (left.size as f64 > ALPHA * n || right.size as f64 > ALPHA * n)
+    } else {
+        false
+    }
+}
+
+/// The dynamic upper hull / kinetic priority queue.
+#[derive(Debug, Default)]
+pub struct DynamicHull {
+    root: Option<Box<HNode>>,
+}
+
+impl DynamicHull {
+    pub fn new() -> DynamicHull {
+        DynamicHull { root: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.root.as_ref().map(|r| r.size).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.root.is_none()
+    }
+
+    /// Insert a point. Points must be unique in (x, y, id); the caller
+    /// (the request priority queue) guarantees unique ids.
+    pub fn insert(&mut self, p: Point) {
+        self.root = Some(match self.root.take() {
+            None => HNode::leaf(p),
+            Some(r) => Self::insert_rec(r, p),
+        });
+    }
+
+    fn insert_rec(mut v: Box<HNode>, p: Point) -> Box<HNode> {
+        match v.kind {
+            Kind::Leaf(old) => {
+                let (first, second) = if p.key_cmp(&old) == std::cmp::Ordering::Less {
+                    (p, old)
+                } else {
+                    (old, p)
+                };
+                let mut node = Box::new(HNode {
+                    size: 2,
+                    q: CQueue::new(),
+                    kind: Kind::Internal {
+                        split_key: first,
+                        left: HNode::leaf(first),
+                        right: HNode::leaf(second),
+                        left_cnt: 0,
+                    },
+                });
+                up(&mut node);
+                node
+            }
+            Kind::Internal { .. } => {
+                down(&mut v);
+                if let Kind::Internal {
+                    left,
+                    right,
+                    split_key,
+                    ..
+                } = &mut v.kind
+                {
+                    if p.key_cmp(split_key) != std::cmp::Ordering::Greater {
+                        let l = std::mem::replace(left, HNode::leaf(p));
+                        *left = Self::insert_rec(l, p);
+                    } else {
+                        let r = std::mem::replace(right, HNode::leaf(p));
+                        *right = Self::insert_rec(r, p);
+                    }
+                    v.size = left.size + right.size;
+                }
+                up(&mut v);
+                if unbalanced(&v) {
+                    v = rebuild(v);
+                }
+                v
+            }
+        }
+    }
+
+    /// Delete a point (exact (x, y, id) match). Returns whether it was
+    /// found.
+    pub fn delete(&mut self, p: &Point) -> bool {
+        let mut found = false;
+        self.root = match self.root.take() {
+            None => None,
+            Some(r) => Self::delete_rec(r, p, &mut found),
+        };
+        found
+    }
+
+    fn delete_rec(mut v: Box<HNode>, p: &Point, found: &mut bool) -> Option<Box<HNode>> {
+        match v.kind {
+            Kind::Leaf(pt) => {
+                if pt.key_cmp(p) == std::cmp::Ordering::Equal {
+                    *found = true;
+                    None
+                } else {
+                    Some(v)
+                }
+            }
+            Kind::Internal { .. } => {
+                down(&mut v);
+                let mut replaced: Option<Box<HNode>> = None;
+                if let Kind::Internal {
+                    left,
+                    right,
+                    split_key,
+                    ..
+                } = &mut v.kind
+                {
+                    if p.key_cmp(split_key) != std::cmp::Ordering::Greater {
+                        let l = std::mem::replace(left, HNode::leaf(*p));
+                        match Self::delete_rec(l, p, found) {
+                            None => {
+                                // Left child vanished: promote right (it is
+                                // materialized after `down`).
+                                let r = std::mem::replace(right, HNode::leaf(*p));
+                                replaced = Some(r);
+                            }
+                            Some(nl) => {
+                                *left = nl;
+                                *split_key = left.max_leaf();
+                            }
+                        }
+                    } else {
+                        let r = std::mem::replace(right, HNode::leaf(*p));
+                        match Self::delete_rec(r, p, found) {
+                            None => {
+                                let l = std::mem::replace(left, HNode::leaf(*p));
+                                replaced = Some(l);
+                            }
+                            Some(nr) => {
+                                *right = nr;
+                            }
+                        }
+                    }
+                    if replaced.is_none() {
+                        v.size = left.size + right.size;
+                    }
+                }
+                match replaced {
+                    Some(child) => Some(child),
+                    None => {
+                        up(&mut v);
+                        if unbalanced(&v) {
+                            v = rebuild(v);
+                        }
+                        Some(v)
+                    }
+                }
+            }
+        }
+    }
+
+    /// The point maximizing `m·x + y` (the highest-priority request when
+    /// `m = e^{bt}`), in O(log n).
+    pub fn query_max(&self, m: f64) -> Option<Point> {
+        let root = self.root.as_ref()?;
+        root.q.descend(|p, prev, next| {
+            let f = p.eval(m);
+            if let Some(nx) = next {
+                if nx.eval(m) > f {
+                    return Step::Right;
+                }
+            }
+            if let Some(pv) = prev {
+                if pv.eval(m) > f {
+                    return Step::Left;
+                }
+            }
+            Step::Stop
+        })
+    }
+
+    /// Current hull chain (root's queue), for tests and diagnostics.
+    pub fn hull_points(&self) -> Vec<Point> {
+        self.root.as_ref().map(|r| r.q.to_vec()).unwrap_or_default()
+    }
+
+    /// All stored points in chain order (O(n)).
+    pub fn all_points(&self) -> Vec<Point> {
+        let mut out = Vec::with_capacity(self.len());
+        if let Some(r) = &self.root {
+            r.collect_points(&mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::point::upper_hull_naive;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_matches_naive(hull: &DynamicHull, pts: &[Point], ms: &[f64]) {
+        if pts.is_empty() {
+            assert!(hull.is_empty());
+            return;
+        }
+        let naive = upper_hull_naive(pts);
+        for &m in ms {
+            let best_naive = naive.iter().map(|p| p.eval(m)).fold(f64::MIN, f64::max);
+            let got = hull.query_max(m).expect("hull nonempty");
+            let diff = (got.eval(m) - best_naive).abs();
+            assert!(
+                diff <= 1e-9 * (1.0 + best_naive.abs()),
+                "m={m}: got {} want {} (n={})",
+                got.eval(m),
+                best_naive,
+                pts.len()
+            );
+        }
+    }
+
+    const QUERY_SLOPES: &[f64] = &[0.0, 0.001, 0.1, 0.5, 1.0, 2.0, 10.0, 1000.0];
+
+    #[test]
+    fn insert_only_matches_naive() {
+        let mut rng = Rng::new(11);
+        let mut hull = DynamicHull::new();
+        let mut pts = Vec::new();
+        for i in 0..300u64 {
+            let p = Point::new(rng.f64() * 100.0 - 50.0, rng.f64() * 100.0 - 50.0, i);
+            hull.insert(p);
+            pts.push(p);
+            if i % 17 == 0 {
+                assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+            }
+        }
+        assert_eq!(hull.len(), 300);
+        assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+    }
+
+    #[test]
+    fn insert_delete_stress() {
+        let mut rng = Rng::new(13);
+        for trial in 0..8 {
+            let mut hull = DynamicHull::new();
+            let mut pts: Vec<Point> = Vec::new();
+            let mut next_id = 0u64;
+            for op in 0..600 {
+                if pts.is_empty() || rng.f64() < 0.6 {
+                    let p = Point::new(
+                        rng.f64() * 200.0 - 100.0,
+                        rng.f64() * 200.0 - 100.0,
+                        next_id,
+                    );
+                    next_id += 1;
+                    hull.insert(p);
+                    pts.push(p);
+                } else {
+                    let idx = rng.index(pts.len());
+                    let p = pts.swap_remove(idx);
+                    assert!(hull.delete(&p), "trial {trial} op {op}: delete failed");
+                }
+                assert_eq!(hull.len(), pts.len());
+                if op % 37 == 0 {
+                    assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+                }
+            }
+            assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+        }
+    }
+
+    #[test]
+    fn delete_to_empty_and_reuse() {
+        let mut hull = DynamicHull::new();
+        let pts: Vec<Point> = (0..20)
+            .map(|i| Point::new(i as f64, (i as f64 * 0.7).sin() * 5.0, i as u64))
+            .collect();
+        for p in &pts {
+            hull.insert(*p);
+        }
+        for p in &pts {
+            assert!(hull.delete(p));
+        }
+        assert!(hull.is_empty());
+        assert_eq!(hull.query_max(1.0), None);
+        hull.insert(Point::new(3.0, 4.0, 99));
+        assert_eq!(hull.query_max(1.0).unwrap().id, 99);
+    }
+
+    #[test]
+    fn delete_missing_returns_false() {
+        let mut hull = DynamicHull::new();
+        hull.insert(Point::new(1.0, 1.0, 1));
+        assert!(!hull.delete(&Point::new(1.0, 1.0, 2)));
+        assert_eq!(hull.len(), 1);
+    }
+
+    #[test]
+    fn collinear_and_duplicate_coordinates() {
+        let mut hull = DynamicHull::new();
+        let mut pts = Vec::new();
+        // Grid with many collinear triples and repeated x.
+        let mut id = 0u64;
+        for i in 0..10 {
+            for j in 0..5 {
+                let p = Point::new(i as f64, j as f64, id);
+                id += 1;
+                hull.insert(p);
+                pts.push(p);
+            }
+        }
+        assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+        // Delete the top row; hull should fall to the next row.
+        let mut remaining = Vec::new();
+        for p in &pts {
+            if p.y == 4.0 {
+                assert!(hull.delete(p));
+            } else {
+                remaining.push(*p);
+            }
+        }
+        assert_matches_naive(&hull, &remaining, QUERY_SLOPES);
+    }
+
+    #[test]
+    fn clustered_points_stress() {
+        // Near-identical α values (requests with identical deadlines) are
+        // the degenerate case the scheduler actually produces.
+        let mut rng = Rng::new(17);
+        let mut hull = DynamicHull::new();
+        let mut pts = Vec::new();
+        for i in 0..400u64 {
+            let cluster = (i % 5) as f64;
+            let p = Point::new(
+                cluster + rng.f64() * 1e-9,
+                rng.f64() * 10.0,
+                i,
+            );
+            hull.insert(p);
+            pts.push(p);
+        }
+        assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+        for i in (0..pts.len()).rev().step_by(3) {
+            let p = pts.swap_remove(i);
+            assert!(hull.delete(&p));
+        }
+        assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+    }
+
+    #[test]
+    fn hull_points_are_a_superset_maximizers() {
+        // Every maximizer over a sweep of slopes must be on the reported
+        // hull chain.
+        let mut rng = Rng::new(23);
+        let mut hull = DynamicHull::new();
+        let mut pts = Vec::new();
+        for i in 0..200u64 {
+            let p = Point::new(rng.normal() * 10.0, rng.normal() * 10.0, i);
+            hull.insert(p);
+            pts.push(p);
+        }
+        let chain = hull.hull_points();
+        for &m in QUERY_SLOPES {
+            let q = hull.query_max(m).unwrap();
+            assert!(
+                chain.iter().any(|c| c.id == q.id),
+                "maximizer for m={m} not on chain"
+            );
+        }
+        // Chain must be in strictly increasing key order.
+        for w in chain.windows(2) {
+            assert_eq!(w[0].key_cmp(&w[1]), std::cmp::Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn sorted_insertion_order() {
+        // Monotone insertion (common when deadlines arrive in order) must
+        // stay balanced (implicitly: this would blow the stack / time out
+        // if the scapegoat rebuilds were broken).
+        let mut hull = DynamicHull::new();
+        let mut pts = Vec::new();
+        for i in 0..2000u64 {
+            let p = Point::new(i as f64, ((i * 7919) % 100) as f64, i);
+            hull.insert(p);
+            pts.push(p);
+        }
+        assert_matches_naive(&hull, &pts, QUERY_SLOPES);
+    }
+}

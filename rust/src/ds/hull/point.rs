@@ -1,0 +1,162 @@
+//! Points and orientation predicates for the dynamic hull (paper §4.4).
+//!
+//! A request's priority segment `p(t) = α e^{bt} + β` maps to the 2-D point
+//! `(α, β)`; the highest-priority request at time `t` is the point
+//! maximizing the linear functional `e^{bt}·x + y`, which always lies on
+//! the upper convex hull.
+
+use std::cmp::Ordering;
+
+/// A hull point: coordinates plus a stable id (the request id) so
+//// duplicates are distinguishable and deletions are exact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+    pub id: u64,
+}
+
+impl Point {
+    pub fn new(x: f64, y: f64, id: u64) -> Point {
+        debug_assert!(x.is_finite() && y.is_finite());
+        Point { x, y, id }
+    }
+
+    /// Total chain order: (x, y, id) lexicographic. The outer hull tree and
+    /// the hull chains share this order.
+    pub fn key_cmp(&self, other: &Point) -> Ordering {
+        self.x
+            .total_cmp(&other.x)
+            .then(self.y.total_cmp(&other.y))
+            .then(self.id.cmp(&other.id))
+    }
+
+    /// Value of the query functional `m·x + y`.
+    #[inline]
+    pub fn eval(&self, m: f64) -> f64 {
+        m * self.x + self.y
+    }
+}
+
+/// Cross product (a−o) × (b−o): > 0 iff o→a→b turns counter-clockwise,
+/// i.e. b lies strictly above the directed line o→a (for o.x < a.x).
+#[inline]
+pub fn cross(o: &Point, a: &Point, b: &Point) -> f64 {
+    (a.x - o.x) * (b.y - o.y) - (a.y - o.y) * (b.x - o.x)
+}
+
+/// Is `w` strictly above the line through `u` and `v` (u before v in chain
+/// order)?
+#[inline]
+pub fn above(u: &Point, v: &Point, w: &Point) -> bool {
+    cross(u, v, w) > 0.0
+}
+
+/// Build the upper hull of a point set by monotone chain — the O(n log n)
+/// reference implementation used by tests and rebuilds. Input order is
+/// arbitrary; output is in increasing chain order. Collinear interior
+/// points are dropped.
+pub fn upper_hull_naive(points: &[Point]) -> Vec<Point> {
+    let mut pts = points.to_vec();
+    pts.sort_by(Point::key_cmp);
+    pts.dedup_by(|a, b| a.key_cmp(b) == Ordering::Equal);
+    let mut hull: Vec<Point> = Vec::new();
+    for p in pts {
+        while hull.len() >= 2 {
+            let a = hull[hull.len() - 2];
+            let b = hull[hull.len() - 1];
+            // Keep b only if it turns strictly right (clockwise) at b:
+            // cross(a, b, p) < 0. Drop collinear (== 0).
+            if cross(&a, &b, &p) >= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        // Equal-x handling: upper hull keeps only the highest point per x.
+        if let Some(last) = hull.last() {
+            if last.x == p.x {
+                if last.y <= p.y {
+                    hull.pop();
+                } else {
+                    continue;
+                }
+            }
+        }
+        hull.push(p);
+    }
+    hull
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(x: f64, y: f64) -> Point {
+        Point::new(x, y, (x.to_bits() >> 1) ^ y.to_bits())
+    }
+
+    #[test]
+    fn cross_signs() {
+        let o = p(0.0, 0.0);
+        let a = p(1.0, 0.0);
+        assert!(cross(&o, &a, &p(0.5, 1.0)) > 0.0); // above
+        assert!(cross(&o, &a, &p(0.5, -1.0)) < 0.0); // below
+        assert_eq!(cross(&o, &a, &p(2.0, 0.0)), 0.0); // collinear
+    }
+
+    #[test]
+    fn key_cmp_total_order() {
+        let a = Point::new(1.0, 2.0, 1);
+        let b = Point::new(1.0, 2.0, 2);
+        assert_eq!(a.key_cmp(&b), Ordering::Less);
+        assert_eq!(a.key_cmp(&a), Ordering::Equal);
+        assert_eq!(Point::new(0.5, 9.0, 9).key_cmp(&a), Ordering::Less);
+    }
+
+    #[test]
+    fn naive_hull_square() {
+        let pts = vec![p(0.0, 0.0), p(1.0, 1.0), p(2.0, 0.0), p(1.0, 0.5)];
+        let hull = upper_hull_naive(&pts);
+        let xs: Vec<f64> = hull.iter().map(|q| q.x).collect();
+        assert_eq!(xs, vec![0.0, 1.0, 2.0]);
+        assert_eq!(hull[1].y, 1.0);
+    }
+
+    #[test]
+    fn naive_hull_collinear_dropped() {
+        let pts = vec![p(0.0, 0.0), p(1.0, 1.0), p(2.0, 2.0), p(3.0, 3.0)];
+        let hull = upper_hull_naive(&pts);
+        assert_eq!(hull.len(), 2);
+        assert_eq!(hull[0].x, 0.0);
+        assert_eq!(hull[1].x, 3.0);
+    }
+
+    #[test]
+    fn naive_hull_equal_x_keeps_highest() {
+        let pts = vec![p(1.0, 0.0), p(1.0, 5.0), p(1.0, 2.0)];
+        let hull = upper_hull_naive(&pts);
+        assert_eq!(hull.len(), 1);
+        assert_eq!(hull[0].y, 5.0);
+    }
+
+    #[test]
+    fn hull_maximizes_functional() {
+        let pts: Vec<Point> = (0..30)
+            .map(|i| {
+                let x = (i as f64 * 0.37).sin() * 10.0;
+                let y = (i as f64 * 0.73).cos() * 10.0;
+                Point::new(x, y, i)
+            })
+            .collect();
+        let hull = upper_hull_naive(&pts);
+        for m in [0.0, 0.1, 1.0, 5.0, 100.0] {
+            let best_all = pts.iter().map(|q| q.eval(m)).fold(f64::MIN, f64::max);
+            let best_hull = hull.iter().map(|q| q.eval(m)).fold(f64::MIN, f64::max);
+            assert!(
+                (best_all - best_hull).abs() < 1e-9 * (1.0 + best_all.abs()),
+                "m={m}"
+            );
+        }
+    }
+}

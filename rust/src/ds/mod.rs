@@ -1,0 +1,8 @@
+//! Data-structure substrates: the Fibonacci heap (per-batch-size deadline
+//! tracking) and the Overmars–van Leeuwen dynamic convex hull (the
+//! time-varying priority queue), plus a naive scan-based queue used as a
+//! correctness oracle and benchmark baseline.
+
+pub mod fibheap;
+pub mod hull;
+pub mod naive;

@@ -1,0 +1,67 @@
+//! Naive O(n) priority queue over (α, β) points — the correctness oracle
+//! for the dynamic hull and the "re-sort every iteration" baseline the
+//! paper argues against (§4.4: "the naive implementation is not scalable").
+//! Used in differential tests and as the comparison series in the Fig. 12
+//! bench.
+
+use super::hull::point::Point;
+
+#[derive(Debug, Default)]
+pub struct NaiveMaxQueue {
+    points: Vec<Point>,
+}
+
+impl NaiveMaxQueue {
+    pub fn new() -> Self {
+        NaiveMaxQueue { points: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn insert(&mut self, p: Point) {
+        self.points.push(p);
+    }
+
+    /// O(n) delete by id.
+    pub fn delete(&mut self, p: &Point) -> bool {
+        match self.points.iter().position(|q| q.id == p.id) {
+            Some(i) => {
+                self.points.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// O(n) arg-max of `m·x + y`.
+    pub fn query_max(&self, m: f64) -> Option<Point> {
+        self.points
+            .iter()
+            .copied()
+            .max_by(|a, b| a.eval(m).partial_cmp(&b.eval(m)).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut q = NaiveMaxQueue::new();
+        assert!(q.is_empty());
+        q.insert(Point::new(0.0, 5.0, 1));
+        q.insert(Point::new(2.0, 0.0, 2));
+        assert_eq!(q.query_max(0.1).unwrap().id, 1); // 0.2 vs 5
+        assert_eq!(q.query_max(10.0).unwrap().id, 2); // 20 vs 5
+        assert!(q.delete(&Point::new(2.0, 0.0, 2)));
+        assert!(!q.delete(&Point::new(2.0, 0.0, 2)));
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,34 @@
+//! # Orloj — predictably serving unpredictable DNNs
+//!
+//! A reproduction of *"Orloj: Predictably Serving Unpredictable DNNs"*
+//! (Yu, Qiu, Chowdhury, Jin — 2022) as a three-layer Rust + JAX + Pallas
+//! serving stack:
+//!
+//! * **L3 (this crate)**: the distribution-aware batch scheduler — the
+//!   paper's contribution — plus the baselines it is evaluated against
+//!   (Clipper / Nexus / Clockwork-style policies), workload generators, a
+//!   discrete-event evaluation harness, and a threaded serving runtime.
+//! * **L2/L1 (`python/compile/`)**: an early-exit transformer (JAX) whose
+//!   block hot path is a Pallas kernel; AOT-lowered per (depth, batch)
+//!   variant to HLO text at build time.
+//! * **Runtime (`runtime`)**: loads the AOT artifacts via the PJRT C API
+//!   (`xla` crate) and executes batches on the request path — Python is
+//!   never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod clock;
+pub mod core;
+pub mod ds;
+pub mod experiments;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use crate::clock::{Clock, Micros, RealClock, VirtualClock};
+pub use crate::core::request::{AppId, Completion, Outcome, Request, RequestId};

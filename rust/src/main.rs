@@ -1,0 +1,174 @@
+//! `orloj` — CLI entry point for the Orloj serving system reproduction.
+//!
+//! Subcommands:
+//!   experiment <id|all>   regenerate a paper table/figure (see DESIGN.md §5)
+//!   serve                 end-to-end PJRT serving demo on real artifacts
+//!   trace                 generate + save a replayable workload trace
+//!   list                  list experiment ids
+
+use orloj::experiments::{self, ExpOptions};
+use orloj::util::cli::Args;
+use orloj::util::logging;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: orloj <command> [options]\n\
+         \n\
+         commands:\n\
+           experiment <id|all>   run a paper experiment (ids: {})\n\
+             --duration <s>        virtual seconds per run   (default 40)\n\
+             --util <frac>         offered load / capacity   (default 0.7)\n\
+             --slo <list>          SLO multiples of P99      (default 1.5,2,3,4,5)\n\
+             --seed <n>            experiment seed           (default 42)\n\
+             --runs <n>            repetitions to average    (default 1)\n\
+             --quick               fast settings for smoke runs\n\
+           serve                 PJRT serving demo (needs `make artifacts`)\n\
+             --artifacts <dir>     artifact directory        (default artifacts)\n\
+             --requests <n>        requests to replay        (default 200)\n\
+             --system <name>       orloj|clipper|nexus|clockwork|edf\n\
+           trace                 generate a trace JSON\n\
+             --out <path>          output path (default trace.json)\n\
+             --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
+           list                  list experiment ids",
+        experiments::ALL.join(", ")
+    );
+    std::process::exit(2);
+}
+
+fn exp_options(args: &Args) -> ExpOptions {
+    let mut opts = if args.flag("quick") {
+        ExpOptions::quick()
+    } else {
+        ExpOptions::default()
+    };
+    opts.duration_s = args.get_f64("duration", opts.duration_s);
+    opts.util = args.get_f64("util", opts.util);
+    opts.seed = args.get_u64("seed", opts.seed);
+    opts.runs = args.get_usize("runs", opts.runs);
+    opts.slos = args.get_list_f64("slo", &opts.slos);
+    opts
+}
+
+fn cmd_experiment(args: &Args) {
+    let opts = exp_options(args);
+    let Some(id) = args.positional.first().map(|s| s.as_str()) else {
+        usage()
+    };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        match experiments::run(id, &opts) {
+            Some(rows) => experiments::save_results(id, rows),
+            None => {
+                eprintln!("unknown experiment '{id}'");
+                usage();
+            }
+        }
+        println!();
+    }
+}
+
+fn cmd_trace(args: &Args) {
+    use orloj::workload::azure::AzureTraceConfig;
+    use orloj::workload::exectime::ExecTimeDist;
+    use orloj::workload::trace::TraceSpec;
+    let apps = args.get_usize("apps", 2);
+    let modes = args.get_usize("modes", 2);
+    let spec = TraceSpec {
+        name: "cli".into(),
+        dists: (0..apps)
+            .map(|i| {
+                ExecTimeDist::multimodal(&format!("app{i}"), modes, 10.0, 100.0, 1.0, None)
+            })
+            .collect(),
+        arrivals: AzureTraceConfig {
+            apps,
+            rate_per_s: args.get_f64("rate", 100.0),
+            duration_s: args.get_f64("duration", 30.0),
+            ..Default::default()
+        },
+        seed: args.get_u64("seed", 1),
+    };
+    let trace = spec.generate();
+    let out = args.get_or("out", "trace.json").to_string();
+    trace.save(std::path::Path::new(&out)).expect("write trace");
+    println!(
+        "wrote {} events (p99={:.1} ms) to {out}",
+        trace.events.len(),
+        trace.p99_ms
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    use orloj::baselines;
+    use orloj::clock::ms_to_us;
+    use orloj::core::batchmodel::BatchCostModel;
+    use orloj::core::histogram::Histogram;
+    use orloj::core::request::{AppId, Request};
+    use orloj::runtime::executor::PjrtWorker;
+    use orloj::runtime::ModelRuntime;
+    use orloj::scheduler::SchedulerConfig;
+    use orloj::server::metrics::RunReport;
+    use orloj::server::Server;
+    use orloj::util::rng::Rng;
+    use std::sync::Arc;
+
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let n = args.get_usize("requests", 200);
+    let system = args.get_or("system", "orloj").to_string();
+    let rt = Arc::new(ModelRuntime::load(std::path::Path::new(&dir)).expect("load artifacts"));
+    let mut worker = PjrtWorker::new(rt.clone());
+    let calib = worker.calibrate(10);
+    println!("per-depth calibration (ms): {calib:?}");
+    let mean_ms = calib.iter().map(|(_, m)| m).sum::<f64>() / calib.len() as f64;
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::new(0.1, 0.8),
+        batch_sizes: rt.manifest.batch_sizes.clone(),
+        ..Default::default()
+    };
+    let max_depth = rt.manifest.model.max_depth;
+    let mut sched = baselines::by_name(&system, cfg, 7).expect("known system");
+    for (depth, ms) in &calib {
+        sched.seed_app_profile(AppId(*depth as u32 - 1), &Histogram::constant(*ms), 100);
+    }
+    let (submitter, rx) =
+        Server::<Box<dyn orloj::scheduler::Scheduler>, PjrtWorker>::channel();
+    let server = Server::new(sched, worker);
+    let handle = std::thread::spawn(move || server.run(rx));
+    let mut rng = Rng::new(99);
+    let slo_ms = args.get_f64("slo-ms", mean_ms * max_depth as f64 * 12.0);
+    let gap_us = args.get_u64("gap-us", 500);
+    let t0 = std::time::Instant::now();
+    for i in 0..n as u64 {
+        let depth = 1 + rng.index(max_depth) as u32;
+        let release = t0.elapsed().as_micros() as u64;
+        let exec = calib
+            .iter()
+            .find(|(d, _)| *d == depth as usize)
+            .map(|(_, m)| *m)
+            .unwrap_or(mean_ms);
+        let req = Request::new(i, AppId(depth - 1), release, ms_to_us(slo_ms), exec)
+            .with_variant(depth);
+        submitter.submit(req);
+        std::thread::sleep(std::time::Duration::from_micros(gap_us));
+    }
+    drop(submitter);
+    let completions = handle.join().unwrap();
+    let report = RunReport::from_completions(&completions);
+    println!("[{system}] {report}");
+}
+
+fn main() {
+    logging::init_from_env();
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("list") => println!("{}", experiments::ALL.join("\n")),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,160 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the rust runtime (request path).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Model hyperparameters recorded in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub classes: usize,
+    pub max_depth: usize,
+}
+
+/// One compiled variant: (depth, batch) → HLO file.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub depth: usize,
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub batch_sizes: Vec<usize>,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {dir:?}: {e} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let cfg = v.get("config");
+        let need = |k: &str| -> anyhow::Result<usize> {
+            cfg.get(k)
+                .as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing config.{k}"))
+        };
+        let model = ModelInfo {
+            vocab: need("vocab")?,
+            seq: need("seq")?,
+            d_model: need("d_model")?,
+            classes: need("classes")?,
+            max_depth: need("max_depth")?,
+        };
+        let batch_sizes = v
+            .get("batch_sizes")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing batch_sizes"))?
+            .iter()
+            .filter_map(|x| x.as_u64().map(|b| b as usize))
+            .collect();
+        let variants = v
+            .get("variants")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing variants"))?
+            .iter()
+            .map(|e| {
+                Ok(Variant {
+                    depth: e
+                        .get("depth")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("variant depth"))?
+                        as usize,
+                    batch: e
+                        .get("batch")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("variant batch"))?
+                        as usize,
+                    path: dir.join(
+                        e.get("path")
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("variant path"))?,
+                    ),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model,
+            batch_sizes,
+            variants,
+        })
+    }
+
+    /// Variant lookup table keyed by (depth, batch).
+    pub fn index(&self) -> BTreeMap<(usize, usize), &Variant> {
+        self.variants
+            .iter()
+            .map(|v| ((v.depth, v.batch), v))
+            .collect()
+    }
+
+    /// Smallest supported batch size ≥ n (None if n exceeds the max).
+    pub fn batch_for(&self, n: usize) -> Option<usize> {
+        self.batch_sizes.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        let manifest = r#"{
+  "model": "early-exit-transformer",
+  "config": {"vocab": 128, "seq": 16, "d_model": 64, "ffn": 128,
+             "heads": 4, "classes": 16, "max_depth": 2, "seed": 0},
+  "batch_sizes": [1, 2, 4],
+  "variants": [
+    {"depth": 1, "batch": 1, "path": "model_d1_b1.hlo.txt", "bytes": 10},
+    {"depth": 2, "batch": 4, "path": "model_d2_b4.hlo.txt", "bytes": 10}
+  ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("orloj_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.seq, 16);
+        assert_eq!(m.model.max_depth, 2);
+        assert_eq!(m.batch_sizes, vec![1, 2, 4]);
+        assert_eq!(m.variants.len(), 2);
+        let idx = m.index();
+        assert!(idx.contains_key(&(2, 4)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_for_rounds_up() {
+        let dir = std::env::temp_dir().join("orloj_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch_for(1), Some(1));
+        assert_eq!(m.batch_for(3), Some(4));
+        assert_eq!(m.batch_for(4), Some(4));
+        assert_eq!(m.batch_for(5), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let dir = std::env::temp_dir().join("orloj_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "err={err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT-backed worker: the real-execution end of the serving stack.
+//!
+//! Requests carry the early-exit depth they need (`Request::variant`); a
+//! batch pads to the next supported batch size and runs at the max depth of
+//! its members — the real analogue of Eq. 4's `l = max_r l_r` padding
+//! semantics.
+
+use super::ModelRuntime;
+use crate::core::request::Request;
+use crate::sim::worker::Worker;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct PjrtWorker {
+    runtime: Arc<ModelRuntime>,
+}
+
+impl PjrtWorker {
+    pub fn new(runtime: Arc<ModelRuntime>) -> Self {
+        PjrtWorker { runtime }
+    }
+
+    /// Deterministic synthetic tokens for a request (the serving path's
+    /// payload stand-in; real deployments would carry user data here).
+    fn tokens_for(&self, req: &Request, out: &mut Vec<i32>) {
+        let seq = self.runtime.manifest.model.seq;
+        let vocab = self.runtime.manifest.model.vocab as u64;
+        let mut state = req.id.0.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        for _ in 0..seq {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            out.push((state % vocab) as i32);
+        }
+    }
+
+    /// Measure the solo (bs=1) execution latency per depth — startup
+    /// calibration used to seed profilers and fit the batch cost model.
+    pub fn calibrate(&mut self, reps: usize) -> Vec<(usize, f64)> {
+        let max_depth = self.runtime.manifest.model.max_depth;
+        let mut out = Vec::new();
+        for depth in 1..=max_depth {
+            let req = Request::new(depth as u64, crate::core::request::AppId(0), 0, 1, 1.0)
+                .with_variant(depth as u32);
+            // Warm up once, then time.
+            let _ = self.run_batch(&[req.clone()]);
+            let t0 = Instant::now();
+            for _ in 0..reps.max(1) {
+                let _ = self.run_batch(&[req.clone()]);
+            }
+            out.push((depth, t0.elapsed().as_secs_f64() * 1000.0 / reps.max(1) as f64));
+        }
+        out
+    }
+
+    fn run_batch(&self, batch: &[Request]) -> anyhow::Result<Vec<f32>> {
+        let m = &self.runtime.manifest;
+        let depth = batch
+            .iter()
+            .map(|r| (r.variant.max(1) as usize).min(m.model.max_depth))
+            .max()
+            .unwrap_or(1);
+        let padded = m
+            .batch_for(batch.len())
+            .unwrap_or_else(|| *m.batch_sizes.iter().max().unwrap());
+        let seq = m.model.seq;
+        let mut tokens = Vec::with_capacity(padded * seq);
+        for r in batch.iter().take(padded) {
+            self.tokens_for(r, &mut tokens);
+        }
+        // Pad with zero rows up to the variant's batch size.
+        tokens.resize(padded * seq, 0);
+        self.runtime.execute(depth, padded, &tokens)
+    }
+}
+
+impl Worker for PjrtWorker {
+    fn execute(&mut self, batch: &[Request]) -> f64 {
+        let t0 = Instant::now();
+        if let Err(e) = self.run_batch(batch) {
+            // Surface runtime failures loudly; a failed batch still took
+            // the measured time.
+            crate::util::logging::log(
+                crate::util::logging::Level::Error,
+                "pjrt",
+                format_args!("batch execution failed: {e}"),
+            );
+        }
+        t0.elapsed().as_secs_f64() * 1000.0
+    }
+}

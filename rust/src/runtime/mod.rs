@@ -1,0 +1,99 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! request path. Python never runs here — the rust binary is self-contained
+//! once `make artifacts` has produced the HLO files.
+//!
+//! Wiring (per /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod artifact;
+pub mod executor;
+
+use artifact::Manifest;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A loaded model: one compiled PJRT executable per (depth, batch) variant.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla crate's PJRT wrappers hold raw pointers and therefore do
+// not derive Send, but the PJRT C API is documented thread-compatible and
+// Orloj moves the runtime onto exactly one worker thread (single-GPU
+// semantics, §3.1) — it is never used from two threads concurrently.
+unsafe impl Send for ModelRuntime {}
+unsafe impl Sync for ModelRuntime {}
+
+impl ModelRuntime {
+    /// Load and compile every variant in the artifact directory. Compiling
+    /// happens once at startup (Clockwork-style consolidation: no compile
+    /// jitter on the request path).
+    pub fn load(dir: &Path) -> anyhow::Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for v in &manifest.variants {
+            let proto = xla::HloModuleProto::from_text_file(
+                v.path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {:?}", v.path))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {:?}: {e:?}", v.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {:?}: {e:?}", v.path))?;
+            executables.insert((v.depth, v.batch), exe);
+        }
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn variant_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Execute a (depth, batch) variant on `tokens` (row-major
+    /// batch×seq i32). Returns the logits (batch × classes, f32).
+    pub fn execute(
+        &self,
+        depth: usize,
+        batch: usize,
+        tokens: &[i32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let seq = self.manifest.model.seq;
+        anyhow::ensure!(
+            tokens.len() == batch * seq,
+            "tokens len {} != batch {batch} × seq {seq}",
+            tokens.len()
+        );
+        let exe = self
+            .executables
+            .get(&(depth, batch))
+            .ok_or_else(|| anyhow::anyhow!("no variant (depth={depth}, batch={batch})"))?;
+        let input = xla::Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple of logits.
+        let logits = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}

@@ -1,0 +1,214 @@
+//! Batch latency estimation with the §4.3 precomputation trick.
+//!
+//! The priority score needs the batch latency distribution `L_B`, but the
+//! batch is formed *after* scores are computed. Orloj breaks the cycle by
+//! assuming the queue contains requests from all applications the model
+//! serves: for a request of app `a` considered at batch size `k`, `L_B` is
+//! the affine image (Eq. 9) of the max of {1 draw from app a's
+//! distribution, k−1 draws from the model-wide traffic mixture}. This
+//! depends only on (app, k) — a small table precomputed off the critical
+//! path and refreshed when the profiler publishes a new snapshot.
+
+use super::profiler::ProfileSnapshot;
+use crate::core::batchmodel::BatchCostModel;
+use crate::core::histogram::Histogram;
+use crate::core::orderstats;
+use crate::core::request::AppId;
+use std::collections::HashMap;
+
+/// Precomputed batch latency info for one (app, batch-size) pair.
+#[derive(Debug, Clone)]
+pub struct BatchLatency {
+    /// Distribution of the batch execution time (ms).
+    pub dist: Histogram,
+    /// Coarsened copy used for the priority-score schedule (fewer
+    /// milestones; see SchedulerConfig::score_bins).
+    pub score_dist: Histogram,
+    /// E[L_B] (Eq. 5).
+    pub mean: f64,
+    /// Quantile used for the Algorithm-1 feasibility check.
+    pub feasibility_ms: f64,
+}
+
+/// Estimator over the current profile snapshot.
+#[derive(Debug)]
+pub struct Estimator {
+    model: BatchCostModel,
+    bins: usize,
+    score_bins: usize,
+    feasibility_quantile: f64,
+    snapshot: ProfileSnapshot,
+    mixture: Option<Histogram>,
+    cache: HashMap<(u32, usize), BatchLatency>,
+    /// Fallback solo execution time (ms) before any profile exists.
+    cold_start_ms: f64,
+}
+
+impl Estimator {
+    pub fn new(model: BatchCostModel, bins: usize, feasibility_quantile: f64) -> Self {
+        Estimator::with_score_bins(model, bins, bins.min(16), feasibility_quantile)
+    }
+
+    pub fn with_score_bins(
+        model: BatchCostModel,
+        bins: usize,
+        score_bins: usize,
+        feasibility_quantile: f64,
+    ) -> Self {
+        Estimator {
+            model,
+            bins,
+            score_bins,
+            feasibility_quantile,
+            snapshot: ProfileSnapshot::empty(),
+            mixture: None,
+            cache: HashMap::new(),
+            cold_start_ms: 10.0,
+        }
+    }
+
+    pub fn cost_model(&self) -> BatchCostModel {
+        self.model
+    }
+
+    /// Install a fresh profiler snapshot (invalidates the cache).
+    pub fn refresh(&mut self, snapshot: ProfileSnapshot) {
+        self.mixture = snapshot.mixture(self.bins);
+        self.snapshot = snapshot;
+        self.cache.clear();
+    }
+
+    pub fn snapshot_version(&self) -> u64 {
+        self.snapshot.version
+    }
+
+    /// Batch latency for a request of `app` at batch size `k` (cached).
+    pub fn batch_latency(&mut self, app: AppId, k: usize) -> &BatchLatency {
+        let key = (app.0, k);
+        if !self.cache.contains_key(&key) {
+            let bl = self.compute(app, k);
+            self.cache.insert(key, bl);
+        }
+        self.cache.get(&key).unwrap()
+    }
+
+    fn compute(&self, app: AppId, k: usize) -> BatchLatency {
+        assert!(k >= 1);
+        let own = self
+            .snapshot
+            .histogram_for(app)
+            .cloned()
+            .or_else(|| self.mixture.clone())
+            .unwrap_or_else(|| Histogram::constant(self.cold_start_ms));
+        let max_dist = if k == 1 {
+            own
+        } else {
+            match &self.mixture {
+                Some(mix) => orderstats::max_grouped(&[&own, mix], &[1, k - 1], self.bins),
+                None => orderstats::max_iid(&own, k),
+            }
+        };
+        let dist = max_dist.affine(self.model.c1 * k as f64, self.model.c0);
+        let mean = dist.mean();
+        let feasibility_ms = dist.quantile(self.feasibility_quantile);
+        let score_dist = dist.coarsen(self.score_bins);
+        BatchLatency {
+            dist,
+            score_dist,
+            mean,
+            feasibility_ms,
+        }
+    }
+
+    /// Feasibility latency (ms) for Algorithm 1 line 11.
+    pub fn feasibility_ms(&mut self, app: AppId, k: usize) -> f64 {
+        self.batch_latency(app, k).feasibility_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::profiler::OnlineProfiler;
+
+    fn snapshot_two_apps() -> ProfileSnapshot {
+        let mut p = OnlineProfiler::new(1000, 1.0, 32, 7);
+        for i in 0..500 {
+            p.record(AppId(0), 4.0 + (i % 3) as f64); // short app: 4-6 ms
+            p.record(AppId(1), 40.0 + (i % 7) as f64); // long app: 40-46 ms
+        }
+        p.snapshot()
+    }
+
+    #[test]
+    fn cold_start_fallback() {
+        let mut e = Estimator::new(BatchCostModel::new(1.0, 0.5), 32, 0.5);
+        let bl = e.batch_latency(AppId(9), 4);
+        assert!(bl.mean > 0.0);
+        // constant 10ms → max = 10, latency = 1 + 0.5*4*10 = 21
+        assert!((bl.mean - 21.0).abs() < 0.5, "mean={}", bl.mean);
+    }
+
+    #[test]
+    fn own_distribution_at_k1() {
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
+        e.refresh(snapshot_two_apps());
+        let short = e.batch_latency(AppId(0), 1).mean;
+        let long = e.batch_latency(AppId(1), 1).mean;
+        assert!((short - 5.0).abs() < 1.0, "short={short}");
+        assert!((long - 43.0).abs() < 2.0, "long={long}");
+    }
+
+    #[test]
+    fn mixture_dominates_large_batches() {
+        // At k≥2, even a short-app request inherits the long tail of the
+        // traffic mixture (the straggler effect the paper schedules around).
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
+        e.refresh(snapshot_two_apps());
+        let k2_short = e.batch_latency(AppId(0), 2).mean;
+        // max(own_short, one mixture draw): mixture is 50/50 short/long →
+        // ~50% chance the other draw is ~43ms → E[max] ≈ 0.5·5 + 0.5·43 ≈ 24
+        // then ×k=2 → ≈ 48.
+        assert!(k2_short > 30.0, "k2_short={k2_short}");
+    }
+
+    #[test]
+    fn feasibility_quantile_monotone() {
+        let mut lo = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.25);
+        let mut hi = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.95);
+        lo.refresh(snapshot_two_apps());
+        hi.refresh(snapshot_two_apps());
+        for k in [1usize, 2, 8] {
+            assert!(
+                hi.feasibility_ms(AppId(0), k) >= lo.feasibility_ms(AppId(0), k),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_survives_until_refresh() {
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 32, 0.5);
+        e.refresh(snapshot_two_apps());
+        let a = e.batch_latency(AppId(0), 4).mean;
+        let b = e.batch_latency(AppId(0), 4).mean;
+        assert_eq!(a, b);
+        // Refresh with different data changes the estimate.
+        let mut p = OnlineProfiler::new(100, 1.0, 32, 8);
+        for _ in 0..100 {
+            p.record(AppId(0), 100.0);
+        }
+        e.refresh(p.snapshot());
+        let c = e.batch_latency(AppId(0), 4).mean;
+        assert!(c > a * 2.0, "estimate should jump: {a} -> {c}");
+    }
+
+    #[test]
+    fn unknown_app_uses_mixture() {
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
+        e.refresh(snapshot_two_apps());
+        let unk = e.batch_latency(AppId(42), 1).mean;
+        // mixture mean ≈ (5+43)/2 = 24
+        assert!((unk - 24.0).abs() < 3.0, "unk={unk}");
+    }
+}

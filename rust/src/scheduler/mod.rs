@@ -1,0 +1,127 @@
+//! Scheduler interface shared by Orloj and the baselines.
+//!
+//! The same trait runs against the discrete-event simulator (virtual time)
+//! and the PJRT serving loop (real time): the scheduler only ever sees
+//! timestamps, arrivals and completions.
+
+pub mod estimator;
+pub mod orloj;
+pub mod profiler;
+
+use crate::clock::Micros;
+use crate::core::batchmodel::BatchCostModel;
+use crate::core::request::{Outcome, Request};
+
+/// Shared scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Batch sizes the model supports (paper: `S`).
+    pub batch_sizes: Vec<usize>,
+    /// Anticipated-delay parameter `b` (1/ms; paper default 1e-4).
+    pub b: f64,
+    /// Histogram resolution for derived distributions.
+    pub bins: usize,
+    /// Coarser resolution used for the priority-score schedules (§Perf:
+    /// each bin contributes up to two milestones per request per queue, so
+    /// score bins directly control hull churn).
+    pub score_bins: usize,
+    /// Batch cost model (profiled on the real path; configured in sim).
+    pub cost_model: BatchCostModel,
+    /// Quantile of the batch-latency distribution used in the feasibility
+    /// check (Algorithm 1 line 11). 0.5 ≈ median; higher is more
+    /// conservative.
+    pub feasibility_quantile: f64,
+    /// Online profiler window (samples kept per app).
+    pub profiler_window: usize,
+    /// Fraction of completions sampled by the profiler.
+    pub sample_prob: f64,
+    /// How often the estimator picks up new profiler data (µs).
+    pub refresh_every: Micros,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            batch_sizes: vec![1, 2, 4, 8, 16],
+            b: 1e-4,
+            bins: 64,
+            score_bins: 16,
+            cost_model: BatchCostModel::gpu_like(),
+            feasibility_quantile: 0.5,
+            profiler_window: 2048,
+            sample_prob: 1.0,
+            refresh_every: 1_000_000, // 1 s
+        }
+    }
+}
+
+/// A scheduling policy. Drives one worker (the paper's per-GPU scheduler;
+/// scale-out runs one scheduler per model replica).
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Install deployment-time historical data for an app. Orloj keeps the
+    /// full distribution; point-estimate systems reduce it to their
+    /// statistic; reactive systems ignore it. Default: ignore.
+    fn seed_app_profile(
+        &mut self,
+        _app: crate::core::request::AppId,
+        _hist: &crate::core::histogram::Histogram,
+        _weight: u64,
+    ) {
+    }
+
+    /// A request entered the system.
+    fn on_arrival(&mut self, req: Request, now: Micros);
+
+    /// The worker is free: pick the next batch, or None to stay idle.
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>>;
+
+    /// A batch finished; `batch_ms` is its measured wall time. Feeds the
+    /// online profiler / reactive controllers.
+    fn on_batch_complete(&mut self, batch: &[Request], batch_ms: f64, now: Micros);
+
+    /// Requests dropped by the scheduler since the last call, with the
+    /// reason (TimedOut for queue drops, Aborted for failed execution
+    /// slots à la Clockwork).
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)>;
+
+    /// Next time the scheduler wants to be polled even without new events
+    /// (milestones, windows). None = only poll on arrivals/completions.
+    fn wake_hint(&self, now: Micros) -> Option<Micros>;
+
+    /// Number of queued (not yet executing) requests.
+    fn pending(&self) -> usize;
+}
+
+impl Scheduler for Box<dyn Scheduler> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn seed_app_profile(
+        &mut self,
+        app: crate::core::request::AppId,
+        hist: &crate::core::histogram::Histogram,
+        weight: u64,
+    ) {
+        (**self).seed_app_profile(app, hist, weight)
+    }
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        (**self).on_arrival(req, now)
+    }
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        (**self).next_batch(now)
+    }
+    fn on_batch_complete(&mut self, batch: &[Request], batch_ms: f64, now: Micros) {
+        (**self).on_batch_complete(batch, batch_ms, now)
+    }
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        (**self).drain_dropped()
+    }
+    fn wake_hint(&self, now: Micros) -> Option<Micros> {
+        (**self).wake_hint(now)
+    }
+    fn pending(&self) -> usize {
+        (**self).pending()
+    }
+}

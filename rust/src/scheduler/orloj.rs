@@ -1,0 +1,617 @@
+//! The Orloj scheduler — Algorithm 1 of the paper.
+//!
+//! Per supported batch size `bs` there is a queue `Q_bs` holding the
+//! requests still *feasible* at that size (`t + EstBatchLatency(r, bs) ≤
+//! D_r`). Each queue is a dynamic convex hull over the requests' (α, β)
+//! priority points (§4.4) plus a Fibonacci heap tracking the earliest
+//! deadline (§3.2). One scheduler iteration:
+//!
+//! 1. reset the score base time if `b·t` is near overflow (lines 2–4);
+//! 2. re-insert hull points whose milestone passed (lines 5–9);
+//! 3. prune infeasible requests from each queue, marking requests timed
+//!    out when they leave their last queue (lines 10–14);
+//! 4. pick the candidate batch size — queues ordered by (earliest deadline,
+//!    bs) descending, first with `|Q_bs| ≥ bs` (lines 15–21);
+//! 5. pop the top-priority requests from the candidate queue (line 22).
+
+use super::estimator::Estimator;
+use super::profiler::OnlineProfiler;
+use super::{Scheduler, SchedulerConfig};
+use crate::clock::{ms_to_us, us_to_ms, Micros};
+use crate::core::histogram::Histogram;
+use crate::core::priority::{ScoreContext, ScoreSchedule};
+use crate::core::request::{AppId, Outcome, Request};
+use crate::ds::fibheap::{FibHeap, Handle};
+use crate::ds::hull::point::Point;
+use crate::ds::hull::DynamicHull;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Per-(request, batch-size) queue residency.
+struct BsEntry {
+    sched: ScoreSchedule,
+    point: Point,
+    fib: Handle,
+}
+
+/// A pending request with its per-queue state.
+struct Entry {
+    req: Request,
+    per_bs: Vec<Option<BsEntry>>,
+    /// Next milestone (absolute µs) registered in the milestone heap; used
+    /// to invalidate stale heap entries lazily.
+    milestone: Option<Micros>,
+}
+
+struct BsQueue {
+    bs: usize,
+    hull: DynamicHull,
+    deadlines: FibHeap<u64>, // key: deadline µs, value: request id
+}
+
+/// The Orloj scheduler (paper §3–4).
+pub struct OrlojScheduler {
+    cfg: SchedulerConfig,
+    ctx: ScoreContext,
+    queues: Vec<BsQueue>,
+    entries: HashMap<u64, Entry>,
+    milestones: BinaryHeap<Reverse<(Micros, u64)>>,
+    dropped: Vec<(Request, Outcome)>,
+    profiler: OnlineProfiler,
+    estimator: Estimator,
+    last_refresh: Micros,
+    /// Uniform SLO-miss penalty `c` (Fig. 5); relative scores are
+    /// insensitive to its absolute value.
+    cost_c: f64,
+}
+
+impl OrlojScheduler {
+    pub fn new(cfg: SchedulerConfig, seed: u64) -> Self {
+        let mut batch_sizes = cfg.batch_sizes.clone();
+        batch_sizes.sort_unstable();
+        let queues = batch_sizes
+            .iter()
+            .map(|&bs| BsQueue {
+                bs,
+                hull: DynamicHull::new(),
+                deadlines: FibHeap::new(),
+            })
+            .collect();
+        let profiler = OnlineProfiler::new(cfg.profiler_window, cfg.sample_prob, cfg.bins, seed);
+        let estimator = Estimator::with_score_bins(
+            cfg.cost_model,
+            cfg.bins,
+            cfg.score_bins,
+            cfg.feasibility_quantile,
+        );
+        OrlojScheduler {
+            ctx: ScoreContext::new(cfg.b),
+            cfg,
+            queues,
+            entries: HashMap::new(),
+            milestones: BinaryHeap::new(),
+            dropped: Vec::new(),
+            profiler,
+            estimator,
+            last_refresh: 0,
+            cost_c: 1.0,
+        }
+    }
+
+    /// Seed the profiler with an a-priori distribution for an app and make
+    /// it visible to the estimator immediately (used at deployment time the
+    /// way a production system would import the previous window).
+    pub fn seed_profile(&mut self, app: AppId, hist: &Histogram, weight: u64) {
+        self.profiler.seed(app, hist, weight);
+        self.estimator.refresh(self.profiler.snapshot());
+    }
+
+    /// Direct estimator access (diagnostics, tests).
+    pub fn estimator_mut(&mut self) -> &mut Estimator {
+        &mut self.estimator
+    }
+
+    fn rel_ms(&self, t: Micros) -> f64 {
+        self.ctx.rel_ms(t)
+    }
+
+    /// Build the per-bs score state for a request at time `now`; returns
+    /// None if the batch size is infeasible already.
+    fn build_bs_entry(
+        ctx: &ScoreContext,
+        estimator: &mut Estimator,
+        queue: &mut BsQueue,
+        req: &Request,
+        now: Micros,
+        cost_c: f64,
+    ) -> Option<BsEntry> {
+        let bl = estimator.batch_latency(req.app, queue.bs);
+        let feasible = us_to_ms(now) + bl.feasibility_ms <= us_to_ms(req.deadline);
+        if !feasible {
+            return None;
+        }
+        let sched = ScoreSchedule::build(ctx, req.deadline, cost_c, &bl.score_dist);
+        let coeffs = sched.coeffs_at(ctx.rel_ms(now));
+        let point = Point::new(coeffs.alpha, coeffs.beta, req.id.0);
+        queue.hull.insert(point);
+        let fib = queue.deadlines.insert(req.deadline, req.id.0);
+        Some(BsEntry { sched, point, fib })
+    }
+
+    /// Register the next milestone for an entry.
+    fn schedule_milestone(&mut self, id: u64, now: Micros) {
+        let entry = match self.entries.get_mut(&id) {
+            Some(e) => e,
+            None => return,
+        };
+        let rel_now = us_to_ms(now.saturating_sub(self.ctx.base));
+        let next = entry
+            .per_bs
+            .iter()
+            .flatten()
+            .filter_map(|bse| bse.sched.next_milestone(rel_now))
+            .fold(f64::INFINITY, f64::min);
+        if next.is_finite() {
+            let at = if next <= 0.0 {
+                self.ctx.base
+            } else {
+                self.ctx.base + ms_to_us(next)
+            };
+            let at = at.max(now + 1);
+            entry.milestone = Some(at);
+            self.milestones.push(Reverse((at, id)));
+        } else {
+            entry.milestone = None;
+        }
+    }
+
+    /// Lines 5–9: refresh hull points for requests whose milestone passed.
+    fn process_milestones(&mut self, now: Micros) {
+        while let Some(&Reverse((at, id))) = self.milestones.peek() {
+            if at > now {
+                break;
+            }
+            self.milestones.pop();
+            let valid = self
+                .entries
+                .get(&id)
+                .map(|e| e.milestone == Some(at))
+                .unwrap_or(false);
+            if !valid {
+                continue;
+            }
+            self.refresh_entry_points(id, now);
+            self.schedule_milestone(id, now);
+        }
+    }
+
+    /// Delete + re-insert the hull points of one request at the current
+    /// coefficients.
+    fn refresh_entry_points(&mut self, id: u64, now: Micros) {
+        let rel_now = self.rel_ms(now);
+        if let Some(entry) = self.entries.get_mut(&id) {
+            for (qi, slot) in entry.per_bs.iter_mut().enumerate() {
+                if let Some(bse) = slot {
+                    let coeffs = bse.sched.coeffs_at(rel_now);
+                    let new_point = Point::new(coeffs.alpha, coeffs.beta, id);
+                    if new_point.x != bse.point.x || new_point.y != bse.point.y {
+                        self.queues[qi].hull.delete(&bse.point);
+                        self.queues[qi].hull.insert(new_point);
+                        bse.point = new_point;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lines 2–4: base-time reset — rebuild every schedule and hull point
+    /// against the new base.
+    fn reset_base(&mut self, now: Micros) {
+        self.ctx.reset(now);
+        let ids: Vec<u64> = self.entries.keys().copied().collect();
+        let rel_now = self.rel_ms(now);
+        for id in ids {
+            let entry = self.entries.get_mut(&id).unwrap();
+            let (deadline, app) = (entry.req.deadline, entry.req.app);
+            for (qi, slot) in entry.per_bs.iter_mut().enumerate() {
+                if let Some(bse) = slot {
+                    let bl = self.estimator.batch_latency(app, self.queues[qi].bs);
+                    let sched =
+                        ScoreSchedule::build(&self.ctx, deadline, self.cost_c, &bl.score_dist);
+                    let coeffs = sched.coeffs_at(rel_now);
+                    let new_point = Point::new(coeffs.alpha, coeffs.beta, id);
+                    self.queues[qi].hull.delete(&bse.point);
+                    self.queues[qi].hull.insert(new_point);
+                    bse.sched = sched;
+                    bse.point = new_point;
+                }
+            }
+            self.schedule_milestone(id, now);
+        }
+    }
+
+    /// Remove from every queue (request is being dispatched or dropped).
+    fn remove_everywhere(&mut self, id: u64) -> Option<Request> {
+        let entry = self.entries.get_mut(&id)?;
+        let slots: Vec<usize> = entry
+            .per_bs
+            .iter()
+            .enumerate()
+            .filter_map(|(qi, s)| s.as_ref().map(|_| qi))
+            .collect();
+        for qi in slots {
+            let bse = self.entries.get_mut(&id).unwrap().per_bs[qi].take().unwrap();
+            self.queues[qi].hull.delete(&bse.point);
+            self.queues[qi].deadlines.delete(bse.fib);
+        }
+        self.entries.remove(&id).map(|e| e.req)
+    }
+
+    /// Lines 10–14: drop infeasible requests from each queue.
+    fn prune_infeasible(&mut self, now: Micros) {
+        let now_ms = us_to_ms(now);
+        for qi in 0..self.queues.len() {
+            loop {
+                let (deadline, id) = match self.queues[qi].deadlines.min() {
+                    Some((d, &id)) => (d, id),
+                    None => break,
+                };
+                let app = match self.entries.get(&id) {
+                    Some(e) => e.req.app,
+                    None => {
+                        // Stale fib entry should not exist; defensive pop.
+                        self.queues[qi].deadlines.pop_min();
+                        continue;
+                    }
+                };
+                let feas = self.estimator.feasibility_ms(app, self.queues[qi].bs);
+                if now_ms + feas <= us_to_ms(deadline) {
+                    break; // earliest deadline feasible → rest are too
+                }
+                // Pop from this queue's fib heap and hull.
+                self.queues[qi].deadlines.pop_min();
+                let last = {
+                    let entry = self.entries.get_mut(&id).unwrap();
+                    let bse = entry.per_bs[qi].take().expect("fib/slot desync");
+                    self.queues[qi].hull.delete(&bse.point);
+                    entry.per_bs.iter().all(|s| s.is_none())
+                };
+                if last {
+                    // Line 13–14: timed out.
+                    if let Some(e) = self.entries.remove(&id) {
+                        self.dropped.push((e.req, Outcome::TimedOut));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lines 15–21: candidate batch size selection.
+    fn candidate(&self) -> Option<usize> {
+        let mut order: Vec<(Micros, usize, usize)> = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(qi, q)| q.deadlines.min_key().map(|d| (d, q.bs, qi)))
+            .collect();
+        // Ordered by (D_Qbs, bs) descending (Algorithm 1 line 16).
+        order.sort_by(|a, b| b.cmp(a));
+        for (_, bs, qi) in order {
+            if self.queues[qi].hull.len() >= bs {
+                return Some(qi);
+            }
+        }
+        None
+    }
+
+    /// Line 22: pop the `bs` top-priority requests from the queue.
+    fn pop_batch(&mut self, qi: usize, now: Micros) -> Vec<Request> {
+        let bs = self.queues[qi].bs;
+        let m = self.ctx.multiplier(now);
+        let mut batch = Vec::with_capacity(bs);
+        for _ in 0..bs {
+            let top = match self.queues[qi].hull.query_max(m) {
+                Some(p) => p,
+                None => break,
+            };
+            if let Some(req) = self.remove_everywhere(top.id) {
+                batch.push(req);
+            } else {
+                break; // defensive: desync
+            }
+        }
+        batch
+    }
+
+    fn maybe_refresh_estimator(&mut self, now: Micros) {
+        if now.saturating_sub(self.last_refresh) >= self.cfg.refresh_every {
+            let snap = self.profiler.snapshot();
+            if snap.version != self.estimator.snapshot_version() && !snap.apps.is_empty() {
+                self.estimator.refresh(snap);
+            }
+            self.last_refresh = now;
+        }
+    }
+}
+
+impl Scheduler for OrlojScheduler {
+    fn name(&self) -> &'static str {
+        "orloj"
+    }
+
+    fn seed_app_profile(&mut self, app: AppId, hist: &Histogram, weight: u64) {
+        self.seed_profile(app, hist, weight);
+    }
+
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        if self.ctx.needs_reset(now) {
+            self.reset_base(now);
+        }
+        if req.expired(now) {
+            self.dropped.push((req, Outcome::TimedOut));
+            return;
+        }
+        let id = req.id.0;
+        let mut per_bs: Vec<Option<BsEntry>> = Vec::with_capacity(self.queues.len());
+        for queue in self.queues.iter_mut() {
+            per_bs.push(Self::build_bs_entry(
+                &self.ctx,
+                &mut self.estimator,
+                queue,
+                &req,
+                now,
+                self.cost_c,
+            ));
+        }
+        if per_bs.iter().all(|s| s.is_none()) {
+            // No feasible batch size at all.
+            self.dropped.push((req, Outcome::TimedOut));
+            return;
+        }
+        self.entries.insert(
+            id,
+            Entry {
+                req,
+                per_bs,
+                milestone: None,
+            },
+        );
+        self.schedule_milestone(id, now);
+    }
+
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        if self.ctx.needs_reset(now) {
+            self.reset_base(now);
+        }
+        self.process_milestones(now);
+        self.prune_infeasible(now);
+        let qi = self.candidate()?;
+        let batch = self.pop_batch(qi, now);
+        if batch.is_empty() {
+            None
+        } else {
+            Some(batch)
+        }
+    }
+
+    fn on_batch_complete(&mut self, batch: &[Request], _batch_ms: f64, now: Micros) {
+        for req in batch {
+            // The profiler learns each request's *solo* execution time the
+            // way the paper's asynchronous profiler does (sampled finished
+            // requests re-evaluated alone, off the critical path).
+            self.profiler.record(req.app, req.exec_ms);
+        }
+        self.maybe_refresh_estimator(now);
+    }
+
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    fn wake_hint(&self, _now: Micros) -> Option<Micros> {
+        // Wake at the next milestone or the earliest deadline (whichever is
+        // sooner) so prune/milestone work happens on time even when no
+        // arrivals/completions occur.
+        let mile = self.milestones.peek().map(|Reverse((t, _))| *t);
+        let dl = self
+            .queues
+            .iter()
+            .filter_map(|q| q.deadlines.min_key())
+            .min();
+        match (mile, dl) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::batchmodel::BatchCostModel;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            batch_sizes: vec![1, 2, 4, 8],
+            cost_model: BatchCostModel::new(0.5, 0.5),
+            ..Default::default()
+        }
+    }
+
+    fn seeded_sched() -> OrlojScheduler {
+        let mut s = OrlojScheduler::new(cfg(), 42);
+        // One app, exec times around 10 ms.
+        let h = Histogram::from_weights(8.0, 1.0, &[1.0, 2.0, 1.0, 1.0]);
+        s.seed_profile(AppId(0), &h, 100);
+        s
+    }
+
+    fn req(id: u64, release_us: Micros, slo_ms: f64) -> Request {
+        Request::new(id, AppId(0), release_us, ms_to_us(slo_ms), 10.0)
+    }
+
+    #[test]
+    fn empty_scheduler_idles() {
+        let mut s = seeded_sched();
+        assert!(s.next_batch(0).is_none());
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn single_request_served_at_bs1() {
+        let mut s = seeded_sched();
+        s.on_arrival(req(1, 0, 500.0), 0);
+        assert_eq!(s.pending(), 1);
+        let batch = s.next_batch(1000).expect("batch");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id.0, 1);
+        assert_eq!(s.pending(), 0);
+        assert!(s.next_batch(2000).is_none());
+    }
+
+    #[test]
+    fn batches_fill_to_largest_feasible_size() {
+        let mut s = seeded_sched();
+        for i in 0..8 {
+            s.on_arrival(req(i, 0, 1000.0), 0);
+        }
+        let batch = s.next_batch(100).expect("batch");
+        assert_eq!(batch.len(), 8, "should take the full batch of 8");
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn partial_queue_uses_smaller_size() {
+        let mut s = seeded_sched();
+        for i in 0..3 {
+            s.on_arrival(req(i, 0, 1000.0), 0);
+        }
+        let batch = s.next_batch(100).expect("batch");
+        assert_eq!(batch.len(), 2, "3 pending, sizes {{1,2,4,8}} → Q_2");
+        assert_eq!(s.pending(), 1);
+    }
+
+    #[test]
+    fn infeasible_requests_time_out() {
+        let mut s = seeded_sched();
+        // SLO of 1 ms but exec ~10 ms: infeasible on arrival.
+        s.on_arrival(req(1, 0, 1.0), 0);
+        assert_eq!(s.pending(), 0);
+        let dropped = s.drain_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0.id.0, 1);
+    }
+
+    #[test]
+    fn queued_request_dropped_when_deadline_nears() {
+        let mut s = seeded_sched();
+        s.on_arrival(req(1, 0, 40.0), 0); // feasible now (bs=1 ~5.5ms)
+        assert_eq!(s.pending(), 1);
+        // 38 ms later even bs=1 cannot make it.
+        assert!(s.next_batch(ms_to_us(38.0)).is_none());
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.drain_dropped().len(), 1);
+    }
+
+    #[test]
+    fn urgent_request_leaves_large_queues_first() {
+        let mut s = seeded_sched();
+        // bs=8 latency ≈ 0.5 + 0.5·8·~12 ≈ 48 ms. Request with 30 ms SLO is
+        // feasible only for small sizes.
+        s.on_arrival(req(1, 0, 30.0), 0);
+        for i in 2..9 {
+            s.on_arrival(req(i, 0, 2000.0), 0);
+        }
+        assert_eq!(s.pending(), 8);
+        let batch = s.next_batch(1000).expect("batch");
+        // Q_8 holds only the 7 relaxed requests (urgent excluded) → |Q_8|<8
+        // → fall through to Q_4 (all 4 from relaxed+urgent mix feasible).
+        assert!(batch.len() < 8, "urgent request restricts batch: {}", batch.len());
+    }
+
+    #[test]
+    fn expired_arrival_dropped_immediately() {
+        let mut s = seeded_sched();
+        let r = req(1, 0, 10.0);
+        s.on_arrival(r, ms_to_us(20.0));
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.drain_dropped().len(), 1);
+    }
+
+    #[test]
+    fn milestones_update_without_panic() {
+        let mut s = seeded_sched();
+        for i in 0..4 {
+            s.on_arrival(req(i, 0, 200.0 + i as f64 * 50.0), 0);
+        }
+        // Poll through the milestone horizon.
+        let mut served = 0;
+        let mut t = 0;
+        while t < ms_to_us(400.0) {
+            if let Some(b) = s.next_batch(t) {
+                served += b.len();
+                s.on_batch_complete(&b, 10.0, t);
+            }
+            t += ms_to_us(5.0);
+        }
+        assert!(served > 0);
+        assert_eq!(s.pending() + served + s.drain_dropped().len(), 4);
+    }
+
+    #[test]
+    fn base_reset_preserves_operation() {
+        let mut s = seeded_sched();
+        // Jump beyond the reset threshold (b=1e-4/ms → reset past ~400 s).
+        let far = ms_to_us(500_000.0);
+        s.on_arrival(req(1, far, 500.0), far);
+        assert!(s.pending() == 1);
+        let batch = s.next_batch(far + 1000).expect("batch after reset");
+        assert_eq!(batch.len(), 1);
+        // And again much later.
+        let far2 = ms_to_us(1_000_000.0);
+        s.on_arrival(req(2, far2, 500.0), far2);
+        assert_eq!(s.next_batch(far2 + 1000).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn earlier_deadline_popped_first_within_queue() {
+        let mut s = seeded_sched();
+        s.on_arrival(req(1, 0, 900.0), 0);
+        s.on_arrival(req(2, 0, 80.0), 0); // urgent
+        // Only two pending → candidate Q_2 (both feasible); top of the
+        // hull at a time close to the urgent deadline must be the urgent
+        // request; with batch size 2 both go anyway — check order by
+        // serving at bs=1: remove feasibility of 2 by timing.
+        let batch = s.next_batch(ms_to_us(1.0)).unwrap();
+        assert_eq!(batch.len(), 2);
+        // The first popped (highest score) should be the urgent one.
+        assert_eq!(batch[0].id.0, 2, "urgent request has the higher score");
+    }
+
+    #[test]
+    fn profiler_feedback_changes_estimates() {
+        let mut s = seeded_sched();
+        let before = s.estimator_mut().batch_latency(AppId(0), 4).mean;
+        // Complete many slow requests → estimates shift after refresh.
+        let reqs: Vec<Request> = (0..200)
+            .map(|i| Request::new(100 + i, AppId(0), 0, ms_to_us(10_000.0), 60.0))
+            .collect();
+        s.on_batch_complete(&reqs, 60.0, 0);
+        s.on_batch_complete(&reqs, 60.0, 2_000_000); // past refresh_every
+        let after = s.estimator_mut().batch_latency(AppId(0), 4).mean;
+        assert!(after > before * 1.5, "{before} -> {after}");
+    }
+
+    #[test]
+    fn wake_hint_present_when_pending() {
+        let mut s = seeded_sched();
+        assert!(s.wake_hint(0).is_none());
+        s.on_arrival(req(1, 0, 100.0), 0);
+        let hint = s.wake_hint(0).expect("hint");
+        assert!(hint <= ms_to_us(100.0));
+    }
+}

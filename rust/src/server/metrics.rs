@@ -1,0 +1,132 @@
+//! Serving metrics: the paper's *finish rate* (§5.2 Metrics) plus latency
+//! summaries and per-app/per-outcome breakdowns.
+
+use crate::core::request::{AppId, Completion, Outcome};
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+/// Aggregated result of a serving run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub total: usize,
+    pub finished: usize,
+    pub late: usize,
+    pub timed_out: usize,
+    pub aborted: usize,
+    /// Latency summary over completed (finished + late) requests, ms.
+    pub latency: Summary,
+    /// Mean batch size over executed batches.
+    pub mean_batch_size: f64,
+    /// Per-app finish rates.
+    pub per_app: BTreeMap<u32, (usize, usize)>, // app -> (finished, total)
+}
+
+impl RunReport {
+    /// Finish rate: requests completed within their SLO / total (§5.2).
+    pub fn finish_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.finished as f64 / self.total as f64
+        }
+    }
+
+    pub fn from_completions(completions: &[Completion]) -> RunReport {
+        let mut finished = 0;
+        let mut late = 0;
+        let mut timed_out = 0;
+        let mut aborted = 0;
+        let mut latencies = Vec::new();
+        let mut per_app: BTreeMap<u32, (usize, usize)> = BTreeMap::new();
+        let mut batch_sizes = Vec::new();
+        for c in completions {
+            let AppId(app) = c.request.app;
+            let slot = per_app.entry(app).or_insert((0, 0));
+            slot.1 += 1;
+            match c.outcome {
+                Outcome::Finished => {
+                    finished += 1;
+                    slot.0 += 1;
+                    latencies.push(c.latency_ms());
+                    batch_sizes.push(c.batch_size as f64);
+                }
+                Outcome::Late => {
+                    late += 1;
+                    latencies.push(c.latency_ms());
+                    batch_sizes.push(c.batch_size as f64);
+                }
+                Outcome::TimedOut => timed_out += 1,
+                Outcome::Aborted => aborted += 1,
+            }
+        }
+        RunReport {
+            total: completions.len(),
+            finished,
+            late,
+            timed_out,
+            aborted,
+            latency: Summary::of(&latencies),
+            mean_batch_size: crate::util::stats::mean(&batch_sizes),
+            per_app,
+        }
+    }
+}
+
+impl std::fmt::Display for RunReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "finish_rate={:.3} (fin={} late={} timeout={} abort={} total={}) lat_p50={:.1}ms lat_p99={:.1}ms mean_bs={:.1}",
+            self.finish_rate(),
+            self.finished,
+            self.late,
+            self.timed_out,
+            self.aborted,
+            self.total,
+            self.latency.p50,
+            self.latency.p99,
+            self.mean_batch_size
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::Request;
+
+    fn comp(id: u64, app: u32, outcome: Outcome, at: u64) -> Completion {
+        Completion {
+            request: Request::new(id, AppId(app), 0, 1_000_000, 5.0),
+            outcome,
+            at,
+            batch_size: 4,
+        }
+    }
+
+    #[test]
+    fn finish_rate_and_breakdown() {
+        let comps = vec![
+            comp(1, 0, Outcome::Finished, 100),
+            comp(2, 0, Outcome::Late, 2_000_000),
+            comp(3, 1, Outcome::TimedOut, 500),
+            comp(4, 1, Outcome::Finished, 900),
+            comp(5, 1, Outcome::Aborted, 900),
+        ];
+        let r = RunReport::from_completions(&comps);
+        assert_eq!(r.total, 5);
+        assert_eq!(r.finished, 2);
+        assert!((r.finish_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(r.per_app[&0], (1, 2));
+        assert_eq!(r.per_app[&1], (1, 3));
+        assert_eq!(r.timed_out, 1);
+        assert_eq!(r.aborted, 1);
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = RunReport::from_completions(&[]);
+        assert_eq!(r.finish_rate(), 0.0);
+        assert_eq!(r.total, 0);
+    }
+}

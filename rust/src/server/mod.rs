@@ -1,0 +1,197 @@
+//! Real-time serving runtime (threads, no tokio in the offline vendored
+//! set — see DESIGN.md §3): an intake channel feeding the scheduler loop,
+//! which drives one worker. Used by the PJRT end-to-end examples; the
+//! evaluation sweeps use the virtual-time engine in `sim`.
+
+pub mod metrics;
+
+use crate::clock::{Clock, Micros, RealClock};
+use crate::core::request::{Completion, Outcome, Request};
+use crate::scheduler::Scheduler;
+use crate::sim::worker::Worker;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Sender<Request>,
+}
+
+impl Submitter {
+    pub fn submit(&self, req: Request) -> bool {
+        self.tx.send(req).is_ok()
+    }
+}
+
+/// A single-worker serving loop (the paper's per-GPU scheduler, §3.1).
+///
+/// Runs the scheduler and the worker on the calling thread; arrivals come
+/// in through an mpsc channel from any number of client threads. Returns
+/// all completions when the channel closes and queues drain.
+pub struct Server<S: Scheduler, W: Worker> {
+    sched: S,
+    worker: W,
+    clock: RealClock,
+}
+
+impl<S: Scheduler, W: Worker> Server<S, W> {
+    pub fn new(sched: S, worker: W) -> Self {
+        Server {
+            sched,
+            worker,
+            clock: RealClock::new(),
+        }
+    }
+
+    /// Create the submission channel. Call before `run`.
+    pub fn channel() -> (Submitter, Receiver<Request>) {
+        let (tx, rx) = mpsc::channel();
+        (Submitter { tx }, rx)
+    }
+
+    /// Current server-relative time (µs since construction).
+    pub fn now(&self) -> Micros {
+        self.clock.now()
+    }
+
+    /// Serve until the submitters hang up and everything drains.
+    pub fn run(mut self, rx: Receiver<Request>) -> Vec<Completion> {
+        let mut completions = Vec::new();
+        let mut open = true;
+        loop {
+            let now = self.clock.now();
+            // Pull everything currently in the channel.
+            loop {
+                match rx.try_recv() {
+                    Ok(req) => self.sched.on_arrival(req, now),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            for (r, outcome) in self.sched.drain_dropped() {
+                completions.push(Completion {
+                    request: r,
+                    outcome,
+                    at: now,
+                    batch_size: 0,
+                });
+            }
+            // Dispatch (the worker call blocks this thread — single-GPU
+            // semantics: non-preemptive batch execution).
+            if let Some(batch) = self.sched.next_batch(now) {
+                let batch_ms = self.worker.execute(&batch);
+                let done = self.clock.now();
+                let bs = batch.len();
+                for r in &batch {
+                    let outcome = if done <= r.deadline {
+                        Outcome::Finished
+                    } else {
+                        Outcome::Late
+                    };
+                    completions.push(Completion {
+                        request: r.clone(),
+                        outcome,
+                        at: done,
+                        batch_size: bs,
+                    });
+                }
+                self.sched.on_batch_complete(&batch, batch_ms, done);
+                continue;
+            }
+            if !open && self.sched.pending() == 0 {
+                break;
+            }
+            // Idle: block briefly for new arrivals or the next wake hint.
+            let wait_us = self
+                .sched
+                .wake_hint(now)
+                .map(|h| h.saturating_sub(now).clamp(100, 5_000))
+                .unwrap_or(1_000);
+            match rx.recv_timeout(Duration::from_micros(wait_us)) {
+                Ok(req) => {
+                    let t = self.clock.now();
+                    self.sched.on_arrival(req, t);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                }
+            }
+        }
+        completions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::edf::EdfScheduler;
+    use crate::clock::ms_to_us;
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::core::request::AppId;
+    use crate::scheduler::SchedulerConfig;
+    use crate::sim::worker::SimWorker;
+
+    /// A worker that actually sleeps (real time) scaled down hard so the
+    /// test stays fast.
+    struct SleepWorker;
+    impl Worker for SleepWorker {
+        fn execute(&mut self, batch: &[Request]) -> f64 {
+            let ms = 0.2 + 0.05 * batch.len() as f64;
+            std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+            ms
+        }
+    }
+
+    #[test]
+    fn serves_from_channel_and_drains() {
+        let cfg = SchedulerConfig {
+            cost_model: BatchCostModel::new(0.2, 0.05),
+            ..Default::default()
+        };
+        let mut sched = EdfScheduler::new(cfg, 0);
+        sched.seed_exec_mean(1.0);
+        let (submitter, rx) = Server::<EdfScheduler, SleepWorker>::channel();
+        let server = Server::new(sched, SleepWorker);
+
+        let handle = std::thread::spawn(move || server.run(rx));
+        for i in 0..20u64 {
+            submitter.submit(Request::new(i, AppId(0), 0, ms_to_us(5_000.0), 1.0));
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        drop(submitter);
+        let completions = handle.join().unwrap();
+        assert_eq!(completions.len(), 20);
+        let finished = completions
+            .iter()
+            .filter(|c| c.outcome == Outcome::Finished)
+            .count();
+        assert!(finished >= 18, "finished={finished}");
+    }
+
+    #[test]
+    fn sim_worker_compatible() {
+        // The Server generic works with the SimWorker too (zero real time,
+        // still functional).
+        let cfg = SchedulerConfig::default();
+        let mut sched = EdfScheduler::new(cfg, 0);
+        sched.seed_exec_mean(1.0);
+        let (submitter, rx) =
+            Server::<EdfScheduler, SimWorker>::channel();
+        let server = Server::new(
+            sched,
+            SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, 0),
+        );
+        let handle = std::thread::spawn(move || server.run(rx));
+        for i in 0..5u64 {
+            submitter.submit(Request::new(i, AppId(0), 0, ms_to_us(10_000.0), 1.0));
+        }
+        drop(submitter);
+        let completions = handle.join().unwrap();
+        assert_eq!(completions.len(), 5);
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event evaluation substrate: virtual-time worker, engine, and
+//! the (system × workload × SLO) experiment runner used by every table and
+//! figure reproduction.
+
+pub mod engine;
+pub mod runner;
+pub mod worker;

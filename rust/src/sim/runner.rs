@@ -1,0 +1,197 @@
+//! Experiment runner: (system × trace × SLO multiple) → finish rate.
+//!
+//! This is the evaluation harness behind every table and figure (§5): it
+//! replays the identical recorded trace through each system at each SLO
+//! setting, seeds every scheduler with the same deployment-time profile,
+//! and reports the paper's metrics.
+
+use super::engine;
+use super::worker::SimWorker;
+use crate::baselines;
+use crate::scheduler::SchedulerConfig;
+use crate::server::metrics::RunReport;
+use crate::workload::trace::{Trace, TraceSpec};
+
+/// One (system, slo) cell of a results table.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub system: String,
+    pub slo_multiple: f64,
+    pub report: RunReport,
+    pub utilization: f64,
+}
+
+/// Run one system over one trace at one SLO multiple.
+pub fn run_one(
+    system: &str,
+    spec: &TraceSpec,
+    trace: &Trace,
+    slo_multiple: f64,
+    cfg: &SchedulerConfig,
+    seed: u64,
+) -> Cell {
+    let mut sched =
+        baselines::by_name(system, cfg.clone(), seed).unwrap_or_else(|| panic!("unknown system {system}"));
+    for (app, hist) in spec.seed_histograms(cfg.bins) {
+        sched.seed_app_profile(app, &hist, 1000);
+    }
+    let mut worker = SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151);
+    let requests = trace.requests(slo_multiple);
+    let res = engine::run(sched.as_mut(), &mut worker, requests);
+    let report = RunReport::from_completions(&res.completions);
+    let utilization = if res.end_time > 0 {
+        res.busy_us as f64 / res.end_time as f64
+    } else {
+        0.0
+    };
+    Cell {
+        system: system.to_string(),
+        slo_multiple,
+        report,
+        utilization,
+    }
+}
+
+/// Run the full (systems × SLOs) grid over one trace.
+pub fn run_grid(
+    systems: &[&str],
+    spec: &TraceSpec,
+    slo_multiples: &[f64],
+    cfg: &SchedulerConfig,
+    seed: u64,
+) -> Vec<Cell> {
+    let trace = spec.generate();
+    let mut cells = Vec::new();
+    for &slo in slo_multiples {
+        for system in systems {
+            cells.push(run_one(system, spec, &trace, slo, cfg, seed));
+        }
+    }
+    cells
+}
+
+/// Render a grid as a paper-style table (rows: SLO; columns: systems).
+pub fn render_table(title: &str, cells: &[Cell], systems: &[&str]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "### {title}").unwrap();
+    write!(out, "{:>10} ", "SLO(xP99)").unwrap();
+    for s in systems {
+        write!(out, "{:>10} ", s).unwrap();
+    }
+    writeln!(out).unwrap();
+    let mut slos: Vec<f64> = cells.iter().map(|c| c.slo_multiple).collect();
+    slos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    slos.dedup();
+    for slo in slos {
+        write!(out, "{:>10} ", format!("{slo:.1}")).unwrap();
+        for s in systems {
+            let cell = cells
+                .iter()
+                .find(|c| c.slo_multiple == slo && c.system == *s);
+            match cell {
+                Some(c) => write!(out, "{:>10.2} ", c.report.finish_rate()).unwrap(),
+                None => write!(out, "{:>10} ", "-").unwrap(),
+            }
+        }
+        writeln!(out).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::workload::azure::AzureTraceConfig;
+    use crate::workload::exectime::ExecTimeDist;
+
+    fn small_spec(bimodal: bool) -> TraceSpec {
+        let dists = if bimodal {
+            vec![ExecTimeDist::multimodal("bi", 2, 5.0, 50.0, 1.0, None)]
+        } else {
+            vec![ExecTimeDist::constant("static", 10.0)]
+        };
+        let mut spec = TraceSpec {
+            name: "unit".into(),
+            dists,
+            arrivals: AzureTraceConfig {
+                apps: 1,
+                rate_per_s: 0.0, // set by scaling
+                duration_s: 20.0,
+                ..Default::default()
+            },
+            seed: 77,
+        };
+        spec.scale_rate_to_load(BatchCostModel::gpu_like(), 0.6, 8);
+        spec
+    }
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            cost_model: BatchCostModel::gpu_like(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_four_systems_run_to_completion() {
+        let spec = small_spec(true);
+        let cells = run_grid(
+            &baselines::PAPER_SYSTEMS,
+            &spec,
+            &[3.0],
+            &cfg(),
+            1,
+        );
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            assert!(c.report.total > 50, "{}: total={}", c.system, c.report.total);
+            assert!(c.report.finish_rate() >= 0.0 && c.report.finish_rate() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn orloj_beats_point_estimators_on_bimodal() {
+        // The paper's headline directional claim at a moderate SLO.
+        let spec = small_spec(true);
+        let cells = run_grid(&["clockwork", "orloj"], &spec, &[3.0], &cfg(), 2);
+        let get = |name: &str| {
+            cells
+                .iter()
+                .find(|c| c.system == name)
+                .unwrap()
+                .report
+                .finish_rate()
+        };
+        assert!(
+            get("orloj") > get("clockwork"),
+            "orloj {} vs clockwork {}",
+            get("orloj"),
+            get("clockwork")
+        );
+    }
+
+    #[test]
+    fn static_workload_everyone_reasonable() {
+        let spec = small_spec(false);
+        let cells = run_grid(&["clockwork", "orloj"], &spec, &[4.0], &cfg(), 3);
+        for c in &cells {
+            assert!(
+                c.report.finish_rate() > 0.7,
+                "{} should do fine on static: {}",
+                c.system,
+                c.report.finish_rate()
+            );
+        }
+    }
+
+    #[test]
+    fn render_table_has_all_rows() {
+        let spec = small_spec(true);
+        let cells = run_grid(&["orloj"], &spec, &[1.5, 3.0], &cfg(), 4);
+        let table = render_table("t", &cells, &["orloj"]);
+        assert!(table.contains("1.5"));
+        assert!(table.contains("3.0") || table.contains("3"));
+    }
+}

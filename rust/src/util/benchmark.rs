@@ -1,0 +1,70 @@
+//! Micro-benchmark harness (the offline vendored set has no criterion).
+//!
+//! Warmup + timed iterations, reporting mean/p50/p99 per iteration in
+//! nanoseconds. Used by the `cargo bench` targets (`harness = false`).
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Time `iters` runs of `f` after `warmup` runs; returns per-iteration
+/// nanoseconds. `f` gets the iteration index and should return something
+/// observable so the optimizer cannot delete the work (we black-box it).
+pub fn time_per_iter<T, F: FnMut(usize) -> T>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for i in 0..warmup {
+        std::hint::black_box(f(i));
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f(i));
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Summary::of(&samples)
+}
+
+/// Time one batched measurement: total wall time of `iters` calls divided
+/// by `iters` (for very fast operations where per-call timer overhead
+/// dominates).
+pub fn time_batched<T, F: FnMut(usize) -> T>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for i in 0..warmup {
+        std::hint::black_box(f(i));
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        std::hint::black_box(f(i));
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Pretty row printer for bench tables.
+pub fn row(name: &str, n: usize, s: &Summary) {
+    println!(
+        "{name:>28} n={n:>6}  mean={:>10.0} ns  p50={:>10.0}  p99={:>10.0}",
+        s.mean, s.p50, s.p99
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let fast = time_batched(10, 100, |i| i * 2);
+        let slow = time_batched(2, 20, |_| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(fast >= 0.0);
+        assert!(slow > fast, "slow={slow} fast={fast}");
+    }
+
+    #[test]
+    fn summary_has_iters() {
+        let s = time_per_iter(1, 50, |i| i + 1);
+        assert_eq!(s.count, 50);
+    }
+}

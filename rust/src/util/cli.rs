@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (the offline build has no `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text. Intentionally minimal —
+//! just what the `orloj` binary, examples and bench harness need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Subcommand (first bare word), if any.
+    pub command: Option<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass
+    /// `std::env::args().skip(1)` in main.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut command = None;
+        let mut positional = Vec::new();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    opts.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = iter.next().unwrap();
+                    opts.insert(rest.to_string(), val);
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else if command.is_none() {
+                command = Some(arg);
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args {
+            command,
+            positional,
+            opts,
+            flags,
+        }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list option, e.g. `--slo 1.5,2,3`.
+    pub fn get_list_f64(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(s) => s
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["experiment", "table3", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["table3", "extra"]);
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["serve", "--port", "8080", "--rate=2.5"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["x", "--verbose", "--seed", "7", "--dry-run"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.command, None);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.get_usize("n", 10), 10);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--slo", "1.5,2,3"]);
+        assert_eq!(a.get_list_f64("slo", &[]), vec![1.5, 2.0, 3.0]);
+        assert_eq!(a.get_list_f64("other", &[9.0]), vec![9.0]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_not_swallowed() {
+        let a = parse(&["x", "--a", "--b", "val"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Utility substrates built in-tree for the offline environment:
+//! RNG + samplers, JSON, statistics, CLI parsing, logging, and a mini
+//! property-testing driver. See DESIGN.md §3 for the substitution table.
+
+pub mod benchmark;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,96 @@
+//! Mini property-based testing driver (no `proptest` in the offline set).
+//!
+//! A property is a closure over a seeded [`Rng`]; the driver runs it for N
+//! seeds and, on failure, reports the failing seed so the case can be
+//! replayed deterministically (`check_with_seed`). We deliberately skip
+//! shrinking — the generators used in Orloj's properties produce small cases
+//! already, and the seed is enough to reproduce.
+
+use super::rng::Rng;
+
+/// Number of cases run per property by default.
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`. Panics with the
+/// failing seed embedded in the message if the property returns an `Err`.
+pub fn check_cases<F>(name: &str, base_seed: u64, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check<F>(name: &str, base_seed: u64, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_cases(name, base_seed, DEFAULT_CASES, prop);
+}
+
+/// Replay a single failing seed reported by `check`.
+pub fn check_with_seed<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed}): {msg}");
+    }
+}
+
+/// Assert-like helper producing property-friendly results.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Approximate float equality for properties.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_cases("trivial", 1, 50, |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check_cases("always-fails", 2, 10, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!close(1.0, 1.1, 1e-9));
+        assert!(close(1e9, 1e9 + 10.0, 1e-7));
+    }
+}

@@ -1,0 +1,183 @@
+//! Azure-Functions-like arrival process (paper §5.2 "Input Trace").
+//!
+//! The paper replays the Microsoft Azure Functions trace [Shahrad et al.,
+//! ATC'20] scaled so the incoming rate matches system load. The trace file
+//! is not redistributable, so this module synthesizes an arrival process
+//! with its published statistical signature:
+//!
+//! * heavy-tailed per-application request rates (a few hot apps, a long
+//!   tail of cold ones) — Pareto-distributed app weights;
+//! * bursty, minute-scale rate modulation per app (lognormal multiplicative
+//!   noise on a slow sinusoidal "diurnal" carrier);
+//! * Poisson arrivals within each minute bucket.
+//!
+//! The generated trace is deterministic given the seed and is recorded/
+//! replayed via `workload::trace` so all four systems see byte-identical
+//! arrival sequences (§5.2: "the generation is done once among different
+//! runs").
+
+use crate::clock::{ms_to_us, Micros};
+use crate::util::rng::Rng;
+
+/// Arrival-process configuration.
+#[derive(Debug, Clone)]
+pub struct AzureTraceConfig {
+    /// Number of applications multiplexed onto the model.
+    pub apps: usize,
+    /// Mean aggregate request rate (req/s) after scaling to system load.
+    pub rate_per_s: f64,
+    /// Trace duration (seconds).
+    pub duration_s: f64,
+    /// Rate-modulation bucket (seconds); Azure publishes per-minute counts,
+    /// we default to finer 10 s buckets scaled for shorter experiments.
+    pub bucket_s: f64,
+    /// Burstiness: σ of the lognormal multiplicative noise per bucket.
+    pub burst_sigma: f64,
+}
+
+impl Default for AzureTraceConfig {
+    fn default() -> Self {
+        AzureTraceConfig {
+            apps: 2,
+            rate_per_s: 100.0,
+            duration_s: 60.0,
+            bucket_s: 5.0,
+            burst_sigma: 0.3,
+        }
+    }
+}
+
+/// One synthesized arrival: (time µs, app index).
+pub type Arrival = (Micros, usize);
+
+/// Generate the arrival sequence.
+pub fn generate(cfg: &AzureTraceConfig, rng: &mut Rng) -> Vec<Arrival> {
+    assert!(cfg.apps >= 1 && cfg.rate_per_s > 0.0 && cfg.duration_s > 0.0);
+    // Heavy-tailed app weights (Pareto α≈1.1 like the FaaS popularity
+    // distribution), normalized.
+    let mut weights: Vec<f64> = (0..cfg.apps).map(|_| rng.pareto(1.0, 1.1)).collect();
+    let wsum: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= wsum;
+    }
+    let buckets = (cfg.duration_s / cfg.bucket_s).ceil() as usize;
+    let mut arrivals: Vec<Arrival> = Vec::new();
+    // Per-app random phase for the slow carrier.
+    let phases: Vec<f64> = (0..cfg.apps).map(|_| rng.f64() * std::f64::consts::TAU).collect();
+    for b in 0..buckets {
+        let t0 = b as f64 * cfg.bucket_s;
+        for app in 0..cfg.apps {
+            // Carrier: slow sinusoid (diurnal-like), ±30%.
+            let carrier = 1.0 + 0.3 * (t0 / cfg.duration_s * std::f64::consts::TAU + phases[app]).sin();
+            // Burst: lognormal multiplicative noise per bucket.
+            let burst = rng.lognormal(0.0, cfg.burst_sigma);
+            let lam = cfg.rate_per_s * weights[app] * carrier * burst * cfg.bucket_s;
+            let n = rng.poisson(lam);
+            for _ in 0..n {
+                let at = t0 + rng.f64() * cfg.bucket_s;
+                if at < cfg.duration_s {
+                    arrivals.push((ms_to_us(at * 1000.0), app));
+                }
+            }
+        }
+    }
+    arrivals.sort_unstable_by_key(|a| a.0);
+    arrivals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_roughly_matches_target() {
+        let mut rng = Rng::new(1);
+        let cfg = AzureTraceConfig {
+            apps: 3,
+            rate_per_s: 200.0,
+            duration_s: 50.0,
+            ..Default::default()
+        };
+        let arr = generate(&cfg, &mut rng);
+        let rate = arr.len() as f64 / cfg.duration_s;
+        assert!(
+            (rate - 200.0).abs() / 200.0 < 0.35,
+            "rate={rate} (bursty, so loose tolerance)"
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_range() {
+        let mut rng = Rng::new(2);
+        let cfg = AzureTraceConfig::default();
+        let arr = generate(&cfg, &mut rng);
+        assert!(!arr.is_empty());
+        for w in arr.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        let end = ms_to_us(cfg.duration_s * 1000.0);
+        assert!(arr.iter().all(|&(t, app)| t < end && app < cfg.apps));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = AzureTraceConfig::default();
+        let a = generate(&cfg, &mut Rng::new(7));
+        let b = generate(&cfg, &mut Rng::new(7));
+        assert_eq!(a, b);
+        let c = generate(&cfg, &mut Rng::new(8));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn app_shares_are_heavy_tailed() {
+        let mut rng = Rng::new(3);
+        let cfg = AzureTraceConfig {
+            apps: 10,
+            rate_per_s: 500.0,
+            duration_s: 40.0,
+            ..Default::default()
+        };
+        let arr = generate(&cfg, &mut rng);
+        let mut counts = vec![0usize; cfg.apps];
+        for &(_, app) in &arr {
+            counts[app] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Hottest app should clearly dominate the median app (Pareto
+        // weights; exact skew varies with seed).
+        assert!(
+            counts[0] > 2 * counts[cfg.apps / 2].max(1),
+            "counts={counts:?}"
+        );
+    }
+
+    #[test]
+    fn bursts_create_rate_variation() {
+        let mut rng = Rng::new(4);
+        let cfg = AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 300.0,
+            duration_s: 60.0,
+            bucket_s: 5.0,
+            burst_sigma: 0.5,
+        };
+        let arr = generate(&cfg, &mut rng);
+        // Count per bucket; coefficient of variation should be well above
+        // a plain Poisson's.
+        let buckets = 12;
+        let mut counts = vec![0f64; buckets];
+        for &(t, _) in &arr {
+            let b = ((t as f64 / 1e6) / 5.0) as usize;
+            counts[b.min(buckets - 1)] += 1.0;
+        }
+        let mean = crate::util::stats::mean(&counts);
+        let std = crate::util::stats::stddev(&counts);
+        let poisson_cv = 1.0 / mean.sqrt();
+        assert!(
+            std / mean > 2.0 * poisson_cv,
+            "cv={} poisson_cv={poisson_cv}",
+            std / mean
+        );
+    }
+}

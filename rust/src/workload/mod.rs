@@ -1,0 +1,7 @@
+//! Workload synthesis: execution-time distributions (Table 1 presets +
+//! synthetic k-modal mixtures), the Azure-Functions-like arrival process,
+//! and replayable traces binding the two together.
+
+pub mod azure;
+pub mod exectime;
+pub mod trace;

@@ -1,0 +1,267 @@
+//! Request trace assembly, record and replay (paper §5.2).
+//!
+//! A *trace* is the fully materialized request sequence: arrival time, app,
+//! and ground-truth solo execution time. It is generated once per
+//! experiment (arrivals from the Azure-like process × per-app execution
+//! time distributions) and replayed identically for every system and SLO
+//! setting — deadlines are applied at replay time as `release + mult·P99`,
+//! exactly the paper's metrics methodology.
+
+use super::azure::{self, AzureTraceConfig};
+use super::exectime::ExecTimeDist;
+use crate::clock::{ms_to_us, Micros};
+use crate::core::batchmodel::BatchCostModel;
+use crate::core::histogram::Histogram;
+use crate::core::request::{AppId, Request};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One recorded trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at: Micros,
+    pub app: u32,
+    pub exec_ms: f64,
+}
+
+/// A generated, replayable workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub events: Vec<TraceEvent>,
+    /// P99 of the solo execution times in this trace (SLO reference).
+    pub p99_ms: f64,
+}
+
+/// Everything needed to generate a trace deterministically.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub name: String,
+    /// Per-app execution time distributions (app i uses dists[i]).
+    pub dists: Vec<ExecTimeDist>,
+    pub arrivals: AzureTraceConfig,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Pick the aggregate arrival rate so offered load is `util` of the
+    /// worker's batched capacity at reference batch size `bs_ref` (paper:
+    /// "scaled down such that the incoming rate matches the system load").
+    pub fn scale_rate_to_load(
+        &mut self,
+        cost_model: BatchCostModel,
+        util: f64,
+        bs_ref: usize,
+    ) {
+        let mut rng = Rng::new(self.seed ^ 0xABCD);
+        // Capacity is governed by the *max order statistic* of a batch
+        // (Eq. 4: the batch pads to its longest member), not the mean —
+        // using the mean here would silently overload every run.
+        let hists: Vec<Histogram> = self
+            .dists
+            .iter()
+            .map(|d| d.histogram(&mut rng, 8000, 96))
+            .collect();
+        let parts: Vec<(&Histogram, f64)> = hists.iter().map(|h| (h, 1.0)).collect();
+        let mix = Histogram::mixture(&parts, 96);
+        let batch_ms = cost_model.batch_latency_iid(&mix, bs_ref).mean();
+        let capacity = bs_ref as f64 / (batch_ms / 1000.0); // req/s
+        self.arrivals.rate_per_s = util * capacity;
+    }
+
+    pub fn generate(&self) -> Trace {
+        let mut rng = Rng::new(self.seed);
+        let mut arr_rng = rng.fork();
+        let mut exec_rng = rng.fork();
+        let arrivals = azure::generate(&self.arrivals, &mut arr_rng);
+        let mut events = Vec::with_capacity(arrivals.len());
+        let mut execs = Vec::with_capacity(arrivals.len());
+        for (at, app) in arrivals {
+            let dist = &self.dists[app % self.dists.len()];
+            let exec_ms = dist.sample(&mut exec_rng);
+            execs.push(exec_ms);
+            events.push(TraceEvent {
+                at,
+                app: app as u32,
+                exec_ms,
+            });
+        }
+        execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99_ms = crate::util::stats::percentile_sorted(&execs, 99.0);
+        Trace {
+            name: self.name.clone(),
+            events,
+            p99_ms,
+        }
+    }
+
+    /// Per-app seed histograms for the schedulers' profilers (deployment-
+    /// time historical data).
+    pub fn seed_histograms(&self, bins: usize) -> Vec<(AppId, Histogram)> {
+        let mut rng = Rng::new(self.seed ^ 0x5EED);
+        self.dists
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (AppId(i as u32), d.histogram(&mut rng, 8000, bins)))
+            .collect()
+    }
+}
+
+impl Trace {
+    /// Materialize requests for a given SLO multiple of the trace P99.
+    pub fn requests(&self, slo_multiple: f64) -> Vec<Request> {
+        let slo = ms_to_us(slo_multiple * self.p99_ms);
+        self.events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Request::new(i as u64, AppId(e.app), e.at, slo, e.exec_ms))
+            .collect()
+    }
+
+    /// Mean solo exec time of the trace (for baseline seeding).
+    pub fn exec_mean_ms(&self) -> f64 {
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        self.events.iter().map(|e| e.exec_ms).sum::<f64>() / self.events.len() as f64
+    }
+
+    // ---------- record / replay ----------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            (
+                "events",
+                Json::arr(self.events.iter().map(|e| {
+                    Json::arr(vec![
+                        Json::num(e.at as f64),
+                        Json::num(e.app as f64),
+                        Json::num(e.exec_ms),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Trace> {
+        let name = v.get("name").as_str()?.to_string();
+        let p99_ms = v.get("p99_ms").as_f64()?;
+        let events = v
+            .get("events")
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Some(TraceEvent {
+                    at: e.at(0).as_f64()? as Micros,
+                    app: e.at(1).as_f64()? as u32,
+                    exec_ms: e.at(2).as_f64()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Trace {
+            name,
+            events,
+            p99_ms,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        Trace::from_json(&v)
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad trace"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TraceSpec {
+        TraceSpec {
+            name: "test".into(),
+            dists: vec![
+                ExecTimeDist::multimodal("a", 2, 5.0, 50.0, 1.0, None),
+                ExecTimeDist::constant("b", 10.0),
+            ],
+            arrivals: AzureTraceConfig {
+                apps: 2,
+                rate_per_s: 50.0,
+                duration_s: 10.0,
+                ..Default::default()
+            },
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let s = spec();
+        let a = s.generate();
+        let b = s.generate();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.p99_ms, b.p99_ms);
+    }
+
+    #[test]
+    fn requests_apply_slo_multiple() {
+        let t = spec().generate();
+        let r2 = t.requests(2.0);
+        let r5 = t.requests(5.0);
+        assert_eq!(r2.len(), r5.len());
+        for (a, b) in r2.iter().zip(&r5) {
+            assert_eq!(a.release, b.release);
+            assert_eq!(a.exec_ms, b.exec_ms);
+            assert!(b.deadline > a.deadline);
+            assert_eq!(a.slo(), ms_to_us(2.0 * t.p99_ms));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = spec().generate();
+        let j = t.to_json();
+        let back = Trace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.events, t.events);
+        assert_eq!(back.p99_ms, t.p99_ms);
+        assert_eq!(back.name, t.name);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = spec().generate();
+        let dir = std::env::temp_dir().join("orloj_trace_test.json");
+        t.save(&dir).unwrap();
+        let back = Trace::load(&dir).unwrap();
+        assert_eq!(back.events.len(), t.events.len());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn load_scaling_produces_sane_rate() {
+        let mut s = spec();
+        s.scale_rate_to_load(BatchCostModel::new(1.0, 0.25), 0.7, 8);
+        // capacity = 8 / (latency(8, mean)/1000); mean ~ (≈17+10)/2 ≈ 14ms
+        // latency(8,14) = 1+0.25*8*14 = 29ms → cap ≈ 276 r/s → rate ≈ 193.
+        assert!(
+            s.arrivals.rate_per_s > 50.0 && s.arrivals.rate_per_s < 500.0,
+            "rate={}",
+            s.arrivals.rate_per_s
+        );
+    }
+
+    #[test]
+    fn seed_histograms_cover_apps() {
+        let s = spec();
+        let seeds = s.seed_histograms(32);
+        assert_eq!(seeds.len(), 2);
+        assert!((seeds[1].1.mean() - 10.0).abs() < 0.5);
+    }
+}

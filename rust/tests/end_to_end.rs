@@ -1,0 +1,144 @@
+//! End-to-end tests over the real PJRT runtime and AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they are skipped (with a
+//! message) when the artifact directory is absent so `cargo test` works in
+//! a fresh checkout.
+
+use orloj::core::request::{AppId, Request};
+use orloj::runtime::executor::PjrtWorker;
+use orloj::runtime::ModelRuntime;
+use orloj::sim::worker::Worker;
+use orloj::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping end_to_end tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_all_variants() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load");
+    assert_eq!(
+        rt.variant_count(),
+        rt.manifest.model.max_depth * rt.manifest.batch_sizes.len()
+    );
+    assert_eq!(rt.platform(), "cpu");
+}
+
+/// Rust-side execution reproduces the golden logits python computed at AOT
+/// time — numerics parity across the HLO-text interchange.
+#[test]
+fn numerics_match_python_golden() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load");
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let manifest = Json::parse(&manifest_text).unwrap();
+    let golden = manifest.get("golden");
+    assert!(!golden.is_null(), "manifest missing golden outputs");
+    let tokens: Vec<i32> = golden
+        .get("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    assert_eq!(tokens.len(), rt.manifest.model.seq);
+    for case in golden.get("outputs").as_arr().unwrap() {
+        let depth = case.get("depth").as_u64().unwrap() as usize;
+        let want: Vec<f64> = case
+            .get("logits")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let got = rt.execute(depth, 1, &tokens).expect("execute");
+        assert_eq!(got.len(), want.len(), "depth {depth}: logit count");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*g as f64 - w).abs() < 1e-4 * (1.0 + w.abs()),
+                "depth {depth} logit {i}: rust={g} python={w}"
+            );
+        }
+    }
+}
+
+/// Batched execution at a padded size gives the same per-row logits as
+/// solo execution (padding rows don't contaminate real rows).
+#[test]
+fn padding_preserves_per_row_outputs() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load");
+    let seq = rt.manifest.model.seq;
+    let classes = rt.manifest.model.classes;
+    let tokens_a: Vec<i32> = (0..seq as i32).map(|i| (i * 3 + 1) % 32).collect();
+    let tokens_b: Vec<i32> = (0..seq as i32).map(|i| (i * 5 + 2) % 32).collect();
+    let solo_a = rt.execute(2, 1, &tokens_a).unwrap();
+    let solo_b = rt.execute(2, 1, &tokens_b).unwrap();
+    let mut both = tokens_a.clone();
+    both.extend_from_slice(&tokens_b);
+    let batch = rt.execute(2, 2, &both).unwrap();
+    for i in 0..classes {
+        assert!((batch[i] - solo_a[i]).abs() < 1e-4, "row 0 logit {i}");
+        assert!(
+            (batch[classes + i] - solo_b[i]).abs() < 1e-4,
+            "row 1 logit {i}"
+        );
+    }
+}
+
+/// Latency grows with early-exit depth — the dynamic-DNN premise measured
+/// on real execution.
+#[test]
+fn latency_grows_with_depth() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Arc::new(ModelRuntime::load(&dir).expect("load"));
+    let mut worker = PjrtWorker::new(rt.clone());
+    let calib = worker.calibrate(30);
+    assert_eq!(calib.len(), rt.manifest.model.max_depth);
+    let d1 = calib.first().unwrap().1;
+    let dmax = calib.last().unwrap().1;
+    assert!(
+        dmax > 1.5 * d1,
+        "deepest exit should be clearly slower: d1={d1:.3}ms dmax={dmax:.3}ms"
+    );
+}
+
+/// The worker runs mixed-depth batches at the max depth and measures time.
+#[test]
+fn mixed_batch_runs_at_max_depth() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Arc::new(ModelRuntime::load(&dir).expect("load"));
+    let max_depth = rt.manifest.model.max_depth as u32;
+    let mut worker = PjrtWorker::new(rt.clone());
+    let shallow: Vec<Request> = (0..4)
+        .map(|i| Request::new(i, AppId(0), 0, 1_000_000, 1.0).with_variant(1))
+        .collect();
+    let mixed: Vec<Request> = (0..4)
+        .map(|i| {
+            let d = if i == 0 { max_depth } else { 1 };
+            Request::new(i, AppId(0), 0, 1_000_000, 1.0).with_variant(d)
+        })
+        .collect();
+    // Warm both paths, then compare medians over several reps.
+    let med = |w: &mut PjrtWorker, batch: &[Request]| {
+        let mut xs: Vec<f64> = (0..15).map(|_| w.execute(batch)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    let _ = med(&mut worker, &shallow);
+    let t_shallow = med(&mut worker, &shallow);
+    let t_mixed = med(&mut worker, &mixed);
+    assert!(
+        t_mixed > 1.3 * t_shallow,
+        "one deep straggler should slow the whole batch: shallow={t_shallow:.3}ms mixed={t_mixed:.3}ms"
+    );
+}

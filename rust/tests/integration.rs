@@ -1,0 +1,234 @@
+//! Cross-module integration tests: workload → scheduler → engine → metrics.
+
+use orloj::baselines::{self, PAPER_SYSTEMS};
+use orloj::clock::ms_to_us;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::request::{AppId, Outcome, Request};
+use orloj::scheduler::orloj::OrlojScheduler;
+use orloj::scheduler::{Scheduler, SchedulerConfig};
+use orloj::server::metrics::RunReport;
+use orloj::sim::{engine, worker::SimWorker};
+use orloj::workload::azure::AzureTraceConfig;
+use orloj::workload::exectime::ExecTimeDist;
+use orloj::workload::trace::TraceSpec;
+
+fn spec(seed: u64, duration_s: f64) -> (TraceSpec, SchedulerConfig) {
+    let model = BatchCostModel::calibrated(35.0);
+    let mut spec = TraceSpec {
+        name: "itest".into(),
+        dists: vec![
+            ExecTimeDist::multimodal("short", 1, 12.0, 12.0, 1.0, None),
+            ExecTimeDist::multimodal("long", 1, 90.0, 90.0, 1.0, None),
+        ],
+        arrivals: AzureTraceConfig {
+            apps: 2,
+            rate_per_s: 0.0,
+            duration_s,
+            ..Default::default()
+        },
+        seed,
+    };
+    spec.scale_rate_to_load(model, 0.85, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    (spec, cfg)
+}
+
+/// Every request in the trace is accounted for exactly once in completions.
+#[test]
+fn conservation_across_all_systems() {
+    let (s, cfg) = spec(3, 15.0);
+    let trace = s.generate();
+    for system in PAPER_SYSTEMS.iter().chain(["edf"].iter()) {
+        let mut sched = baselines::by_name(system, cfg.clone(), 1).unwrap();
+        for (app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(app, &hist, 100);
+        }
+        let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
+        let reqs = trace.requests(3.0);
+        let n = reqs.len();
+        let ids: std::collections::BTreeSet<u64> = reqs.iter().map(|r| r.id.0).collect();
+        let res = engine::run(sched.as_mut(), &mut worker, reqs);
+        assert_eq!(res.completions.len(), n, "{system}: lost/duplicated requests");
+        let seen: std::collections::BTreeSet<u64> =
+            res.completions.iter().map(|c| c.request.id.0).collect();
+        assert_eq!(seen, ids, "{system}: id mismatch");
+    }
+}
+
+/// Finished requests really finished by their deadline; Late really didn't.
+#[test]
+fn outcome_labels_are_truthful() {
+    let (s, cfg) = spec(5, 12.0);
+    let trace = s.generate();
+    let mut sched = baselines::by_name("orloj", cfg.clone(), 1).unwrap();
+    for (app, hist) in s.seed_histograms(cfg.bins) {
+        sched.seed_app_profile(app, &hist, 100);
+    }
+    let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
+    let res = engine::run(sched.as_mut(), &mut worker, trace.requests(2.0));
+    for c in &res.completions {
+        match c.outcome {
+            Outcome::Finished => assert!(c.at <= c.request.deadline),
+            Outcome::Late => assert!(c.at > c.request.deadline),
+            _ => {}
+        }
+    }
+}
+
+/// Identical seeds → identical results (record/replay determinism across
+/// the whole stack).
+#[test]
+fn full_stack_determinism() {
+    let run = || {
+        let (s, cfg) = spec(7, 10.0);
+        let trace = s.generate();
+        let mut sched = baselines::by_name("orloj", cfg.clone(), 9).unwrap();
+        for (app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(app, &hist, 100);
+        }
+        let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
+        let res = engine::run(sched.as_mut(), &mut worker, trace.requests(3.0));
+        RunReport::from_completions(&res.completions).finish_rate()
+    };
+    assert_eq!(run(), run());
+}
+
+/// The paper's headline direction on this two-app mix at a moderate SLO.
+#[test]
+fn orloj_wins_on_dynamic_two_app_mix() {
+    let (s, cfg) = spec(11, 25.0);
+    let trace = s.generate();
+    let mut rates = std::collections::BTreeMap::new();
+    for system in PAPER_SYSTEMS {
+        let mut sched = baselines::by_name(system, cfg.clone(), 2).unwrap();
+        for (app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(app, &hist, 100);
+        }
+        let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
+        let res = engine::run(sched.as_mut(), &mut worker, trace.requests(3.0));
+        rates.insert(
+            system,
+            RunReport::from_completions(&res.completions).finish_rate(),
+        );
+    }
+    let orloj = rates["orloj"];
+    for (sys, r) in &rates {
+        if *sys != "orloj" {
+            assert!(
+                orloj >= *r,
+                "orloj ({orloj:.3}) should be >= {sys} ({r:.3}); all: {rates:?}"
+            );
+        }
+    }
+    assert!(orloj > 0.8, "orloj should serve most requests: {orloj}");
+}
+
+/// Static workload (constant exec): everyone close; Orloj comparable
+/// (paper Fig. 11 claim).
+#[test]
+fn static_workload_parity() {
+    let model = BatchCostModel::calibrated(8.0);
+    let mut s = TraceSpec {
+        name: "static".into(),
+        dists: vec![ExecTimeDist::constant("resnet", 8.0)],
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0,
+            duration_s: 20.0,
+            ..Default::default()
+        },
+        seed: 13,
+    };
+    s.scale_rate_to_load(model, 0.8, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    let trace = s.generate();
+    let mut orloj_rate = 0.0;
+    let mut clockwork_rate = 0.0;
+    for system in ["orloj", "clockwork"] {
+        let mut sched = baselines::by_name(system, cfg.clone(), 3).unwrap();
+        for (app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(app, &hist, 100);
+        }
+        let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
+        let res = engine::run(sched.as_mut(), &mut worker, trace.requests(4.0));
+        let rate = RunReport::from_completions(&res.completions).finish_rate();
+        if system == "orloj" {
+            orloj_rate = rate;
+        } else {
+            clockwork_rate = rate;
+        }
+    }
+    // Paper Table 4: orloj 0.84–0.99 on static at mid/relaxed SLOs.
+    assert!(orloj_rate > 0.8, "orloj on static: {orloj_rate}");
+    assert!(
+        (orloj_rate - clockwork_rate).abs() < 0.25,
+        "parity: orloj={orloj_rate} clockwork={clockwork_rate}"
+    );
+}
+
+/// Scheduler survives a long virtual run crossing several base-time resets.
+#[test]
+fn long_run_with_base_resets() {
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::calibrated(20.0),
+        ..Default::default()
+    };
+    let mut sched = OrlojScheduler::new(cfg, 1);
+    sched.seed_profile(
+        AppId(0),
+        &orloj::core::histogram::Histogram::constant(20.0),
+        100,
+    );
+    // Requests spread over 30 virtual minutes (b=1e-4/ms resets ~every 400 s).
+    let reqs: Vec<Request> = (0..2_000u64)
+        .map(|i| {
+            Request::new(
+                i,
+                AppId(0),
+                i * 900_000, // 0.9 s apart → 30 min span
+                ms_to_us(500.0),
+                20.0,
+            )
+        })
+        .collect();
+    let mut worker = SimWorker::new(cfg_model(), 0.0, 4);
+    let res = engine::run(&mut sched, &mut worker, reqs);
+    let report = RunReport::from_completions(&res.completions);
+    assert_eq!(report.total, 2_000);
+    assert!(
+        report.finish_rate() > 0.95,
+        "light load across resets should all finish: {}",
+        report.finish_rate()
+    );
+}
+
+fn cfg_model() -> BatchCostModel {
+    BatchCostModel::calibrated(20.0)
+}
+
+/// Trace JSON record/replay preserves results bit-exactly.
+#[test]
+fn trace_replay_equivalence() {
+    let (s, cfg) = spec(17, 8.0);
+    let trace = s.generate();
+    let path = std::env::temp_dir().join("orloj_itest_trace.json");
+    trace.save(&path).unwrap();
+    let replayed = orloj::workload::trace::Trace::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let run = |t: &orloj::workload::trace::Trace| {
+        let mut sched = baselines::by_name("orloj", cfg.clone(), 4).unwrap();
+        for (app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(app, &hist, 100);
+        }
+        let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
+        let res = engine::run(sched.as_mut(), &mut worker, t.requests(3.0));
+        RunReport::from_completions(&res.completions).finish_rate()
+    };
+    assert_eq!(run(&trace), run(&replayed));
+}

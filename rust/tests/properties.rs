@@ -1,0 +1,253 @@
+//! Property-based tests over the coordinator's invariants, using the
+//! in-tree mini-proptest driver (`orloj::util::proptest`) — seeded random
+//! cases with replayable failure seeds.
+
+use orloj::clock::ms_to_us;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::histogram::Histogram;
+use orloj::core::orderstats;
+use orloj::core::priority::{reference_score, ScoreContext, ScoreSchedule};
+use orloj::core::request::{AppId, Request};
+use orloj::ds::fibheap::FibHeap;
+use orloj::ds::hull::point::{upper_hull_naive, Point};
+use orloj::ds::hull::DynamicHull;
+use orloj::prop_assert;
+use orloj::scheduler::orloj::OrlojScheduler;
+use orloj::scheduler::{Scheduler, SchedulerConfig};
+use orloj::util::proptest::check;
+use orloj::util::rng::Rng;
+
+fn random_hist(rng: &mut Rng) -> Histogram {
+    let nb = 1 + rng.index(10);
+    let w: Vec<f64> = (0..nb).map(|_| rng.f64() + 0.01).collect();
+    Histogram::from_weights(rng.f64() * 30.0 + 0.5, 0.5 + rng.f64() * 8.0, &w)
+}
+
+/// Hull query equals naive arg-max for any insert/delete interleaving.
+#[test]
+fn prop_hull_matches_naive() {
+    check("hull-vs-naive", 0xB01, |rng| {
+        let mut hull = DynamicHull::new();
+        let mut pts: Vec<Point> = Vec::new();
+        let n_ops = 40 + rng.index(120);
+        for i in 0..n_ops {
+            if pts.is_empty() || rng.f64() < 0.65 {
+                let p = Point::new(
+                    rng.normal() * 50.0,
+                    rng.normal() * 50.0,
+                    i as u64,
+                );
+                hull.insert(p);
+                pts.push(p);
+            } else {
+                let idx = rng.index(pts.len());
+                let p = pts.swap_remove(idx);
+                prop_assert!(hull.delete(&p), "delete of existing point failed");
+            }
+        }
+        for _ in 0..8 {
+            let m = rng.f64() * 50.0;
+            let naive_best = upper_hull_naive(&pts)
+                .iter()
+                .map(|p| p.eval(m))
+                .fold(f64::MIN, f64::max);
+            match hull.query_max(m) {
+                Some(got) => {
+                    prop_assert!(
+                        (got.eval(m) - naive_best).abs() <= 1e-9 * (1.0 + naive_best.abs()),
+                        "query m={m}: {} vs naive {naive_best}",
+                        got.eval(m)
+                    );
+                }
+                None => prop_assert!(pts.is_empty(), "empty query with points present"),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FibHeap min always equals the true minimum under mixed ops.
+#[test]
+fn prop_fibheap_min_invariant() {
+    check("fibheap-min", 0xF1B, |rng| {
+        let mut heap = FibHeap::new();
+        let mut live: Vec<(orloj::ds::fibheap::Handle, u64)> = Vec::new();
+        for _ in 0..200 {
+            match rng.index(3) {
+                0 | 1 => {
+                    let k = rng.below(10_000);
+                    let h = heap.insert(k, k);
+                    live.push((h, k));
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = rng.index(live.len());
+                        let (h, k) = live.swap_remove(idx);
+                        let (_, v) = heap.delete(h);
+                        prop_assert!(v == k, "deleted wrong payload");
+                    }
+                }
+            }
+            let want = live.iter().map(|&(_, k)| k).min();
+            prop_assert!(
+                heap.min_key() == want,
+                "min {:?} != expected {:?}",
+                heap.min_key(),
+                want
+            );
+        }
+        Ok(())
+    });
+}
+
+/// E[max of k] is monotone in k and bounded by the distribution support.
+#[test]
+fn prop_orderstats_monotone_bounded() {
+    check("orderstats-monotone", 0x0D5, |rng| {
+        let h = random_hist(rng);
+        let mut prev = h.mean();
+        for k in 2..=12 {
+            let m = orderstats::max_iid(&h, k);
+            prop_assert!(m.is_normalized(), "mass lost at k={k}");
+            let mean = m.mean();
+            prop_assert!(
+                mean + 1e-9 >= prev,
+                "E[max] not monotone: k={k} {mean} < {prev}"
+            );
+            prop_assert!(
+                mean <= h.hi() + 1e-9,
+                "E[max] exceeds support: {mean} > {}",
+                h.hi()
+            );
+            prev = mean;
+        }
+        Ok(())
+    });
+}
+
+/// Non-iid max via the direct product rule equals Eq. 8 (Özbey).
+#[test]
+fn prop_ozbey_equals_direct() {
+    check("ozbey-direct", 0x0E8, |rng| {
+        let k = 2 + rng.index(3);
+        let hs: Vec<Histogram> = (0..k).map(|_| random_hist(rng)).collect();
+        let refs: Vec<&Histogram> = hs.iter().collect();
+        let d = orderstats::max_inid_direct(&refs, 80);
+        let o = orderstats::max_inid_ozbey(&refs, 80);
+        for i in 0..80 {
+            prop_assert!(
+                (d.masses()[i] - o.masses()[i]).abs() < 1e-8,
+                "bin {i}: {} vs {}",
+                d.masses()[i],
+                o.masses()[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The segment-compiled score equals the direct Eq. 2 evaluation at random
+/// times, for random batch-latency distributions and deadlines.
+#[test]
+fn prop_score_schedule_equals_reference() {
+    check("score-schedule", 0x5C0, |rng| {
+        let ctx = ScoreContext::new(1e-4);
+        let l_b = random_hist(rng);
+        let d_ms = orloj::clock::us_to_ms(ms_to_us(20.0 + rng.f64() * 3_000.0));
+        let c = 0.2 + rng.f64() * 3.0;
+        let sched = ScoreSchedule::build(&ctx, ms_to_us(d_ms), c, &l_b);
+        for _ in 0..16 {
+            let t = rng.f64() * d_ms * 1.3 - 20.0;
+            let fast = sched.score_at(1e-4, t);
+            let slow = reference_score(1e-4, d_ms, c, &l_b, t);
+            prop_assert!(
+                (fast - slow).abs() < 1e-7 * (1.0 + slow.abs()),
+                "t={t}: fast={fast} slow={slow}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler conservation: arrivals = dispatched + dropped + still-pending,
+/// and no request is ever dispatched twice.
+#[test]
+fn prop_scheduler_conservation() {
+    check("scheduler-conservation", 0x5CED, |rng| {
+        let cfg = SchedulerConfig {
+            cost_model: BatchCostModel::calibrated(25.0),
+            ..Default::default()
+        };
+        let mut s = OrlojScheduler::new(cfg, rng.next_u64());
+        s.seed_profile(AppId(0), &Histogram::constant(25.0), 100);
+        s.seed_profile(AppId(1), &Histogram::constant(80.0), 100);
+        let n = 30 + rng.index(100) as u64;
+        let mut dispatched = std::collections::BTreeSet::new();
+        let mut dropped = 0usize;
+        let mut t: u64 = 0;
+        for i in 0..n {
+            t += rng.below(20_000); // up to 20 ms apart
+            let app = AppId(rng.index(2) as u32);
+            let slo = ms_to_us(30.0 + rng.f64() * 600.0);
+            s.on_arrival(Request::new(i, app, t, slo, 25.0), t);
+            if rng.chance(0.5) {
+                if let Some(batch) = s.next_batch(t) {
+                    for r in &batch {
+                        prop_assert!(
+                            dispatched.insert(r.id.0),
+                            "request {} dispatched twice",
+                            r.id.0
+                        );
+                    }
+                    t += rng.below(60_000);
+                    s.on_batch_complete(&batch, 10.0, t);
+                }
+            }
+            dropped += s.drain_dropped().len();
+        }
+        // Drain the rest.
+        let mut guard = 0;
+        loop {
+            t += 50_000;
+            if let Some(batch) = s.next_batch(t) {
+                for r in &batch {
+                    prop_assert!(dispatched.insert(r.id.0), "dup dispatch at drain");
+                }
+                s.on_batch_complete(&batch, 10.0, t);
+            }
+            dropped += s.drain_dropped().len();
+            if s.pending() == 0 {
+                break;
+            }
+            guard += 1;
+            prop_assert!(guard < 10_000, "drain did not converge");
+        }
+        prop_assert!(
+            dispatched.len() + dropped == n as usize,
+            "conservation: {} + {} != {}",
+            dispatched.len(),
+            dropped,
+            n
+        );
+        Ok(())
+    });
+}
+
+/// Batch latency distribution scales linearly under Eq. 3's affine map.
+#[test]
+fn prop_batch_model_affine_consistency() {
+    check("batch-affine", 0xBA7C, |rng| {
+        let h = random_hist(rng);
+        let m = BatchCostModel::new(rng.f64() * 5.0, 0.1 + rng.f64());
+        let k = 1 + rng.index(8);
+        let d = m.batch_latency_iid(&h, k);
+        let max = orderstats::max_iid(&h, k);
+        let want = m.c0 + m.c1 * k as f64 * max.mean();
+        prop_assert!(
+            (d.mean() - want).abs() < 1e-6 * (1.0 + want),
+            "E[L_B] affine mismatch: {} vs {want}",
+            d.mean()
+        );
+        Ok(())
+    });
+}
