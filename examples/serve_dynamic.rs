@@ -10,10 +10,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve_dynamic [-- --requests 400]`
 
-use orloj::baselines;
 use orloj::clock::ms_to_us;
 use orloj::core::batchmodel::BatchCostModel;
-use orloj::core::histogram::Histogram;
 use orloj::core::request::{AppId, Request};
 use orloj::runtime::executor::PjrtWorker;
 use orloj::runtime::ModelRuntime;
@@ -52,25 +50,25 @@ fn build_workload(n: usize, max_depth: usize, mean_gap_us: f64, slo_ms: f64, see
 
 fn run_system(
     system: &str,
-    rt: &Arc<ModelRuntime>,
+    runtimes: &[Arc<ModelRuntime>],
     wl: &Workload,
     calib: &[(usize, f64)],
     cost: BatchCostModel,
+    router: &str,
 ) -> (RunReport, f64) {
     let cfg = SchedulerConfig {
         cost_model: cost,
-        batch_sizes: rt.manifest.batch_sizes.clone(),
+        batch_sizes: runtimes[0].manifest.batch_sizes.clone(),
         refresh_every: 200_000,
         ..Default::default()
     };
-    let mut sched = baselines::by_name(system, cfg, 7).expect("system");
-    for (depth, ms) in calib {
-        // App d-1 ↔ early-exit depth d; seed with the calibrated solo time.
-        sched.seed_app_profile(AppId(*depth as u32 - 1), &Histogram::constant(*ms), 100);
-    }
-    let worker = PjrtWorker::new(rt.clone());
+    // One scheduler replica + one PJRT worker per runtime handle, behind
+    // the unified serve core's router front-end (each replica owns its
+    // PJRT client — see runtime::executor::pjrt_replicas).
+    let replicas = orloj::runtime::executor::pjrt_replicas(system, &cfg, 7, calib, runtimes)
+        .expect("system");
     let (submitter, rx) = Server::<Box<dyn Scheduler>, PjrtWorker>::channel();
-    let server = Server::new(sched, worker);
+    let server = Server::cluster(replicas, orloj::serve::router::by_name(router).expect("router"));
     let handle = std::thread::spawn(move || server.run(rx));
     let t0 = Instant::now();
     for (i, (gap_us, depth)) in wl.arrivals.iter().enumerate() {
@@ -86,9 +84,10 @@ fn run_system(
         submitter.submit(req);
     }
     drop(submitter);
-    let completions = handle.join().unwrap();
+    let res = handle.join().unwrap();
     let wall_s = t0.elapsed().as_secs_f64();
-    let report = RunReport::from_completions(&completions);
+    let report = RunReport::from_completions(&res.completions)
+        .with_worker_stats(&res.per_worker, res.end_time);
     let throughput = report.total as f64 / wall_s;
     (report, throughput)
 }
@@ -158,10 +157,23 @@ fn main() -> anyhow::Result<()> {
     println!("offered rate ≈ {rate:.0} req/s (70% of bs=8 capacity), SLO = {slo_ms:.1} ms");
     let wl = build_workload(n, max_depth, gap_us, slo_ms, 2024);
 
-    println!("\n{:>10} {:>12} {:>12} {:>12} {:>12} {:>10}", "system", "finish_rate", "p50(ms)", "p99(ms)", "thru(r/s)", "mean_bs");
+    let workers = args.get_usize("workers", 1).max(1);
+    let router = args.get_or("router", "round_robin").to_string();
+    // Load the extra per-replica runtimes once and reuse them across the
+    // system sweep (the worker threads of one system are joined before the
+    // next system runs, so sequential reuse is single-threaded).
+    let runtimes: Vec<Arc<ModelRuntime>> = std::iter::once(rt.clone())
+        .chain(
+            (1..workers).map(|_| Arc::new(ModelRuntime::load(Path::new(&dir)).expect("load"))),
+        )
+        .collect();
+    println!(
+        "\n{:>10} {:>12} {:>12} {:>12} {:>12} {:>10}  ({} replica(s), router={router})",
+        "system", "finish_rate", "p50(ms)", "p99(ms)", "thru(r/s)", "mean_bs", workers
+    );
     let mut rows = Vec::new();
     for system in ["clockwork", "edf", "orloj"] {
-        let (report, thru) = run_system(system, &rt, &wl, &calib, cost);
+        let (report, thru) = run_system(system, &runtimes, &wl, &calib, cost, &router);
         println!(
             "{:>10} {:>12.3} {:>12.2} {:>12.2} {:>12.0} {:>10.1}",
             system,
@@ -171,6 +183,14 @@ fn main() -> anyhow::Result<()> {
             thru,
             report.mean_batch_size
         );
+        if workers > 1 {
+            let utils: Vec<String> = report
+                .per_worker
+                .iter()
+                .map(|w| format!("w{}={:.2}({}b)", w.worker, w.utilization, w.batches))
+                .collect();
+            println!("{:>10} per-worker: {}", "", utils.join(" "));
+        }
         rows.push((system, report.finish_rate()));
     }
     println!("\nserve_dynamic OK — record these rows in EXPERIMENTS.md §End-to-end");

@@ -1,0 +1,84 @@
+//! Unified serving-loop dispatch hot-path benchmark (the in-tree harness —
+//! the offline vendored set has no criterion, see `util::benchmark`):
+//! events/sec of the clock-generic core at 1 vs. 4 workers, so later
+//! scale-out PRs have a baseline for the router + dispatch overhead.
+//!
+//! An "event" is one `ServingLoop::on_event` ingestion: every arrival and
+//! every batch completion (wakes ride along for free in both pumps).
+//!
+//! Run: `cargo bench --bench serve_loop`
+
+use orloj::clock::VirtualClock;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::scheduler::SchedulerConfig;
+use orloj::serve::{replay, router, Cluster, ServingLoop};
+use orloj::sim::worker::SimWorker;
+use orloj::workload::azure::AzureTraceConfig;
+use orloj::workload::exectime::ExecTimeDist;
+use orloj::workload::trace::TraceSpec;
+use std::time::Instant;
+
+fn bench_cluster(system: &str, n_workers: usize, router_name: &str) {
+    let model = BatchCostModel::calibrated(35.0);
+    let mut spec = TraceSpec {
+        name: "bench".into(),
+        dists: vec![ExecTimeDist::multimodal("m3", 3, 10.0, 100.0, 1.0, None)],
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0,
+            duration_s: 45.0,
+            ..Default::default()
+        },
+        seed: 1,
+    };
+    // Offer n× one worker's capacity so every replica stays busy and the
+    // dispatch path (not idle waiting) dominates.
+    spec.scale_rate_to_load(model, 0.9 * n_workers as f64, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    let trace = spec.generate();
+    let requests = trace.requests(3.0);
+    let n_req = requests.len();
+
+    let mut cluster = Cluster::build(system, &cfg, 1, n_workers).unwrap();
+    for (app, hist) in spec.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile(app, &hist, 1000);
+    }
+    let workers: Vec<SimWorker> = (0..n_workers)
+        .map(|w| SimWorker::new(model, 0.0, 0x51 ^ (w as u64)))
+        .collect();
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        cluster,
+        router::by_name(router_name).unwrap(),
+    );
+    let t0 = Instant::now();
+    let res = replay::run_cluster(core, workers, requests);
+    let wall = t0.elapsed().as_secs_f64();
+    let events = res.completions.len() + res.batches;
+    println!(
+        "  {system:>10} x{n_workers} ({router_name:>19}): {n_req:>6} requests, {:>6} batches, \
+         {:>9.0} events/s, {:>8.0} req/s wall",
+        res.batches,
+        events as f64 / wall,
+        n_req as f64 / wall
+    );
+    assert_eq!(res.completions.len(), n_req, "conservation in bench run");
+}
+
+fn main() {
+    println!("### unified serving-loop dispatch benchmarks");
+    println!("\nvirtual-time replay throughput (dispatch + routing hot path):");
+    for system in ["edf", "orloj"] {
+        for &n in &[1usize, 4] {
+            bench_cluster(system, n, "round_robin");
+        }
+    }
+    println!("\nrouter comparison (orloj, 4 workers):");
+    for router_name in router::ROUTERS {
+        bench_cluster("orloj", 4, router_name);
+    }
+    println!("\nserve_loop bench OK");
+}

@@ -30,3 +30,8 @@ pub fn by_name(name: &str, cfg: SchedulerConfig, seed: u64) -> Option<Box<dyn Sc
 
 /// The four systems of the paper's evaluation, in its plotting order.
 pub const PAPER_SYSTEMS: [&str; 4] = ["clipper", "nexus", "clockwork", "orloj"];
+
+/// All five runnable systems: the paper's four plus the plain-EDF
+/// ablation baseline. This is what the experiment grids and the serving
+/// demos sweep.
+pub const ALL_SYSTEMS: [&str; 5] = ["clipper", "nexus", "clockwork", "edf", "orloj"];

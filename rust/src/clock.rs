@@ -33,6 +33,20 @@ pub trait Clock: Send + Sync {
     fn now(&self) -> Micros;
 }
 
+/// Shared handles are clocks too, so one timeline can be read from the
+/// serving loop and its worker threads alike (`serve::realtime`).
+impl<C: Clock + ?Sized> Clock for Arc<C> {
+    fn now(&self) -> Micros {
+        (**self).now()
+    }
+}
+
+impl<'a, C: Clock + ?Sized> Clock for &'a C {
+    fn now(&self) -> Micros {
+        (**self).now()
+    }
+}
+
 /// Wall clock anchored at construction time.
 pub struct RealClock {
     start: Instant,
@@ -111,6 +125,17 @@ mod tests {
         let a = c.now();
         let b = c.now();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn shared_handles_read_the_same_timeline() {
+        fn read<C: Clock>(c: C) -> Micros {
+            c.now()
+        }
+        let c = Arc::new(VirtualClock::new());
+        c.advance_to(42);
+        assert_eq!(read(c.clone()), 42); // Arc<C> impl
+        assert_eq!(read(&*c), 42); // &C impl
     }
 
     #[test]

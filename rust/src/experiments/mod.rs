@@ -5,14 +5,14 @@
 //! and prints paper-style rows. DESIGN.md §5 maps ids to paper artifacts;
 //! EXPERIMENTS.md records paper-vs-measured.
 
-use crate::baselines::PAPER_SYSTEMS;
+use crate::baselines::ALL_SYSTEMS;
 use crate::clock::ms_to_us;
 use crate::core::batchmodel::BatchCostModel;
 use crate::core::histogram::Histogram;
 use crate::core::orderstats;
 use crate::core::priority::{reference_score, ScoreContext, ScoreSchedule};
 use crate::scheduler::SchedulerConfig;
-use crate::sim::runner::{self, Cell};
+use crate::sim::runner::{self, Cell, ClusterSpec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::azure::AzureTraceConfig;
@@ -31,6 +31,12 @@ pub struct ExpOptions {
     pub slos: Vec<f64>,
     /// Repetitions (paper reports std over 5 runs for Fig. 7).
     pub runs: usize,
+    /// Scheduling replicas per run (the paper's per-GPU scheduler × N;
+    /// offered load stays per-worker-calibrated, so N workers see N× the
+    /// single-worker trace capacity).
+    pub workers: usize,
+    /// Router admitting arrivals to replicas (see `serve::router`).
+    pub router: String,
 }
 
 impl Default for ExpOptions {
@@ -41,6 +47,8 @@ impl Default for ExpOptions {
             seed: 42,
             slos: vec![1.5, 2.0, 3.0, 4.0, 5.0],
             runs: 1,
+            workers: 1,
+            router: "round_robin".into(),
         }
     }
 }
@@ -53,6 +61,11 @@ impl ExpOptions {
             slos: vec![2.0, 4.0],
             ..Default::default()
         }
+    }
+
+    /// Cluster shape for the runner.
+    fn cluster(&self) -> ClusterSpec {
+        ClusterSpec::new(self.workers, &self.router)
     }
 }
 
@@ -113,13 +126,20 @@ fn modal_apps(k: usize, sigma: f64, weights: Option<Vec<f64>>) -> Vec<ExecTimeDi
         .collect()
 }
 
-/// Run the 4-system grid for one workload; returns cells averaged over
+/// Run the 5-system grid for one workload; returns cells averaged over
 /// `opts.runs` repetitions.
 fn grid(name: &str, dists: Vec<ExecTimeDist>, opts: &ExpOptions, seed_off: u64) -> Vec<Cell> {
     let mut acc: Vec<Cell> = Vec::new();
     for run in 0..opts.runs.max(1) {
         let (spec, cfg) = spec_for(name, dists.clone(), opts, seed_off ^ (run as u64) << 32);
-        let cells = runner::run_grid(&PAPER_SYSTEMS, &spec, &opts.slos, &cfg, spec.seed);
+        let cells = runner::run_grid(
+            &ALL_SYSTEMS,
+            &spec,
+            &opts.slos,
+            &cfg,
+            spec.seed,
+            &opts.cluster(),
+        );
         if acc.is_empty() {
             acc = cells;
         } else {
@@ -139,7 +159,13 @@ fn grid(name: &str, dists: Vec<ExecTimeDist>, opts: &ExpOptions, seed_off: u64) 
 }
 
 fn print_grid(title: &str, cells: &[Cell]) {
-    print!("{}", runner::render_table(title, cells, &PAPER_SYSTEMS));
+    print!("{}", runner::render_table(title, cells, &ALL_SYSTEMS));
+    if cells.iter().any(|c| c.workers > 1) {
+        print!(
+            "{}",
+            runner::render_worker_util("per-worker utilization", cells)
+        );
+    }
 }
 
 fn cells_to_json(case: &str, cells: &[Cell]) -> Json {
@@ -153,6 +179,25 @@ fn cells_to_json(case: &str, cells: &[Cell]) -> Json {
             ("aborted", Json::num(c.report.aborted as f64)),
             ("timed_out", Json::num(c.report.timed_out as f64)),
             ("utilization", Json::num(c.utilization)),
+            ("workers", Json::num(c.workers as f64)),
+            (
+                "per_worker_utilization",
+                Json::arr(
+                    c.report
+                        .per_worker
+                        .iter()
+                        .map(|w| Json::num(w.utilization)),
+                ),
+            ),
+            (
+                "per_worker_batches",
+                Json::arr(
+                    c.report
+                        .per_worker
+                        .iter()
+                        .map(|w| Json::num(w.batches as f64)),
+                ),
+            ),
         ])
     }))
 }
@@ -389,7 +434,14 @@ pub fn fig13(opts: &ExpOptions) -> Json {
         let (spec, mut cfg) = spec_for("fig13", modal_apps(3, 1.0, None), opts, 0x13);
         let _ = &dist;
         cfg.b = b;
-        let cells = runner::run_grid(&["orloj"], &spec, &opts.slos, &cfg, spec.seed);
+        let cells = runner::run_grid(
+            &["orloj"],
+            &spec,
+            &opts.slos,
+            &cfg,
+            spec.seed,
+            &opts.cluster(),
+        );
         print!("{b:>8.0e}");
         for c in &cells {
             print!("{:>10.2}", c.report.finish_rate());
@@ -431,7 +483,14 @@ pub fn fig14(opts: &ExpOptions) -> Json {
         let dists: Vec<ExecTimeDist> =
             modal_apps(3, 1.0, None).iter().map(|d| d.scaled(scale)).collect();
         let (spec, cfg) = spec_for("fig14", dists, opts, 0x14);
-        let cells = runner::run_grid(&["orloj"], &spec, &opts.slos, &cfg, spec.seed);
+        let cells = runner::run_grid(
+            &["orloj"],
+            &spec,
+            &opts.slos,
+            &cfg,
+            spec.seed,
+            &opts.cluster(),
+        );
         print!("{p99:>10.1}");
         for c in &cells {
             print!("{:>10.2}", c.report.finish_rate());
@@ -455,7 +514,14 @@ pub fn fig14(opts: &ExpOptions) -> Json {
 pub fn ablation(opts: &ExpOptions) -> Json {
     println!("### Ablation — distribution-aware score vs plain EDF; feasibility quantile\n");
     let (spec, cfg) = spec_for("ablation", modal_apps(3, 1.0, None), opts, 0xAB);
-    let cells = runner::run_grid(&["edf", "orloj"], &spec, &opts.slos, &cfg, spec.seed);
+    let cells = runner::run_grid(
+        &["edf", "orloj"],
+        &spec,
+        &opts.slos,
+        &cfg,
+        spec.seed,
+        &opts.cluster(),
+    );
     print!("{}", runner::render_table("orloj vs edf", &cells, &["edf", "orloj"]));
     println!();
     let mut rows = vec![cells_to_json("edf-vs-orloj", &cells)];
@@ -463,7 +529,7 @@ pub fn ablation(opts: &ExpOptions) -> Json {
     for q in [0.25, 0.5, 0.75, 0.95] {
         let mut c = cfg.clone();
         c.feasibility_quantile = q;
-        let cells = runner::run_grid(&["orloj"], &spec, &[3.0], &c, spec.seed);
+        let cells = runner::run_grid(&["orloj"], &spec, &[3.0], &c, spec.seed, &opts.cluster());
         println!("  q={q:>5}: finish_rate={:.3}", cells[0].report.finish_rate());
         rows.push(cells_to_json(&format!("quantile-{q}"), &cells));
     }
@@ -515,11 +581,28 @@ mod tests {
         let j = fig3(&opts);
         let cases = j.as_arr().unwrap();
         assert_eq!(cases.len(), 3);
-        // 2 SLOs × 4 systems per case.
-        assert_eq!(cases[0].as_arr().unwrap().len(), 8);
+        // 2 SLOs × 5 systems per case.
+        assert_eq!(cases[0].as_arr().unwrap().len(), 10);
         for row in cases[0].as_arr().unwrap() {
             let fr = row.get("finish_rate").as_f64().unwrap();
             assert!((0.0..=1.0).contains(&fr));
+            assert_eq!(row.get("workers").as_f64().unwrap(), 1.0);
+        }
+    }
+
+    #[test]
+    fn multi_worker_quick_grid_reports_utilizations() {
+        let mut opts = ExpOptions::quick();
+        opts.duration_s = 6.0;
+        opts.slos = vec![3.0];
+        opts.workers = 2;
+        opts.router = "join_shortest_queue".into();
+        let j = fig3(&opts);
+        let cases = j.as_arr().unwrap();
+        for row in cases[0].as_arr().unwrap() {
+            assert_eq!(row.get("workers").as_f64().unwrap(), 2.0);
+            let utils = row.get("per_worker_utilization");
+            assert_eq!(utils.as_arr().unwrap().len(), 2);
         }
     }
 }

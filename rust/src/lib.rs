@@ -25,6 +25,7 @@ pub mod ds;
 pub mod experiments;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod util;

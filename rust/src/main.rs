@@ -21,16 +21,23 @@ fn usage() -> ! {
              --slo <list>          SLO multiples of P99      (default 1.5,2,3,4,5)\n\
              --seed <n>            experiment seed           (default 42)\n\
              --runs <n>            repetitions to average    (default 1)\n\
+             --workers <n>         scheduling replicas       (default 1)\n\
+             --router <name>       {}  (default round_robin)\n\
              --quick               fast settings for smoke runs\n\
            serve                 PJRT serving demo (needs `make artifacts`)\n\
              --artifacts <dir>     artifact directory        (default artifacts)\n\
              --requests <n>        requests to replay        (default 200)\n\
              --system <name>       orloj|clipper|nexus|clockwork|edf\n\
+             --workers <n>         replicas (one PJRT worker each, default 1)\n\
+             --router <name>       arrival router            (default round_robin)\n\
+             --slo-ms <ms>         per-request SLO           (default 12x deep solo latency)\n\
+             --gap-us <us>         inter-arrival gap         (default 500)\n\
            trace                 generate a trace JSON\n\
              --out <path>          output path (default trace.json)\n\
              --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
            list                  list experiment ids",
-        experiments::ALL.join(", ")
+        experiments::ALL.join(", "),
+        orloj::serve::router::ROUTERS.join("|"),
     );
     std::process::exit(2);
 }
@@ -46,6 +53,10 @@ fn exp_options(args: &Args) -> ExpOptions {
     opts.seed = args.get_u64("seed", opts.seed);
     opts.runs = args.get_usize("runs", opts.runs);
     opts.slos = args.get_list_f64("slo", &opts.slos);
+    opts.workers = args.get_usize("workers", opts.workers).max(1);
+    if let Some(router) = args.get("router") {
+        opts.router = router.to_string();
+    }
     opts
 }
 
@@ -103,10 +114,8 @@ fn cmd_trace(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    use orloj::baselines;
     use orloj::clock::ms_to_us;
     use orloj::core::batchmodel::BatchCostModel;
-    use orloj::core::histogram::Histogram;
     use orloj::core::request::{AppId, Request};
     use orloj::runtime::executor::PjrtWorker;
     use orloj::runtime::ModelRuntime;
@@ -119,9 +128,11 @@ fn cmd_serve(args: &Args) {
     let dir = args.get_or("artifacts", "artifacts").to_string();
     let n = args.get_usize("requests", 200);
     let system = args.get_or("system", "orloj").to_string();
+    let n_workers = args.get_usize("workers", 1).max(1);
+    let router_name = args.get_or("router", "round_robin").to_string();
     let rt = Arc::new(ModelRuntime::load(std::path::Path::new(&dir)).expect("load artifacts"));
-    let mut worker = PjrtWorker::new(rt.clone());
-    let calib = worker.calibrate(10);
+    let mut calib_worker = PjrtWorker::new(rt.clone());
+    let calib = calib_worker.calibrate(10);
     println!("per-depth calibration (ms): {calib:?}");
     let mean_ms = calib.iter().map(|(_, m)| m).sum::<f64>() / calib.len() as f64;
     let cfg = SchedulerConfig {
@@ -130,13 +141,22 @@ fn cmd_serve(args: &Args) {
         ..Default::default()
     };
     let max_depth = rt.manifest.model.max_depth;
-    let mut sched = baselines::by_name(&system, cfg, 7).expect("known system");
-    for (depth, ms) in &calib {
-        sched.seed_app_profile(AppId(*depth as u32 - 1), &Histogram::constant(*ms), 100);
-    }
+    // One scheduler replica + one PJRT worker per --workers (the paper's
+    // per-GPU scheduler, scaled out). Replicas beyond the first load their
+    // own ModelRuntime: the PJRT client is thread-compatible, not
+    // thread-safe (see runtime/mod.rs), so each concurrent worker thread
+    // needs its own client — exactly the per-GPU-device semantics.
+    let runtimes: Vec<Arc<ModelRuntime>> = std::iter::once(rt.clone())
+        .chain((1..n_workers).map(|_| {
+            Arc::new(ModelRuntime::load(std::path::Path::new(&dir)).expect("load artifacts"))
+        }))
+        .collect();
+    let replicas = orloj::runtime::executor::pjrt_replicas(&system, &cfg, 7, &calib, &runtimes)
+        .expect("known system");
+    let router = orloj::serve::router::by_name(&router_name).expect("known router");
     let (submitter, rx) =
         Server::<Box<dyn orloj::scheduler::Scheduler>, PjrtWorker>::channel();
-    let server = Server::new(sched, worker);
+    let server = Server::cluster(replicas, router);
     let handle = std::thread::spawn(move || server.run(rx));
     let mut rng = Rng::new(99);
     let slo_ms = args.get_f64("slo-ms", mean_ms * max_depth as f64 * 12.0);
@@ -156,9 +176,10 @@ fn cmd_serve(args: &Args) {
         std::thread::sleep(std::time::Duration::from_micros(gap_us));
     }
     drop(submitter);
-    let completions = handle.join().unwrap();
-    let report = RunReport::from_completions(&completions);
-    println!("[{system}] {report}");
+    let res = handle.join().unwrap();
+    let report = RunReport::from_completions(&res.completions)
+        .with_worker_stats(&res.per_worker, res.end_time);
+    println!("[{system} x{n_workers} router={router_name}] {report}");
 }
 
 fn main() {

@@ -6,10 +6,38 @@
 //! semantics.
 
 use super::ModelRuntime;
-use crate::core::request::Request;
+use crate::core::histogram::Histogram;
+use crate::core::request::{AppId, Request};
+use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::sim::worker::Worker;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Build the `(scheduler, PJRT worker)` replica list for
+/// `Server::cluster`: one scheduler instance per runtime handle
+/// (decorrelated per-replica seeds; replica 0 keeps `seed`, matching
+/// `serve::Cluster::build`), each seeded with the calibrated per-depth
+/// solo latencies (app d-1 ↔ early-exit depth d). Callers must pass one
+/// `ModelRuntime` per replica — the PJRT client is thread-compatible, not
+/// thread-safe, and each replica executes on its own thread.
+pub fn pjrt_replicas(
+    system: &str,
+    cfg: &SchedulerConfig,
+    seed: u64,
+    calib: &[(usize, f64)],
+    runtimes: &[Arc<ModelRuntime>],
+) -> Option<Vec<(Box<dyn Scheduler>, PjrtWorker)>> {
+    let mut replicas = Vec::with_capacity(runtimes.len());
+    for (w, rt) in runtimes.iter().enumerate() {
+        let mut sched =
+            crate::baselines::by_name(system, cfg.clone(), seed ^ ((w as u64) << 24))?;
+        for (depth, ms) in calib {
+            sched.seed_app_profile(AppId(*depth as u32 - 1), &Histogram::constant(*ms), 100);
+        }
+        replicas.push((sched, PjrtWorker::new(rt.clone())));
+    }
+    Some(replicas)
+}
 
 pub struct PjrtWorker {
     runtime: Arc<ModelRuntime>,

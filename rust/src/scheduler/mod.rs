@@ -94,6 +94,41 @@ pub trait Scheduler: Send {
     fn pending(&self) -> usize;
 }
 
+/// Mutable borrows are schedulers too, so the clock-generic serving core
+/// (`serve::ServingLoop`) can drive a scheduler it does not own — e.g. the
+/// single-worker `sim::engine::run` compatibility shim.
+impl<'a, S: Scheduler + ?Sized> Scheduler for &'a mut S {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn seed_app_profile(
+        &mut self,
+        app: crate::core::request::AppId,
+        hist: &crate::core::histogram::Histogram,
+        weight: u64,
+    ) {
+        (**self).seed_app_profile(app, hist, weight)
+    }
+    fn on_arrival(&mut self, req: Request, now: Micros) {
+        (**self).on_arrival(req, now)
+    }
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        (**self).next_batch(now)
+    }
+    fn on_batch_complete(&mut self, batch: &[Request], batch_ms: f64, now: Micros) {
+        (**self).on_batch_complete(batch, batch_ms, now)
+    }
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        (**self).drain_dropped()
+    }
+    fn wake_hint(&self, now: Micros) -> Option<Micros> {
+        (**self).wake_hint(now)
+    }
+    fn pending(&self) -> usize {
+        (**self).pending()
+    }
+}
+
 impl Scheduler for Box<dyn Scheduler> {
     fn name(&self) -> &'static str {
         (**self).name()

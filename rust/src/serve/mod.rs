@@ -1,0 +1,464 @@
+//! The unified serving core (DESIGN.md §3): one clock-generic, event-driven
+//! loop shared by the discrete-event simulator and the real-time server.
+//!
+//! The paper's scheduler is per-GPU ("scale-out runs one scheduler per
+//! model replica", §3.1). This module is the scale-out half of that
+//! sentence: a [`Cluster`] holds N replicas, each a scheduler instance
+//! (built via the `baselines::by_name` registry) paired by the pump with
+//! its own executor, and a [`Router`] front-end admits arrivals and picks
+//! the replica that will serve each request.
+//!
+//! The core is deliberately execution-agnostic: [`ServingLoop::on_event`]
+//! consumes [`Event`]s and returns [`Dispatch`] decisions; a *pump* owns
+//! the workers and turns dispatches into batch executions —
+//! [`replay`] in virtual time (the evaluation sweeps), [`realtime`] on
+//! wall-clock threads (the PJRT serving path). All completion, drop and
+//! outcome bookkeeping lives here, once.
+
+pub mod realtime;
+pub mod replay;
+pub mod router;
+
+use crate::baselines;
+use crate::clock::{Clock, Micros};
+use crate::core::request::{Completion, Outcome, Request};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+pub use router::Router;
+
+/// Identifies one replica (scheduler + worker pair) in a cluster.
+pub type WorkerId = usize;
+
+/// Events driving the serving loop (the whole event model).
+#[derive(Debug)]
+pub enum Event {
+    /// A request entered the system; the router assigns it to a replica.
+    Arrival(Request),
+    /// A worker finished its in-flight batch; `batch_ms` is the measured
+    /// (or simulated) batch wall time fed back to the online profilers.
+    BatchDone { worker: WorkerId, batch_ms: f64 },
+    /// Timer poll: drain scheduler drops and dispatch to idle workers.
+    /// Pumps send this after ingesting every batch of due events.
+    Wake,
+}
+
+/// A dispatch decision: run `batch` on `worker`. Produced by the loop,
+/// executed by the pump (virtual time: cost model; real time: worker
+/// thread). The pump must answer with `Event::BatchDone` for this worker.
+#[derive(Debug)]
+pub struct Dispatch {
+    pub worker: WorkerId,
+    pub batch: Vec<Request>,
+}
+
+/// Per-replica load snapshot handed to routers (see the [`Router`]
+/// contract in [`router`]).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerLoad {
+    pub worker: WorkerId,
+    /// Requests queued in this replica's scheduler.
+    pub pending: usize,
+    /// Size of the batch currently executing (0 = idle).
+    pub in_flight: usize,
+}
+
+impl WorkerLoad {
+    /// Total work in the system at this replica.
+    pub fn total(&self) -> usize {
+        self.pending + self.in_flight
+    }
+}
+
+/// Per-replica execution counters, reported by both pumps.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: WorkerId,
+    /// Batches executed by this replica.
+    pub batches: usize,
+    /// Total busy time (µs).
+    pub busy_us: Micros,
+}
+
+impl WorkerStats {
+    /// Busy fraction of the run (`end_time` = run length in µs).
+    pub fn utilization(&self, end_time: Micros) -> f64 {
+        if end_time == 0 {
+            0.0
+        } else {
+            self.busy_us as f64 / end_time as f64
+        }
+    }
+}
+
+struct InFlight {
+    batch: Vec<Request>,
+    started_at: Micros,
+}
+
+struct Slot<S> {
+    sched: S,
+    inflight: Option<InFlight>,
+    batches: usize,
+    busy_us: Micros,
+}
+
+/// N scheduling replicas. Each slot owns one [`Scheduler`] instance; the
+/// pump pairs slot *i* with worker *i*.
+pub struct Cluster<S> {
+    slots: Vec<Slot<S>>,
+}
+
+impl<S: Scheduler> Cluster<S> {
+    /// One replica per scheduler. Panics on an empty list.
+    pub fn new(scheds: Vec<S>) -> Self {
+        assert!(!scheds.is_empty(), "a cluster needs at least one replica");
+        Cluster {
+            slots: scheds
+                .into_iter()
+                .map(|sched| Slot {
+                    sched,
+                    inflight: None,
+                    batches: 0,
+                    busy_us: 0,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Install deployment-time historical data on every replica.
+    pub fn seed_app_profile(
+        &mut self,
+        app: crate::core::request::AppId,
+        hist: &crate::core::histogram::Histogram,
+        weight: u64,
+    ) {
+        for slot in &mut self.slots {
+            slot.sched.seed_app_profile(app, hist, weight);
+        }
+    }
+}
+
+impl Cluster<Box<dyn Scheduler>> {
+    /// Build `n` replicas of one system via the baselines registry, with
+    /// decorrelated per-replica seeds (replica 0 keeps `seed` so a
+    /// single-worker cluster reproduces the historical single-loop runs).
+    pub fn build(system: &str, cfg: &SchedulerConfig, seed: u64, n: usize) -> Option<Self> {
+        let n = n.max(1);
+        let mut scheds = Vec::with_capacity(n);
+        for w in 0..n {
+            scheds.push(baselines::by_name(system, cfg.clone(), seed ^ ((w as u64) << 24))?);
+        }
+        Some(Cluster::new(scheds))
+    }
+}
+
+/// The clock-generic serving loop: routing, dispatch decisions, and all
+/// completion/drop/outcome bookkeeping for a cluster of replicas.
+pub struct ServingLoop<C: Clock, S: Scheduler> {
+    clock: C,
+    cluster: Cluster<S>,
+    router: Box<dyn Router>,
+    completions: Vec<Completion>,
+    /// Reused per-arrival load snapshot (routing sits on the dispatch hot
+    /// path — one request, one route call; no allocation).
+    loads_buf: Vec<WorkerLoad>,
+}
+
+impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
+    pub fn new(clock: C, cluster: Cluster<S>, router: Box<dyn Router>) -> Self {
+        let n = cluster.len();
+        ServingLoop {
+            clock,
+            cluster,
+            router,
+            completions: Vec::new(),
+            loads_buf: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn clock(&self) -> &C {
+        &self.clock
+    }
+
+    /// Current time on this loop's clock (µs since its epoch).
+    pub fn now(&self) -> Micros {
+        self.clock.now()
+    }
+
+    /// Number of replicas.
+    pub fn workers(&self) -> usize {
+        self.cluster.len()
+    }
+
+    /// Requests queued (not executing) across all replicas.
+    pub fn pending(&self) -> usize {
+        self.cluster.slots.iter().map(|s| s.sched.pending()).sum()
+    }
+
+    /// Number of replicas with a batch in flight.
+    pub fn in_flight(&self) -> usize {
+        self.cluster
+            .slots
+            .iter()
+            .filter(|s| s.inflight.is_some())
+            .count()
+    }
+
+    fn slot_load(w: WorkerId, s: &Slot<S>) -> WorkerLoad {
+        WorkerLoad {
+            worker: w,
+            pending: s.sched.pending(),
+            in_flight: s.inflight.as_ref().map_or(0, |f| f.batch.len()),
+        }
+    }
+
+    /// Per-replica load snapshot (what routers see).
+    pub fn loads(&self) -> Vec<WorkerLoad> {
+        self.cluster
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(w, s)| Self::slot_load(w, s))
+            .collect()
+    }
+
+    /// Rebuild the reusable routing snapshot in place.
+    fn refresh_loads(&mut self) {
+        let slots = &self.cluster.slots;
+        self.loads_buf.clear();
+        self.loads_buf
+            .extend(slots.iter().enumerate().map(|(w, s)| Self::slot_load(w, s)));
+    }
+
+    /// Feed one event; returns the dispatch decisions the pump must
+    /// execute. `Arrival` and `BatchDone` only update state — dispatching
+    /// happens on `Wake`, so a pump can ingest a burst of same-time events
+    /// before the schedulers are asked to form batches (exactly what both
+    /// historical loops did).
+    pub fn on_event(&mut self, ev: Event) -> Vec<Dispatch> {
+        let now = self.clock.now();
+        match ev {
+            Event::Arrival(req) => {
+                self.refresh_loads();
+                let n = self.loads_buf.len();
+                let w = self.router.route(&req, &self.loads_buf);
+                debug_assert!(w < n, "router returned worker {w} of {n}");
+                let w = w.min(n - 1);
+                self.cluster.slots[w].sched.on_arrival(req, now);
+                Vec::new()
+            }
+            Event::BatchDone { worker, batch_ms } => {
+                self.finish(worker, batch_ms, now);
+                Vec::new()
+            }
+            Event::Wake => {
+                let mut out = Vec::new();
+                for w in 0..self.cluster.len() {
+                    self.drain_dropped(w, now);
+                    if let Some(d) = self.dispatch_from(w, now) {
+                        out.push(d);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Next time any idle replica with queued work wants to be polled:
+    /// its scheduler's wake hint, or a default 1 ms cadence (milestones /
+    /// forced partial batches / window ends). Busy replicas don't need
+    /// wakes — their `BatchDone` is the next event.
+    pub fn next_wake(&self, now: Micros) -> Option<Micros> {
+        let mut next: Option<Micros> = None;
+        for slot in &self.cluster.slots {
+            if slot.inflight.is_none() && slot.sched.pending() > 0 {
+                let h = slot
+                    .sched
+                    .wake_hint(now)
+                    .filter(|&h| h > now)
+                    .unwrap_or(now + 1_000);
+                next = Some(next.map_or(h, |n| n.min(h)));
+            }
+        }
+        next
+    }
+
+    /// Final drop sweep (call once when the pump decides the run is over).
+    pub fn drain_all(&mut self) {
+        let now = self.clock.now();
+        for w in 0..self.cluster.len() {
+            self.drain_dropped(w, now);
+        }
+    }
+
+    /// Completions recorded so far.
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    /// Consume the loop, yielding completions and per-replica counters.
+    pub fn into_completions(self) -> (Vec<Completion>, Vec<WorkerStats>) {
+        let stats = self
+            .cluster
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(w, s)| WorkerStats {
+                worker: w,
+                batches: s.batches,
+                busy_us: s.busy_us,
+            })
+            .collect();
+        (self.completions, stats)
+    }
+
+    /// Book a finished batch: label outcomes against deadlines, account
+    /// busy time, feed the measured latency back to the scheduler.
+    fn finish(&mut self, w: WorkerId, batch_ms: f64, now: Micros) {
+        let slot = &mut self.cluster.slots[w];
+        let Some(f) = slot.inflight.take() else {
+            debug_assert!(false, "BatchDone for idle worker {w}");
+            return;
+        };
+        let bs = f.batch.len();
+        for r in &f.batch {
+            let outcome = if now <= r.deadline {
+                Outcome::Finished
+            } else {
+                Outcome::Late
+            };
+            self.completions.push(Completion {
+                request: r.clone(),
+                outcome,
+                at: now,
+                batch_size: bs,
+            });
+        }
+        slot.busy_us += now.saturating_sub(f.started_at);
+        slot.batches += 1;
+        slot.sched.on_batch_complete(&f.batch, batch_ms, now);
+        self.drain_dropped(w, now);
+    }
+
+    /// If replica `w` is idle, ask its scheduler for a batch — repeating
+    /// while the scheduler's state changes (e.g. Clockwork aborting a
+    /// planned batch frees it to plan another immediately).
+    fn dispatch_from(&mut self, w: WorkerId, now: Micros) -> Option<Dispatch> {
+        if self.cluster.slots[w].inflight.is_some() {
+            return None;
+        }
+        loop {
+            match self.cluster.slots[w].sched.next_batch(now) {
+                Some(batch) => {
+                    self.cluster.slots[w].inflight = Some(InFlight {
+                        batch: batch.clone(),
+                        started_at: now,
+                    });
+                    return Some(Dispatch { worker: w, batch });
+                }
+                None => {
+                    if !self.drain_dropped(w, now) {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record replica `w`'s scheduler-side drops; true if any.
+    fn drain_dropped(&mut self, w: WorkerId, now: Micros) -> bool {
+        let dropped = self.cluster.slots[w].sched.drain_dropped();
+        let any = !dropped.is_empty();
+        for (r, outcome) in dropped {
+            self.completions.push(Completion {
+                request: r,
+                outcome,
+                at: now,
+                batch_size: 0,
+            });
+        }
+        any
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::edf::EdfScheduler;
+    use crate::clock::{ms_to_us, VirtualClock};
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::core::request::AppId;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            cost_model: BatchCostModel::new(0.0, 1.0),
+            ..Default::default()
+        }
+    }
+
+    fn sched() -> EdfScheduler {
+        let mut s = EdfScheduler::new(cfg(), 0);
+        s.seed_exec_mean(10.0);
+        s
+    }
+
+    fn req(id: u64, release: Micros) -> Request {
+        Request::new(id, AppId(0), release, ms_to_us(500.0), 10.0)
+    }
+
+    #[test]
+    fn arrival_routes_then_wake_dispatches() {
+        let clock = VirtualClock::new();
+        let cluster = Cluster::new(vec![sched(), sched()]);
+        let mut core = ServingLoop::new(
+            clock.clone(),
+            cluster,
+            router::by_name("round_robin").unwrap(),
+        );
+        assert!(core.on_event(Event::Arrival(req(0, 0))).is_empty());
+        assert!(core.on_event(Event::Arrival(req(1, 0))).is_empty());
+        assert_eq!(core.pending(), 2);
+        let ds = core.on_event(Event::Wake);
+        // Round-robin put one request on each replica → two dispatches.
+        assert_eq!(ds.len(), 2);
+        assert_eq!(core.in_flight(), 2);
+        assert_eq!(core.pending(), 0);
+    }
+
+    #[test]
+    fn batch_done_labels_outcomes_and_counts() {
+        let clock = VirtualClock::new();
+        let cluster = Cluster::new(vec![sched()]);
+        let mut core =
+            ServingLoop::new(clock.clone(), cluster, router::by_name("round_robin").unwrap());
+        core.on_event(Event::Arrival(req(0, 0)));
+        let ds = core.on_event(Event::Wake);
+        assert_eq!(ds.len(), 1);
+        clock.advance_to(ms_to_us(10.0));
+        core.on_event(Event::BatchDone {
+            worker: 0,
+            batch_ms: 10.0,
+        });
+        let (completions, stats) = core.into_completions();
+        assert_eq!(completions.len(), 1);
+        assert_eq!(completions[0].outcome, Outcome::Finished);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].batches, 1);
+        assert_eq!(stats[0].busy_us, ms_to_us(10.0));
+        assert!((stats[0].utilization(ms_to_us(10.0)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_build_makes_n_replicas() {
+        let c = Cluster::build("orloj", &SchedulerConfig::default(), 7, 4).unwrap();
+        assert_eq!(c.len(), 4);
+        assert!(Cluster::build("no-such-system", &SchedulerConfig::default(), 7, 2).is_none());
+    }
+}

@@ -1,0 +1,233 @@
+//! Real-time pump: drives a [`ServingLoop`](super::ServingLoop) cluster on
+//! wall-clock time with one OS thread per worker (threads, no tokio — the
+//! offline vendored set, see DESIGN.md §3).
+//!
+//! Arrivals come in through an mpsc channel from any number of client
+//! threads; each dispatch is shipped to its replica's worker thread, which
+//! executes the batch (PJRT on the real path) and reports a `BatchDone`.
+//! Unlike the historical single-worker `server::Server`, execution never
+//! blocks the scheduling loop — N batches run concurrently, one per
+//! replica.
+
+use super::{Event, ServingLoop, WorkerStats};
+use crate::clock::{Clock, Micros};
+use crate::core::request::{Completion, Request};
+use crate::scheduler::Scheduler;
+use crate::sim::worker::Worker;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sets the shutdown flag when the scheduling loop exits — including by
+/// panic — so the arrival forwarder (which may be blocked waiting on a
+/// submitter that never hangs up) stops and `thread::scope` can join it.
+struct ShutdownOnDrop(Arc<AtomicBool>);
+
+impl Drop for ShutdownOnDrop {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Result of a real-time serve.
+#[derive(Debug)]
+pub struct ServeResult {
+    pub completions: Vec<Completion>,
+    /// Per-replica execution counters.
+    pub per_worker: Vec<WorkerStats>,
+    /// Wall-clock length of the run (µs since the serving clock's epoch).
+    pub end_time: Micros,
+}
+
+/// Internal event-channel message: external arrivals and worker-thread
+/// completions multiplexed onto one receiver (std mpsc has no `select`).
+enum Msg {
+    Arrival(Request),
+    ArrivalsClosed,
+    Done { worker: usize, batch_ms: f64 },
+    /// `Worker::execute` panicked on this replica's thread. Re-raised on
+    /// the scheduling thread — a dead replica with a batch marked
+    /// in-flight would otherwise hang the loop forever.
+    WorkerPanicked { worker: usize },
+}
+
+fn ingest<C: Clock, S: Scheduler>(core: &mut ServingLoop<C, S>, msg: Msg, open: &mut bool) {
+    match msg {
+        Msg::Arrival(req) => {
+            core.on_event(Event::Arrival(req));
+        }
+        Msg::ArrivalsClosed => *open = false,
+        Msg::Done { worker, batch_ms } => {
+            core.on_event(Event::BatchDone { worker, batch_ms });
+        }
+        Msg::WorkerPanicked { worker } => {
+            panic!("worker thread {worker} panicked during batch execution");
+        }
+    }
+}
+
+/// Serve until the submitters hang up and everything drains. `workers[i]`
+/// executes the batches of replica `i` on its own thread.
+pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
+    mut core: ServingLoop<C, S>,
+    workers: Vec<W>,
+    rx: Receiver<Request>,
+) -> ServeResult {
+    let n = workers.len();
+    assert_eq!(n, core.workers(), "one executor per scheduling replica");
+    let (etx, erx) = mpsc::channel::<Msg>();
+
+    std::thread::scope(|scope| {
+        // One executor thread per replica; exits when its dispatch channel
+        // closes.
+        let mut dispatch_txs: Vec<Sender<Vec<Request>>> = Vec::with_capacity(n);
+        for (w, mut worker) in workers.into_iter().enumerate() {
+            let (dtx, drx) = mpsc::channel::<Vec<Request>>();
+            dispatch_txs.push(dtx);
+            let etx = etx.clone();
+            scope.spawn(move || {
+                while let Ok(batch) = drx.recv() {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        worker.execute(&batch)
+                    }));
+                    let msg = match result {
+                        Ok(ms) => Msg::Done {
+                            worker: w,
+                            batch_ms: ms,
+                        },
+                        Err(_) => Msg::WorkerPanicked { worker: w },
+                    };
+                    let fatal = matches!(msg, Msg::WorkerPanicked { .. });
+                    if etx.send(msg).is_err() || fatal {
+                        break;
+                    }
+                }
+            });
+        }
+        // Forward external arrivals onto the internal event channel so the
+        // scheduling loop can block on a single receiver. The bounded wait
+        // lets the forwarder notice shutdown even while submitters hold
+        // their end open.
+        let shutdown = Arc::new(AtomicBool::new(false));
+        {
+            let etx = etx.clone();
+            let shutdown = shutdown.clone();
+            scope.spawn(move || loop {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(req) => {
+                        if etx.send(Msg::Arrival(req)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        let _ = etx.send(Msg::ArrivalsClosed);
+                        return;
+                    }
+                }
+            });
+        }
+        drop(etx);
+        let _shutdown_guard = ShutdownOnDrop(shutdown);
+
+        let mut open = true;
+        loop {
+            // Ingest everything currently ready.
+            loop {
+                match erx.try_recv() {
+                    Ok(msg) => ingest(&mut core, msg, &mut open),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            // Drain drops; dispatch to every idle replica. A send can only
+            // fail if the replica's thread died, which WorkerPanicked
+            // should have surfaced already — fail loudly, don't strand the
+            // batch as forever-in-flight.
+            for d in core.on_event(Event::Wake) {
+                dispatch_txs[d.worker]
+                    .send(d.batch)
+                    .unwrap_or_else(|_| panic!("worker thread {} is gone", d.worker));
+            }
+            if !open && core.pending() == 0 && core.in_flight() == 0 {
+                break;
+            }
+            // Idle: block briefly for new events or the next wake hint.
+            let now = core.now();
+            let wait_us = core
+                .next_wake(now)
+                .map(|h| h.saturating_sub(now).clamp(100, 5_000))
+                .unwrap_or(1_000);
+            match erx.recv_timeout(Duration::from_micros(wait_us)) {
+                Ok(msg) => ingest(&mut core, msg, &mut open),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+        }
+        // Closing the dispatch channels stops the worker threads; the
+        // scope joins them (and the forwarder) on exit.
+        drop(dispatch_txs);
+    });
+
+    core.drain_all();
+    let end_time = core.now();
+    let (completions, per_worker) = core.into_completions();
+    ServeResult {
+        completions,
+        per_worker,
+        end_time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::edf::EdfScheduler;
+    use crate::clock::{ms_to_us, RealClock};
+    use crate::core::batchmodel::BatchCostModel;
+    use crate::core::request::AppId;
+    use crate::scheduler::SchedulerConfig;
+    use crate::serve::{router, Cluster};
+    use crate::sim::worker::SimWorker;
+
+    #[test]
+    fn drains_and_reports_per_worker() {
+        let cfg = SchedulerConfig {
+            cost_model: BatchCostModel::new(0.0, 1.0),
+            ..Default::default()
+        };
+        let scheds: Vec<EdfScheduler> = (0..2)
+            .map(|_| {
+                let mut s = EdfScheduler::new(cfg.clone(), 0);
+                s.seed_exec_mean(1.0);
+                s
+            })
+            .collect();
+        let core = ServingLoop::new(
+            RealClock::new(),
+            Cluster::new(scheds),
+            router::by_name("round_robin").unwrap(),
+        );
+        let workers: Vec<SimWorker> = (0..2)
+            .map(|w| SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, w))
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..16u64 {
+            tx.send(Request::new(i, AppId(0), 0, ms_to_us(5_000.0), 1.0))
+                .unwrap();
+        }
+        drop(tx);
+        let res = serve_cluster(core, workers, rx);
+        assert_eq!(res.completions.len(), 16);
+        assert_eq!(res.per_worker.len(), 2);
+        assert!(res.per_worker.iter().map(|w| w.batches).sum::<usize>() > 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Routers: the cluster's admission front-end (DESIGN.md §3).
+//!
+//! A [`Router`] picks the replica that will serve each arrival. The
+//! contract:
+//!
+//! * `route` is called once per arrival, before the request is handed to
+//!   any scheduler, with a load snapshot covering every replica
+//!   (`loads.len() >= 1`, `loads[i].worker == i`).
+//! * It must return a `WorkerId < loads.len()`. Routing is final — the
+//!   core does not migrate queued requests between replicas (the paper's
+//!   per-replica scheduler owns its queue).
+//! * Routers may keep internal state (`&mut self`) but must be
+//!   deterministic given the same call sequence, so simulated runs stay
+//!   replayable.
+
+use super::{WorkerId, WorkerLoad};
+use crate::core::request::Request;
+
+/// Replica-selection policy for arrivals.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Pick the replica for `req` given the current per-replica load.
+    fn route(&mut self, req: &Request, loads: &[WorkerLoad]) -> WorkerId;
+}
+
+/// Cycle through replicas in order, ignoring load.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> WorkerId {
+        let w = self.next % loads.len();
+        self.next = (w + 1) % loads.len();
+        w
+    }
+}
+
+/// Send to the replica with the fewest *queued* requests (classic JSQ;
+/// ties break toward the lower id).
+pub struct JoinShortestQueue;
+
+impl Router for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "join_shortest_queue"
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> WorkerId {
+        loads
+            .iter()
+            .min_by_key(|l| (l.pending, l.worker))
+            .map(|l| l.worker)
+            .unwrap_or(0)
+    }
+}
+
+/// Send to the replica with the least total work in the system — queued
+/// plus in-flight batch size (ties break toward the lower id). Unlike JSQ
+/// this avoids piling onto a replica that just emptied its queue into a
+/// large running batch.
+pub struct LeastLoaded;
+
+impl Router for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> WorkerId {
+        loads
+            .iter()
+            .min_by_key(|l| (l.total(), l.worker))
+            .map(|l| l.worker)
+            .unwrap_or(0)
+    }
+}
+
+/// All router names, in documentation order.
+pub const ROUTERS: [&str; 3] = ["round_robin", "least_loaded", "join_shortest_queue"];
+
+/// Construct a router by name (short aliases accepted).
+pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
+    match name {
+        "round_robin" | "rr" => Some(Box::new(RoundRobin::new())),
+        "least_loaded" | "ll" => Some(Box::new(LeastLoaded)),
+        "join_shortest_queue" | "jsq" => Some(Box::new(JoinShortestQueue)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::AppId;
+
+    fn req() -> Request {
+        Request::new(0, AppId(0), 0, 1_000_000, 5.0)
+    }
+
+    fn loads(spec: &[(usize, usize)]) -> Vec<WorkerLoad> {
+        spec.iter()
+            .enumerate()
+            .map(|(w, &(pending, in_flight))| WorkerLoad {
+                worker: w,
+                pending,
+                in_flight,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobin::new();
+        let ls = loads(&[(0, 0), (9, 9), (0, 0)]);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(), &ls)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_shortest_queue_ignoring_inflight() {
+        let mut r = JoinShortestQueue;
+        // Worker 1 has the shortest queue even though it has a big batch
+        // in flight.
+        let ls = loads(&[(3, 0), (1, 16), (2, 0)]);
+        assert_eq!(r.route(&req(), &ls), 1);
+    }
+
+    #[test]
+    fn least_loaded_counts_inflight() {
+        let mut r = LeastLoaded;
+        // Worker 1's in-flight batch makes worker 2 the least loaded.
+        let ls = loads(&[(3, 0), (1, 16), (2, 0)]);
+        assert_eq!(r.route(&req(), &ls), 2);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_id() {
+        let mut jsq = JoinShortestQueue;
+        let mut ll = LeastLoaded;
+        let ls = loads(&[(2, 0), (2, 0), (2, 0)]);
+        assert_eq!(jsq.route(&req(), &ls), 0);
+        assert_eq!(ll.route(&req(), &ls), 0);
+    }
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        for name in ROUTERS {
+            assert!(by_name(name).is_some(), "{name} missing from registry");
+        }
+        assert_eq!(by_name("rr").unwrap().name(), "round_robin");
+        assert_eq!(by_name("jsq").unwrap().name(), "join_shortest_queue");
+        assert_eq!(by_name("ll").unwrap().name(), "least_loaded");
+        assert!(by_name("random").is_none());
+    }
+}

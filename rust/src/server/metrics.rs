@@ -1,9 +1,21 @@
 //! Serving metrics: the paper's *finish rate* (§5.2 Metrics) plus latency
 //! summaries and per-app/per-outcome breakdowns.
 
+use crate::clock::Micros;
 use crate::core::request::{AppId, Completion, Outcome};
+use crate::serve::WorkerStats;
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
+
+/// Per-replica utilization and batch counts for a serving run.
+#[derive(Debug, Clone)]
+pub struct WorkerUtil {
+    pub worker: usize,
+    pub batches: usize,
+    pub busy_us: Micros,
+    /// Busy fraction of the run.
+    pub utilization: f64,
+}
 
 /// Aggregated result of a serving run.
 #[derive(Debug, Clone)]
@@ -19,6 +31,9 @@ pub struct RunReport {
     pub mean_batch_size: f64,
     /// Per-app finish rates.
     pub per_app: BTreeMap<u32, (usize, usize)>, // app -> (finished, total)
+    /// Per-replica execution stats (empty when the run didn't report any —
+    /// e.g. a report built from completions alone).
+    pub per_worker: Vec<WorkerUtil>,
 }
 
 impl RunReport {
@@ -68,7 +83,23 @@ impl RunReport {
             latency: Summary::of(&latencies),
             mean_batch_size: crate::util::stats::mean(&batch_sizes),
             per_app,
+            per_worker: Vec::new(),
         }
+    }
+
+    /// Attach per-replica execution counters (from `EngineResult` /
+    /// `ServeResult`); `end_time` is the run length in µs.
+    pub fn with_worker_stats(mut self, stats: &[WorkerStats], end_time: Micros) -> RunReport {
+        self.per_worker = stats
+            .iter()
+            .map(|s| WorkerUtil {
+                worker: s.worker,
+                batches: s.batches,
+                busy_us: s.busy_us,
+                utilization: s.utilization(end_time),
+            })
+            .collect();
+        self
     }
 }
 
@@ -86,7 +117,16 @@ impl std::fmt::Display for RunReport {
             self.latency.p50,
             self.latency.p99,
             self.mean_batch_size
-        )
+        )?;
+        if !self.per_worker.is_empty() {
+            let utils: Vec<String> = self
+                .per_worker
+                .iter()
+                .map(|w| format!("w{}={:.2}/{}b", w.worker, w.utilization, w.batches))
+                .collect();
+            write!(f, " util=[{}]", utils.join(" "))?;
+        }
+        Ok(())
     }
 }
 
@@ -128,5 +168,28 @@ mod tests {
         let r = RunReport::from_completions(&[]);
         assert_eq!(r.finish_rate(), 0.0);
         assert_eq!(r.total, 0);
+        assert!(r.per_worker.is_empty());
+    }
+
+    #[test]
+    fn worker_stats_become_utilizations() {
+        let stats = vec![
+            WorkerStats {
+                worker: 0,
+                batches: 10,
+                busy_us: 500,
+            },
+            WorkerStats {
+                worker: 1,
+                batches: 4,
+                busy_us: 250,
+            },
+        ];
+        let r = RunReport::from_completions(&[]).with_worker_stats(&stats, 1_000);
+        assert_eq!(r.per_worker.len(), 2);
+        assert!((r.per_worker[0].utilization - 0.5).abs() < 1e-12);
+        assert!((r.per_worker[1].utilization - 0.25).abs() < 1e-12);
+        let shown = format!("{r}");
+        assert!(shown.contains("w0=0.50/10b"), "{shown}");
     }
 }

@@ -1,16 +1,22 @@
-//! Real-time serving runtime (threads, no tokio in the offline vendored
-//! set — see DESIGN.md §3): an intake channel feeding the scheduler loop,
-//! which drives one worker. Used by the PJRT end-to-end examples; the
-//! evaluation sweeps use the virtual-time engine in `sim`.
+//! Real-time serving runtime — a thin shim over the unified serving core
+//! (`serve::ServingLoop` + the wall-clock pump in `serve::realtime`;
+//! threads, no tokio in the offline vendored set — see DESIGN.md §3).
+//!
+//! An intake channel feeds the scheduling loop, which routes arrivals
+//! across N replicas and runs each replica's worker on its own thread.
+//! Used by the PJRT end-to-end examples; the evaluation sweeps use the
+//! virtual-time pump in `serve::replay`.
 
 pub mod metrics;
 
-use crate::clock::{Clock, Micros, RealClock};
-use crate::core::request::{Completion, Outcome, Request};
+use crate::clock::RealClock;
+use crate::core::request::Request;
 use crate::scheduler::Scheduler;
+use crate::serve::realtime::{self, ServeResult};
+use crate::serve::router::{self, Router};
+use crate::serve::{Cluster, ServingLoop};
 use crate::sim::worker::Worker;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::sync::mpsc::{self, Receiver, Sender};
 
 /// Handle for submitting requests to a running server.
 #[derive(Clone)]
@@ -24,22 +30,40 @@ impl Submitter {
     }
 }
 
-/// A single-worker serving loop (the paper's per-GPU scheduler, §3.1).
+/// A serving cluster (the paper's per-GPU scheduler, §3.1, × N replicas).
 ///
-/// Runs the scheduler and the worker on the calling thread; arrivals come
-/// in through an mpsc channel from any number of client threads. Returns
-/// all completions when the channel closes and queues drain.
+/// Arrivals come in through an mpsc channel from any number of client
+/// threads; a router assigns each to a replica, and every replica's worker
+/// executes on its own thread. Returns all completions plus per-replica
+/// stats when the channel closes and queues drain.
 pub struct Server<S: Scheduler, W: Worker> {
-    sched: S,
-    worker: W,
+    scheds: Vec<S>,
+    workers: Vec<W>,
+    router: Box<dyn Router>,
+    /// Anchored at construction so callers can stamp release times before
+    /// the serving thread spins up.
     clock: RealClock,
 }
 
 impl<S: Scheduler, W: Worker> Server<S, W> {
+    /// A single-replica server (the historical single-GPU loop).
     pub fn new(sched: S, worker: W) -> Self {
         Server {
-            sched,
-            worker,
+            scheds: vec![sched],
+            workers: vec![worker],
+            router: router::by_name("round_robin").expect("registry has round_robin"),
+            clock: RealClock::new(),
+        }
+    }
+
+    /// An N-replica server: one `(scheduler, worker)` pair per replica,
+    /// with `router` picking the replica for each arrival.
+    pub fn cluster(replicas: Vec<(S, W)>, router: Box<dyn Router>) -> Self {
+        let (scheds, workers): (Vec<S>, Vec<W>) = replicas.into_iter().unzip();
+        Server {
+            scheds,
+            workers,
+            router,
             clock: RealClock::new(),
         }
     }
@@ -51,78 +75,15 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
     }
 
     /// Current server-relative time (µs since construction).
-    pub fn now(&self) -> Micros {
+    pub fn now(&self) -> crate::clock::Micros {
+        use crate::clock::Clock;
         self.clock.now()
     }
 
     /// Serve until the submitters hang up and everything drains.
-    pub fn run(mut self, rx: Receiver<Request>) -> Vec<Completion> {
-        let mut completions = Vec::new();
-        let mut open = true;
-        loop {
-            let now = self.clock.now();
-            // Pull everything currently in the channel.
-            loop {
-                match rx.try_recv() {
-                    Ok(req) => self.sched.on_arrival(req, now),
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        open = false;
-                        break;
-                    }
-                }
-            }
-            for (r, outcome) in self.sched.drain_dropped() {
-                completions.push(Completion {
-                    request: r,
-                    outcome,
-                    at: now,
-                    batch_size: 0,
-                });
-            }
-            // Dispatch (the worker call blocks this thread — single-GPU
-            // semantics: non-preemptive batch execution).
-            if let Some(batch) = self.sched.next_batch(now) {
-                let batch_ms = self.worker.execute(&batch);
-                let done = self.clock.now();
-                let bs = batch.len();
-                for r in &batch {
-                    let outcome = if done <= r.deadline {
-                        Outcome::Finished
-                    } else {
-                        Outcome::Late
-                    };
-                    completions.push(Completion {
-                        request: r.clone(),
-                        outcome,
-                        at: done,
-                        batch_size: bs,
-                    });
-                }
-                self.sched.on_batch_complete(&batch, batch_ms, done);
-                continue;
-            }
-            if !open && self.sched.pending() == 0 {
-                break;
-            }
-            // Idle: block briefly for new arrivals or the next wake hint.
-            let wait_us = self
-                .sched
-                .wake_hint(now)
-                .map(|h| h.saturating_sub(now).clamp(100, 5_000))
-                .unwrap_or(1_000);
-            match rx.recv_timeout(Duration::from_micros(wait_us)) {
-                Ok(req) => {
-                    let t = self.clock.now();
-                    self.sched.on_arrival(req, t);
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    open = false;
-                }
-            }
-        }
-        completions
+    pub fn run(self, rx: Receiver<Request>) -> ServeResult {
+        let core = ServingLoop::new(self.clock, Cluster::new(self.scheds), self.router);
+        realtime::serve_cluster(core, self.workers, rx)
     }
 }
 
@@ -132,9 +93,10 @@ mod tests {
     use crate::baselines::edf::EdfScheduler;
     use crate::clock::ms_to_us;
     use crate::core::batchmodel::BatchCostModel;
-    use crate::core::request::AppId;
+    use crate::core::request::{AppId, Outcome};
     use crate::scheduler::SchedulerConfig;
     use crate::sim::worker::SimWorker;
+    use std::time::Duration;
 
     /// A worker that actually sleeps (real time) scaled down hard so the
     /// test stays fast.
@@ -147,14 +109,19 @@ mod tests {
         }
     }
 
-    #[test]
-    fn serves_from_channel_and_drains() {
+    fn edf(cost: BatchCostModel) -> EdfScheduler {
         let cfg = SchedulerConfig {
-            cost_model: BatchCostModel::new(0.2, 0.05),
+            cost_model: cost,
             ..Default::default()
         };
         let mut sched = EdfScheduler::new(cfg, 0);
         sched.seed_exec_mean(1.0);
+        sched
+    }
+
+    #[test]
+    fn serves_from_channel_and_drains() {
+        let sched = edf(BatchCostModel::new(0.2, 0.05));
         let (submitter, rx) = Server::<EdfScheduler, SleepWorker>::channel();
         let server = Server::new(sched, SleepWorker);
 
@@ -164,13 +131,38 @@ mod tests {
             std::thread::sleep(Duration::from_micros(200));
         }
         drop(submitter);
-        let completions = handle.join().unwrap();
-        assert_eq!(completions.len(), 20);
-        let finished = completions
+        let res = handle.join().unwrap();
+        assert_eq!(res.completions.len(), 20);
+        assert_eq!(res.per_worker.len(), 1);
+        let finished = res
+            .completions
             .iter()
             .filter(|c| c.outcome == Outcome::Finished)
             .count();
         assert!(finished >= 18, "finished={finished}");
+    }
+
+    #[test]
+    fn two_replica_cluster_splits_the_work() {
+        let replicas: Vec<(EdfScheduler, SleepWorker)> = (0..2)
+            .map(|_| (edf(BatchCostModel::new(0.2, 0.05)), SleepWorker))
+            .collect();
+        let (submitter, rx) = Server::<EdfScheduler, SleepWorker>::channel();
+        let server = Server::cluster(replicas, router::by_name("round_robin").unwrap());
+        let handle = std::thread::spawn(move || server.run(rx));
+        for i in 0..30u64 {
+            submitter.submit(Request::new(i, AppId(0), 0, ms_to_us(5_000.0), 1.0));
+            std::thread::sleep(Duration::from_micros(150));
+        }
+        drop(submitter);
+        let res = handle.join().unwrap();
+        assert_eq!(res.completions.len(), 30, "conservation across replicas");
+        assert_eq!(res.per_worker.len(), 2);
+        assert!(
+            res.per_worker.iter().all(|w| w.batches > 0),
+            "round-robin must exercise both replicas: {:?}",
+            res.per_worker
+        );
     }
 
     #[test]
@@ -180,8 +172,7 @@ mod tests {
         let cfg = SchedulerConfig::default();
         let mut sched = EdfScheduler::new(cfg, 0);
         sched.seed_exec_mean(1.0);
-        let (submitter, rx) =
-            Server::<EdfScheduler, SimWorker>::channel();
+        let (submitter, rx) = Server::<EdfScheduler, SimWorker>::channel();
         let server = Server::new(
             sched,
             SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, 0),
@@ -191,7 +182,7 @@ mod tests {
             submitter.submit(Request::new(i, AppId(0), 0, ms_to_us(10_000.0), 1.0));
         }
         drop(submitter);
-        let completions = handle.join().unwrap();
-        assert_eq!(completions.len(), 5);
+        let res = handle.join().unwrap();
+        assert_eq!(res.completions.len(), 5);
     }
 }

@@ -1,16 +1,18 @@
-//! Discrete-event serving engine: drives a [`Scheduler`] and a [`Worker`]
-//! over a request trace in virtual time.
+//! Single-worker discrete-event engine — now a thin compatibility shim
+//! over the unified serving core (`serve::ServingLoop` + the virtual-time
+//! pump in `serve::replay`; DESIGN.md §3).
 //!
-//! The engine models the single-GPU worker of the paper's setup (§3.1):
-//! one batch in flight at a time, non-preemptive, open-loop arrivals (the
-//! client never waits). It is also reused by the real-time serving loop
-//! with a [`crate::sim::worker::Worker`] backed by PJRT — only the clock
-//! differs.
+//! [`run`] keeps the historical signature: it drives one scheduler and one
+//! worker over a request trace in virtual time, modelling the paper's
+//! single-GPU setup (§3.1) — one batch in flight, non-preemptive,
+//! open-loop arrivals. Multi-replica runs go through
+//! [`crate::serve::replay::run_cluster`] directly (or `sim::runner`).
 
 use super::worker::Worker;
-use crate::clock::{ms_to_us, Micros};
-use crate::core::request::{Completion, Outcome, Request};
+use crate::clock::{Micros, VirtualClock};
+use crate::core::request::{Completion, Request};
 use crate::scheduler::Scheduler;
+use crate::serve::{replay, router, Cluster, ServingLoop, WorkerStats};
 
 /// Result of an engine run.
 #[derive(Debug)]
@@ -18,165 +20,36 @@ pub struct EngineResult {
     pub completions: Vec<Completion>,
     /// Virtual end time.
     pub end_time: Micros,
-    /// Number of executed batches.
+    /// Number of executed batches (summed across workers).
     pub batches: usize,
-    /// Total worker busy time (µs) — utilization = busy / end_time.
+    /// Total worker busy time (µs) — utilization = busy / end_time
+    /// (divide by the worker count for multi-replica runs).
     pub busy_us: Micros,
+    /// Per-replica batch counts and busy time.
+    pub per_worker: Vec<WorkerStats>,
 }
 
-struct InFlight {
-    batch: Vec<Request>,
-    started_at: Micros,
-    done_at: Micros,
-}
-
-/// Run the trace to completion.
+/// Run the trace to completion on a single worker.
 pub fn run(
     sched: &mut dyn Scheduler,
     worker: &mut dyn Worker,
-    mut requests: Vec<Request>,
+    requests: Vec<Request>,
 ) -> EngineResult {
-    requests.sort_by_key(|r| r.release);
-    let mut completions = Vec::with_capacity(requests.len());
-    let mut now: Micros = 0;
-    let mut next_arrival = 0usize;
-    let mut inflight: Option<InFlight> = None;
-    let mut batches = 0usize;
-    let mut busy_us: Micros = 0;
-
-    loop {
-        // Deliver all arrivals due now.
-        while next_arrival < requests.len() && requests[next_arrival].release <= now {
-            let r = requests[next_arrival].clone();
-            next_arrival += 1;
-            sched.on_arrival(r, now);
-        }
-        // Complete the in-flight batch if due.
-        if let Some(f) = &inflight {
-            if f.done_at <= now {
-                let f = inflight.take().unwrap();
-                let done = f.done_at;
-                let bs = f.batch.len();
-                for r in &f.batch {
-                    let outcome = if done <= r.deadline {
-                        Outcome::Finished
-                    } else {
-                        Outcome::Late
-                    };
-                    completions.push(Completion {
-                        request: r.clone(),
-                        outcome,
-                        at: done,
-                        batch_size: bs,
-                    });
-                }
-                let batch_ms = crate::clock::us_to_ms(done - f.started_at);
-                sched.on_batch_complete(&f.batch, batch_ms, now);
-            }
-        }
-        // Drain scheduler-side drops.
-        for (r, outcome) in sched.drain_dropped() {
-            completions.push(Completion {
-                request: r,
-                outcome,
-                at: now,
-                batch_size: 0,
-            });
-        }
-        // If the worker is idle, try to dispatch (repeat while the
-        // scheduler's state changes — e.g. Clockwork aborting a planned
-        // batch frees it to plan another immediately).
-        if inflight.is_none() {
-            loop {
-                match sched.next_batch(now) {
-                    Some(batch) => {
-                        let exec_ms = worker.execute(&batch);
-                        let done_at = now + ms_to_us(exec_ms);
-                        busy_us += done_at - now;
-                        batches += 1;
-                        inflight = Some(InFlight {
-                            batch,
-                            started_at: now,
-                            done_at,
-                        });
-                        break;
-                    }
-                    None => {
-                        let dropped = sched.drain_dropped();
-                        if dropped.is_empty() {
-                            break;
-                        }
-                        for (r, outcome) in dropped {
-                            completions.push(Completion {
-                                request: r,
-                                outcome,
-                                at: now,
-                                batch_size: 0,
-                            });
-                        }
-                    }
-                }
-            }
-        }
-        // Pick the next event.
-        let mut next: Option<Micros> = None;
-        let mut consider = |t: Option<Micros>| {
-            if let Some(t) = t {
-                next = Some(match next {
-                    Some(n) => n.min(t),
-                    None => t,
-                });
-            }
-        };
-        if next_arrival < requests.len() {
-            consider(Some(requests[next_arrival].release));
-        }
-        consider(inflight.as_ref().map(|f| f.done_at));
-        if inflight.is_none() && sched.pending() > 0 {
-            // Poll the scheduler at its own cadence while idle with work
-            // queued (milestones / forced partial batches / window ends).
-            let hint = sched.wake_hint(now).filter(|&h| h > now);
-            consider(hint.or(Some(now + 1_000)));
-        }
-        match next {
-            Some(t) if t > now => now = t,
-            Some(_) => now += 1, // same-time event loop guard
-            None => {
-                // No arrivals, nothing in flight, nothing pending → done.
-                if next_arrival >= requests.len() && inflight.is_none() && sched.pending() == 0 {
-                    break;
-                }
-                now += 1_000;
-            }
-        }
-        // Termination safeguard: everything delivered and queues empty.
-        if next_arrival >= requests.len() && inflight.is_none() && sched.pending() == 0 {
-            // Final drain.
-            for (r, outcome) in sched.drain_dropped() {
-                completions.push(Completion {
-                    request: r,
-                    outcome,
-                    at: now,
-                    batch_size: 0,
-                });
-            }
-            break;
-        }
-    }
-    EngineResult {
-        completions,
-        end_time: now,
-        batches,
-        busy_us,
-    }
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        Cluster::new(vec![sched]),
+        router::by_name("round_robin").expect("registry has round_robin"),
+    );
+    replay::run_cluster(core, vec![worker], requests)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::edf::EdfScheduler;
+    use crate::clock::ms_to_us;
     use crate::core::batchmodel::BatchCostModel;
-    use crate::core::request::AppId;
+    use crate::core::request::{AppId, Outcome};
     use crate::scheduler::SchedulerConfig;
     use crate::sim::worker::SimWorker;
 
@@ -258,5 +131,16 @@ mod tests {
                 assert!(c.batch_size >= 1);
             }
         }
+    }
+
+    #[test]
+    fn shim_reports_single_worker_stats() {
+        let mut s = EdfScheduler::new(cfg(), 0);
+        s.seed_exec_mean(10.0);
+        let mut w = SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, 0);
+        let res = run(&mut s, &mut w, requests(25, 8.0, 800.0, 10.0));
+        assert_eq!(res.per_worker.len(), 1);
+        assert_eq!(res.per_worker[0].batches, res.batches);
+        assert_eq!(res.per_worker[0].busy_us, res.busy_us);
     }
 }

@@ -1,6 +1,7 @@
-//! Discrete-event evaluation substrate: virtual-time worker, engine, and
-//! the (system × workload × SLO) experiment runner used by every table and
-//! figure reproduction.
+//! Discrete-event evaluation substrate: virtual-time worker, the
+//! single-worker engine shim over the unified serving core
+//! (`crate::serve`), and the (system × workload × SLO × replica count)
+//! experiment runner used by every table and figure reproduction.
 
 pub mod engine;
 pub mod runner;

@@ -1,16 +1,45 @@
-//! Experiment runner: (system × trace × SLO multiple) → finish rate.
+//! Experiment runner: (system × trace × SLO multiple × replica count) →
+//! finish rate.
 //!
 //! This is the evaluation harness behind every table and figure (§5): it
 //! replays the identical recorded trace through each system at each SLO
 //! setting, seeds every scheduler with the same deployment-time profile,
-//! and reports the paper's metrics.
+//! and reports the paper's metrics. Scale-out runs build an N-replica
+//! [`Cluster`] (one scheduler instance per replica, §3.1) with a
+//! [`Router`](crate::serve::Router) front-end.
 
-use super::engine;
-use super::worker::SimWorker;
-use crate::baselines;
+use crate::clock::VirtualClock;
 use crate::scheduler::SchedulerConfig;
+use crate::serve::{replay, router, Cluster, ServingLoop};
 use crate::server::metrics::RunReport;
+use crate::sim::worker::SimWorker;
 use crate::workload::trace::{Trace, TraceSpec};
+
+/// Replica-count and routing knobs for a run (workers=1 reproduces the
+/// historical single-loop harness exactly).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub workers: usize,
+    pub router: String,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            workers: 1,
+            router: "round_robin".into(),
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn new(workers: usize, router: &str) -> Self {
+        ClusterSpec {
+            workers: workers.max(1),
+            router: router.to_string(),
+        }
+    }
+}
 
 /// One (system, slo) cell of a results table.
 #[derive(Debug, Clone)]
@@ -18,7 +47,9 @@ pub struct Cell {
     pub system: String,
     pub slo_multiple: f64,
     pub report: RunReport,
+    /// Aggregate utilization: total busy time / (workers × run length).
     pub utilization: f64,
+    pub workers: usize,
 }
 
 /// Run one system over one trace at one SLO multiple.
@@ -29,18 +60,26 @@ pub fn run_one(
     slo_multiple: f64,
     cfg: &SchedulerConfig,
     seed: u64,
+    cluster: &ClusterSpec,
 ) -> Cell {
-    let mut sched =
-        baselines::by_name(system, cfg.clone(), seed).unwrap_or_else(|| panic!("unknown system {system}"));
+    let n = cluster.workers.max(1);
+    let mut replicas = Cluster::build(system, cfg, seed, n)
+        .unwrap_or_else(|| panic!("unknown system {system}"));
     for (app, hist) in spec.seed_histograms(cfg.bins) {
-        sched.seed_app_profile(app, &hist, 1000);
+        replicas.seed_app_profile(app, &hist, 1000);
     }
-    let mut worker = SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151);
+    let workers: Vec<SimWorker> = (0..n)
+        .map(|w| SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151 ^ ((w as u64) << 16)))
+        .collect();
+    let route = router::by_name(&cluster.router)
+        .unwrap_or_else(|| panic!("unknown router {}", cluster.router));
+    let core = ServingLoop::new(VirtualClock::new(), replicas, route);
     let requests = trace.requests(slo_multiple);
-    let res = engine::run(sched.as_mut(), &mut worker, requests);
-    let report = RunReport::from_completions(&res.completions);
+    let res = replay::run_cluster(core, workers, requests);
+    let report =
+        RunReport::from_completions(&res.completions).with_worker_stats(&res.per_worker, res.end_time);
     let utilization = if res.end_time > 0 {
-        res.busy_us as f64 / res.end_time as f64
+        res.busy_us as f64 / (res.end_time as f64 * n as f64)
     } else {
         0.0
     };
@@ -49,6 +88,7 @@ pub fn run_one(
         slo_multiple,
         report,
         utilization,
+        workers: n,
     }
 }
 
@@ -59,12 +99,13 @@ pub fn run_grid(
     slo_multiples: &[f64],
     cfg: &SchedulerConfig,
     seed: u64,
+    cluster: &ClusterSpec,
 ) -> Vec<Cell> {
     let trace = spec.generate();
     let mut cells = Vec::new();
     for &slo in slo_multiples {
         for system in systems {
-            cells.push(run_one(system, spec, &trace, slo, cfg, seed));
+            cells.push(run_one(system, spec, &trace, slo, cfg, seed, cluster));
         }
     }
     cells
@@ -99,9 +140,35 @@ pub fn render_table(title: &str, cells: &[Cell], systems: &[&str]) -> String {
     out
 }
 
+/// Render per-replica utilization / batch counts (the multi-worker
+/// counterpart of `render_table`).
+pub fn render_worker_util(title: &str, cells: &[Cell]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "-- {title} --").unwrap();
+    for c in cells {
+        let utils: Vec<String> = c
+            .report
+            .per_worker
+            .iter()
+            .map(|w| format!("w{}={:.2}({}b)", w.worker, w.utilization, w.batches))
+            .collect();
+        writeln!(
+            out,
+            "{:>10} slo={:<4} {}",
+            c.system,
+            format!("{:.1}", c.slo_multiple),
+            utils.join(" ")
+        )
+        .unwrap();
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines;
     use crate::core::batchmodel::BatchCostModel;
     use crate::workload::azure::AzureTraceConfig;
     use crate::workload::exectime::ExecTimeDist;
@@ -143,11 +210,14 @@ mod tests {
             &[3.0],
             &cfg(),
             1,
+            &ClusterSpec::default(),
         );
         assert_eq!(cells.len(), 4);
         for c in &cells {
             assert!(c.report.total > 50, "{}: total={}", c.system, c.report.total);
             assert!(c.report.finish_rate() >= 0.0 && c.report.finish_rate() <= 1.0);
+            assert_eq!(c.workers, 1);
+            assert_eq!(c.report.per_worker.len(), 1);
         }
     }
 
@@ -155,7 +225,14 @@ mod tests {
     fn orloj_beats_point_estimators_on_bimodal() {
         // The paper's headline directional claim at a moderate SLO.
         let spec = small_spec(true);
-        let cells = run_grid(&["clockwork", "orloj"], &spec, &[3.0], &cfg(), 2);
+        let cells = run_grid(
+            &["clockwork", "orloj"],
+            &spec,
+            &[3.0],
+            &cfg(),
+            2,
+            &ClusterSpec::default(),
+        );
         let get = |name: &str| {
             cells
                 .iter()
@@ -175,7 +252,14 @@ mod tests {
     #[test]
     fn static_workload_everyone_reasonable() {
         let spec = small_spec(false);
-        let cells = run_grid(&["clockwork", "orloj"], &spec, &[4.0], &cfg(), 3);
+        let cells = run_grid(
+            &["clockwork", "orloj"],
+            &spec,
+            &[4.0],
+            &cfg(),
+            3,
+            &ClusterSpec::default(),
+        );
         for c in &cells {
             assert!(
                 c.report.finish_rate() > 0.7,
@@ -187,11 +271,60 @@ mod tests {
     }
 
     #[test]
+    fn multi_worker_grid_reports_per_replica_stats() {
+        let spec = small_spec(true);
+        for router_name in crate::serve::router::ROUTERS {
+            let cells = run_grid(
+                &["orloj"],
+                &spec,
+                &[3.0],
+                &cfg(),
+                5,
+                &ClusterSpec::new(2, router_name),
+            );
+            let c = &cells[0];
+            assert_eq!(c.workers, 2, "{router_name}");
+            assert_eq!(c.report.per_worker.len(), 2, "{router_name}");
+            assert_eq!(
+                c.report.total,
+                spec.generate().events.len(),
+                "{router_name}: conservation"
+            );
+            // Same offered load over twice the capacity → roughly at least
+            // as many requests finish as on one worker (3% slack for lost
+            // batching efficiency).
+            let single = run_grid(
+                &["orloj"],
+                &spec,
+                &[3.0],
+                &cfg(),
+                5,
+                &ClusterSpec::default(),
+            );
+            assert!(
+                c.report.finished as f64 >= 0.97 * single[0].report.finished as f64,
+                "{router_name}: 2 workers ({}) should not lose to 1 ({})",
+                c.report.finished,
+                single[0].report.finished
+            );
+        }
+    }
+
+    #[test]
     fn render_table_has_all_rows() {
         let spec = small_spec(true);
-        let cells = run_grid(&["orloj"], &spec, &[1.5, 3.0], &cfg(), 4);
+        let cells = run_grid(
+            &["orloj"],
+            &spec,
+            &[1.5, 3.0],
+            &cfg(),
+            4,
+            &ClusterSpec::default(),
+        );
         let table = render_table("t", &cells, &["orloj"]);
         assert!(table.contains("1.5"));
         assert!(table.contains("3.0") || table.contains("3"));
+        let util = render_worker_util("u", &cells);
+        assert!(util.contains("w0="));
     }
 }

@@ -15,6 +15,21 @@ pub trait Worker: Send {
     fn execute(&mut self, batch: &[Request]) -> f64;
 }
 
+/// Mutable borrows and boxes are workers too, so the unified serve pumps
+/// can execute through a worker they do not own (e.g. the single-worker
+/// `sim::engine::run` compatibility shim).
+impl<'a, W: Worker + ?Sized> Worker for &'a mut W {
+    fn execute(&mut self, batch: &[Request]) -> f64 {
+        (**self).execute(batch)
+    }
+}
+
+impl<W: Worker + ?Sized> Worker for Box<W> {
+    fn execute(&mut self, batch: &[Request]) -> f64 {
+        (**self).execute(batch)
+    }
+}
+
 /// Virtual-time worker implementing the paper's batch cost model (Eq. 3):
 /// `l_B = c0 + c1·k·max_r l_r`, with optional multiplicative jitter
 /// (hardware noise; Clockwork's premise is that this term is tiny).

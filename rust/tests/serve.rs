@@ -1,0 +1,210 @@
+//! Integration and property tests for the unified serve API (DESIGN.md
+//! §3): request conservation across systems × replica counts × clocks,
+//! and router behaviour at the cluster level.
+
+use orloj::baselines::ALL_SYSTEMS;
+use orloj::clock::{ms_to_us, RealClock, VirtualClock};
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::request::{AppId, Request};
+use orloj::prop_assert;
+use orloj::scheduler::SchedulerConfig;
+use orloj::serve::realtime;
+use orloj::serve::replay;
+use orloj::serve::{router, Cluster, ServingLoop};
+use orloj::sim::worker::SimWorker;
+use orloj::util::proptest::check_cases;
+use orloj::util::rng::Rng;
+use orloj::workload::azure::AzureTraceConfig;
+use orloj::workload::exectime::ExecTimeDist;
+use orloj::workload::trace::TraceSpec;
+use std::collections::BTreeMap;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn spec(seed: u64, duration_s: f64, load: f64) -> (TraceSpec, SchedulerConfig) {
+    let model = BatchCostModel::calibrated(30.0);
+    let mut spec = TraceSpec {
+        name: "serve-prop".into(),
+        dists: vec![
+            ExecTimeDist::multimodal("short", 1, 10.0, 10.0, 1.0, None),
+            ExecTimeDist::multimodal("long", 1, 80.0, 80.0, 1.0, None),
+        ],
+        arrivals: AzureTraceConfig {
+            apps: 2,
+            rate_per_s: 0.0,
+            duration_s,
+            ..Default::default()
+        },
+        seed,
+    };
+    spec.scale_rate_to_load(model, load, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    (spec, cfg)
+}
+
+fn seeded_cluster(
+    system: &str,
+    s: &TraceSpec,
+    cfg: &SchedulerConfig,
+    seed: u64,
+    n: usize,
+) -> Cluster<Box<dyn orloj::scheduler::Scheduler>> {
+    let mut cluster = Cluster::build(system, cfg, seed, n).expect("known system");
+    for (app, hist) in s.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile(app, &hist, 100);
+    }
+    cluster
+}
+
+fn sim_workers(cfg: &SchedulerConfig, seed: u64, n: usize) -> Vec<SimWorker> {
+    (0..n)
+        .map(|w| SimWorker::new(cfg.cost_model, 0.0, seed ^ (w as u64)))
+        .collect()
+}
+
+/// Every trace request completes exactly once
+/// (Finished/Late/TimedOut/Aborted) — for all five systems, worker counts
+/// {1, 2, 4} and every router, in virtual time.
+#[test]
+fn prop_conservation_virtual_clock() {
+    check_cases("serve-conservation-virtual", 0x5E12, 4, |rng| {
+        let (s, cfg) = spec(rng.next_u64(), 4.0 + rng.f64() * 4.0, 0.7 + rng.f64() * 0.4);
+        let trace = s.generate();
+        let slo = 1.5 + rng.f64() * 2.5;
+        let requests = trace.requests(slo);
+        let want: BTreeMap<u64, usize> = requests.iter().map(|r| (r.id.0, 1)).collect();
+        for system in ALL_SYSTEMS {
+            for n in WORKER_COUNTS {
+                let router_name = router::ROUTERS[rng.index(router::ROUTERS.len())];
+                let core = ServingLoop::new(
+                    VirtualClock::new(),
+                    seeded_cluster(system, &s, &cfg, rng.next_u64(), n),
+                    router::by_name(router_name).unwrap(),
+                );
+                let res = replay::run_cluster(core, sim_workers(&cfg, 3, n), requests.clone());
+                let mut got: BTreeMap<u64, usize> = BTreeMap::new();
+                for c in &res.completions {
+                    *got.entry(c.request.id.0).or_insert(0) += 1;
+                }
+                prop_assert!(
+                    got == want,
+                    "{system} x{n} ({router_name}): {} completions for {} requests",
+                    res.completions.len(),
+                    requests.len()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The same conservation property on the real clock: the wall-clock pump
+/// (channel intake, worker threads) must not lose or duplicate requests
+/// either. SimWorker executes instantly, so this exercises the loop
+/// mechanics, not the sleep behaviour.
+#[test]
+fn prop_conservation_real_clock() {
+    for system in ALL_SYSTEMS {
+        for n in WORKER_COUNTS {
+            let cfg = SchedulerConfig {
+                cost_model: BatchCostModel::calibrated(10.0),
+                ..Default::default()
+            };
+            let mut cluster = Cluster::build(system, &cfg, 11, n).expect("known system");
+            for app in 0..2u32 {
+                cluster.seed_app_profile(
+                    AppId(app),
+                    &orloj::core::histogram::Histogram::constant(10.0),
+                    100,
+                );
+            }
+            let core = ServingLoop::new(
+                RealClock::new(),
+                cluster,
+                router::by_name("least_loaded").unwrap(),
+            );
+            let workers = sim_workers(&cfg, 17, n);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let n_req = 80u64;
+            let mut rng = Rng::new(n as u64);
+            for i in 0..n_req {
+                // Mix of comfortable and hopeless SLOs so both completion
+                // and drop paths run (SimWorker returns instantly, so the
+                // comfortable budget only bounds loop latency).
+                let slo_ms = if rng.chance(0.8) { 800.0 } else { 0.05 };
+                tx.send(Request::new(
+                    i,
+                    AppId((i % 2) as u32),
+                    0,
+                    ms_to_us(slo_ms),
+                    10.0,
+                ))
+                .unwrap();
+            }
+            drop(tx);
+            let res = realtime::serve_cluster(core, workers, rx);
+            assert_eq!(
+                res.completions.len(),
+                n_req as usize,
+                "{system} x{n}: lost/duplicated requests"
+            );
+            let mut seen = std::collections::BTreeSet::new();
+            for c in &res.completions {
+                assert!(
+                    seen.insert(c.request.id.0),
+                    "{system} x{n}: request {} completed twice",
+                    c.request.id.0
+                );
+            }
+            assert_eq!(res.per_worker.len(), n);
+        }
+    }
+}
+
+/// Round-robin admission spreads a steady trace over every replica.
+#[test]
+fn round_robin_exercises_every_replica() {
+    let (s, cfg) = spec(21, 8.0, 0.9);
+    let trace = s.generate();
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        seeded_cluster("edf", &s, &cfg, 1, 4),
+        router::by_name("round_robin").unwrap(),
+    );
+    let res = replay::run_cluster(core, sim_workers(&cfg, 5, 4), trace.requests(3.0));
+    assert_eq!(res.per_worker.len(), 4);
+    for w in &res.per_worker {
+        assert!(w.batches > 0, "replica {} never executed: {:?}", w.worker, res.per_worker);
+    }
+}
+
+/// Adding replicas monotonically improves (or preserves) the finish count
+/// on an overloaded trace, for every router.
+#[test]
+fn replicas_relieve_overload() {
+    let (s, cfg) = spec(33, 10.0, 2.5); // 2.5× one worker's capacity
+    let trace = s.generate();
+    for router_name in router::ROUTERS {
+        let finished = |n: usize| {
+            let core = ServingLoop::new(
+                VirtualClock::new(),
+                seeded_cluster("orloj", &s, &cfg, 2, n),
+                router::by_name(router_name).unwrap(),
+            );
+            let res = replay::run_cluster(core, sim_workers(&cfg, 7, n), trace.requests(3.0));
+            res.completions
+                .iter()
+                .filter(|c| c.outcome == orloj::core::request::Outcome::Finished)
+                .count()
+        };
+        let one = finished(1);
+        let four = finished(4);
+        assert!(
+            four > one,
+            "{router_name}: 4 replicas ({four}) should beat 1 ({one}) at 2.5x load"
+        );
+    }
+}
