@@ -47,6 +47,7 @@ fn main() {
             ..Default::default()
         },
         seed: args.get_u64("seed", 7),
+        models: Vec::new(),
     };
     spec.scale_rate_to_load(cost_model, 0.9, 8);
     let trace = spec.generate();
@@ -63,8 +64,8 @@ fn main() {
     );
     for system in PAPER_SYSTEMS {
         let mut sched = baselines::by_name(system, cfg.clone(), spec.seed).unwrap();
-        for (app, hist) in spec.seed_histograms(cfg.bins) {
-            sched.seed_app_profile(app, &hist, 1000);
+        for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(model, app, &hist, 1000);
         }
         let mut worker = SimWorker::new(cost_model, 0.0, 99);
         let res = engine::run(sched.as_mut(), &mut worker, trace.requests(slo));

@@ -12,7 +12,7 @@
 use orloj::clock::ms_to_us;
 use orloj::core::batchmodel::BatchCostModel;
 use orloj::core::histogram::Histogram;
-use orloj::core::request::{AppId, Request};
+use orloj::core::request::{AppId, ModelId, Request};
 use orloj::scheduler::estimator::Estimator;
 use orloj::scheduler::orloj::OrlojScheduler;
 use orloj::scheduler::profiler::OnlineProfiler;
@@ -36,7 +36,7 @@ fn seeded(n_apps: u32) -> OrlojScheduler {
             .map(|_| rng.lognormal(3.0 + a as f64 * 0.4, 0.6))
             .collect();
         let h = Histogram::from_samples(&samples, 64);
-        s.seed_profile(AppId(a), &h, 1000);
+        s.seed_profile(ModelId::DEFAULT, AppId(a), &h, 1000);
     }
     s
 }
@@ -93,7 +93,7 @@ fn main() {
     let mut rng = Rng::new(13);
     for a in 0..4u32 {
         for _ in 0..2000 {
-            profiler.record(AppId(a), rng.lognormal(3.0 + a as f64 * 0.3, 0.7));
+            profiler.record(ModelId::DEFAULT, AppId(a), rng.lognormal(3.0 + a as f64 * 0.3, 0.7));
         }
     }
     let snap = profiler.snapshot();
@@ -101,7 +101,7 @@ fn main() {
         let ns = time_batched(3, 50, |i| {
             let mut e = Estimator::new(BatchCostModel::calibrated(30.0), 64, 0.5);
             e.refresh(snap.clone());
-            e.batch_latency(AppId((i % 4) as u32), bs).mean
+            e.batch_latency(ModelId::DEFAULT, AppId((i % 4) as u32), bs).mean
         });
         println!("  bs={bs:>3}: {:.1} µs (cold compute incl. refresh)", ns / 1000.0);
     }
@@ -123,6 +123,7 @@ fn main() {
                 ..Default::default()
             },
             seed: 1,
+            models: Vec::new(),
         };
         let model = BatchCostModel::calibrated(35.0);
         spec.scale_rate_to_load(model, 0.9, 8);
@@ -137,8 +138,8 @@ fn main() {
                 1,
             )
             .unwrap();
-            for (app, hist) in spec.seed_histograms(64) {
-                sched.seed_app_profile(app, &hist, 1000);
+            for (model, app, hist) in spec.seed_histograms(64) {
+                sched.seed_app_profile(model, app, &hist, 1000);
             }
             let mut worker = SimWorker::new(model, 0.0, 2);
             let reqs = trace.requests(3.0);

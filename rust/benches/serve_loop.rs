@@ -1,7 +1,8 @@
 //! Unified serving-loop dispatch hot-path benchmark (the in-tree harness —
 //! the offline vendored set has no criterion, see `util::benchmark`):
-//! events/sec of the clock-generic core at 1 vs. 4 workers, so later
-//! scale-out PRs have a baseline for the router + dispatch overhead.
+//! events/sec of the clock-generic core at 1 vs. 4 workers, plus a
+//! multi-model (2 models × 4 workers) case, so later scale-out PRs have a
+//! baseline for the router + placement + dispatch overhead.
 //!
 //! An "event" is one `ServingLoop::on_event` ingestion: every arrival and
 //! every batch completion (wakes ride along for free in both pumps).
@@ -11,43 +12,36 @@
 use orloj::clock::VirtualClock;
 use orloj::core::batchmodel::BatchCostModel;
 use orloj::scheduler::SchedulerConfig;
-use orloj::serve::{replay, router, Cluster, ServingLoop};
+use orloj::serve::{replay, router, Cluster, Placement, ServingLoop};
 use orloj::sim::worker::SimWorker;
 use orloj::workload::azure::AzureTraceConfig;
 use orloj::workload::exectime::ExecTimeDist;
-use orloj::workload::trace::TraceSpec;
+use orloj::workload::trace::{ModelTraffic, TraceSpec};
 use std::time::Instant;
 
-fn bench_cluster(system: &str, n_workers: usize, router_name: &str) {
-    let model = BatchCostModel::calibrated(35.0);
-    let mut spec = TraceSpec {
-        name: "bench".into(),
-        dists: vec![ExecTimeDist::multimodal("m3", 3, 10.0, 100.0, 1.0, None)],
-        arrivals: AzureTraceConfig {
-            apps: 1,
-            rate_per_s: 0.0,
-            duration_s: 45.0,
-            ..Default::default()
-        },
-        seed: 1,
-    };
-    // Offer n× one worker's capacity so every replica stays busy and the
-    // dispatch path (not idle waiting) dominates.
-    spec.scale_rate_to_load(model, 0.9 * n_workers as f64, 8);
-    let cfg = SchedulerConfig {
-        cost_model: model,
-        ..Default::default()
-    };
+fn run_bench(
+    system: &str,
+    spec: &TraceSpec,
+    cfg: &SchedulerConfig,
+    n_workers: usize,
+    router_name: &str,
+    placement_spec: &str,
+    label: &str,
+) {
     let trace = spec.generate();
     let requests = trace.requests(3.0);
     let n_req = requests.len();
-
-    let mut cluster = Cluster::build(system, &cfg, 1, n_workers).unwrap();
-    for (app, hist) in spec.seed_histograms(cfg.bins) {
-        cluster.seed_app_profile(app, &hist, 1000);
+    let n_models = spec.models.len().max(1);
+    let placement = Placement::parse(placement_spec, n_workers, n_models).unwrap();
+    let mut cluster = Cluster::build_placed(system, cfg, 1, placement).unwrap();
+    for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile(model, app, &hist, 1000);
     }
     let workers: Vec<SimWorker> = (0..n_workers)
-        .map(|w| SimWorker::new(model, 0.0, 0x51 ^ (w as u64)))
+        .map(|w| {
+            SimWorker::new(cfg.cost_model, 0.0, 0x51 ^ (w as u64))
+                .with_model_costs(spec.model_cost_models())
+        })
         .collect();
     let core = ServingLoop::new(
         VirtualClock::new(),
@@ -59,13 +53,84 @@ fn bench_cluster(system: &str, n_workers: usize, router_name: &str) {
     let wall = t0.elapsed().as_secs_f64();
     let events = res.completions.len() + res.batches;
     println!(
-        "  {system:>10} x{n_workers} ({router_name:>19}): {n_req:>6} requests, {:>6} batches, \
+        "  {label:>24} x{n_workers} ({router_name:>19}): {n_req:>6} requests, {:>6} batches, \
          {:>9.0} events/s, {:>8.0} req/s wall",
         res.batches,
         events as f64 / wall,
         n_req as f64 / wall
     );
     assert_eq!(res.completions.len(), n_req, "conservation in bench run");
+}
+
+fn single_model_spec(n_workers: usize) -> (TraceSpec, SchedulerConfig) {
+    let model = BatchCostModel::calibrated(35.0);
+    let mut spec = TraceSpec {
+        name: "bench".into(),
+        dists: vec![ExecTimeDist::multimodal("m3", 3, 10.0, 100.0, 1.0, None)],
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0,
+            duration_s: 45.0,
+            ..Default::default()
+        },
+        seed: 1,
+        models: Vec::new(),
+    };
+    // Offer n× one worker's capacity so every replica stays busy and the
+    // dispatch path (not idle waiting) dominates.
+    spec.scale_rate_to_load(model, 0.9 * n_workers as f64, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    (spec, cfg)
+}
+
+fn multi_model_spec(n_workers: usize) -> (TraceSpec, SchedulerConfig) {
+    let model = BatchCostModel::calibrated(30.0);
+    let mut spec = TraceSpec {
+        name: "bench-mm".into(),
+        dists: Vec::new(),
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0,
+            duration_s: 45.0,
+            ..Default::default()
+        },
+        seed: 2,
+        models: vec![
+            ModelTraffic::new(0, 0.7, vec![ExecTimeDist::constant("hot", 12.0)]),
+            ModelTraffic::new(
+                1,
+                0.3,
+                vec![ExecTimeDist::multimodal("cold", 2, 20.0, 100.0, 1.0, None)],
+            ),
+        ],
+    };
+    spec.scale_rate_to_load(model, 0.9 * n_workers as f64, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    (spec, cfg)
+}
+
+fn bench_cluster(system: &str, n_workers: usize, router_name: &str) {
+    let (spec, cfg) = single_model_spec(n_workers);
+    run_bench(system, &spec, &cfg, n_workers, router_name, "all", system);
+}
+
+fn bench_multimodel(system: &str, n_workers: usize, placement: &str) {
+    let (spec, cfg) = multi_model_spec(n_workers);
+    run_bench(
+        system,
+        &spec,
+        &cfg,
+        n_workers,
+        "least_loaded",
+        placement,
+        &format!("{system}/2models/{placement}"),
+    );
 }
 
 fn main() {
@@ -79,6 +144,12 @@ fn main() {
     println!("\nrouter comparison (orloj, 4 workers):");
     for router_name in router::ROUTERS {
         bench_cluster("orloj", 4, router_name);
+    }
+    println!("\nmulti-model placement (2 models × 4 workers):");
+    for system in ["edf", "orloj"] {
+        for placement in ["all", "skewed"] {
+            bench_multimodel(system, 4, placement);
+        }
     }
     println!("\nserve_loop bench OK");
 }

@@ -13,14 +13,15 @@
 //! reacts, the queue is full of doomed requests.
 
 use crate::clock::{us_to_ms, Micros};
-use crate::core::request::{Outcome, Request};
-use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::core::request::{ModelId, Outcome, Request};
+use crate::scheduler::{drain_fifo_model, ModelPending, Scheduler, SchedulerConfig};
 use std::collections::VecDeque;
 
 pub struct ClipperScheduler {
     cfg: SchedulerConfig,
     queue: VecDeque<Request>,
     dropped: Vec<(Request, Outcome)>,
+    per_model: ModelPending,
     /// Current AIMD batch-size target (float so additive increase is
     /// fractional and robust).
     target: f64,
@@ -36,6 +37,7 @@ impl ClipperScheduler {
             cfg,
             queue: VecDeque::new(),
             dropped: Vec::new(),
+            per_model: ModelPending::new(),
             target: 1.0,
             lat_track: 0.0,
             slo_track_ms: 0.0,
@@ -52,6 +54,7 @@ impl ClipperScheduler {
         while let Some(front) = self.queue.front() {
             if now > front.deadline + front.slo() {
                 let r = self.queue.pop_front().unwrap();
+                self.per_model.dec(r.model);
                 self.dropped.push((r, Outcome::TimedOut));
             } else {
                 break;
@@ -75,18 +78,23 @@ impl Scheduler for ClipperScheduler {
         } else {
             self.slo_track_ms = 0.95 * self.slo_track_ms + 0.05 * us_to_ms(req.slo());
         }
+        self.per_model.inc(req.model);
         self.queue.push_back(req);
     }
 
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
         self.drop_expired(now);
-        if self.queue.is_empty() {
-            return None;
-        }
+        let model = self.queue.front()?.model;
         let want = (self.target.floor() as usize).clamp(1, self.max_bs());
-        let take = want.min(self.queue.len());
-        let batch: Vec<Request> = self.queue.drain(..take).collect();
-        Some(batch)
+        // FIFO within the head's model: other co-located models keep their
+        // queue positions (a batch executes exactly one model).
+        let take = want.min(self.per_model.get(model).max(1));
+        Some(drain_fifo_model(
+            &mut self.queue,
+            &mut self.per_model,
+            model,
+            take,
+        ))
     }
 
     fn on_batch_complete(&mut self, _batch: &[Request], batch_ms: f64, _now: Micros) {
@@ -113,6 +121,10 @@ impl Scheduler for ClipperScheduler {
 
     fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    fn pending_for(&self, model: ModelId) -> usize {
+        self.per_model.get(model)
     }
 }
 
@@ -179,6 +191,24 @@ mod tests {
         let d = s.drain_dropped();
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].1, Outcome::TimedOut);
+    }
+
+    #[test]
+    fn model_pure_fifo_batches() {
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        s.target = 4.0;
+        for i in 0..6 {
+            let m = ModelId((i % 2) as u32);
+            s.on_arrival(req(i, 0, 1000.0).with_model(m), 0);
+        }
+        let b = s.next_batch(0).unwrap();
+        // Head is model 0; its three requests batch together in FIFO order.
+        assert_eq!(b.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert!(b.iter().all(|r| r.model == ModelId(0)));
+        assert_eq!(s.pending(), 3);
+        assert_eq!(s.pending_for(ModelId(1)), 3);
+        let b2 = s.next_batch(0).unwrap();
+        assert!(b2.iter().all(|r| r.model == ModelId(1)));
     }
 
     #[test]

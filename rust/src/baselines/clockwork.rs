@@ -17,8 +17,8 @@
 //! window accounting, abort of the batch planned into a blown window.
 
 use crate::clock::{us_to_ms, Micros};
-use crate::core::request::{Outcome, Request};
-use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::core::request::{ModelId, Outcome, Request};
+use crate::scheduler::{drain_edf_model, ModelPending, Scheduler, SchedulerConfig};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -28,6 +28,7 @@ pub struct ClockworkScheduler {
     queue: BinaryHeap<Reverse<(Micros, u64)>>,
     by_seq: std::collections::HashMap<u64, Request>,
     dropped: Vec<(Request, Outcome)>,
+    per_model: ModelPending,
     /// Point estimate of the solo execution time (ms). Clockwork profiles
     /// once offline; we keep a slowly-converging estimate of the mean to
     /// mirror its calibration runs.
@@ -50,6 +51,7 @@ impl ClockworkScheduler {
             queue: BinaryHeap::new(),
             by_seq: std::collections::HashMap::new(),
             dropped: Vec::new(),
+            per_model: ModelPending::new(),
             exec_point_ms: 10.0,
             calibrated: false,
             window_end: None,
@@ -95,6 +97,7 @@ impl Scheduler for ClockworkScheduler {
 
     fn seed_app_profile(
         &mut self,
+        _model: ModelId,
         _app: crate::core::request::AppId,
         hist: &crate::core::histogram::Histogram,
         _weight: u64,
@@ -119,6 +122,7 @@ impl Scheduler for ClockworkScheduler {
         }
         let seq = req.id.0;
         self.queue.push(Reverse((req.deadline, seq)));
+        self.per_model.inc(req.model);
         self.by_seq.insert(seq, req);
     }
 
@@ -128,6 +132,7 @@ impl Scheduler for ClockworkScheduler {
             match self.peek_deadline() {
                 Some(d) if us_to_ms(now) + self.est(1) > us_to_ms(d) => {
                     let r = self.pop_head().unwrap();
+                    self.per_model.dec(r.model);
                     self.dropped.push((r, Outcome::TimedOut));
                 }
                 _ => break,
@@ -142,13 +147,21 @@ impl Scheduler for ClockworkScheduler {
                 bs = cand;
             }
         }
-        let take = bs.min(self.by_seq.len());
-        let mut batch = Vec::with_capacity(take);
-        for _ in 0..take {
-            if let Some(r) = self.pop_head() {
-                batch.push(r);
-            }
-        }
+        // EDF fill restricted to the head's model (a planned window
+        // executes exactly one model); other models' requests keep their
+        // queue positions.
+        let model = {
+            let Reverse((_, head_seq)) = self.queue.peek().copied()?;
+            self.by_seq[&head_seq].model
+        };
+        let take = bs.min(self.per_model.get(model).max(1));
+        let batch = drain_edf_model(
+            &mut self.queue,
+            &mut self.by_seq,
+            &mut self.per_model,
+            model,
+            take,
+        );
         if batch.is_empty() {
             return None;
         }
@@ -190,6 +203,10 @@ impl Scheduler for ClockworkScheduler {
 
     fn pending(&self) -> usize {
         self.by_seq.len()
+    }
+
+    fn pending_for(&self, model: ModelId) -> usize {
+        self.per_model.get(model)
     }
 }
 
@@ -255,6 +272,25 @@ mod tests {
         let d = s.drain_dropped();
         assert!(!d.is_empty());
         assert!(d.iter().all(|(_, o)| *o == Outcome::Aborted));
+    }
+
+    #[test]
+    fn windows_are_model_pure() {
+        let mut s = seeded();
+        for i in 0..6 {
+            let m = ModelId((i % 2) as u32);
+            s.on_arrival(req(i, 0, 500.0, 10.0).with_model(m), 0);
+        }
+        let b = s.next_batch(0).unwrap();
+        assert!(b.iter().all(|r| r.model == b[0].model));
+        assert_eq!(b.len(), 3, "only the head's model fills the window");
+        assert_eq!(s.pending(), 3);
+        let other = if b[0].model == ModelId(0) {
+            ModelId(1)
+        } else {
+            ModelId(0)
+        };
+        assert_eq!(s.pending_for(other), 3);
     }
 
     #[test]

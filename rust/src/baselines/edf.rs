@@ -1,11 +1,13 @@
 //! Plain earliest-deadline-first max-batch policy — an ablation baseline
 //! (not in the paper's comparison set) isolating how much of Orloj's win
 //! comes from the distribution-aware score versus simply being
-//! deadline-aware and work-conserving.
+//! deadline-aware and work-conserving. Batches are model-pure: the head's
+//! model is served, later-deadline requests of other co-located models
+//! wait for their own batch.
 
 use crate::clock::{us_to_ms, Micros};
-use crate::core::request::{Outcome, Request};
-use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::core::request::{ModelId, Outcome, Request};
+use crate::scheduler::{drain_edf_model, ModelPending, Scheduler, SchedulerConfig};
 use crate::util::stats::Welford;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -16,6 +18,7 @@ pub struct EdfScheduler {
     by_seq: HashMap<u64, Request>,
     dropped: Vec<(Request, Outcome)>,
     exec_mean: Welford,
+    per_model: ModelPending,
 }
 
 impl EdfScheduler {
@@ -26,6 +29,7 @@ impl EdfScheduler {
             by_seq: HashMap::new(),
             dropped: Vec::new(),
             exec_mean: Welford::new(),
+            per_model: ModelPending::new(),
         }
     }
 
@@ -60,6 +64,7 @@ impl Scheduler for EdfScheduler {
 
     fn seed_app_profile(
         &mut self,
+        _model: ModelId,
         _app: crate::core::request::AppId,
         hist: &crate::core::histogram::Histogram,
         _weight: u64,
@@ -73,6 +78,7 @@ impl Scheduler for EdfScheduler {
             return;
         }
         self.queue.push(Reverse((req.deadline, req.id.0)));
+        self.per_model.inc(req.model);
         self.by_seq.insert(req.id.0, req);
     }
 
@@ -82,12 +88,14 @@ impl Scheduler for EdfScheduler {
             if us_to_ms(now) + self.est(1) > us_to_ms(d) {
                 let r = self.by_seq.remove(&seq).unwrap();
                 self.queue.pop();
+                self.per_model.dec(r.model);
                 self.dropped.push((r, Outcome::TimedOut));
             } else {
                 break;
             }
         }
-        let (head_deadline, _) = self.peek()?;
+        let (head_deadline, head_seq) = self.peek()?;
+        let model = self.by_seq[&head_seq].model;
         let slack = us_to_ms(head_deadline) - us_to_ms(now);
         let mut bs = 1usize;
         for &cand in &self.cfg.batch_sizes {
@@ -95,17 +103,16 @@ impl Scheduler for EdfScheduler {
                 bs = cand;
             }
         }
-        let take = bs.min(self.by_seq.len());
-        let mut batch = Vec::with_capacity(take);
-        for _ in 0..take {
-            match self.peek() {
-                Some((_, seq)) => {
-                    self.queue.pop();
-                    batch.push(self.by_seq.remove(&seq).unwrap());
-                }
-                None => break,
-            }
-        }
+        // Model-pure fill: take the head's model in deadline order,
+        // re-queueing other models' requests untouched.
+        let take = bs.min(self.per_model.get(model).max(1));
+        let batch = drain_edf_model(
+            &mut self.queue,
+            &mut self.by_seq,
+            &mut self.per_model,
+            model,
+            take,
+        );
         if batch.is_empty() {
             None
         } else {
@@ -130,6 +137,10 @@ impl Scheduler for EdfScheduler {
     fn pending(&self) -> usize {
         self.by_seq.len()
     }
+
+    fn pending_for(&self, model: ModelId) -> usize {
+        self.per_model.get(model)
+    }
 }
 
 #[cfg(test)]
@@ -139,17 +150,47 @@ mod tests {
     use crate::core::batchmodel::BatchCostModel;
     use crate::core::request::AppId;
 
-    #[test]
-    fn serves_in_deadline_order() {
+    fn sched() -> EdfScheduler {
         let cfg = SchedulerConfig {
             cost_model: BatchCostModel::new(0.0, 1.0),
             ..Default::default()
         };
         let mut s = EdfScheduler::new(cfg, 0);
         s.seed_exec_mean(5.0);
+        s
+    }
+
+    #[test]
+    fn serves_in_deadline_order() {
+        let mut s = sched();
         s.on_arrival(Request::new(1, AppId(0), 0, ms_to_us(300.0), 5.0), 0);
         s.on_arrival(Request::new(2, AppId(0), 0, ms_to_us(100.0), 5.0), 0);
         let b = s.next_batch(0).unwrap();
         assert_eq!(b[0].id.0, 2);
+    }
+
+    #[test]
+    fn batches_never_mix_models() {
+        let mut s = sched();
+        // Interleaved deadlines across two models.
+        for i in 0..6u64 {
+            let m = ModelId((i % 2) as u32);
+            s.on_arrival(
+                Request::new(i, AppId(0), 0, ms_to_us(100.0 + i as f64), 5.0).with_model(m),
+                0,
+            );
+        }
+        assert_eq!(s.pending_for(ModelId(0)), 3);
+        assert_eq!(s.pending_for(ModelId(1)), 3);
+        let b = s.next_batch(0).unwrap();
+        assert!(b.iter().all(|r| r.model == b[0].model), "model-pure batch");
+        assert_eq!(b[0].model, ModelId(0), "head's model served first");
+        assert_eq!(b.len(), 3);
+        // The other model's requests are still queued, in order.
+        assert_eq!(s.pending(), 3);
+        assert_eq!(s.pending_for(ModelId(1)), 3);
+        let b2 = s.next_batch(0).unwrap();
+        assert_eq!(b2.len(), 3);
+        assert!(b2.iter().all(|r| r.model == ModelId(1)));
     }
 }

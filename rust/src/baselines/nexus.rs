@@ -9,8 +9,8 @@
 //! drifts, and "it cannot reach a stable state" (paper §2.3).
 
 use crate::clock::{us_to_ms, Micros};
-use crate::core::request::{Outcome, Request};
-use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::core::request::{ModelId, Outcome, Request};
+use crate::scheduler::{drain_fifo_model, ModelPending, Scheduler, SchedulerConfig};
 use crate::util::stats::Welford;
 use std::collections::VecDeque;
 
@@ -18,6 +18,7 @@ pub struct NexusScheduler {
     cfg: SchedulerConfig,
     queue: VecDeque<Request>,
     dropped: Vec<(Request, Outcome)>,
+    per_model: ModelPending,
     /// Mean solo exec time (ms) from observation (epoch input).
     exec_mean: Welford,
     /// Mean SLO (ms) from observation.
@@ -37,6 +38,7 @@ impl NexusScheduler {
             cfg,
             queue: VecDeque::new(),
             dropped: Vec::new(),
+            per_model: ModelPending::new(),
             exec_mean: Welford::new(),
             slo_mean: Welford::new(),
             plan_bs: 1,
@@ -85,6 +87,7 @@ impl NexusScheduler {
         while let Some(front) = self.queue.front() {
             if us_to_ms(now) + lat > us_to_ms(front.deadline) {
                 let r = self.queue.pop_front().unwrap();
+                self.per_model.dec(r.model);
                 self.dropped.push((r, Outcome::TimedOut));
             } else {
                 break;
@@ -100,6 +103,7 @@ impl Scheduler for NexusScheduler {
 
     fn seed_app_profile(
         &mut self,
+        _model: ModelId,
         _app: crate::core::request::AppId,
         hist: &crate::core::histogram::Histogram,
         weight: u64,
@@ -119,6 +123,7 @@ impl Scheduler for NexusScheduler {
         if self.exec_mean.count() == 0 {
             self.replan(now);
         }
+        self.per_model.inc(req.model);
         self.queue.push_back(req);
     }
 
@@ -127,18 +132,23 @@ impl Scheduler for NexusScheduler {
             self.replan(now);
         }
         self.drop_expired(now);
-        if self.queue.is_empty() {
-            return None;
-        }
-        // Execute only full planned batches, except when the head's
-        // deadline forces a partial batch now.
-        let head_deadline = self.queue.front().unwrap().deadline;
+        let head = self.queue.front()?;
+        let (model, head_deadline) = (head.model, head.deadline);
+        // Execute only full planned batches (of the head's model — a batch
+        // executes exactly one model), except when the head's deadline
+        // forces a partial batch now.
+        let available = self.per_model.get(model).max(1);
         let forced = us_to_ms(now) + 2.0 * self.plan_latency_ms > us_to_ms(head_deadline);
-        if self.queue.len() < self.plan_bs && !forced {
+        if available < self.plan_bs && !forced {
             return None; // wait for the plan's batch to fill
         }
-        let take = self.plan_bs.min(self.queue.len());
-        Some(self.queue.drain(..take).collect())
+        let take = self.plan_bs.min(available);
+        Some(drain_fifo_model(
+            &mut self.queue,
+            &mut self.per_model,
+            model,
+            take,
+        ))
     }
 
     fn on_batch_complete(&mut self, batch: &[Request], _batch_ms: f64, _now: Micros) {
@@ -167,6 +177,10 @@ impl Scheduler for NexusScheduler {
 
     fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    fn pending_for(&self, model: ModelId) -> usize {
+        self.per_model.get(model)
     }
 }
 
@@ -226,6 +240,25 @@ mod tests {
         // planned latency at bs=1 is 50 ms; at t=20ms, 20+50 > 60 → drop.
         assert!(s.next_batch(ms_to_us(20.0)).is_none());
         assert_eq!(s.drain_dropped().len(), 1);
+    }
+
+    #[test]
+    fn plan_batches_are_model_pure() {
+        let mut s = NexusScheduler::new(cfg(), 0);
+        s.seed_exec_mean(10.0);
+        // plan_bs = 4 at SLO 100; give each model exactly a plan's worth.
+        for i in 0..8 {
+            let m = ModelId((i % 2) as u32);
+            s.on_arrival(req(i, 0, 100.0, 10.0).with_model(m), 0);
+        }
+        s.replan(0);
+        assert_eq!(s.plan_bs, 4);
+        let b = s.next_batch(0).unwrap();
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|r| r.model == ModelId(0)));
+        assert_eq!(s.pending_for(ModelId(1)), 4);
+        let b2 = s.next_batch(0).unwrap();
+        assert!(b2.iter().all(|r| r.model == ModelId(1)));
     }
 
     #[test]

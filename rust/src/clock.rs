@@ -41,7 +41,7 @@ impl<C: Clock + ?Sized> Clock for Arc<C> {
     }
 }
 
-impl<'a, C: Clock + ?Sized> Clock for &'a C {
+impl<C: Clock + ?Sized> Clock for &C {
     fn now(&self) -> Micros {
         (**self).now()
     }

@@ -11,9 +11,21 @@
 use crate::clock::Micros;
 
 /// Application identity. Requests are tagged per application (paper §3.2,
-/// step 2a); the profiler keeps one execution-time distribution per app.
+/// step 2a); the profiler keeps one execution-time distribution per
+/// (model, app) pair.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct AppId(pub u32);
+
+/// Model identity. A cluster multiplexes many models across its workers
+/// (Clockwork-style per-model placement); every request names the model it
+/// must execute on, and a batch never mixes models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u32);
+
+impl ModelId {
+    /// The single-model deployments' implicit model.
+    pub const DEFAULT: ModelId = ModelId(0);
+}
 
 /// Unique request id.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -24,6 +36,9 @@ pub struct RequestId(pub u64);
 pub struct Request {
     pub id: RequestId,
     pub app: AppId,
+    /// Which model this request must execute on. Routing only considers
+    /// workers hosting it; schedulers never batch across models.
+    pub model: ModelId,
     /// Arrival time.
     pub release: Micros,
     /// Deadline = release + SLO.
@@ -41,6 +56,7 @@ impl Request {
         Request {
             id: RequestId(id),
             app,
+            model: ModelId::DEFAULT,
             release,
             deadline: release + slo,
             exec_ms,
@@ -50,6 +66,11 @@ impl Request {
 
     pub fn with_variant(mut self, variant: u32) -> Self {
         self.variant = variant;
+        self
+    }
+
+    pub fn with_model(mut self, model: ModelId) -> Self {
+        self.model = model;
         self
     }
 
@@ -98,6 +119,8 @@ pub struct Completion {
     pub at: Micros,
     /// Size of the batch it executed in (0 if never executed).
     pub batch_size: usize,
+    /// Worker that executed the batch (None for scheduler-side drops).
+    pub worker: Option<usize>,
 }
 
 impl Completion {
@@ -123,6 +146,14 @@ mod tests {
     }
 
     #[test]
+    fn model_tag_defaults_and_overrides() {
+        let r = Request::new(1, AppId(0), 0, 1_000, 1.0);
+        assert_eq!(r.model, ModelId::DEFAULT);
+        let r = r.with_model(ModelId(3));
+        assert_eq!(r.model, ModelId(3));
+    }
+
+    #[test]
     fn outcome_slo() {
         assert!(Outcome::Finished.met_slo());
         assert!(!Outcome::Late.met_slo());
@@ -138,6 +169,7 @@ mod tests {
             outcome: Outcome::Finished,
             at: 4_500,
             batch_size: 4,
+            worker: Some(0),
         };
         assert!((c.latency_ms() - 3.5).abs() < 1e-12);
     }

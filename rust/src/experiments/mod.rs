@@ -17,7 +17,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::azure::AzureTraceConfig;
 use crate::workload::exectime::{static_tasks, table1_tasks, ExecTimeDist};
-use crate::workload::trace::TraceSpec;
+use crate::workload::trace::{ModelTraffic, TraceSpec};
 
 /// Shared experiment knobs.
 #[derive(Debug, Clone)]
@@ -37,6 +37,11 @@ pub struct ExpOptions {
     pub workers: usize,
     /// Router admitting arrivals to replicas (see `serve::router`).
     pub router: String,
+    /// Co-served models for the `multimodel` grid (≥2 there; other
+    /// experiments stay single-model).
+    pub models: usize,
+    /// Model placement spec (see `serve::Placement::parse`).
+    pub placement: String,
 }
 
 impl Default for ExpOptions {
@@ -49,6 +54,8 @@ impl Default for ExpOptions {
             runs: 1,
             workers: 1,
             router: "round_robin".into(),
+            models: 1,
+            placement: "all".into(),
         }
     }
 }
@@ -65,7 +72,7 @@ impl ExpOptions {
 
     /// Cluster shape for the runner.
     fn cluster(&self) -> ClusterSpec {
-        ClusterSpec::new(self.workers, &self.router)
+        ClusterSpec::new(self.workers, &self.router).with_placement(&self.placement)
     }
 }
 
@@ -102,6 +109,7 @@ fn spec_for(
             ..Default::default()
         },
         seed: opts.seed ^ seed_off,
+        models: Vec::new(),
     };
     spec.scale_rate_to_load(cost_model, opts.util, 8);
     (spec, cfg)
@@ -152,6 +160,14 @@ fn grid(name: &str, dists: Vec<ExecTimeDist>, opts: &ExpOptions, seed_off: u64) 
                 a.report.late += c.report.late;
                 a.report.timed_out += c.report.timed_out;
                 a.report.aborted += c.report.aborted;
+                for (m, r) in c.report.per_model {
+                    if let Some(ar) = a.report.per_model.get_mut(&m) {
+                        ar.finished += r.finished;
+                        ar.total += r.total;
+                    } else {
+                        a.report.per_model.insert(m, r);
+                    }
+                }
             }
         }
     }
@@ -164,6 +180,12 @@ fn print_grid(title: &str, cells: &[Cell]) {
         print!(
             "{}",
             runner::render_worker_util("per-worker utilization", cells)
+        );
+    }
+    if cells.iter().any(|c| c.report.per_model.len() > 1) {
+        print!(
+            "{}",
+            runner::render_model_rates("per-model finish rates", cells)
         );
     }
 }
@@ -197,6 +219,19 @@ fn cells_to_json(case: &str, cells: &[Cell]) -> Json {
                         .iter()
                         .map(|w| Json::num(w.batches as f64)),
                 ),
+            ),
+            (
+                "per_model",
+                Json::arr(c.report.per_model.iter().map(|(m, r)| {
+                    Json::obj(vec![
+                        ("model", Json::num(*m as f64)),
+                        ("finish_rate", Json::num(r.finish_rate())),
+                        ("finished", Json::num(r.finished as f64)),
+                        ("total", Json::num(r.total as f64)),
+                        ("lat_p50", Json::num(r.latency.p50)),
+                        ("lat_p99", Json::num(r.latency.p99)),
+                    ])
+                })),
             ),
         ])
     }))
@@ -508,6 +543,101 @@ pub fn fig14(opts: &ExpOptions) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Multi-model (beyond the paper): skewed model mixes on a shared fleet
+// ---------------------------------------------------------------------
+
+/// Build the hot-plus-cold model mix: model 0 is a fast low-variance
+/// model; models 1.. are slower and increasingly multimodal.
+fn multimodel_models(m: usize, shares: &[f64]) -> Vec<ModelTraffic> {
+    (0..m)
+        .map(|j| {
+            let dists = if j == 0 {
+                vec![ExecTimeDist::lognormal_mean_p99("hot-fast", 10.0, 18.0)]
+            } else {
+                vec![ExecTimeDist::multimodal(
+                    &format!("cold{j}-slow"),
+                    2,
+                    (15.0 * j as f64).min(100.0),
+                    120.0,
+                    1.0,
+                    None,
+                )]
+            };
+            ModelTraffic::new(j as u32, shares[j], dists)
+        })
+        .collect()
+}
+
+pub fn multimodel(opts: &ExpOptions) -> Json {
+    let m = opts.models.max(2);
+    println!(
+        "### multimodel — skewed traffic mixes over {m} co-served models \
+         ({} workers, placement '{}')\n",
+        opts.workers, opts.placement
+    );
+    let spread = |hot: f64| -> Vec<f64> {
+        let mut s = vec![(1.0 - hot) / (m - 1) as f64; m];
+        s[0] = hot;
+        s
+    };
+    let mixes: Vec<(String, Vec<f64>)> = vec![
+        ("even-mix".into(), vec![1.0 / m as f64; m]),
+        ("hot-80".into(), spread(0.8)),
+        ("hot-95".into(), spread(0.95)),
+    ];
+    let mut all = Vec::new();
+    for (case, shares) in mixes {
+        let models = multimodel_models(m, &shares);
+        // Calibrate the shared cost model to the share-weighted mean solo
+        // latency across models (per-model curves come from the spec via
+        // the runner).
+        let mut rng = Rng::new(opts.seed ^ 0x3D);
+        let mean: f64 = models
+            .iter()
+            .map(|mt| {
+                mt.share
+                    * mt.dists
+                        .iter()
+                        .map(|d| d.histogram(&mut rng, 4000, 64).mean())
+                        .sum::<f64>()
+                    / mt.dists.len() as f64
+            })
+            .sum::<f64>()
+            / shares.iter().sum::<f64>();
+        let cost_model = BatchCostModel::calibrated(mean);
+        let cfg = SchedulerConfig {
+            cost_model,
+            ..Default::default()
+        };
+        let mut spec = TraceSpec {
+            name: case.clone(),
+            dists: Vec::new(),
+            arrivals: AzureTraceConfig {
+                apps: 1,
+                rate_per_s: 0.0,
+                duration_s: opts.duration_s,
+                ..Default::default()
+            },
+            seed: opts.seed ^ 0x3D,
+            models,
+        };
+        spec.scale_rate_to_load(cost_model, opts.util, 8);
+        let cells = runner::run_grid(
+            &ALL_SYSTEMS,
+            &spec,
+            &opts.slos,
+            &cfg,
+            spec.seed,
+            &opts.cluster(),
+        );
+        print_grid(&case, &cells);
+        println!();
+        all.push(cells_to_json(&case, &cells));
+    }
+    Json::arr(all)
+}
+
+// ---------------------------------------------------------------------
 // Ablation (beyond the paper): EDF baseline + feasibility quantile
 // ---------------------------------------------------------------------
 
@@ -548,6 +678,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
         "table5" | "fig7" => table5(opts),
         "fig13" => fig13(opts),
         "fig14" => fig14(opts),
+        "multimodel" => multimodel(opts),
         "ablation" => ablation(opts),
         _ => return None,
     };
@@ -555,8 +686,9 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
 }
 
 /// All experiment ids in run order.
-pub const ALL: [&str; 10] = [
-    "fig2", "fig3", "fig6", "table2", "table3", "table4", "table5", "fig13", "fig14", "ablation",
+pub const ALL: [&str; 11] = [
+    "fig2", "fig3", "fig6", "table2", "table3", "table4", "table5", "fig13", "fig14", "multimodel",
+    "ablation",
 ];
 
 #[cfg(test)]
@@ -587,6 +719,33 @@ mod tests {
             let fr = row.get("finish_rate").as_f64().unwrap();
             assert!((0.0..=1.0).contains(&fr));
             assert_eq!(row.get("workers").as_f64().unwrap(), 1.0);
+        }
+    }
+
+    #[test]
+    fn multimodel_quick_reports_per_model_rates() {
+        let mut opts = ExpOptions::quick();
+        opts.duration_s = 6.0;
+        opts.slos = vec![3.0];
+        opts.workers = 2;
+        opts.models = 2;
+        opts.placement = "skewed".into();
+        let j = multimodel(&opts);
+        let cases = j.as_arr().unwrap();
+        assert_eq!(cases.len(), 3, "even + two skew levels");
+        for case in cases {
+            // 1 SLO × 5 systems per case.
+            let rows = case.as_arr().unwrap();
+            assert_eq!(rows.len(), 5);
+            for row in rows {
+                let pm = row.get("per_model").as_arr().unwrap();
+                assert_eq!(pm.len(), 2, "two models per cell");
+                for entry in pm {
+                    let fr = entry.get("finish_rate").as_f64().unwrap();
+                    assert!((0.0..=1.0).contains(&fr));
+                    assert!(entry.get("total").as_f64().unwrap() > 0.0);
+                }
+            }
         }
     }
 

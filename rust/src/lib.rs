@@ -32,4 +32,4 @@ pub mod util;
 pub mod workload;
 
 pub use crate::clock::{Clock, Micros, RealClock, VirtualClock};
-pub use crate::core::request::{AppId, Completion, Outcome, Request, RequestId};
+pub use crate::core::request::{AppId, Completion, ModelId, Outcome, Request, RequestId};

@@ -23,6 +23,8 @@ fn usage() -> ! {
              --runs <n>            repetitions to average    (default 1)\n\
              --workers <n>         scheduling replicas       (default 1)\n\
              --router <name>       {}  (default round_robin)\n\
+             --models <n>          co-served models for the multimodel grid (default 2 there)\n\
+             --placement <spec>    {}|'0,1;1;0'  worker→models (default all)\n\
              --quick               fast settings for smoke runs\n\
            serve                 PJRT serving demo (needs `make artifacts`)\n\
              --artifacts <dir>     artifact directory        (default artifacts)\n\
@@ -30,14 +32,18 @@ fn usage() -> ! {
              --system <name>       orloj|clipper|nexus|clockwork|edf\n\
              --workers <n>         replicas (one PJRT worker each, default 1)\n\
              --router <name>       arrival router            (default round_robin)\n\
+             --models <n>          co-served model copies (default 1; each loads its own runtime)\n\
+             --placement <spec>    worker→models spec        (default all)\n\
              --slo-ms <ms>         per-request SLO           (default 12x deep solo latency)\n\
              --gap-us <us>         inter-arrival gap         (default 500)\n\
            trace                 generate a trace JSON\n\
              --out <path>          output path (default trace.json)\n\
              --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
+             --models <n>          multi-model trace: n models with skewed shares (default 1)\n\
            list                  list experiment ids",
         experiments::ALL.join(", "),
         orloj::serve::router::ROUTERS.join("|"),
+        orloj::serve::placement::PLACEMENTS.join("|"),
     );
     std::process::exit(2);
 }
@@ -56,6 +62,10 @@ fn exp_options(args: &Args) -> ExpOptions {
     opts.workers = args.get_usize("workers", opts.workers).max(1);
     if let Some(router) = args.get("router") {
         opts.router = router.to_string();
+    }
+    opts.models = args.get_usize("models", opts.models).max(1);
+    if let Some(placement) = args.get("placement") {
+        opts.placement = placement.to_string();
     }
     opts
 }
@@ -85,9 +95,38 @@ fn cmd_experiment(args: &Args) {
 fn cmd_trace(args: &Args) {
     use orloj::workload::azure::AzureTraceConfig;
     use orloj::workload::exectime::ExecTimeDist;
-    use orloj::workload::trace::TraceSpec;
+    use orloj::workload::trace::{ModelTraffic, TraceSpec};
     let apps = args.get_usize("apps", 2);
     let modes = args.get_usize("modes", 2);
+    let n_models = args.get_usize("models", 1).max(1);
+    // Multi-model traces get a skewed mix: model 0 takes half the
+    // traffic, the rest split the remainder evenly.
+    let models: Vec<ModelTraffic> = if n_models > 1 {
+        (0..n_models)
+            .map(|m| {
+                let share = if m == 0 {
+                    0.5
+                } else {
+                    0.5 / (n_models - 1) as f64
+                };
+                let dists = (0..apps)
+                    .map(|i| {
+                        ExecTimeDist::multimodal(
+                            &format!("m{m}-app{i}"),
+                            modes,
+                            10.0 * (m + 1) as f64,
+                            100.0 * (m + 1) as f64,
+                            1.0,
+                            None,
+                        )
+                    })
+                    .collect();
+                ModelTraffic::new(m as u32, share, dists)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
     let spec = TraceSpec {
         name: "cli".into(),
         dists: (0..apps)
@@ -102,13 +141,15 @@ fn cmd_trace(args: &Args) {
             ..Default::default()
         },
         seed: args.get_u64("seed", 1),
+        models,
     };
     let trace = spec.generate();
     let out = args.get_or("out", "trace.json").to_string();
     trace.save(std::path::Path::new(&out)).expect("write trace");
     println!(
-        "wrote {} events (p99={:.1} ms) to {out}",
+        "wrote {} events across {} model(s) (p99={:.1} ms) to {out}",
         trace.events.len(),
+        trace.model_ids().len(),
         trace.p99_ms
     );
 }
@@ -116,10 +157,11 @@ fn cmd_trace(args: &Args) {
 fn cmd_serve(args: &Args) {
     use orloj::clock::ms_to_us;
     use orloj::core::batchmodel::BatchCostModel;
-    use orloj::core::request::{AppId, Request};
-    use orloj::runtime::executor::PjrtWorker;
+    use orloj::core::request::{AppId, ModelId, Request};
+    use orloj::runtime::executor::{pjrt_placed_replicas, MultiModelPjrtWorker, PjrtWorker};
     use orloj::runtime::ModelRuntime;
     use orloj::scheduler::SchedulerConfig;
+    use orloj::serve::Placement;
     use orloj::server::metrics::RunReport;
     use orloj::server::Server;
     use orloj::util::rng::Rng;
@@ -129,7 +171,11 @@ fn cmd_serve(args: &Args) {
     let n = args.get_usize("requests", 200);
     let system = args.get_or("system", "orloj").to_string();
     let n_workers = args.get_usize("workers", 1).max(1);
+    let n_models = args.get_usize("models", 1).max(1);
     let router_name = args.get_or("router", "round_robin").to_string();
+    let placement_spec = args.get_or("placement", "all").to_string();
+    let placement = Placement::parse(&placement_spec, n_workers, n_models)
+        .expect("valid placement covering every model");
     let rt = Arc::new(ModelRuntime::load(std::path::Path::new(&dir)).expect("load artifacts"));
     let mut calib_worker = PjrtWorker::new(rt.clone());
     let calib = calib_worker.calibrate(10);
@@ -141,22 +187,30 @@ fn cmd_serve(args: &Args) {
         ..Default::default()
     };
     let max_depth = rt.manifest.model.max_depth;
-    // One scheduler replica + one PJRT worker per --workers (the paper's
-    // per-GPU scheduler, scaled out). Replicas beyond the first load their
-    // own ModelRuntime: the PJRT client is thread-compatible, not
-    // thread-safe (see runtime/mod.rs), so each concurrent worker thread
-    // needs its own client — exactly the per-GPU-device semantics.
-    let runtimes: Vec<Arc<ModelRuntime>> = std::iter::once(rt.clone())
-        .chain((1..n_workers).map(|_| {
-            Arc::new(ModelRuntime::load(std::path::Path::new(&dir)).expect("load artifacts"))
-        }))
-        .collect();
-    let replicas = orloj::runtime::executor::pjrt_replicas(&system, &cfg, 7, &calib, &runtimes)
-        .expect("known system");
+    // The calibration worker's handle must go before serving starts: the
+    // PJRT client is thread-compatible, not thread-safe, and its runtime
+    // is reused as the first hosted slot below.
+    drop(calib_worker);
+    // One scheduler replica per --workers (the paper's per-GPU scheduler,
+    // scaled out), each hosting one ModelRuntime per *hosted model*: each
+    // concurrent worker thread needs its own client (see runtime/mod.rs),
+    // and each co-served model its own compiled executables — exactly the
+    // per-GPU-device, per-model-memory semantics. The calibration runtime
+    // fills the first slot instead of reloading from disk.
+    let replicas = pjrt_placed_replicas(
+        &system,
+        &cfg,
+        7,
+        &calib,
+        std::path::Path::new(&dir),
+        &placement,
+        Some(rt),
+    )
+    .expect("known system");
     let router = orloj::serve::router::by_name(&router_name).expect("known router");
     let (submitter, rx) =
-        Server::<Box<dyn orloj::scheduler::Scheduler>, PjrtWorker>::channel();
-    let server = Server::cluster(replicas, router);
+        Server::<Box<dyn orloj::scheduler::Scheduler>, MultiModelPjrtWorker>::channel();
+    let server = Server::cluster(replicas, router).with_placement(placement);
     let handle = std::thread::spawn(move || server.run(rx));
     let mut rng = Rng::new(99);
     let slo_ms = args.get_f64("slo-ms", mean_ms * max_depth as f64 * 12.0);
@@ -164,6 +218,7 @@ fn cmd_serve(args: &Args) {
     let t0 = std::time::Instant::now();
     for i in 0..n as u64 {
         let depth = 1 + rng.index(max_depth) as u32;
+        let model = ModelId((i % n_models as u64) as u32);
         let release = t0.elapsed().as_micros() as u64;
         let exec = calib
             .iter()
@@ -171,7 +226,8 @@ fn cmd_serve(args: &Args) {
             .map(|(_, m)| *m)
             .unwrap_or(mean_ms);
         let req = Request::new(i, AppId(depth - 1), release, ms_to_us(slo_ms), exec)
-            .with_variant(depth);
+            .with_variant(depth)
+            .with_model(model);
         submitter.submit(req);
         std::thread::sleep(std::time::Duration::from_micros(gap_us));
     }
@@ -179,7 +235,28 @@ fn cmd_serve(args: &Args) {
     let res = handle.join().unwrap();
     let report = RunReport::from_completions(&res.completions)
         .with_worker_stats(&res.per_worker, res.end_time);
-    println!("[{system} x{n_workers} router={router_name}] {report}");
+    println!(
+        "[{system} x{n_workers} router={router_name} models={n_models} placement={placement_spec}] {report}"
+    );
+    for w in &report.per_worker {
+        println!(
+            "  worker {}: utilization={:.2} batches={} busy={:.1}ms",
+            w.worker,
+            w.utilization,
+            w.batches,
+            w.busy_us as f64 / 1000.0
+        );
+    }
+    for (m, r) in &report.per_model {
+        println!(
+            "  model {m}: finish_rate={:.3} ({}/{})  lat_p50={:.1}ms lat_p99={:.1}ms",
+            r.finish_rate(),
+            r.finished,
+            r.total,
+            r.latency.p50,
+            r.latency.p99
+        );
+    }
 }
 
 fn main() {

@@ -7,11 +7,19 @@
 
 use super::ModelRuntime;
 use crate::core::histogram::Histogram;
-use crate::core::request::{AppId, Request};
+use crate::core::request::{AppId, ModelId, Request};
 use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::serve::Placement;
 use crate::sim::worker::Worker;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// One serving replica: a scheduler paired with its PJRT executor.
+pub type PjrtReplica = (Box<dyn Scheduler>, PjrtWorker);
+
+/// One placed replica: a scheduler paired with a multi-model executor.
+pub type PlacedReplica = (Box<dyn Scheduler>, MultiModelPjrtWorker);
 
 /// Build the `(scheduler, PJRT worker)` replica list for
 /// `Server::cluster`: one scheduler instance per runtime handle
@@ -26,17 +34,100 @@ pub fn pjrt_replicas(
     seed: u64,
     calib: &[(usize, f64)],
     runtimes: &[Arc<ModelRuntime>],
-) -> Option<Vec<(Box<dyn Scheduler>, PjrtWorker)>> {
+) -> Option<Vec<PjrtReplica>> {
     let mut replicas = Vec::with_capacity(runtimes.len());
     for (w, rt) in runtimes.iter().enumerate() {
         let mut sched =
             crate::baselines::by_name(system, cfg.clone(), seed ^ ((w as u64) << 24))?;
         for (depth, ms) in calib {
-            sched.seed_app_profile(AppId(*depth as u32 - 1), &Histogram::constant(*ms), 100);
+            sched.seed_app_profile(
+                ModelId::DEFAULT,
+                AppId(*depth as u32 - 1),
+                &Histogram::constant(*ms),
+                100,
+            );
         }
         replicas.push((sched, PjrtWorker::new(rt.clone())));
     }
     Some(replicas)
+}
+
+/// Build the placed replica list for a multi-model `Server`: one
+/// scheduler per worker, and one loaded `ModelRuntime` per *hosted model*
+/// per worker (each concurrent worker thread needs its own PJRT client —
+/// thread-compatible, not thread-safe — and each hosted model its own
+/// compiled executables, mirroring per-model GPU memory in a production
+/// fleet). `reuse` is installed into the first hosted slot instead of
+/// reloading from disk (callers typically have a calibration runtime in
+/// hand). Every hosted model's scheduler profile is seeded from the
+/// shared per-depth calibration. Returns None for an unknown system;
+/// panics on an unconstrained placement (it names no models — parse one)
+/// or if artifacts fail to load (demo path).
+pub fn pjrt_placed_replicas(
+    system: &str,
+    cfg: &SchedulerConfig,
+    seed: u64,
+    calib: &[(usize, f64)],
+    dir: &Path,
+    placement: &Placement,
+    mut reuse: Option<Arc<ModelRuntime>>,
+) -> Option<Vec<PlacedReplica>> {
+    let all_models = placement.models();
+    assert!(
+        !all_models.is_empty(),
+        "pjrt_placed_replicas needs an explicit placement (Placement::parse); \
+         an unconstrained placement names no models to load"
+    );
+    let mut replicas = Vec::with_capacity(placement.workers());
+    for w in 0..placement.workers() {
+        let mut sched =
+            crate::baselines::by_name(system, cfg.clone(), seed ^ ((w as u64) << 24))?;
+        let mut by_model = Vec::new();
+        for &model in &all_models {
+            if !placement.hosts(w, model) {
+                continue;
+            }
+            let rt = reuse
+                .take()
+                .unwrap_or_else(|| Arc::new(ModelRuntime::load(dir).expect("load artifacts")));
+            for (depth, ms) in calib {
+                sched.seed_app_profile(
+                    model,
+                    AppId(*depth as u32 - 1),
+                    &Histogram::constant(*ms),
+                    100,
+                );
+            }
+            by_model.push((model.0, PjrtWorker::new(rt)));
+        }
+        replicas.push((sched, MultiModelPjrtWorker { by_model }));
+    }
+    Some(replicas)
+}
+
+/// A worker hosting one PJRT runtime per model (cluster placement).
+/// Batches are model-pure, so the batch's model picks the runtime.
+pub struct MultiModelPjrtWorker {
+    by_model: Vec<(u32, PjrtWorker)>,
+}
+
+impl Worker for MultiModelPjrtWorker {
+    fn execute(&mut self, batch: &[Request]) -> f64 {
+        debug_assert!(
+            batch.iter().all(|r| r.model == batch[0].model),
+            "mixed-model batch reached a PJRT worker"
+        );
+        let model = batch.first().map_or(0, |r| r.model.0);
+        match self.by_model.iter_mut().find(|(m, _)| *m == model) {
+            Some((_, worker)) => worker.execute(batch),
+            None => {
+                // Routing guarantees hosted models only; fail loudly in
+                // debug, measure nothing in release.
+                debug_assert!(false, "batch for unhosted model {model}");
+                0.0
+            }
+        }
+    }
 }
 
 pub struct PjrtWorker {

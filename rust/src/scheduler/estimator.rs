@@ -3,20 +3,22 @@
 //! The priority score needs the batch latency distribution `L_B`, but the
 //! batch is formed *after* scores are computed. Orloj breaks the cycle by
 //! assuming the queue contains requests from all applications the model
-//! serves: for a request of app `a` considered at batch size `k`, `L_B` is
-//! the affine image (Eq. 9) of the max of {1 draw from app a's
-//! distribution, k−1 draws from the model-wide traffic mixture}. This
-//! depends only on (app, k) — a small table precomputed off the critical
-//! path and refreshed when the profiler publishes a new snapshot.
+//! serves: for a request of `(model, app)` considered at batch size `k`,
+//! `L_B` is the affine image (Eq. 9) of the max of {1 draw from the app's
+//! distribution, k−1 draws from *that model's* traffic mixture}. This
+//! depends only on (model, app, k) — a small table precomputed off the
+//! critical path and refreshed when the profiler publishes a new snapshot.
+//! Batches never mix models, so each model's table uses its own mixture
+//! and its own batch cost model.
 
 use super::profiler::ProfileSnapshot;
 use crate::core::batchmodel::BatchCostModel;
 use crate::core::histogram::Histogram;
 use crate::core::orderstats;
-use crate::core::request::AppId;
+use crate::core::request::{AppId, ModelId};
 use std::collections::HashMap;
 
-/// Precomputed batch latency info for one (app, batch-size) pair.
+/// Precomputed batch latency info for one (model, app, batch-size) triple.
 #[derive(Debug, Clone)]
 pub struct BatchLatency {
     /// Distribution of the batch execution time (ms).
@@ -33,47 +35,65 @@ pub struct BatchLatency {
 /// Estimator over the current profile snapshot.
 #[derive(Debug)]
 pub struct Estimator {
-    model: BatchCostModel,
+    cost: BatchCostModel,
+    /// Per-model cost overrides (heterogeneous co-located models).
+    model_costs: Vec<(u32, BatchCostModel)>,
     bins: usize,
     score_bins: usize,
     feasibility_quantile: f64,
     snapshot: ProfileSnapshot,
-    mixture: Option<Histogram>,
-    cache: HashMap<(u32, usize), BatchLatency>,
+    /// Per-model traffic mixtures derived from the snapshot.
+    mixtures: Vec<(ModelId, Histogram)>,
+    cache: HashMap<(u32, u32, usize), BatchLatency>,
     /// Fallback solo execution time (ms) before any profile exists.
     cold_start_ms: f64,
 }
 
 impl Estimator {
-    pub fn new(model: BatchCostModel, bins: usize, feasibility_quantile: f64) -> Self {
-        Estimator::with_score_bins(model, bins, bins.min(16), feasibility_quantile)
+    pub fn new(cost: BatchCostModel, bins: usize, feasibility_quantile: f64) -> Self {
+        Estimator::with_score_bins(cost, bins, bins.min(16), feasibility_quantile)
     }
 
     pub fn with_score_bins(
-        model: BatchCostModel,
+        cost: BatchCostModel,
         bins: usize,
         score_bins: usize,
         feasibility_quantile: f64,
     ) -> Self {
         Estimator {
-            model,
+            cost,
+            model_costs: Vec::new(),
             bins,
             score_bins,
             feasibility_quantile,
             snapshot: ProfileSnapshot::empty(),
-            mixture: None,
+            mixtures: Vec::new(),
             cache: HashMap::new(),
             cold_start_ms: 10.0,
         }
     }
 
     pub fn cost_model(&self) -> BatchCostModel {
-        self.model
+        self.cost
+    }
+
+    /// Install per-model cost models (invalidates the cache).
+    pub fn set_model_costs(&mut self, costs: &[(u32, BatchCostModel)]) {
+        self.model_costs = costs.to_vec();
+        self.cache.clear();
+    }
+
+    /// Cost model for one model (falls back to the shared default).
+    pub fn cost_for(&self, model: ModelId) -> BatchCostModel {
+        self.model_costs
+            .iter()
+            .find(|(m, _)| *m == model.0)
+            .map_or(self.cost, |(_, c)| *c)
     }
 
     /// Install a fresh profiler snapshot (invalidates the cache).
     pub fn refresh(&mut self, snapshot: ProfileSnapshot) {
-        self.mixture = snapshot.mixture(self.bins);
+        self.mixtures = snapshot.mixtures(self.bins);
         self.snapshot = snapshot;
         self.cache.clear();
     }
@@ -82,33 +102,44 @@ impl Estimator {
         self.snapshot.version
     }
 
-    /// Batch latency for a request of `app` at batch size `k` (cached).
-    pub fn batch_latency(&mut self, app: AppId, k: usize) -> &BatchLatency {
-        let key = (app.0, k);
+    fn mixture_for(&self, model: ModelId) -> Option<&Histogram> {
+        self.mixtures
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map(|(_, h)| h)
+    }
+
+    /// Batch latency for a request of `(model, app)` at batch size `k`
+    /// (cached).
+    // The entry API would need `&mut self` while `compute` borrows `&self`.
+    #[allow(clippy::map_entry)]
+    pub fn batch_latency(&mut self, model: ModelId, app: AppId, k: usize) -> &BatchLatency {
+        let key = (model.0, app.0, k);
         if !self.cache.contains_key(&key) {
-            let bl = self.compute(app, k);
+            let bl = self.compute(model, app, k);
             self.cache.insert(key, bl);
         }
         self.cache.get(&key).unwrap()
     }
 
-    fn compute(&self, app: AppId, k: usize) -> BatchLatency {
+    fn compute(&self, model: ModelId, app: AppId, k: usize) -> BatchLatency {
         assert!(k >= 1);
         let own = self
             .snapshot
-            .histogram_for(app)
+            .histogram_for(model, app)
+            .or_else(|| self.mixture_for(model))
             .cloned()
-            .or_else(|| self.mixture.clone())
             .unwrap_or_else(|| Histogram::constant(self.cold_start_ms));
         let max_dist = if k == 1 {
             own
         } else {
-            match &self.mixture {
+            match self.mixture_for(model) {
                 Some(mix) => orderstats::max_grouped(&[&own, mix], &[1, k - 1], self.bins),
                 None => orderstats::max_iid(&own, k),
             }
         };
-        let dist = max_dist.affine(self.model.c1 * k as f64, self.model.c0);
+        let cost = self.cost_for(model);
+        let dist = max_dist.affine(cost.c1 * k as f64, cost.c0);
         let mean = dist.mean();
         let feasibility_ms = dist.quantile(self.feasibility_quantile);
         let score_dist = dist.coarsen(self.score_bins);
@@ -121,8 +152,8 @@ impl Estimator {
     }
 
     /// Feasibility latency (ms) for Algorithm 1 line 11.
-    pub fn feasibility_ms(&mut self, app: AppId, k: usize) -> f64 {
-        self.batch_latency(app, k).feasibility_ms
+    pub fn feasibility_ms(&mut self, model: ModelId, app: AppId, k: usize) -> f64 {
+        self.batch_latency(model, app, k).feasibility_ms
     }
 }
 
@@ -131,11 +162,13 @@ mod tests {
     use super::*;
     use crate::scheduler::profiler::OnlineProfiler;
 
+    const M0: ModelId = ModelId(0);
+
     fn snapshot_two_apps() -> ProfileSnapshot {
         let mut p = OnlineProfiler::new(1000, 1.0, 32, 7);
         for i in 0..500 {
-            p.record(AppId(0), 4.0 + (i % 3) as f64); // short app: 4-6 ms
-            p.record(AppId(1), 40.0 + (i % 7) as f64); // long app: 40-46 ms
+            p.record(M0, AppId(0), 4.0 + (i % 3) as f64); // short app: 4-6 ms
+            p.record(M0, AppId(1), 40.0 + (i % 7) as f64); // long app: 40-46 ms
         }
         p.snapshot()
     }
@@ -143,7 +176,7 @@ mod tests {
     #[test]
     fn cold_start_fallback() {
         let mut e = Estimator::new(BatchCostModel::new(1.0, 0.5), 32, 0.5);
-        let bl = e.batch_latency(AppId(9), 4);
+        let bl = e.batch_latency(M0, AppId(9), 4);
         assert!(bl.mean > 0.0);
         // constant 10ms → max = 10, latency = 1 + 0.5*4*10 = 21
         assert!((bl.mean - 21.0).abs() < 0.5, "mean={}", bl.mean);
@@ -153,8 +186,8 @@ mod tests {
     fn own_distribution_at_k1() {
         let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
         e.refresh(snapshot_two_apps());
-        let short = e.batch_latency(AppId(0), 1).mean;
-        let long = e.batch_latency(AppId(1), 1).mean;
+        let short = e.batch_latency(M0, AppId(0), 1).mean;
+        let long = e.batch_latency(M0, AppId(1), 1).mean;
         assert!((short - 5.0).abs() < 1.0, "short={short}");
         assert!((long - 43.0).abs() < 2.0, "long={long}");
     }
@@ -165,7 +198,7 @@ mod tests {
         // traffic mixture (the straggler effect the paper schedules around).
         let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
         e.refresh(snapshot_two_apps());
-        let k2_short = e.batch_latency(AppId(0), 2).mean;
+        let k2_short = e.batch_latency(M0, AppId(0), 2).mean;
         // max(own_short, one mixture draw): mixture is 50/50 short/long →
         // ~50% chance the other draw is ~43ms → E[max] ≈ 0.5·5 + 0.5·43 ≈ 24
         // then ×k=2 → ≈ 48.
@@ -180,7 +213,7 @@ mod tests {
         hi.refresh(snapshot_two_apps());
         for k in [1usize, 2, 8] {
             assert!(
-                hi.feasibility_ms(AppId(0), k) >= lo.feasibility_ms(AppId(0), k),
+                hi.feasibility_ms(M0, AppId(0), k) >= lo.feasibility_ms(M0, AppId(0), k),
                 "k={k}"
             );
         }
@@ -190,16 +223,16 @@ mod tests {
     fn cache_survives_until_refresh() {
         let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 32, 0.5);
         e.refresh(snapshot_two_apps());
-        let a = e.batch_latency(AppId(0), 4).mean;
-        let b = e.batch_latency(AppId(0), 4).mean;
+        let a = e.batch_latency(M0, AppId(0), 4).mean;
+        let b = e.batch_latency(M0, AppId(0), 4).mean;
         assert_eq!(a, b);
         // Refresh with different data changes the estimate.
         let mut p = OnlineProfiler::new(100, 1.0, 32, 8);
         for _ in 0..100 {
-            p.record(AppId(0), 100.0);
+            p.record(M0, AppId(0), 100.0);
         }
         e.refresh(p.snapshot());
-        let c = e.batch_latency(AppId(0), 4).mean;
+        let c = e.batch_latency(M0, AppId(0), 4).mean;
         assert!(c > a * 2.0, "estimate should jump: {a} -> {c}");
     }
 
@@ -207,8 +240,29 @@ mod tests {
     fn unknown_app_uses_mixture() {
         let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
         e.refresh(snapshot_two_apps());
-        let unk = e.batch_latency(AppId(42), 1).mean;
+        let unk = e.batch_latency(M0, AppId(42), 1).mean;
         // mixture mean ≈ (5+43)/2 = 24
         assert!((unk - 24.0).abs() < 3.0, "unk={unk}");
+    }
+
+    #[test]
+    fn co_located_models_use_their_own_mixture_and_cost() {
+        let mut p = OnlineProfiler::new(1000, 1.0, 32, 11);
+        for _ in 0..400 {
+            p.record(ModelId(0), AppId(0), 5.0);
+            p.record(ModelId(1), AppId(0), 50.0);
+        }
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
+        e.set_model_costs(&[(1, BatchCostModel::new(0.0, 2.0))]);
+        e.refresh(p.snapshot());
+        // k=4 on model 0 stays near 4·5 = 20 ms (its own mixture; no
+        // contamination from model 1's 50 ms requests).
+        let m0 = e.batch_latency(ModelId(0), AppId(0), 4).mean;
+        assert!(m0 < 30.0, "m0={m0}");
+        // Model 1 pays its own cost model (c1=2): ≈ 2·4·50 = 400 ms.
+        let m1 = e.batch_latency(ModelId(1), AppId(0), 4).mean;
+        assert!(m1 > 300.0, "m1={m1}");
+        assert_eq!(e.cost_for(ModelId(0)), BatchCostModel::new(0.0, 1.0));
+        assert_eq!(e.cost_for(ModelId(1)), BatchCostModel::new(0.0, 2.0));
     }
 }

@@ -2,7 +2,11 @@
 //!
 //! The same trait runs against the discrete-event simulator (virtual time)
 //! and the PJRT serving loop (real time): the scheduler only ever sees
-//! timestamps, arrivals and completions.
+//! timestamps, arrivals and completions. One scheduler instance may serve
+//! several co-located *models* (cluster placement, DESIGN.md §3); batches
+//! are always model-pure and the profiling tables are keyed by
+//! `(model, app)` so co-located models never cross-contaminate each
+//! other's distributions.
 
 pub mod estimator;
 pub mod orloj;
@@ -10,7 +14,10 @@ pub mod profiler;
 
 use crate::clock::Micros;
 use crate::core::batchmodel::BatchCostModel;
-use crate::core::request::{Outcome, Request};
+use crate::core::histogram::Histogram;
+use crate::core::request::{AppId, ModelId, Outcome, Request};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// Shared scheduler configuration.
 #[derive(Debug, Clone)]
@@ -26,7 +33,11 @@ pub struct SchedulerConfig {
     /// score bins directly control hull churn).
     pub score_bins: usize,
     /// Batch cost model (profiled on the real path; configured in sim).
+    /// The fallback when `model_costs` has no entry for a request's model.
     pub cost_model: BatchCostModel,
+    /// Per-model batch cost models for heterogeneous co-located models
+    /// (empty = every model uses `cost_model`).
+    pub model_costs: Vec<(u32, BatchCostModel)>,
     /// Quantile of the batch-latency distribution used in the feasibility
     /// check (Algorithm 1 line 11). 0.5 ≈ median; higher is more
     /// conservative.
@@ -47,6 +58,7 @@ impl Default for SchedulerConfig {
             bins: 64,
             score_bins: 16,
             cost_model: BatchCostModel::gpu_like(),
+            model_costs: Vec::new(),
             feasibility_quantile: 0.5,
             profiler_window: 2048,
             sample_prob: 1.0,
@@ -55,26 +67,110 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Per-model pending counters: the bookkeeping schedulers use to answer
+/// [`Scheduler::pending_for`] without scanning their queues (routing calls
+/// it once per candidate worker per arrival — it sits on the hot path).
+#[derive(Debug, Default)]
+pub struct ModelPending(Vec<(ModelId, usize)>);
+
+impl ModelPending {
+    pub fn new() -> Self {
+        ModelPending(Vec::new())
+    }
+
+    pub fn inc(&mut self, model: ModelId) {
+        match self.0.iter_mut().find(|(m, _)| *m == model) {
+            Some((_, c)) => *c += 1,
+            None => self.0.push((model, 1)),
+        }
+    }
+
+    pub fn dec(&mut self, model: ModelId) {
+        if let Some((_, c)) = self.0.iter_mut().find(|(m, _)| *m == model) {
+            *c = c.saturating_sub(1);
+        }
+    }
+
+    pub fn get(&self, model: ModelId) -> usize {
+        self.0
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(0, |(_, c)| *c)
+    }
+}
+
+/// Pop up to `take` requests of `model` from a FIFO queue, preserving the
+/// relative order of other models' entries (the shared model-pure batch
+/// fill for FIFO baselines — Clipper, Nexus).
+pub fn drain_fifo_model(
+    queue: &mut VecDeque<Request>,
+    counts: &mut ModelPending,
+    model: ModelId,
+    take: usize,
+) -> Vec<Request> {
+    let mut batch = Vec::with_capacity(take);
+    let mut i = 0;
+    while i < queue.len() && batch.len() < take {
+        if queue[i].model == model {
+            let r = queue.remove(i).unwrap();
+            counts.dec(model);
+            batch.push(r);
+        } else {
+            i += 1;
+        }
+    }
+    batch
+}
+
+/// Pop up to `take` requests of `model` in deadline order from an EDF
+/// heap (`(deadline, id)` min-heap + id→request map), re-pushing skipped
+/// entries of other models untouched and discarding stale heap entries
+/// (the shared model-pure batch fill for EDF-ordered baselines — EDF,
+/// Clockwork).
+pub fn drain_edf_model(
+    queue: &mut BinaryHeap<Reverse<(Micros, u64)>>,
+    by_seq: &mut HashMap<u64, Request>,
+    counts: &mut ModelPending,
+    model: ModelId,
+    take: usize,
+) -> Vec<Request> {
+    let mut batch = Vec::with_capacity(take);
+    let mut skipped: Vec<Reverse<(Micros, u64)>> = Vec::new();
+    while batch.len() < take {
+        let Some(Reverse((d, seq))) = queue.pop() else {
+            break;
+        };
+        match by_seq.get(&seq) {
+            Some(r) if r.model == model => {
+                let r = by_seq.remove(&seq).unwrap();
+                counts.dec(model);
+                batch.push(r);
+            }
+            Some(_) => skipped.push(Reverse((d, seq))),
+            None => {} // stale heap entry: already dispatched/dropped
+        }
+    }
+    queue.extend(skipped);
+    batch
+}
+
 /// A scheduling policy. Drives one worker (the paper's per-GPU scheduler;
-/// scale-out runs one scheduler per model replica).
+/// scale-out runs one scheduler per replica, each possibly hosting
+/// several models).
 pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
 
-    /// Install deployment-time historical data for an app. Orloj keeps the
-    /// full distribution; point-estimate systems reduce it to their
-    /// statistic; reactive systems ignore it. Default: ignore.
-    fn seed_app_profile(
-        &mut self,
-        _app: crate::core::request::AppId,
-        _hist: &crate::core::histogram::Histogram,
-        _weight: u64,
-    ) {
-    }
+    /// Install deployment-time historical data for one `(model, app)`
+    /// traffic class. Orloj keeps the full distribution; point-estimate
+    /// systems reduce it to their statistic; reactive systems ignore it.
+    /// Default: ignore.
+    fn seed_app_profile(&mut self, _model: ModelId, _app: AppId, _hist: &Histogram, _weight: u64) {}
 
     /// A request entered the system.
     fn on_arrival(&mut self, req: Request, now: Micros);
 
     /// The worker is free: pick the next batch, or None to stay idle.
+    /// Returned batches are always model-pure (one model per batch).
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>>;
 
     /// A batch finished; `batch_ms` is its measured wall time. Feeds the
@@ -92,22 +188,21 @@ pub trait Scheduler: Send {
 
     /// Number of queued (not yet executing) requests.
     fn pending(&self) -> usize;
+
+    /// Number of queued requests for one model (per-model load accounting
+    /// for the routers).
+    fn pending_for(&self, model: ModelId) -> usize;
 }
 
 /// Mutable borrows are schedulers too, so the clock-generic serving core
 /// (`serve::ServingLoop`) can drive a scheduler it does not own — e.g. the
 /// single-worker `sim::engine::run` compatibility shim.
-impl<'a, S: Scheduler + ?Sized> Scheduler for &'a mut S {
+impl<S: Scheduler + ?Sized> Scheduler for &mut S {
     fn name(&self) -> &'static str {
         (**self).name()
     }
-    fn seed_app_profile(
-        &mut self,
-        app: crate::core::request::AppId,
-        hist: &crate::core::histogram::Histogram,
-        weight: u64,
-    ) {
-        (**self).seed_app_profile(app, hist, weight)
+    fn seed_app_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
+        (**self).seed_app_profile(model, app, hist, weight)
     }
     fn on_arrival(&mut self, req: Request, now: Micros) {
         (**self).on_arrival(req, now)
@@ -126,6 +221,9 @@ impl<'a, S: Scheduler + ?Sized> Scheduler for &'a mut S {
     }
     fn pending(&self) -> usize {
         (**self).pending()
+    }
+    fn pending_for(&self, model: ModelId) -> usize {
+        (**self).pending_for(model)
     }
 }
 
@@ -133,13 +231,8 @@ impl Scheduler for Box<dyn Scheduler> {
     fn name(&self) -> &'static str {
         (**self).name()
     }
-    fn seed_app_profile(
-        &mut self,
-        app: crate::core::request::AppId,
-        hist: &crate::core::histogram::Histogram,
-        weight: u64,
-    ) {
-        (**self).seed_app_profile(app, hist, weight)
+    fn seed_app_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
+        (**self).seed_app_profile(model, app, hist, weight)
     }
     fn on_arrival(&mut self, req: Request, now: Micros) {
         (**self).on_arrival(req, now)
@@ -158,5 +251,77 @@ impl Scheduler for Box<dyn Scheduler> {
     }
     fn pending(&self) -> usize {
         (**self).pending()
+    }
+    fn pending_for(&self, model: ModelId) -> usize {
+        (**self).pending_for(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: u32, slo_us: Micros) -> Request {
+        Request::new(id, AppId(0), 0, slo_us, 5.0).with_model(ModelId(model))
+    }
+
+    #[test]
+    fn drain_fifo_model_preserves_other_models_order() {
+        let mut q: VecDeque<Request> = VecDeque::new();
+        let mut counts = ModelPending::new();
+        for i in 0..6 {
+            let r = req(i, (i % 2) as u32, 1_000_000);
+            counts.inc(r.model);
+            q.push_back(r);
+        }
+        let batch = drain_fifo_model(&mut q, &mut counts, ModelId(0), 2);
+        assert_eq!(batch.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(counts.get(ModelId(0)), 1);
+        // Remaining queue keeps its relative order: 1, 3, 4, 5.
+        assert_eq!(
+            q.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            vec![1, 3, 4, 5]
+        );
+    }
+
+    #[test]
+    fn drain_edf_model_repushes_skipped_and_skips_stale() {
+        let mut heap: BinaryHeap<Reverse<(Micros, u64)>> = BinaryHeap::new();
+        let mut by_seq: HashMap<u64, Request> = HashMap::new();
+        let mut counts = ModelPending::new();
+        for i in 0..6u64 {
+            let r = req(i, (i % 2) as u32, 1_000 * (i + 1));
+            heap.push(Reverse((r.deadline, i)));
+            counts.inc(r.model);
+            by_seq.insert(i, r);
+        }
+        // A stale heap entry (id 9 has no by_seq record) is discarded.
+        heap.push(Reverse((1, 9)));
+        let batch = drain_edf_model(&mut heap, &mut by_seq, &mut counts, ModelId(1), 2);
+        // Model 1 in deadline order: ids 1, 3.
+        assert_eq!(batch.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(counts.get(ModelId(1)), 1);
+        // Skipped model-0 entries are back in the heap, still popping in
+        // deadline order.
+        let next = drain_edf_model(&mut heap, &mut by_seq, &mut counts, ModelId(0), 3);
+        assert_eq!(next.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn model_pending_counts() {
+        let mut p = ModelPending::new();
+        assert_eq!(p.get(ModelId(0)), 0);
+        p.inc(ModelId(0));
+        p.inc(ModelId(0));
+        p.inc(ModelId(1));
+        assert_eq!(p.get(ModelId(0)), 2);
+        assert_eq!(p.get(ModelId(1)), 1);
+        p.dec(ModelId(0));
+        assert_eq!(p.get(ModelId(0)), 1);
+        // Underflow saturates; unknown models decrement to nothing.
+        p.dec(ModelId(9));
+        p.dec(ModelId(1));
+        p.dec(ModelId(1));
+        assert_eq!(p.get(ModelId(1)), 0);
     }
 }

@@ -4,14 +4,19 @@
 //! requests still *feasible* at that size (`t + EstBatchLatency(r, bs) ≤
 //! D_r`). Each queue is a dynamic convex hull over the requests' (α, β)
 //! priority points (§4.4) plus a Fibonacci heap tracking the earliest
-//! deadline (§3.2). One scheduler iteration:
+//! deadline (§3.2). Because a batch executes exactly one model, the queue
+//! set is *partitioned per hosted model* (cluster placement, DESIGN.md
+//! §3): one [`ModelGroup`] of `|S|` queues per co-located model, with the
+//! estimator/profiler tables keyed by `(model, app)` so the models never
+//! cross-contaminate each other's distributions. One scheduler iteration:
 //!
 //! 1. reset the score base time if `b·t` is near overflow (lines 2–4);
 //! 2. re-insert hull points whose milestone passed (lines 5–9);
 //! 3. prune infeasible requests from each queue, marking requests timed
 //!    out when they leave their last queue (lines 10–14);
-//! 4. pick the candidate batch size — queues ordered by (earliest deadline,
-//!    bs) descending, first with `|Q_bs| ≥ bs` (lines 15–21);
+//! 4. pick the candidate queue across all (model, bs) pairs — ordered by
+//!    (earliest deadline, bs) descending, first with `|Q_bs| ≥ bs`
+//!    (lines 15–21);
 //! 5. pop the top-priority requests from the candidate queue (line 22).
 
 use super::estimator::Estimator;
@@ -20,7 +25,7 @@ use super::{Scheduler, SchedulerConfig};
 use crate::clock::{ms_to_us, us_to_ms, Micros};
 use crate::core::histogram::Histogram;
 use crate::core::priority::{ScoreContext, ScoreSchedule};
-use crate::core::request::{AppId, Outcome, Request};
+use crate::core::request::{AppId, ModelId, Outcome, Request};
 use crate::ds::fibheap::{FibHeap, Handle};
 use crate::ds::hull::point::Point;
 use crate::ds::hull::DynamicHull;
@@ -37,6 +42,8 @@ struct BsEntry {
 /// A pending request with its per-queue state.
 struct Entry {
     req: Request,
+    /// Index of the request's [`ModelGroup`] in `groups`.
+    group: usize,
     per_bs: Vec<Option<BsEntry>>,
     /// Next milestone (absolute µs) registered in the milestone heap; used
     /// to invalidate stale heap entries lazily.
@@ -49,11 +56,21 @@ struct BsQueue {
     deadlines: FibHeap<u64>, // key: deadline µs, value: request id
 }
 
+/// The per-model partition of the Algorithm-1 queue set.
+struct ModelGroup {
+    model: ModelId,
+    queues: Vec<BsQueue>,
+    /// Entries resident in this group (per-model routing load).
+    members: usize,
+}
+
 /// The Orloj scheduler (paper §3–4).
 pub struct OrlojScheduler {
     cfg: SchedulerConfig,
     ctx: ScoreContext,
-    queues: Vec<BsQueue>,
+    /// Sorted copy of `cfg.batch_sizes` used to build new groups.
+    batch_sizes: Vec<usize>,
+    groups: Vec<ModelGroup>,
     entries: HashMap<u64, Entry>,
     milestones: BinaryHeap<Reverse<(Micros, u64)>>,
     dropped: Vec<(Request, Outcome)>,
@@ -69,25 +86,19 @@ impl OrlojScheduler {
     pub fn new(cfg: SchedulerConfig, seed: u64) -> Self {
         let mut batch_sizes = cfg.batch_sizes.clone();
         batch_sizes.sort_unstable();
-        let queues = batch_sizes
-            .iter()
-            .map(|&bs| BsQueue {
-                bs,
-                hull: DynamicHull::new(),
-                deadlines: FibHeap::new(),
-            })
-            .collect();
         let profiler = OnlineProfiler::new(cfg.profiler_window, cfg.sample_prob, cfg.bins, seed);
-        let estimator = Estimator::with_score_bins(
+        let mut estimator = Estimator::with_score_bins(
             cfg.cost_model,
             cfg.bins,
             cfg.score_bins,
             cfg.feasibility_quantile,
         );
+        estimator.set_model_costs(&cfg.model_costs);
         OrlojScheduler {
             ctx: ScoreContext::new(cfg.b),
             cfg,
-            queues,
+            batch_sizes,
+            groups: Vec::new(),
             entries: HashMap::new(),
             milestones: BinaryHeap::new(),
             dropped: Vec::new(),
@@ -98,11 +109,12 @@ impl OrlojScheduler {
         }
     }
 
-    /// Seed the profiler with an a-priori distribution for an app and make
-    /// it visible to the estimator immediately (used at deployment time the
-    /// way a production system would import the previous window).
-    pub fn seed_profile(&mut self, app: AppId, hist: &Histogram, weight: u64) {
-        self.profiler.seed(app, hist, weight);
+    /// Seed the profiler with an a-priori distribution for a (model, app)
+    /// class and make it visible to the estimator immediately (used at
+    /// deployment time the way a production system would import the
+    /// previous window).
+    pub fn seed_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
+        self.profiler.seed(model, app, hist, weight);
         self.estimator.refresh(self.profiler.snapshot());
     }
 
@@ -115,6 +127,29 @@ impl OrlojScheduler {
         self.ctx.rel_ms(t)
     }
 
+    /// Index of the group serving `model`, creating it on first arrival
+    /// (deterministic: groups appear in arrival order).
+    fn group_for(&mut self, model: ModelId) -> usize {
+        if let Some(gi) = self.groups.iter().position(|g| g.model == model) {
+            return gi;
+        }
+        let queues = self
+            .batch_sizes
+            .iter()
+            .map(|&bs| BsQueue {
+                bs,
+                hull: DynamicHull::new(),
+                deadlines: FibHeap::new(),
+            })
+            .collect();
+        self.groups.push(ModelGroup {
+            model,
+            queues,
+            members: 0,
+        });
+        self.groups.len() - 1
+    }
+
     /// Build the per-bs score state for a request at time `now`; returns
     /// None if the batch size is infeasible already.
     fn build_bs_entry(
@@ -125,7 +160,7 @@ impl OrlojScheduler {
         now: Micros,
         cost_c: f64,
     ) -> Option<BsEntry> {
-        let bl = estimator.batch_latency(req.app, queue.bs);
+        let bl = estimator.batch_latency(req.model, req.app, queue.bs);
         let feasible = us_to_ms(now) + bl.feasibility_ms <= us_to_ms(req.deadline);
         if !feasible {
             return None;
@@ -190,13 +225,14 @@ impl OrlojScheduler {
     fn refresh_entry_points(&mut self, id: u64, now: Micros) {
         let rel_now = self.rel_ms(now);
         if let Some(entry) = self.entries.get_mut(&id) {
+            let gi = entry.group;
             for (qi, slot) in entry.per_bs.iter_mut().enumerate() {
                 if let Some(bse) = slot {
                     let coeffs = bse.sched.coeffs_at(rel_now);
                     let new_point = Point::new(coeffs.alpha, coeffs.beta, id);
                     if new_point.x != bse.point.x || new_point.y != bse.point.y {
-                        self.queues[qi].hull.delete(&bse.point);
-                        self.queues[qi].hull.insert(new_point);
+                        self.groups[gi].queues[qi].hull.delete(&bse.point);
+                        self.groups[gi].queues[qi].hull.insert(new_point);
                         bse.point = new_point;
                     }
                 }
@@ -212,16 +248,18 @@ impl OrlojScheduler {
         let rel_now = self.rel_ms(now);
         for id in ids {
             let entry = self.entries.get_mut(&id).unwrap();
-            let (deadline, app) = (entry.req.deadline, entry.req.app);
+            let (deadline, app, model) = (entry.req.deadline, entry.req.app, entry.req.model);
+            let gi = entry.group;
             for (qi, slot) in entry.per_bs.iter_mut().enumerate() {
                 if let Some(bse) = slot {
-                    let bl = self.estimator.batch_latency(app, self.queues[qi].bs);
+                    let bs = self.groups[gi].queues[qi].bs;
+                    let bl = self.estimator.batch_latency(model, app, bs);
                     let sched =
                         ScoreSchedule::build(&self.ctx, deadline, self.cost_c, &bl.score_dist);
                     let coeffs = sched.coeffs_at(rel_now);
                     let new_point = Point::new(coeffs.alpha, coeffs.beta, id);
-                    self.queues[qi].hull.delete(&bse.point);
-                    self.queues[qi].hull.insert(new_point);
+                    self.groups[gi].queues[qi].hull.delete(&bse.point);
+                    self.groups[gi].queues[qi].hull.insert(new_point);
                     bse.sched = sched;
                     bse.point = new_point;
                 }
@@ -232,85 +270,105 @@ impl OrlojScheduler {
 
     /// Remove from every queue (request is being dispatched or dropped).
     fn remove_everywhere(&mut self, id: u64) -> Option<Request> {
-        let entry = self.entries.get_mut(&id)?;
-        let slots: Vec<usize> = entry
-            .per_bs
-            .iter()
-            .enumerate()
-            .filter_map(|(qi, s)| s.as_ref().map(|_| qi))
-            .collect();
+        let (gi, slots) = {
+            let entry = self.entries.get_mut(&id)?;
+            let slots: Vec<usize> = entry
+                .per_bs
+                .iter()
+                .enumerate()
+                .filter_map(|(qi, s)| s.as_ref().map(|_| qi))
+                .collect();
+            (entry.group, slots)
+        };
         for qi in slots {
             let bse = self.entries.get_mut(&id).unwrap().per_bs[qi].take().unwrap();
-            self.queues[qi].hull.delete(&bse.point);
-            self.queues[qi].deadlines.delete(bse.fib);
+            self.groups[gi].queues[qi].hull.delete(&bse.point);
+            self.groups[gi].queues[qi].deadlines.delete(bse.fib);
         }
+        self.groups[gi].members = self.groups[gi].members.saturating_sub(1);
         self.entries.remove(&id).map(|e| e.req)
     }
 
     /// Lines 10–14: drop infeasible requests from each queue.
+    // Index loops: the body needs split borrows of `groups`, `entries`,
+    // `estimator` and `dropped` that iterators would hold across.
+    #[allow(clippy::needless_range_loop)]
     fn prune_infeasible(&mut self, now: Micros) {
         let now_ms = us_to_ms(now);
-        for qi in 0..self.queues.len() {
-            loop {
-                let (deadline, id) = match self.queues[qi].deadlines.min() {
-                    Some((d, &id)) => (d, id),
-                    None => break,
-                };
-                let app = match self.entries.get(&id) {
-                    Some(e) => e.req.app,
-                    None => {
-                        // Stale fib entry should not exist; defensive pop.
-                        self.queues[qi].deadlines.pop_min();
-                        continue;
+        for gi in 0..self.groups.len() {
+            let model = self.groups[gi].model;
+            for qi in 0..self.groups[gi].queues.len() {
+                loop {
+                    let (deadline, id) = match self.groups[gi].queues[qi].deadlines.min() {
+                        Some((d, &id)) => (d, id),
+                        None => break,
+                    };
+                    let app = match self.entries.get(&id) {
+                        Some(e) => e.req.app,
+                        None => {
+                            // Stale fib entry should not exist; defensive pop.
+                            self.groups[gi].queues[qi].deadlines.pop_min();
+                            continue;
+                        }
+                    };
+                    let bs = self.groups[gi].queues[qi].bs;
+                    let feas = self.estimator.feasibility_ms(model, app, bs);
+                    if now_ms + feas <= us_to_ms(deadline) {
+                        break; // earliest deadline feasible → rest are too
                     }
-                };
-                let feas = self.estimator.feasibility_ms(app, self.queues[qi].bs);
-                if now_ms + feas <= us_to_ms(deadline) {
-                    break; // earliest deadline feasible → rest are too
-                }
-                // Pop from this queue's fib heap and hull.
-                self.queues[qi].deadlines.pop_min();
-                let last = {
-                    let entry = self.entries.get_mut(&id).unwrap();
-                    let bse = entry.per_bs[qi].take().expect("fib/slot desync");
-                    self.queues[qi].hull.delete(&bse.point);
-                    entry.per_bs.iter().all(|s| s.is_none())
-                };
-                if last {
-                    // Line 13–14: timed out.
-                    if let Some(e) = self.entries.remove(&id) {
-                        self.dropped.push((e.req, Outcome::TimedOut));
+                    // Pop from this queue's fib heap and hull.
+                    self.groups[gi].queues[qi].deadlines.pop_min();
+                    let last = {
+                        let entry = self.entries.get_mut(&id).unwrap();
+                        let bse = entry.per_bs[qi].take().expect("fib/slot desync");
+                        self.groups[gi].queues[qi].hull.delete(&bse.point);
+                        entry.per_bs.iter().all(|s| s.is_none())
+                    };
+                    if last {
+                        // Line 13–14: timed out.
+                        if let Some(e) = self.entries.remove(&id) {
+                            self.groups[gi].members = self.groups[gi].members.saturating_sub(1);
+                            self.dropped.push((e.req, Outcome::TimedOut));
+                        }
                     }
                 }
             }
         }
     }
 
-    /// Lines 15–21: candidate batch size selection.
-    fn candidate(&self) -> Option<usize> {
-        let mut order: Vec<(Micros, usize, usize)> = self
-            .queues
+    /// Lines 15–21: candidate queue selection, across every (model, bs)
+    /// pair.
+    fn candidate(&self) -> Option<(usize, usize)> {
+        let mut order: Vec<(Micros, usize, usize, usize)> = self
+            .groups
             .iter()
             .enumerate()
-            .filter_map(|(qi, q)| q.deadlines.min_key().map(|d| (d, q.bs, qi)))
+            .flat_map(|(gi, g)| {
+                g.queues.iter().enumerate().filter_map(move |(qi, q)| {
+                    q.deadlines.min_key().map(|d| (d, q.bs, gi, qi))
+                })
+            })
             .collect();
-        // Ordered by (D_Qbs, bs) descending (Algorithm 1 line 16).
+        // Ordered by (D_Qbs, bs) descending (Algorithm 1 line 16); the
+        // (gi, qi) tail keeps exact ties deterministic.
         order.sort_by(|a, b| b.cmp(a));
-        for (_, bs, qi) in order {
-            if self.queues[qi].hull.len() >= bs {
-                return Some(qi);
+        for (_, bs, gi, qi) in order {
+            if self.groups[gi].queues[qi].hull.len() >= bs {
+                return Some((gi, qi));
             }
         }
         None
     }
 
-    /// Line 22: pop the `bs` top-priority requests from the queue.
-    fn pop_batch(&mut self, qi: usize, now: Micros) -> Vec<Request> {
-        let bs = self.queues[qi].bs;
+    /// Line 22: pop the `bs` top-priority requests from the queue. All
+    /// residents of one group share a model, so the batch is model-pure by
+    /// construction.
+    fn pop_batch(&mut self, gi: usize, qi: usize, now: Micros) -> Vec<Request> {
+        let bs = self.groups[gi].queues[qi].bs;
         let m = self.ctx.multiplier(now);
         let mut batch = Vec::with_capacity(bs);
         for _ in 0..bs {
-            let top = match self.queues[qi].hull.query_max(m) {
+            let top = match self.groups[gi].queues[qi].hull.query_max(m) {
                 Some(p) => p,
                 None => break,
             };
@@ -339,8 +397,8 @@ impl Scheduler for OrlojScheduler {
         "orloj"
     }
 
-    fn seed_app_profile(&mut self, app: AppId, hist: &Histogram, weight: u64) {
-        self.seed_profile(app, hist, weight);
+    fn seed_app_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
+        self.seed_profile(model, app, hist, weight);
     }
 
     fn on_arrival(&mut self, req: Request, now: Micros) {
@@ -352,8 +410,9 @@ impl Scheduler for OrlojScheduler {
             return;
         }
         let id = req.id.0;
-        let mut per_bs: Vec<Option<BsEntry>> = Vec::with_capacity(self.queues.len());
-        for queue in self.queues.iter_mut() {
+        let gi = self.group_for(req.model);
+        let mut per_bs: Vec<Option<BsEntry>> = Vec::with_capacity(self.batch_sizes.len());
+        for queue in self.groups[gi].queues.iter_mut() {
             per_bs.push(Self::build_bs_entry(
                 &self.ctx,
                 &mut self.estimator,
@@ -368,10 +427,12 @@ impl Scheduler for OrlojScheduler {
             self.dropped.push((req, Outcome::TimedOut));
             return;
         }
+        self.groups[gi].members += 1;
         self.entries.insert(
             id,
             Entry {
                 req,
+                group: gi,
                 per_bs,
                 milestone: None,
             },
@@ -385,8 +446,8 @@ impl Scheduler for OrlojScheduler {
         }
         self.process_milestones(now);
         self.prune_infeasible(now);
-        let qi = self.candidate()?;
-        let batch = self.pop_batch(qi, now);
+        let (gi, qi) = self.candidate()?;
+        let batch = self.pop_batch(gi, qi, now);
         if batch.is_empty() {
             None
         } else {
@@ -399,7 +460,7 @@ impl Scheduler for OrlojScheduler {
             // The profiler learns each request's *solo* execution time the
             // way the paper's asynchronous profiler does (sampled finished
             // requests re-evaluated alone, off the critical path).
-            self.profiler.record(req.app, req.exec_ms);
+            self.profiler.record(req.model, req.app, req.exec_ms);
         }
         self.maybe_refresh_estimator(now);
     }
@@ -414,8 +475,9 @@ impl Scheduler for OrlojScheduler {
         // arrivals/completions occur.
         let mile = self.milestones.peek().map(|Reverse((t, _))| *t);
         let dl = self
-            .queues
+            .groups
             .iter()
+            .flat_map(|g| g.queues.iter())
             .filter_map(|q| q.deadlines.min_key())
             .min();
         match (mile, dl) {
@@ -427,12 +489,21 @@ impl Scheduler for OrlojScheduler {
     fn pending(&self) -> usize {
         self.entries.len()
     }
+
+    fn pending_for(&self, model: ModelId) -> usize {
+        self.groups
+            .iter()
+            .find(|g| g.model == model)
+            .map_or(0, |g| g.members)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::batchmodel::BatchCostModel;
+
+    const M0: ModelId = ModelId(0);
 
     fn cfg() -> SchedulerConfig {
         SchedulerConfig {
@@ -446,7 +517,7 @@ mod tests {
         let mut s = OrlojScheduler::new(cfg(), 42);
         // One app, exec times around 10 ms.
         let h = Histogram::from_weights(8.0, 1.0, &[1.0, 2.0, 1.0, 1.0]);
-        s.seed_profile(AppId(0), &h, 100);
+        s.seed_profile(M0, AppId(0), &h, 100);
         s
     }
 
@@ -466,10 +537,12 @@ mod tests {
         let mut s = seeded_sched();
         s.on_arrival(req(1, 0, 500.0), 0);
         assert_eq!(s.pending(), 1);
+        assert_eq!(s.pending_for(M0), 1);
         let batch = s.next_batch(1000).expect("batch");
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id.0, 1);
         assert_eq!(s.pending(), 0);
+        assert_eq!(s.pending_for(M0), 0);
         assert!(s.next_batch(2000).is_none());
     }
 
@@ -514,6 +587,7 @@ mod tests {
         // 38 ms later even bs=1 cannot make it.
         assert!(s.next_batch(ms_to_us(38.0)).is_none());
         assert_eq!(s.pending(), 0);
+        assert_eq!(s.pending_for(M0), 0);
         assert_eq!(s.drain_dropped().len(), 1);
     }
 
@@ -595,14 +669,14 @@ mod tests {
     #[test]
     fn profiler_feedback_changes_estimates() {
         let mut s = seeded_sched();
-        let before = s.estimator_mut().batch_latency(AppId(0), 4).mean;
+        let before = s.estimator_mut().batch_latency(M0, AppId(0), 4).mean;
         // Complete many slow requests → estimates shift after refresh.
         let reqs: Vec<Request> = (0..200)
             .map(|i| Request::new(100 + i, AppId(0), 0, ms_to_us(10_000.0), 60.0))
             .collect();
         s.on_batch_complete(&reqs, 60.0, 0);
         s.on_batch_complete(&reqs, 60.0, 2_000_000); // past refresh_every
-        let after = s.estimator_mut().batch_latency(AppId(0), 4).mean;
+        let after = s.estimator_mut().batch_latency(M0, AppId(0), 4).mean;
         assert!(after > before * 1.5, "{before} -> {after}");
     }
 
@@ -613,5 +687,44 @@ mod tests {
         s.on_arrival(req(1, 0, 100.0), 0);
         let hint = s.wake_hint(0).expect("hint");
         assert!(hint <= ms_to_us(100.0));
+    }
+
+    #[test]
+    fn co_located_models_batch_separately() {
+        let mut s = OrlojScheduler::new(cfg(), 42);
+        let fast = Histogram::from_weights(8.0, 1.0, &[1.0, 2.0, 1.0, 1.0]);
+        let slow = Histogram::from_weights(70.0, 2.0, &[1.0, 2.0, 1.0]);
+        s.seed_profile(ModelId(0), AppId(0), &fast, 100);
+        s.seed_profile(ModelId(1), AppId(0), &slow, 100);
+        // Interleave four requests per model, all with roomy SLOs.
+        for i in 0..8u64 {
+            let model = ModelId((i % 2) as u32);
+            s.on_arrival(
+                Request::new(i, AppId(0), 0, ms_to_us(5_000.0), 10.0).with_model(model),
+                0,
+            );
+        }
+        assert_eq!(s.pending(), 8);
+        assert_eq!(s.pending_for(ModelId(0)), 4);
+        assert_eq!(s.pending_for(ModelId(1)), 4);
+        // Every batch the scheduler forms is model-pure, and both models
+        // eventually drain.
+        let mut served = [0usize; 2];
+        let mut t = 1_000;
+        while s.pending() > 0 {
+            if let Some(b) = s.next_batch(t) {
+                let m = b[0].model;
+                assert!(
+                    b.iter().all(|r| r.model == m),
+                    "mixed-model batch: {:?}",
+                    b.iter().map(|r| r.model).collect::<Vec<_>>()
+                );
+                served[m.0 as usize] += b.len();
+                s.on_batch_complete(&b, 10.0, t);
+            }
+            t += ms_to_us(5.0);
+        }
+        assert_eq!(served, [4, 4]);
+        assert!(s.drain_dropped().is_empty());
     }
 }

@@ -1,16 +1,19 @@
-//! Online per-application execution-time profiler (paper §3.2
+//! Online per-(model, application) execution-time profiler (paper §3.2
 //! "Per-Application Tracking" + "Long-Term Feedback Loop").
 //!
 //! Finished requests are *sampled* and their solo execution times
-//! accumulated per application over a sliding window; the scheduler's
-//! estimator picks up snapshots periodically, off the critical path. The
+//! accumulated per `(model, app)` traffic class over a sliding window; the
+//! scheduler's estimator picks up snapshots periodically, off the critical
+//! path. Keying by `(model, app)` lets one scheduler replica serve several
+//! co-located models without cross-contaminating their distributions. The
 //! window resets wholesale every so often to adapt to input drift.
 
 use crate::core::histogram::Histogram;
-use crate::core::request::AppId;
-use crate::util::rng::Rng;
+use crate::core::request::{AppId, ModelId};
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
+
+use crate::util::rng::Rng;
 
 #[derive(Debug)]
 struct AppWindow {
@@ -20,21 +23,21 @@ struct AppWindow {
     observed: u64,
 }
 
-/// Sliding-window per-app execution-time tracker.
+/// Sliding-window per-(model, app) execution-time tracker.
 #[derive(Debug)]
 pub struct OnlineProfiler {
     window: usize,
     sample_prob: f64,
     bins: usize,
-    apps: BTreeMap<AppId, AppWindow>,
+    apps: BTreeMap<(ModelId, AppId), AppWindow>,
     rng: Rng,
     version: u64,
 }
 
-/// A published snapshot: per-app histograms with traffic weights.
+/// A published snapshot: per-(model, app) histograms with traffic weights.
 #[derive(Debug, Clone)]
 pub struct ProfileSnapshot {
-    pub apps: Vec<(AppId, Histogram, f64)>,
+    pub apps: Vec<(ModelId, AppId, Histogram, f64)>,
     /// Monotonic version; consumers use it to detect staleness.
     pub version: u64,
 }
@@ -47,25 +50,38 @@ impl ProfileSnapshot {
         }
     }
 
-    pub fn histogram_for(&self, app: AppId) -> Option<&Histogram> {
+    pub fn histogram_for(&self, model: ModelId, app: AppId) -> Option<&Histogram> {
         self.apps
             .iter()
-            .find(|(a, _, _)| *a == app)
-            .map(|(_, h, _)| h)
+            .find(|(m, a, _, _)| *m == model && *a == app)
+            .map(|(_, _, h, _)| h)
     }
 
-    /// Model-wide mixture over all apps weighted by traffic (§4.3: "always
-    /// use all execution time distributions associated with the model").
-    pub fn mixture(&self, bins: usize) -> Option<Histogram> {
-        if self.apps.is_empty() {
-            return None;
-        }
+    /// One model's traffic mixture over its apps, weighted by traffic
+    /// (§4.3: "always use all execution time distributions associated with
+    /// the model" — *that* model's, not the cluster's).
+    pub fn mixture(&self, model: ModelId, bins: usize) -> Option<Histogram> {
         let parts: Vec<(&Histogram, f64)> = self
             .apps
             .iter()
-            .map(|(_, h, w)| (h, w.max(1e-9)))
+            .filter(|(m, _, _, _)| *m == model)
+            .map(|(_, _, h, w)| (h, w.max(1e-9)))
             .collect();
+        if parts.is_empty() {
+            return None;
+        }
         Some(Histogram::mixture(&parts, bins))
+    }
+
+    /// All models present in the snapshot, with their mixtures.
+    pub fn mixtures(&self, bins: usize) -> Vec<(ModelId, Histogram)> {
+        let mut models: Vec<ModelId> = self.apps.iter().map(|(m, _, _, _)| *m).collect();
+        models.sort_unstable();
+        models.dedup();
+        models
+            .into_iter()
+            .filter_map(|m| self.mixture(m, bins).map(|h| (m, h)))
+            .collect()
     }
 }
 
@@ -82,15 +98,18 @@ impl OnlineProfiler {
         }
     }
 
-    /// Seed an app with an a-priori distribution (the paper assumes
-    /// historical data exists when SLOs are configured; experiments seed
-    /// from the workload generator the way a production deployment would
-    /// seed from the previous window).
-    pub fn seed(&mut self, app: AppId, hist: &Histogram, weight: u64) {
-        let w = self.apps.entry(app).or_insert_with(|| AppWindow {
-            samples: VecDeque::new(),
-            observed: 0,
-        });
+    /// Seed a (model, app) class with an a-priori distribution (the paper
+    /// assumes historical data exists when SLOs are configured;
+    /// experiments seed from the workload generator the way a production
+    /// deployment would seed from the previous window).
+    pub fn seed(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
+        let w = self
+            .apps
+            .entry((model, app))
+            .or_insert_with(|| AppWindow {
+                samples: VecDeque::new(),
+                observed: 0,
+            });
         // Materialize the histogram as quantile samples so later real
         // samples blend in smoothly.
         let n = self.window.min(256);
@@ -103,12 +122,15 @@ impl OnlineProfiler {
     }
 
     /// Record a finished request's solo execution time.
-    pub fn record(&mut self, app: AppId, solo_exec_ms: f64) {
+    pub fn record(&mut self, model: ModelId, app: AppId, solo_exec_ms: f64) {
         let sampled = self.sample_prob >= 1.0 || self.rng.chance(self.sample_prob);
-        let w = self.apps.entry(app).or_insert_with(|| AppWindow {
-            samples: VecDeque::new(),
-            observed: 0,
-        });
+        let w = self
+            .apps
+            .entry((model, app))
+            .or_insert_with(|| AppWindow {
+                samples: VecDeque::new(),
+                observed: 0,
+            });
         w.observed += 1;
         if sampled {
             if w.samples.len() == self.window {
@@ -136,9 +158,10 @@ impl OnlineProfiler {
             .apps
             .iter()
             .filter(|(_, w)| !w.samples.is_empty())
-            .map(|(app, w)| {
+            .map(|((model, app), w)| {
                 let v: Vec<f64> = w.samples.iter().copied().collect();
                 (
+                    *model,
                     *app,
                     Histogram::from_samples(&v, self.bins),
                     w.observed as f64,
@@ -156,15 +179,17 @@ impl OnlineProfiler {
 mod tests {
     use super::*;
 
+    const M0: ModelId = ModelId(0);
+
     #[test]
     fn records_and_snapshots() {
         let mut p = OnlineProfiler::new(100, 1.0, 16, 1);
         for i in 0..50 {
-            p.record(AppId(0), 10.0 + (i % 5) as f64);
+            p.record(M0, AppId(0), 10.0 + (i % 5) as f64);
         }
         let s = p.snapshot();
         assert_eq!(s.apps.len(), 1);
-        let h = s.histogram_for(AppId(0)).unwrap();
+        let h = s.histogram_for(M0, AppId(0)).unwrap();
         assert!((h.mean() - 12.0).abs() < 1.0);
     }
 
@@ -172,13 +197,13 @@ mod tests {
     fn window_evicts_old_samples() {
         let mut p = OnlineProfiler::new(10, 1.0, 8, 2);
         for _ in 0..50 {
-            p.record(AppId(0), 100.0);
+            p.record(M0, AppId(0), 100.0);
         }
         for _ in 0..10 {
-            p.record(AppId(0), 1.0);
+            p.record(M0, AppId(0), 1.0);
         }
         let h = p.snapshot();
-        let hist = h.histogram_for(AppId(0)).unwrap();
+        let hist = h.histogram_for(M0, AppId(0)).unwrap();
         assert!(hist.mean() < 2.0, "old samples must be gone: {}", hist.mean());
     }
 
@@ -186,30 +211,58 @@ mod tests {
     fn per_app_isolation_and_weights() {
         let mut p = OnlineProfiler::new(100, 1.0, 16, 3);
         for _ in 0..30 {
-            p.record(AppId(1), 5.0);
+            p.record(M0, AppId(1), 5.0);
         }
         for _ in 0..10 {
-            p.record(AppId(2), 50.0);
+            p.record(M0, AppId(2), 50.0);
         }
         let s = p.snapshot();
         assert_eq!(s.apps.len(), 2);
-        let (_, _, w1) = s.apps.iter().find(|(a, _, _)| *a == AppId(1)).unwrap();
-        let (_, _, w2) = s.apps.iter().find(|(a, _, _)| *a == AppId(2)).unwrap();
+        let (_, _, _, w1) = s
+            .apps
+            .iter()
+            .find(|(_, a, _, _)| *a == AppId(1))
+            .unwrap();
+        let (_, _, _, w2) = s
+            .apps
+            .iter()
+            .find(|(_, a, _, _)| *a == AppId(2))
+            .unwrap();
         assert_eq!(*w1, 30.0);
         assert_eq!(*w2, 10.0);
         // Mixture mean weighted 3:1 → (5*30 + 50*10)/40 = 16.25
-        let mix = s.mixture(64).unwrap();
+        let mix = s.mixture(M0, 64).unwrap();
         assert!((mix.mean() - 16.25).abs() < 1.5, "mix mean {}", mix.mean());
+    }
+
+    #[test]
+    fn models_do_not_cross_contaminate() {
+        let mut p = OnlineProfiler::new(100, 1.0, 16, 9);
+        for _ in 0..40 {
+            p.record(ModelId(0), AppId(0), 5.0);
+            p.record(ModelId(1), AppId(0), 80.0);
+        }
+        let s = p.snapshot();
+        assert_eq!(s.apps.len(), 2);
+        let h0 = s.histogram_for(ModelId(0), AppId(0)).unwrap();
+        let h1 = s.histogram_for(ModelId(1), AppId(0)).unwrap();
+        assert!(h0.mean() < 10.0, "model 0 mean {}", h0.mean());
+        assert!(h1.mean() > 60.0, "model 1 mean {}", h1.mean());
+        // Per-model mixtures stay separated too.
+        let m0 = s.mixture(ModelId(0), 32).unwrap();
+        let m1 = s.mixture(ModelId(1), 32).unwrap();
+        assert!(m0.mean() < 10.0 && m1.mean() > 60.0);
+        assert_eq!(s.mixtures(32).len(), 2);
     }
 
     #[test]
     fn sampling_probability_reduces_rate() {
         let mut p = OnlineProfiler::new(100_000, 0.1, 16, 4);
         for _ in 0..10_000 {
-            p.record(AppId(0), 1.0);
+            p.record(M0, AppId(0), 1.0);
         }
         let s = p.snapshot();
-        let (_, h, w) = &s.apps[0];
+        let (_, _, h, w) = &s.apps[0];
         assert_eq!(*w, 10_000.0); // observed counts everything
         // but samples ≈ 1000
         let _ = h;
@@ -222,9 +275,9 @@ mod tests {
     fn seed_then_reset() {
         let mut p = OnlineProfiler::new(512, 1.0, 16, 5);
         let h = Histogram::from_weights(10.0, 1.0, &[1.0, 1.0]);
-        p.seed(AppId(0), &h, 100);
+        p.seed(M0, AppId(0), &h, 100);
         let s = p.snapshot();
-        assert!((s.histogram_for(AppId(0)).unwrap().mean() - 11.0).abs() < 0.3);
+        assert!((s.histogram_for(M0, AppId(0)).unwrap().mean() - 11.0).abs() < 0.3);
         p.reset();
         assert!(p.snapshot().apps.is_empty());
     }
@@ -232,6 +285,7 @@ mod tests {
     #[test]
     fn empty_snapshot_mixture_none() {
         let p = OnlineProfiler::new(10, 1.0, 8, 6);
-        assert!(p.snapshot().mixture(8).is_none());
+        assert!(p.snapshot().mixture(M0, 8).is_none());
+        assert!(p.snapshot().mixtures(8).is_empty());
     }
 }

@@ -6,7 +6,9 @@
 //! sentence: a [`Cluster`] holds N replicas, each a scheduler instance
 //! (built via the `baselines::by_name` registry) paired by the pump with
 //! its own executor, and a [`Router`] front-end admits arrivals and picks
-//! the replica that will serve each request.
+//! the replica that will serve each request. A [`Placement`] records
+//! which *models* each replica hosts — arrivals are only ever routed to a
+//! replica hosting their model, and batches are model-pure.
 //!
 //! The core is deliberately execution-agnostic: [`ServingLoop::on_event`]
 //! consumes [`Event`]s and returns [`Dispatch`] decisions; a *pump* owns
@@ -15,14 +17,17 @@
 //! wall-clock threads (the PJRT serving path). All completion, drop and
 //! outcome bookkeeping lives here, once.
 
+pub mod placement;
 pub mod realtime;
 pub mod replay;
 pub mod router;
 
 use crate::baselines;
 use crate::clock::{Clock, Micros};
-use crate::core::request::{Completion, Outcome, Request};
+use crate::core::histogram::Histogram;
+use crate::core::request::{AppId, Completion, ModelId, Outcome, Request};
 use crate::scheduler::{Scheduler, SchedulerConfig};
+pub use placement::Placement;
 pub use router::Router;
 
 /// Identifies one replica (scheduler + worker pair) in a cluster.
@@ -31,7 +36,8 @@ pub type WorkerId = usize;
 /// Events driving the serving loop (the whole event model).
 #[derive(Debug)]
 pub enum Event {
-    /// A request entered the system; the router assigns it to a replica.
+    /// A request entered the system; the router assigns it to a replica
+    /// hosting its model.
     Arrival(Request),
     /// A worker finished its in-flight batch; `batch_ms` is the measured
     /// (or simulated) batch wall time fed back to the online profilers.
@@ -44,6 +50,7 @@ pub enum Event {
 /// A dispatch decision: run `batch` on `worker`. Produced by the loop,
 /// executed by the pump (virtual time: cost model; real time: worker
 /// thread). The pump must answer with `Event::BatchDone` for this worker.
+/// Batches are model-pure: every request names the same model.
 #[derive(Debug)]
 pub struct Dispatch {
     pub worker: WorkerId,
@@ -55,8 +62,12 @@ pub struct Dispatch {
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerLoad {
     pub worker: WorkerId,
-    /// Requests queued in this replica's scheduler.
+    /// Requests queued in this replica's scheduler (all models).
     pub pending: usize,
+    /// Requests queued for the routed request's model specifically
+    /// (per-model load accounting; equals `pending` on single-model
+    /// clusters).
+    pub pending_model: usize,
     /// Size of the batch currently executing (0 = idle).
     pub in_flight: usize,
 }
@@ -101,16 +112,30 @@ struct Slot<S> {
     busy_us: Micros,
 }
 
-/// N scheduling replicas. Each slot owns one [`Scheduler`] instance; the
-/// pump pairs slot *i* with worker *i*.
+/// N scheduling replicas plus the model placement across them. Each slot
+/// owns one [`Scheduler`] instance; the pump pairs slot *i* with worker
+/// *i*.
 pub struct Cluster<S> {
     slots: Vec<Slot<S>>,
+    placement: Placement,
 }
 
 impl<S: Scheduler> Cluster<S> {
-    /// One replica per scheduler. Panics on an empty list.
+    /// One replica per scheduler, every replica hosting every model (the
+    /// historical single-model behaviour). Panics on an empty list.
     pub fn new(scheds: Vec<S>) -> Self {
+        let placement = Placement::unconstrained(scheds.len().max(1));
+        Cluster::with_placement(scheds, placement)
+    }
+
+    /// One replica per scheduler with an explicit model placement.
+    pub fn with_placement(scheds: Vec<S>, placement: Placement) -> Self {
         assert!(!scheds.is_empty(), "a cluster needs at least one replica");
+        assert_eq!(
+            placement.workers(),
+            scheds.len(),
+            "placement must cover exactly the cluster's replicas"
+        );
         Cluster {
             slots: scheds
                 .into_iter()
@@ -121,6 +146,7 @@ impl<S: Scheduler> Cluster<S> {
                     busy_us: 0,
                 })
                 .collect(),
+            placement,
         }
     }
 
@@ -132,15 +158,18 @@ impl<S: Scheduler> Cluster<S> {
         self.slots.is_empty()
     }
 
-    /// Install deployment-time historical data on every replica.
-    pub fn seed_app_profile(
-        &mut self,
-        app: crate::core::request::AppId,
-        hist: &crate::core::histogram::Histogram,
-        weight: u64,
-    ) {
-        for slot in &mut self.slots {
-            slot.sched.seed_app_profile(app, hist, weight);
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Install deployment-time historical data for one (model, app) class
+    /// on every replica hosting the model.
+    pub fn seed_app_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
+        let placement = &self.placement;
+        for (w, slot) in self.slots.iter_mut().enumerate() {
+            if placement.hosts(w, model) {
+                slot.sched.seed_app_profile(model, app, hist, weight);
+            }
         }
     }
 }
@@ -150,12 +179,23 @@ impl Cluster<Box<dyn Scheduler>> {
     /// decorrelated per-replica seeds (replica 0 keeps `seed` so a
     /// single-worker cluster reproduces the historical single-loop runs).
     pub fn build(system: &str, cfg: &SchedulerConfig, seed: u64, n: usize) -> Option<Self> {
-        let n = n.max(1);
+        Self::build_placed(system, cfg, seed, Placement::unconstrained(n))
+    }
+
+    /// Like [`Cluster::build`], but with an explicit model placement; the
+    /// replica count is the placement's worker count.
+    pub fn build_placed(
+        system: &str,
+        cfg: &SchedulerConfig,
+        seed: u64,
+        placement: Placement,
+    ) -> Option<Self> {
+        let n = placement.workers().max(1);
         let mut scheds = Vec::with_capacity(n);
         for w in 0..n {
             scheds.push(baselines::by_name(system, cfg.clone(), seed ^ ((w as u64) << 24))?);
         }
-        Some(Cluster::new(scheds))
+        Some(Cluster::with_placement(scheds, placement))
     }
 }
 
@@ -166,8 +206,8 @@ pub struct ServingLoop<C: Clock, S: Scheduler> {
     cluster: Cluster<S>,
     router: Box<dyn Router>,
     completions: Vec<Completion>,
-    /// Reused per-arrival load snapshot (routing sits on the dispatch hot
-    /// path — one request, one route call; no allocation).
+    /// Reused per-arrival candidate snapshot (routing sits on the dispatch
+    /// hot path — one request, one route call; no allocation).
     loads_buf: Vec<WorkerLoad>,
 }
 
@@ -197,6 +237,11 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         self.cluster.len()
     }
 
+    /// The cluster's model placement.
+    pub fn placement(&self) -> &Placement {
+        self.cluster.placement()
+    }
+
     /// Requests queued (not executing) across all replicas.
     pub fn pending(&self) -> usize {
         self.cluster.slots.iter().map(|s| s.sched.pending()).sum()
@@ -211,30 +256,40 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             .count()
     }
 
-    fn slot_load(w: WorkerId, s: &Slot<S>) -> WorkerLoad {
+    fn slot_load(w: WorkerId, s: &Slot<S>, model: Option<ModelId>) -> WorkerLoad {
+        let pending = s.sched.pending();
         WorkerLoad {
             worker: w,
-            pending: s.sched.pending(),
+            pending,
+            pending_model: model.map_or(pending, |m| s.sched.pending_for(m)),
             in_flight: s.inflight.as_ref().map_or(0, |f| f.batch.len()),
         }
     }
 
-    /// Per-replica load snapshot (what routers see).
+    /// Per-replica load snapshot (what routers see); `pending_model`
+    /// mirrors `pending` since no model is being routed.
     pub fn loads(&self) -> Vec<WorkerLoad> {
         self.cluster
             .slots
             .iter()
             .enumerate()
-            .map(|(w, s)| Self::slot_load(w, s))
+            .map(|(w, s)| Self::slot_load(w, s, None))
             .collect()
     }
 
-    /// Rebuild the reusable routing snapshot in place.
-    fn refresh_loads(&mut self) {
+    /// Rebuild the reusable routing snapshot in place, restricted to the
+    /// replicas hosting `req`'s model.
+    fn refresh_candidates(&mut self, req: &Request) {
         let slots = &self.cluster.slots;
+        let placement = &self.cluster.placement;
         self.loads_buf.clear();
-        self.loads_buf
-            .extend(slots.iter().enumerate().map(|(w, s)| Self::slot_load(w, s)));
+        self.loads_buf.extend(
+            slots
+                .iter()
+                .enumerate()
+                .filter(|(w, _)| placement.hosts(*w, req.model))
+                .map(|(w, s)| Self::slot_load(w, s, Some(req.model))),
+        );
     }
 
     /// Feed one event; returns the dispatch decisions the pump must
@@ -246,11 +301,25 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         let now = self.clock.now();
         match ev {
             Event::Arrival(req) => {
-                self.refresh_loads();
+                self.refresh_candidates(&req);
+                if self.loads_buf.is_empty() {
+                    // No replica hosts this model: terminal drop (the
+                    // request still completes exactly once, as TimedOut —
+                    // `Placement::parse` rejects placements that leave a
+                    // model unhosted, so this only fires on ad-hoc traces).
+                    self.completions.push(Completion {
+                        request: req,
+                        outcome: Outcome::TimedOut,
+                        at: now,
+                        batch_size: 0,
+                        worker: None,
+                    });
+                    return Vec::new();
+                }
                 let n = self.loads_buf.len();
-                let w = self.router.route(&req, &self.loads_buf);
-                debug_assert!(w < n, "router returned worker {w} of {n}");
-                let w = w.min(n - 1);
+                let i = self.router.route(&req, &self.loads_buf);
+                debug_assert!(i < n, "router returned candidate {i} of {n}");
+                let w = self.loads_buf[i.min(n - 1)].worker;
                 self.cluster.slots[w].sched.on_arrival(req, now);
                 Vec::new()
             }
@@ -339,6 +408,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 outcome,
                 at: now,
                 batch_size: bs,
+                worker: Some(w),
             });
         }
         slot.busy_us += now.saturating_sub(f.started_at);
@@ -357,6 +427,17 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         loop {
             match self.cluster.slots[w].sched.next_batch(now) {
                 Some(batch) => {
+                    debug_assert!(
+                        batch.iter().all(|r| r.model == batch[0].model),
+                        "scheduler {w} formed a mixed-model batch"
+                    );
+                    debug_assert!(
+                        batch
+                            .first()
+                            .map(|r| self.cluster.placement.hosts(w, r.model))
+                            .unwrap_or(true),
+                        "worker {w} dispatched a batch for a model it does not host"
+                    );
                     self.cluster.slots[w].inflight = Some(InFlight {
                         batch: batch.clone(),
                         started_at: now,
@@ -382,6 +463,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 outcome,
                 at: now,
                 batch_size: 0,
+                worker: None,
             });
         }
         any
@@ -449,6 +531,7 @@ mod tests {
         let (completions, stats) = core.into_completions();
         assert_eq!(completions.len(), 1);
         assert_eq!(completions[0].outcome, Outcome::Finished);
+        assert_eq!(completions[0].worker, Some(0));
         assert_eq!(stats.len(), 1);
         assert_eq!(stats[0].batches, 1);
         assert_eq!(stats[0].busy_us, ms_to_us(10.0));
@@ -460,5 +543,34 @@ mod tests {
         let c = Cluster::build("orloj", &SchedulerConfig::default(), 7, 4).unwrap();
         assert_eq!(c.len(), 4);
         assert!(Cluster::build("no-such-system", &SchedulerConfig::default(), 7, 2).is_none());
+    }
+
+    #[test]
+    fn placement_constrains_routing() {
+        let clock = VirtualClock::new();
+        // Worker 0 hosts model 0, worker 1 hosts model 1.
+        let placement = Placement::parse("partition", 2, 2).unwrap();
+        let cluster = Cluster::with_placement(vec![sched(), sched()], placement);
+        let mut core = ServingLoop::new(
+            clock.clone(),
+            cluster,
+            router::by_name("least_loaded").unwrap(),
+        );
+        for i in 0..4u64 {
+            let model = ModelId((i % 2) as u32);
+            core.on_event(Event::Arrival(req(i, 0).with_model(model)));
+        }
+        let ds = core.on_event(Event::Wake);
+        assert_eq!(ds.len(), 2);
+        for d in &ds {
+            for r in &d.batch {
+                assert!(
+                    core.placement().hosts(d.worker, r.model),
+                    "worker {} got model {:?}",
+                    d.worker,
+                    r.model
+                );
+            }
+        }
     }
 }

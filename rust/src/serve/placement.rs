@@ -1,0 +1,214 @@
+//! Cluster placement: which workers host which models (DESIGN.md §3).
+//!
+//! Production clusters multiplex many models across their workers the way
+//! Clockwork does per-model placement; a [`Placement`] records the
+//! worker→models assignment the router must respect — an arrival is only
+//! ever routed to a worker hosting its model. The default
+//! ([`Placement::unconstrained`]) hosts every model everywhere, which is
+//! exactly the historical single-model behaviour.
+
+use crate::core::request::ModelId;
+
+/// Worker→models assignment for a cluster.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    workers: usize,
+    /// `hosted[w]` = sorted model ids on worker `w`. Empty outer vec =
+    /// unconstrained (every worker hosts every model).
+    hosted: Vec<Vec<ModelId>>,
+}
+
+/// The named placement presets `parse` accepts, in documentation order.
+pub const PLACEMENTS: [&str; 3] = ["all", "partition", "skewed"];
+
+impl Placement {
+    /// Every worker hosts every model (single-model clusters, and the
+    /// default when no placement is configured).
+    pub fn unconstrained(workers: usize) -> Self {
+        Placement {
+            workers: workers.max(1),
+            hosted: Vec::new(),
+        }
+    }
+
+    /// Explicit per-worker model lists. Panics if empty.
+    pub fn new(hosted: Vec<Vec<ModelId>>) -> Self {
+        assert!(!hosted.is_empty(), "a placement needs at least one worker");
+        let mut hosted = hosted;
+        for ms in &mut hosted {
+            ms.sort_unstable();
+            ms.dedup();
+        }
+        Placement {
+            workers: hosted.len(),
+            hosted,
+        }
+    }
+
+    /// Build a placement from a spec string, for models `0..models`:
+    ///
+    /// * `all` — every worker hosts every model;
+    /// * `partition` — disjoint-ish round-robin: worker `w` hosts model
+    ///   `w % models`, and model `m` is guaranteed a host on worker
+    ///   `m % workers`;
+    /// * `skewed` — model 0 (the hot model) is hosted everywhere; each
+    ///   model `m > 0` only on worker `m % workers`;
+    /// * explicit `"0,1;1;0"` — semicolon-separated per-worker model
+    ///   lists (must name exactly `workers` groups).
+    ///
+    /// Returns None for an unknown spec, a malformed explicit list, or an
+    /// explicit list that leaves some model `< models` unhosted.
+    pub fn parse(spec: &str, workers: usize, models: usize) -> Option<Placement> {
+        let (workers, models) = (workers.max(1), models.max(1));
+        let hosted: Vec<Vec<ModelId>> = match spec {
+            "all" => (0..workers)
+                .map(|_| (0..models).map(|m| ModelId(m as u32)).collect())
+                .collect(),
+            "partition" => {
+                let mut hosted: Vec<Vec<ModelId>> =
+                    (0..workers).map(|w| vec![ModelId((w % models) as u32)]).collect();
+                for m in 0..models {
+                    hosted[m % workers].push(ModelId(m as u32));
+                }
+                hosted
+            }
+            "skewed" => {
+                let mut hosted: Vec<Vec<ModelId>> =
+                    (0..workers).map(|_| vec![ModelId(0)]).collect();
+                for m in 1..models {
+                    hosted[m % workers].push(ModelId(m as u32));
+                }
+                hosted
+            }
+            explicit => {
+                let groups: Vec<&str> = explicit.split(';').collect();
+                if groups.len() != workers {
+                    return None;
+                }
+                let mut hosted = Vec::with_capacity(workers);
+                for g in groups {
+                    let mut ms = Vec::new();
+                    for tok in g.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+                        ms.push(ModelId(tok.parse::<u32>().ok()?));
+                    }
+                    hosted.push(ms);
+                }
+                hosted
+            }
+        };
+        let p = Placement::new(hosted);
+        // Every model must be hosted somewhere, or its requests could
+        // never be served.
+        (0..models).all(|m| p.hosts_anywhere(ModelId(m as u32))).then_some(p)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Does worker `w` host `model`?
+    pub fn hosts(&self, w: usize, model: ModelId) -> bool {
+        if self.hosted.is_empty() {
+            return w < self.workers;
+        }
+        self.hosted.get(w).is_some_and(|ms| ms.contains(&model))
+    }
+
+    /// Does any worker host `model`?
+    pub fn hosts_anywhere(&self, model: ModelId) -> bool {
+        self.hosted.is_empty() || self.hosted.iter().any(|ms| ms.contains(&model))
+    }
+
+    /// Models hosted on worker `w` (None = unconstrained, i.e. all).
+    pub fn hosted_on(&self, w: usize) -> Option<&[ModelId]> {
+        if self.hosted.is_empty() {
+            None
+        } else {
+            self.hosted.get(w).map(|v| v.as_slice())
+        }
+    }
+
+    /// Every model named by the placement, sorted (empty when
+    /// unconstrained — the model set is open).
+    pub fn models(&self) -> Vec<ModelId> {
+        let mut all: Vec<ModelId> = self.hosted.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconstrained_hosts_everything() {
+        let p = Placement::unconstrained(3);
+        assert_eq!(p.workers(), 3);
+        assert!(p.hosts(0, ModelId(0)) && p.hosts(2, ModelId(99)));
+        assert!(!p.hosts(3, ModelId(0)), "out-of-range worker");
+        assert!(p.hosts_anywhere(ModelId(7)));
+        assert!(p.models().is_empty());
+        assert!(p.hosted_on(1).is_none());
+    }
+
+    #[test]
+    fn parse_all() {
+        let p = Placement::parse("all", 2, 3).unwrap();
+        for w in 0..2 {
+            for m in 0..3 {
+                assert!(p.hosts(w, ModelId(m)));
+            }
+        }
+        assert_eq!(p.models(), vec![ModelId(0), ModelId(1), ModelId(2)]);
+    }
+
+    #[test]
+    fn parse_partition_covers_all_models() {
+        for (workers, models) in [(4, 2), (2, 4), (3, 3), (1, 2)] {
+            let p = Placement::parse("partition", workers, models).unwrap();
+            for m in 0..models {
+                assert!(
+                    p.hosts_anywhere(ModelId(m as u32)),
+                    "partition {workers}x{models}: model {m} unhosted"
+                );
+            }
+            // Disjoint-ish: at least one worker does NOT host model 0 when
+            // there are ≥2 of each.
+            if workers >= 2 && models >= 2 {
+                assert!(
+                    (0..workers).any(|w| !p.hosts(w, ModelId(0))),
+                    "partition {workers}x{models} degenerated to all"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_skewed_hot_model_everywhere() {
+        let p = Placement::parse("skewed", 4, 3).unwrap();
+        for w in 0..4 {
+            assert!(p.hosts(w, ModelId(0)), "hot model must be on worker {w}");
+        }
+        assert!(p.hosts(1, ModelId(1)) && p.hosts(2, ModelId(2)));
+        assert!(!p.hosts(0, ModelId(1)) && !p.hosts(3, ModelId(2)));
+    }
+
+    #[test]
+    fn parse_explicit_lists() {
+        let p = Placement::parse("0,1;1;0", 3, 2).unwrap();
+        assert!(p.hosts(0, ModelId(0)) && p.hosts(0, ModelId(1)));
+        assert!(p.hosts(1, ModelId(1)) && !p.hosts(1, ModelId(0)));
+        assert!(p.hosts(2, ModelId(0)) && !p.hosts(2, ModelId(1)));
+        assert_eq!(p.hosted_on(1), Some(&[ModelId(1)][..]));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(Placement::parse("nope", 2, 2).is_none(), "unknown word");
+        assert!(Placement::parse("0;0;0", 2, 1).is_none(), "wrong worker count");
+        assert!(Placement::parse("0;0", 2, 2).is_none(), "model 1 unhosted");
+        assert!(Placement::parse("0,x;1", 2, 2).is_none(), "bad model id");
+    }
+}

@@ -4,40 +4,64 @@
 //! contract:
 //!
 //! * `route` is called once per arrival, before the request is handed to
-//!   any scheduler, with a load snapshot covering every replica
-//!   (`loads.len() >= 1`, `loads[i].worker == i`).
-//! * It must return a `WorkerId < loads.len()`. Routing is final — the
-//!   core does not migrate queued requests between replicas (the paper's
+//!   any scheduler, with the *model-constrained candidate set*: a load
+//!   snapshot covering every replica hosting the request's model
+//!   (`loads.len() >= 1`; `loads[i].worker` is the replica id, which is
+//!   not necessarily `i` under a non-trivial placement).
+//! * It must return an index `< loads.len()` into the candidate set; the
+//!   core dispatches to `loads[i].worker`. Routing is final — the core
+//!   does not migrate queued requests between replicas (the paper's
 //!   per-replica scheduler owns its queue).
 //! * Routers may keep internal state (`&mut self`) but must be
 //!   deterministic given the same call sequence, so simulated runs stay
 //!   replayable.
+//! * Load ties are broken by *rotation*, not by lowest id — always
+//!   picking the first minimum herds every equal-load arrival burst onto
+//!   worker 0 (all loads are equal at startup).
 
-use super::{WorkerId, WorkerLoad};
-use crate::core::request::Request;
+use super::WorkerLoad;
+use crate::core::request::{ModelId, Request};
 
 /// Replica-selection policy for arrivals.
 pub trait Router: Send {
     fn name(&self) -> &'static str;
 
-    /// Pick the replica for `req` given the current per-replica load.
-    fn route(&mut self, req: &Request, loads: &[WorkerLoad]) -> WorkerId;
+    /// Pick the candidate index for `req` given the current per-replica
+    /// load of every replica hosting `req.model`.
+    fn route(&mut self, req: &Request, loads: &[WorkerLoad]) -> usize;
 }
 
-/// Cycle through replicas in order, ignoring load.
+/// Among the candidates minimizing `key`, pick one on a rotating cursor
+/// (round-robin across ties) and advance the cursor.
+fn rotate_min(loads: &[WorkerLoad], rot: &mut usize, key: impl Fn(&WorkerLoad) -> usize) -> usize {
+    let best = match loads.iter().map(&key).min() {
+        Some(b) => b,
+        None => return 0,
+    };
+    let ties = loads.iter().filter(|l| key(l) == best).count();
+    let k = *rot % ties;
+    *rot = rot.wrapping_add(1);
+    loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| key(l) == best)
+        .nth(k)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Cycle through the candidate set in order, ignoring load. One cursor
+/// per model: a shared cursor would let a cold model's small candidate
+/// set disturb (or, reduced modulo its size, outright reset) the hot
+/// model's rotation and starve high-index workers.
+#[derive(Default)]
 pub struct RoundRobin {
-    next: usize,
+    cursors: Vec<(ModelId, usize)>,
 }
 
 impl RoundRobin {
     pub fn new() -> Self {
-        RoundRobin { next: 0 }
-    }
-}
-
-impl Default for RoundRobin {
-    fn default() -> Self {
-        Self::new()
+        RoundRobin::default()
     }
 }
 
@@ -46,48 +70,66 @@ impl Router for RoundRobin {
         "round_robin"
     }
 
-    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> WorkerId {
-        let w = self.next % loads.len();
-        self.next = (w + 1) % loads.len();
-        w
+    fn route(&mut self, req: &Request, loads: &[WorkerLoad]) -> usize {
+        let idx = match self.cursors.iter().position(|(m, _)| *m == req.model) {
+            Some(i) => i,
+            None => {
+                self.cursors.push((req.model, 0));
+                self.cursors.len() - 1
+            }
+        };
+        let cursor = &mut self.cursors[idx].1;
+        let i = *cursor % loads.len();
+        *cursor = cursor.wrapping_add(1);
+        i
     }
 }
 
-/// Send to the replica with the fewest *queued* requests (classic JSQ;
-/// ties break toward the lower id).
-pub struct JoinShortestQueue;
+/// Send to the candidate with the fewest queued requests *of the routed
+/// request's model* (classic JSQ with per-model load accounting — equal
+/// to total queued on single-model clusters; ties rotate).
+#[derive(Default)]
+pub struct JoinShortestQueue {
+    rot: usize,
+}
+
+impl JoinShortestQueue {
+    pub fn new() -> Self {
+        JoinShortestQueue { rot: 0 }
+    }
+}
 
 impl Router for JoinShortestQueue {
     fn name(&self) -> &'static str {
         "join_shortest_queue"
     }
 
-    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> WorkerId {
-        loads
-            .iter()
-            .min_by_key(|l| (l.pending, l.worker))
-            .map(|l| l.worker)
-            .unwrap_or(0)
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> usize {
+        rotate_min(loads, &mut self.rot, |l| l.pending_model)
     }
 }
 
-/// Send to the replica with the least total work in the system — queued
-/// plus in-flight batch size (ties break toward the lower id). Unlike JSQ
-/// this avoids piling onto a replica that just emptied its queue into a
-/// large running batch.
-pub struct LeastLoaded;
+/// Send to the candidate with the least total work in the system — queued
+/// plus in-flight batch size (ties rotate). Unlike JSQ this avoids piling
+/// onto a replica that just emptied its queue into a large running batch.
+#[derive(Default)]
+pub struct LeastLoaded {
+    rot: usize,
+}
+
+impl LeastLoaded {
+    pub fn new() -> Self {
+        LeastLoaded { rot: 0 }
+    }
+}
 
 impl Router for LeastLoaded {
     fn name(&self) -> &'static str {
         "least_loaded"
     }
 
-    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> WorkerId {
-        loads
-            .iter()
-            .min_by_key(|l| (l.total(), l.worker))
-            .map(|l| l.worker)
-            .unwrap_or(0)
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> usize {
+        rotate_min(loads, &mut self.rot, |l| l.total())
     }
 }
 
@@ -98,8 +140,8 @@ pub const ROUTERS: [&str; 3] = ["round_robin", "least_loaded", "join_shortest_qu
 pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
     match name {
         "round_robin" | "rr" => Some(Box::new(RoundRobin::new())),
-        "least_loaded" | "ll" => Some(Box::new(LeastLoaded)),
-        "join_shortest_queue" | "jsq" => Some(Box::new(JoinShortestQueue)),
+        "least_loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
+        "join_shortest_queue" | "jsq" => Some(Box::new(JoinShortestQueue::new())),
         _ => None,
     }
 }
@@ -119,6 +161,7 @@ mod tests {
             .map(|(w, &(pending, in_flight))| WorkerLoad {
                 worker: w,
                 pending,
+                pending_model: pending,
                 in_flight,
             })
             .collect()
@@ -134,7 +177,7 @@ mod tests {
 
     #[test]
     fn jsq_picks_shortest_queue_ignoring_inflight() {
-        let mut r = JoinShortestQueue;
+        let mut r = JoinShortestQueue::new();
         // Worker 1 has the shortest queue even though it has a big batch
         // in flight.
         let ls = loads(&[(3, 0), (1, 16), (2, 0)]);
@@ -143,19 +186,63 @@ mod tests {
 
     #[test]
     fn least_loaded_counts_inflight() {
-        let mut r = LeastLoaded;
+        let mut r = LeastLoaded::new();
         // Worker 1's in-flight batch makes worker 2 the least loaded.
         let ls = loads(&[(3, 0), (1, 16), (2, 0)]);
         assert_eq!(r.route(&req(), &ls), 2);
     }
 
     #[test]
-    fn ties_break_to_lowest_id() {
-        let mut jsq = JoinShortestQueue;
-        let mut ll = LeastLoaded;
+    fn ties_rotate_instead_of_herding() {
+        // All-equal loads (the startup burst): successive picks must cycle
+        // through the tied candidates, not herd onto index 0.
         let ls = loads(&[(2, 0), (2, 0), (2, 0)]);
-        assert_eq!(jsq.route(&req(), &ls), 0);
-        assert_eq!(ll.route(&req(), &ls), 0);
+        let mut jsq = JoinShortestQueue::new();
+        let picks: Vec<usize> = (0..6).map(|_| jsq.route(&req(), &ls)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        let mut ll = LeastLoaded::new();
+        let picks: Vec<usize> = (0..6).map(|_| ll.route(&req(), &ls)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_cursor_survives_smaller_candidate_sets() {
+        // A cold model's 1-candidate set must not disturb the hot model's
+        // rotation (per-model cursors) — the skewed-placement pathology
+        // where interleaved cold arrivals starved high-index workers of
+        // hot-model traffic.
+        let mut r = RoundRobin::new();
+        let hot_req = req(); // model 0
+        let cold_req = Request::new(1, AppId(0), 0, 1_000_000, 5.0).with_model(ModelId(1));
+        let hot = loads(&[(0, 0), (0, 0), (0, 0), (0, 0)]);
+        let cold = loads(&[(0, 0)]);
+        let mut picks = Vec::new();
+        for _ in 0..4 {
+            picks.push(r.route(&hot_req, &hot));
+            assert_eq!(r.route(&cold_req, &cold), 0);
+        }
+        assert_eq!(picks, vec![0, 1, 2, 3], "all four hot workers cycled");
+    }
+
+    #[test]
+    fn jsq_keys_on_per_model_depth() {
+        // Worker 0 has the shorter total queue but the longer queue for
+        // the routed model; per-model JSQ prefers worker 1.
+        let mut ls = loads(&[(2, 0), (5, 0)]);
+        ls[0].pending_model = 2;
+        ls[1].pending_model = 0;
+        let mut r = JoinShortestQueue::new();
+        assert_eq!(r.route(&req(), &ls), 1);
+    }
+
+    #[test]
+    fn rotation_skips_non_tied_candidates() {
+        // Only workers 0 and 2 are tied at the minimum; the rotation
+        // alternates between them and never picks the loaded worker 1.
+        let ls = loads(&[(1, 0), (5, 0), (1, 0)]);
+        let mut jsq = JoinShortestQueue::new();
+        let picks: Vec<usize> = (0..4).map(|_| jsq.route(&req(), &ls)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Serving metrics: the paper's *finish rate* (§5.2 Metrics) plus latency
-//! summaries and per-app/per-outcome breakdowns.
+//! summaries and per-app / per-model / per-outcome breakdowns.
 
 use crate::clock::Micros;
 use crate::core::request::{AppId, Completion, Outcome};
@@ -17,6 +17,26 @@ pub struct WorkerUtil {
     pub utilization: f64,
 }
 
+/// Per-model finish-rate and latency breakdown.
+#[derive(Debug, Clone)]
+pub struct ModelRates {
+    pub finished: usize,
+    pub total: usize,
+    /// Latency summary over this model's completed (finished + late)
+    /// requests, ms.
+    pub latency: Summary,
+}
+
+impl ModelRates {
+    pub fn finish_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.finished as f64 / self.total as f64
+        }
+    }
+}
+
 /// Aggregated result of a serving run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -31,6 +51,9 @@ pub struct RunReport {
     pub mean_batch_size: f64,
     /// Per-app finish rates.
     pub per_app: BTreeMap<u32, (usize, usize)>, // app -> (finished, total)
+    /// Per-model finish-rate and latency breakdown (one entry per model
+    /// seen in the completions; single-model runs have exactly one).
+    pub per_model: BTreeMap<u32, ModelRates>,
     /// Per-replica execution stats (empty when the run didn't report any —
     /// e.g. a report built from completions alone).
     pub per_worker: Vec<WorkerUtil>,
@@ -53,20 +76,28 @@ impl RunReport {
         let mut aborted = 0;
         let mut latencies = Vec::new();
         let mut per_app: BTreeMap<u32, (usize, usize)> = BTreeMap::new();
+        let mut per_model_acc: BTreeMap<u32, (usize, usize, Vec<f64>)> = BTreeMap::new();
         let mut batch_sizes = Vec::new();
         for c in completions {
             let AppId(app) = c.request.app;
             let slot = per_app.entry(app).or_insert((0, 0));
             slot.1 += 1;
+            let mslot = per_model_acc
+                .entry(c.request.model.0)
+                .or_insert_with(|| (0, 0, Vec::new()));
+            mslot.1 += 1;
             match c.outcome {
                 Outcome::Finished => {
                     finished += 1;
                     slot.0 += 1;
+                    mslot.0 += 1;
+                    mslot.2.push(c.latency_ms());
                     latencies.push(c.latency_ms());
                     batch_sizes.push(c.batch_size as f64);
                 }
                 Outcome::Late => {
                     late += 1;
+                    mslot.2.push(c.latency_ms());
                     latencies.push(c.latency_ms());
                     batch_sizes.push(c.batch_size as f64);
                 }
@@ -74,6 +105,19 @@ impl RunReport {
                 Outcome::Aborted => aborted += 1,
             }
         }
+        let per_model = per_model_acc
+            .into_iter()
+            .map(|(m, (fin, total, lats))| {
+                (
+                    m,
+                    ModelRates {
+                        finished: fin,
+                        total,
+                        latency: Summary::of(&lats),
+                    },
+                )
+            })
+            .collect();
         RunReport {
             total: completions.len(),
             finished,
@@ -83,6 +127,7 @@ impl RunReport {
             latency: Summary::of(&latencies),
             mean_batch_size: crate::util::stats::mean(&batch_sizes),
             per_app,
+            per_model,
             per_worker: Vec::new(),
         }
     }
@@ -118,6 +163,16 @@ impl std::fmt::Display for RunReport {
             self.latency.p99,
             self.mean_batch_size
         )?;
+        if self.per_model.len() > 1 {
+            let rates: Vec<String> = self
+                .per_model
+                .iter()
+                .map(|(m, r)| {
+                    format!("m{}={:.2}/{}r/p99={:.0}ms", m, r.finish_rate(), r.total, r.latency.p99)
+                })
+                .collect();
+            write!(f, " models=[{}]", rates.join(" "))?;
+        }
         if !self.per_worker.is_empty() {
             let utils: Vec<String> = self
                 .per_worker
@@ -133,7 +188,7 @@ impl std::fmt::Display for RunReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::request::Request;
+    use crate::core::request::{ModelId, Request};
 
     fn comp(id: u64, app: u32, outcome: Outcome, at: u64) -> Completion {
         Completion {
@@ -141,6 +196,17 @@ mod tests {
             outcome,
             at,
             batch_size: 4,
+            worker: Some(0),
+        }
+    }
+
+    fn comp_model(id: u64, model: u32, outcome: Outcome, at: u64) -> Completion {
+        Completion {
+            request: Request::new(id, AppId(0), 0, 1_000_000, 5.0).with_model(ModelId(model)),
+            outcome,
+            at,
+            batch_size: 2,
+            worker: Some(0),
         }
     }
 
@@ -161,6 +227,32 @@ mod tests {
         assert_eq!(r.per_app[&1], (1, 3));
         assert_eq!(r.timed_out, 1);
         assert_eq!(r.aborted, 1);
+        // Single model → one per-model entry matching the aggregates, not
+        // shown in Display.
+        assert_eq!(r.per_model.len(), 1);
+        assert_eq!(r.per_model[&0].finished, 2);
+        assert_eq!(r.per_model[&0].total, 5);
+        assert!(!format!("{r}").contains("models=["));
+    }
+
+    #[test]
+    fn per_model_breakdown() {
+        let comps = vec![
+            comp_model(1, 0, Outcome::Finished, 100),
+            comp_model(2, 0, Outcome::Finished, 200),
+            comp_model(3, 1, Outcome::Late, 2_000_000),
+            comp_model(4, 1, Outcome::Finished, 400),
+            comp_model(5, 1, Outcome::TimedOut, 500),
+        ];
+        let r = RunReport::from_completions(&comps);
+        assert_eq!(r.per_model.len(), 2);
+        assert!((r.per_model[&0].finish_rate() - 1.0).abs() < 1e-12);
+        assert!((r.per_model[&1].finish_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // Latency summaries cover completed requests only (2 for model 1).
+        assert!(r.per_model[&1].latency.p99 > 0.0);
+        let shown = format!("{r}");
+        assert!(shown.contains("models=["), "{shown}");
+        assert!(shown.contains("m0=1.00"), "{shown}");
     }
 
     #[test]
@@ -169,6 +261,7 @@ mod tests {
         assert_eq!(r.finish_rate(), 0.0);
         assert_eq!(r.total, 0);
         assert!(r.per_worker.is_empty());
+        assert!(r.per_model.is_empty());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::core::request::Request;
 use crate::scheduler::Scheduler;
 use crate::serve::realtime::{self, ServeResult};
 use crate::serve::router::{self, Router};
-use crate::serve::{Cluster, ServingLoop};
+use crate::serve::{Cluster, Placement, ServingLoop};
 use crate::sim::worker::Worker;
 use std::sync::mpsc::{self, Receiver, Sender};
 
@@ -40,6 +40,9 @@ pub struct Server<S: Scheduler, W: Worker> {
     scheds: Vec<S>,
     workers: Vec<W>,
     router: Box<dyn Router>,
+    /// Which models each replica hosts (None = every replica hosts every
+    /// model, the historical single-model behaviour).
+    placement: Option<Placement>,
     /// Anchored at construction so callers can stamp release times before
     /// the serving thread spins up.
     clock: RealClock,
@@ -52,6 +55,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             scheds: vec![sched],
             workers: vec![worker],
             router: router::by_name("round_robin").expect("registry has round_robin"),
+            placement: None,
             clock: RealClock::new(),
         }
     }
@@ -64,8 +68,17 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             scheds,
             workers,
             router,
+            placement: None,
             clock: RealClock::new(),
         }
+    }
+
+    /// Constrain which models each replica hosts (the router only routes a
+    /// request to replicas hosting its model).
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        assert_eq!(placement.workers(), self.scheds.len());
+        self.placement = Some(placement);
+        self
     }
 
     /// Create the submission channel. Call before `run`.
@@ -82,7 +95,11 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
 
     /// Serve until the submitters hang up and everything drains.
     pub fn run(self, rx: Receiver<Request>) -> ServeResult {
-        let core = ServingLoop::new(self.clock, Cluster::new(self.scheds), self.router);
+        let cluster = match self.placement {
+            Some(p) => Cluster::with_placement(self.scheds, p),
+            None => Cluster::new(self.scheds),
+        };
+        let core = ServingLoop::new(self.clock, cluster, self.router);
         realtime::serve_cluster(core, self.workers, rx)
     }
 }

@@ -10,17 +10,21 @@
 
 use crate::clock::VirtualClock;
 use crate::scheduler::SchedulerConfig;
-use crate::serve::{replay, router, Cluster, ServingLoop};
+use crate::serve::{replay, router, Cluster, Placement, ServingLoop};
 use crate::server::metrics::RunReport;
 use crate::sim::worker::SimWorker;
 use crate::workload::trace::{Trace, TraceSpec};
 
-/// Replica-count and routing knobs for a run (workers=1 reproduces the
-/// historical single-loop harness exactly).
+/// Replica-count, routing and model-placement knobs for a run (workers=1
+/// with the default "all" placement reproduces the historical single-loop
+/// harness exactly).
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub workers: usize,
     pub router: String,
+    /// Placement spec (`serve::Placement::parse`): `all`, `partition`,
+    /// `skewed`, or an explicit `"0,1;1;0"` worker→models list.
+    pub placement: String,
 }
 
 impl Default for ClusterSpec {
@@ -28,6 +32,7 @@ impl Default for ClusterSpec {
         ClusterSpec {
             workers: 1,
             router: "round_robin".into(),
+            placement: "all".into(),
         }
     }
 }
@@ -37,7 +42,13 @@ impl ClusterSpec {
         ClusterSpec {
             workers: workers.max(1),
             router: router.to_string(),
+            placement: "all".into(),
         }
+    }
+
+    pub fn with_placement(mut self, placement: &str) -> Self {
+        self.placement = placement.to_string();
+        self
     }
 }
 
@@ -63,13 +74,25 @@ pub fn run_one(
     cluster: &ClusterSpec,
 ) -> Cell {
     let n = cluster.workers.max(1);
-    let mut replicas = Cluster::build(system, cfg, seed, n)
+    let n_models = spec.models.len().max(1);
+    let placement = Placement::parse(&cluster.placement, n, n_models)
+        .unwrap_or_else(|| panic!("bad placement '{}' for {n} workers × {n_models} models", cluster.placement));
+    // Heterogeneous co-located models get per-model cost curves derived
+    // from the spec (no-op for single-model specs).
+    let mut cfg = cfg.clone();
+    if cfg.model_costs.is_empty() {
+        cfg.model_costs = spec.model_cost_models();
+    }
+    let mut replicas = Cluster::build_placed(system, &cfg, seed, placement)
         .unwrap_or_else(|| panic!("unknown system {system}"));
-    for (app, hist) in spec.seed_histograms(cfg.bins) {
-        replicas.seed_app_profile(app, &hist, 1000);
+    for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+        replicas.seed_app_profile(model, app, &hist, 1000);
     }
     let workers: Vec<SimWorker> = (0..n)
-        .map(|w| SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151 ^ ((w as u64) << 16)))
+        .map(|w| {
+            SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151 ^ ((w as u64) << 16))
+                .with_model_costs(cfg.model_costs.clone())
+        })
         .collect();
     let route = router::by_name(&cluster.router)
         .unwrap_or_else(|| panic!("unknown router {}", cluster.router));
@@ -165,6 +188,38 @@ pub fn render_worker_util(title: &str, cells: &[Cell]) -> String {
     out
 }
 
+/// Render per-model finish rates for cells that co-serve several models.
+pub fn render_model_rates(title: &str, cells: &[Cell]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "-- {title} --").unwrap();
+    for c in cells {
+        let rates: Vec<String> = c
+            .report
+            .per_model
+            .iter()
+            .map(|(m, r)| {
+                format!(
+                    "m{}={:.2}({}r,p99={:.0}ms)",
+                    m,
+                    r.finish_rate(),
+                    r.total,
+                    r.latency.p99
+                )
+            })
+            .collect();
+        writeln!(
+            out,
+            "{:>10} slo={:<4} {}",
+            c.system,
+            format!("{:.1}", c.slo_multiple),
+            rates.join(" ")
+        )
+        .unwrap();
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +227,7 @@ mod tests {
     use crate::core::batchmodel::BatchCostModel;
     use crate::workload::azure::AzureTraceConfig;
     use crate::workload::exectime::ExecTimeDist;
+    use crate::workload::trace::ModelTraffic;
 
     fn small_spec(bimodal: bool) -> TraceSpec {
         let dists = if bimodal {
@@ -189,6 +245,31 @@ mod tests {
                 ..Default::default()
             },
             seed: 77,
+            models: Vec::new(),
+        };
+        spec.scale_rate_to_load(BatchCostModel::gpu_like(), 0.6, 8);
+        spec
+    }
+
+    fn multimodel_spec() -> TraceSpec {
+        let mut spec = TraceSpec {
+            name: "mm-unit".into(),
+            dists: Vec::new(),
+            arrivals: AzureTraceConfig {
+                apps: 1,
+                rate_per_s: 0.0,
+                duration_s: 15.0,
+                ..Default::default()
+            },
+            seed: 78,
+            models: vec![
+                ModelTraffic::new(0, 0.7, vec![ExecTimeDist::constant("fast", 8.0)]),
+                ModelTraffic::new(
+                    1,
+                    0.3,
+                    vec![ExecTimeDist::multimodal("slow", 2, 15.0, 80.0, 1.0, None)],
+                ),
+            ],
         };
         spec.scale_rate_to_load(BatchCostModel::gpu_like(), 0.6, 8);
         spec
@@ -326,5 +407,49 @@ mod tests {
         assert!(table.contains("3.0") || table.contains("3"));
         let util = render_worker_util("u", &cells);
         assert!(util.contains("w0="));
+    }
+
+    #[test]
+    fn multimodel_grid_conserves_and_reports_per_model() {
+        let spec = multimodel_spec();
+        let trace = spec.generate();
+        for placement in ["all", "partition", "skewed"] {
+            let cells = run_grid(
+                &["edf", "orloj"],
+                &spec,
+                &[3.0],
+                &cfg(),
+                6,
+                &ClusterSpec::new(2, "least_loaded").with_placement(placement),
+            );
+            for c in &cells {
+                assert_eq!(
+                    c.report.total,
+                    trace.events.len(),
+                    "{placement}/{}: conservation",
+                    c.system
+                );
+                assert_eq!(c.report.per_model.len(), 2, "{placement}/{}", c.system);
+                let rendered = render_model_rates("per-model", &cells);
+                assert!(rendered.contains("m0="), "{rendered}");
+                assert!(rendered.contains("m1="), "{rendered}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad placement")]
+    fn bad_placement_panics_loudly() {
+        let spec = multimodel_spec();
+        let trace = spec.generate();
+        run_one(
+            "edf",
+            &spec,
+            &trace,
+            3.0,
+            &cfg(),
+            1,
+            &ClusterSpec::new(2, "round_robin").with_placement("0;0"),
+        );
     }
 }

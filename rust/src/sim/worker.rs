@@ -18,7 +18,7 @@ pub trait Worker: Send {
 /// Mutable borrows and boxes are workers too, so the unified serve pumps
 /// can execute through a worker they do not own (e.g. the single-worker
 /// `sim::engine::run` compatibility shim).
-impl<'a, W: Worker + ?Sized> Worker for &'a mut W {
+impl<W: Worker + ?Sized> Worker for &mut W {
     fn execute(&mut self, batch: &[Request]) -> f64 {
         (**self).execute(batch)
     }
@@ -33,8 +33,12 @@ impl<W: Worker + ?Sized> Worker for Box<W> {
 /// Virtual-time worker implementing the paper's batch cost model (Eq. 3):
 /// `l_B = c0 + c1·k·max_r l_r`, with optional multiplicative jitter
 /// (hardware noise; Clockwork's premise is that this term is tiny).
+/// Multi-model hosts can install per-model cost curves; batches are
+/// model-pure, so the batch's model picks the curve.
 pub struct SimWorker {
     pub model: BatchCostModel,
+    /// Per-model cost overrides (empty = `model` for every batch).
+    model_costs: Vec<(u32, BatchCostModel)>,
     /// Lognormal σ of multiplicative noise (0 = deterministic).
     pub noise_sigma: f64,
     rng: Rng,
@@ -44,20 +48,41 @@ impl SimWorker {
     pub fn new(model: BatchCostModel, noise_sigma: f64, seed: u64) -> Self {
         SimWorker {
             model,
+            model_costs: Vec::new(),
             noise_sigma,
             rng: Rng::new(seed),
         }
+    }
+
+    /// Install per-model batch cost models (heterogeneous co-located
+    /// models; unknown models fall back to the default).
+    pub fn with_model_costs(mut self, costs: Vec<(u32, BatchCostModel)>) -> Self {
+        self.model_costs = costs;
+        self
+    }
+
+    fn cost_for(&self, model: u32) -> BatchCostModel {
+        self.model_costs
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(self.model, |(_, c)| *c)
     }
 }
 
 impl Worker for SimWorker {
     fn execute(&mut self, batch: &[Request]) -> f64 {
         assert!(!batch.is_empty());
+        debug_assert!(
+            batch.iter().all(|r| r.model == batch[0].model),
+            "SimWorker executed a mixed-model batch"
+        );
         let max_exec = batch
             .iter()
             .map(|r| r.exec_ms)
             .fold(f64::NEG_INFINITY, f64::max);
-        let base = self.model.latency(batch.len(), max_exec);
+        let base = self
+            .cost_for(batch[0].model.0)
+            .latency(batch.len(), max_exec);
         if self.noise_sigma > 0.0 {
             base * self.rng.lognormal(0.0, self.noise_sigma)
         } else {
@@ -81,6 +106,19 @@ mod tests {
         let batch = vec![req(2.0), req(10.0), req(4.0)];
         // 1 + 0.5·3·10 = 16
         assert!((w.execute(&batch) - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_model_costs_pick_the_batch_model() {
+        use crate::core::request::ModelId;
+        let mut w = SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, 0)
+            .with_model_costs(vec![(1, BatchCostModel::new(5.0, 2.0))]);
+        let fast = vec![req(10.0)];
+        // model 0 (default cost): 1·1·10 = 10
+        assert!((w.execute(&fast) - 10.0).abs() < 1e-12);
+        // model 1 (override): 5 + 2·1·10 = 25
+        let slow = vec![req(10.0).with_model(ModelId(1))];
+        assert!((w.execute(&slow) - 25.0).abs() < 1e-12);
     }
 
     #[test]

@@ -253,7 +253,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError {
             msg: msg.to_string(),

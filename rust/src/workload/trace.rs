@@ -1,18 +1,21 @@
 //! Request trace assembly, record and replay (paper §5.2).
 //!
-//! A *trace* is the fully materialized request sequence: arrival time, app,
-//! and ground-truth solo execution time. It is generated once per
-//! experiment (arrivals from the Azure-like process × per-app execution
-//! time distributions) and replayed identically for every system and SLO
-//! setting — deadlines are applied at replay time as `release + mult·P99`,
-//! exactly the paper's metrics methodology.
+//! A *trace* is the fully materialized request sequence: arrival time,
+//! model, app, and ground-truth solo execution time. It is generated once
+//! per experiment (arrivals from the Azure-like process × per-app
+//! execution time distributions) and replayed identically for every
+//! system and SLO setting — deadlines are applied at replay time as
+//! `release + mult·P99`, exactly the paper's metrics methodology. Multi-
+//! model traces ([`TraceSpec::models`]) superpose one arrival process per
+//! model (per-model rate share, exec-time presets and SLO reference), so
+//! heterogeneous-fleet runs stay deterministic and replayable too.
 
 use super::azure::{self, AzureTraceConfig};
 use super::exectime::ExecTimeDist;
 use crate::clock::{ms_to_us, Micros};
 use crate::core::batchmodel::BatchCostModel;
 use crate::core::histogram::Histogram;
-use crate::core::request::{AppId, Request};
+use crate::core::request::{AppId, ModelId, Request};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -21,6 +24,7 @@ use crate::util::rng::Rng;
 pub struct TraceEvent {
     pub at: Micros,
     pub app: u32,
+    pub model: u32,
     pub exec_ms: f64,
 }
 
@@ -31,38 +35,76 @@ pub struct Trace {
     pub events: Vec<TraceEvent>,
     /// P99 of the solo execution times in this trace (SLO reference).
     pub p99_ms: f64,
+    /// Per-model SLO reference (model → P99 of its own solo execution
+    /// times × its `slo_scale`). Models absent here fall back to the
+    /// trace-wide `p99_ms`.
+    pub slo_ref_by_model: Vec<(u32, f64)>,
+}
+
+/// One model's traffic in a multi-model trace: its share of the aggregate
+/// arrival rate, its per-app execution-time distributions, and its SLO
+/// scale.
+#[derive(Debug, Clone)]
+pub struct ModelTraffic {
+    pub model: u32,
+    /// Fraction of the aggregate arrival rate (normalized over all
+    /// models).
+    pub share: f64,
+    /// Per-app execution time distributions (app i uses dists[i]).
+    pub dists: Vec<ExecTimeDist>,
+    /// Extra scale on this model's SLO reference (1.0 = its own P99).
+    pub slo_scale: f64,
+}
+
+impl ModelTraffic {
+    pub fn new(model: u32, share: f64, dists: Vec<ExecTimeDist>) -> Self {
+        assert!(share > 0.0 && !dists.is_empty());
+        ModelTraffic {
+            model,
+            share,
+            dists,
+            slo_scale: 1.0,
+        }
+    }
 }
 
 /// Everything needed to generate a trace deterministically.
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
     pub name: String,
-    /// Per-app execution time distributions (app i uses dists[i]).
+    /// Per-app execution time distributions (app i uses dists[i]) for the
+    /// single-model path; ignored when `models` is non-empty.
     pub dists: Vec<ExecTimeDist>,
     pub arrivals: AzureTraceConfig,
     pub seed: u64,
+    /// Multi-model traffic mix. Empty = historical single-model trace
+    /// (model 0), generated bit-identically to the pre-placement code.
+    pub models: Vec<ModelTraffic>,
 }
 
 impl TraceSpec {
-    /// Pick the aggregate arrival rate so offered load is `util` of the
+    /// Pick the aggregate arrival rate so offered load is `util` of *one*
     /// worker's batched capacity at reference batch size `bs_ref` (paper:
     /// "scaled down such that the incoming rate matches the system load").
-    pub fn scale_rate_to_load(
-        &mut self,
-        cost_model: BatchCostModel,
-        util: f64,
-        bs_ref: usize,
-    ) {
+    /// Multi-model specs use the share-weighted mixture across models.
+    pub fn scale_rate_to_load(&mut self, cost_model: BatchCostModel, util: f64, bs_ref: usize) {
         let mut rng = Rng::new(self.seed ^ 0xABCD);
         // Capacity is governed by the *max order statistic* of a batch
         // (Eq. 4: the batch pads to its longest member), not the mean —
         // using the mean here would silently overload every run.
-        let hists: Vec<Histogram> = self
-            .dists
+        let parts_spec: Vec<(&ExecTimeDist, f64)> = if self.models.is_empty() {
+            self.dists.iter().map(|d| (d, 1.0)).collect()
+        } else {
+            self.models
+                .iter()
+                .flat_map(|mt| mt.dists.iter().map(move |d| (d, mt.share)))
+                .collect()
+        };
+        let hists: Vec<(Histogram, f64)> = parts_spec
             .iter()
-            .map(|d| d.histogram(&mut rng, 8000, 96))
+            .map(|(d, w)| (d.histogram(&mut rng, 8000, 96), *w))
             .collect();
-        let parts: Vec<(&Histogram, f64)> = hists.iter().map(|h| (h, 1.0)).collect();
+        let parts: Vec<(&Histogram, f64)> = hists.iter().map(|(h, w)| (h, *w)).collect();
         let mix = Histogram::mixture(&parts, 96);
         let batch_ms = cost_model.batch_latency_iid(&mix, bs_ref).mean();
         let capacity = bs_ref as f64 / (batch_ms / 1000.0); // req/s
@@ -70,6 +112,54 @@ impl TraceSpec {
     }
 
     pub fn generate(&self) -> Trace {
+        if self.models.is_empty() {
+            return self.generate_single();
+        }
+        let share_sum: f64 = self.models.iter().map(|m| m.share).sum();
+        let mut events: Vec<TraceEvent> = Vec::new();
+        let mut slo_ref = Vec::with_capacity(self.models.len());
+        let mut all_execs = Vec::new();
+        for mt in &self.models {
+            // One decorrelated arrival process per model; rates split by
+            // normalized share.
+            let mut rng = Rng::new(self.seed ^ ((mt.model as u64 + 1) << 40));
+            let mut arr_rng = rng.fork();
+            let mut exec_rng = rng.fork();
+            let mut cfg = self.arrivals.clone();
+            cfg.apps = mt.dists.len().max(1);
+            cfg.rate_per_s = self.arrivals.rate_per_s * mt.share / share_sum.max(1e-12);
+            let mut execs = Vec::new();
+            for (at, app) in azure::generate(&cfg, &mut arr_rng) {
+                let dist = &mt.dists[app % mt.dists.len()];
+                let exec_ms = dist.sample(&mut exec_rng);
+                execs.push(exec_ms);
+                events.push(TraceEvent {
+                    at,
+                    app: app as u32,
+                    model: mt.model,
+                    exec_ms,
+                });
+            }
+            execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let model_p99 = crate::util::stats::percentile_sorted(&execs, 99.0);
+            slo_ref.push((mt.model, model_p99 * mt.slo_scale));
+            all_execs.extend(execs);
+        }
+        // Deterministic merge of the per-model streams.
+        events.sort_by_key(|e| (e.at, e.model, e.app));
+        all_execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99_ms = crate::util::stats::percentile_sorted(&all_execs, 99.0);
+        Trace {
+            name: self.name.clone(),
+            events,
+            p99_ms,
+            slo_ref_by_model: slo_ref,
+        }
+    }
+
+    /// The historical single-model path — kept byte-identical (same RNG
+    /// consumption) so pre-placement experiments reproduce exactly.
+    fn generate_single(&self) -> Trace {
         let mut rng = Rng::new(self.seed);
         let mut arr_rng = rng.fork();
         let mut exec_rng = rng.fork();
@@ -83,6 +173,7 @@ impl TraceSpec {
             events.push(TraceEvent {
                 at,
                 app: app as u32,
+                model: 0,
                 exec_ms,
             });
         }
@@ -92,29 +183,84 @@ impl TraceSpec {
             name: self.name.clone(),
             events,
             p99_ms,
+            slo_ref_by_model: Vec::new(),
         }
     }
 
-    /// Per-app seed histograms for the schedulers' profilers (deployment-
-    /// time historical data).
-    pub fn seed_histograms(&self, bins: usize) -> Vec<(AppId, Histogram)> {
-        let mut rng = Rng::new(self.seed ^ 0x5EED);
-        self.dists
+    /// Per-(model, app) seed histograms for the schedulers' profilers
+    /// (deployment-time historical data).
+    pub fn seed_histograms(&self, bins: usize) -> Vec<(ModelId, AppId, Histogram)> {
+        if self.models.is_empty() {
+            let mut rng = Rng::new(self.seed ^ 0x5EED);
+            return self
+                .dists
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    (
+                        ModelId::DEFAULT,
+                        AppId(i as u32),
+                        d.histogram(&mut rng, 8000, bins),
+                    )
+                })
+                .collect();
+        }
+        let mut out = Vec::new();
+        for mt in &self.models {
+            let mut rng = Rng::new(self.seed ^ 0x5EED ^ ((mt.model as u64 + 1) << 32));
+            for (i, d) in mt.dists.iter().enumerate() {
+                out.push((
+                    ModelId(mt.model),
+                    AppId(i as u32),
+                    d.histogram(&mut rng, 8000, bins),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Per-model batch cost models calibrated to each model's own mean
+    /// solo latency (empty for single-model specs — those use the shared
+    /// `SchedulerConfig::cost_model`).
+    pub fn model_cost_models(&self) -> Vec<(u32, BatchCostModel)> {
+        self.models
             .iter()
-            .enumerate()
-            .map(|(i, d)| (AppId(i as u32), d.histogram(&mut rng, 8000, bins)))
+            .map(|mt| {
+                let mut rng = Rng::new(self.seed ^ 0xC057 ^ ((mt.model as u64 + 1) << 32));
+                let mean = mt
+                    .dists
+                    .iter()
+                    .map(|d| d.histogram(&mut rng, 4000, 64).mean())
+                    .sum::<f64>()
+                    / mt.dists.len() as f64;
+                (mt.model, BatchCostModel::calibrated(mean))
+            })
             .collect()
     }
 }
 
 impl Trace {
-    /// Materialize requests for a given SLO multiple of the trace P99.
+    /// SLO reference (ms) for one model: its own P99-based reference, or
+    /// the trace-wide P99 for single-model traces.
+    pub fn slo_ref_ms(&self, model: u32) -> f64 {
+        self.slo_ref_by_model
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(self.p99_ms, |(_, p)| *p)
+    }
+
+    /// Materialize requests for a given SLO multiple. Each request's SLO
+    /// is `slo_multiple ×` its *model's* reference P99 (the trace-wide P99
+    /// on single-model traces — identical to the historical behaviour).
     pub fn requests(&self, slo_multiple: f64) -> Vec<Request> {
-        let slo = ms_to_us(slo_multiple * self.p99_ms);
         self.events
             .iter()
             .enumerate()
-            .map(|(i, e)| Request::new(i as u64, AppId(e.app), e.at, slo, e.exec_ms))
+            .map(|(i, e)| {
+                let slo = ms_to_us(slo_multiple * self.slo_ref_ms(e.model));
+                Request::new(i as u64, AppId(e.app), e.at, slo, e.exec_ms)
+                    .with_model(ModelId(e.model))
+            })
             .collect()
     }
 
@@ -126,6 +272,14 @@ impl Trace {
         self.events.iter().map(|e| e.exec_ms).sum::<f64>() / self.events.len() as f64
     }
 
+    /// Model ids present in the trace, sorted.
+    pub fn model_ids(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.events.iter().map(|e| e.model).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
     // ---------- record / replay ----------
 
     pub fn to_json(&self) -> Json {
@@ -133,11 +287,18 @@ impl Trace {
             ("name", Json::str(&self.name)),
             ("p99_ms", Json::num(self.p99_ms)),
             (
+                "slo_ref",
+                Json::arr(self.slo_ref_by_model.iter().map(|(m, p)| {
+                    Json::arr(vec![Json::num(*m as f64), Json::num(*p)])
+                })),
+            ),
+            (
                 "events",
                 Json::arr(self.events.iter().map(|e| {
                     Json::arr(vec![
                         Json::num(e.at as f64),
                         Json::num(e.app as f64),
+                        Json::num(e.model as f64),
                         Json::num(e.exec_ms),
                     ])
                 })),
@@ -148,15 +309,34 @@ impl Trace {
     pub fn from_json(v: &Json) -> Option<Trace> {
         let name = v.get("name").as_str()?.to_string();
         let p99_ms = v.get("p99_ms").as_f64()?;
+        // Legacy traces have 3-element event rows (no model column) and no
+        // slo_ref.
+        let slo_ref_by_model = match v.get("slo_ref").as_arr() {
+            Some(rows) => rows
+                .iter()
+                .map(|r| Some((r.at(0).as_f64()? as u32, r.at(1).as_f64()?)))
+                .collect::<Option<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         let events = v
             .get("events")
             .as_arr()?
             .iter()
             .map(|e| {
+                let has_model = e.at(3).as_f64().is_some();
                 Some(TraceEvent {
                     at: e.at(0).as_f64()? as Micros,
                     app: e.at(1).as_f64()? as u32,
-                    exec_ms: e.at(2).as_f64()?,
+                    model: if has_model {
+                        e.at(2).as_f64()? as u32
+                    } else {
+                        0
+                    },
+                    exec_ms: if has_model {
+                        e.at(3).as_f64()?
+                    } else {
+                        e.at(2).as_f64()?
+                    },
                 })
             })
             .collect::<Option<Vec<_>>>()?;
@@ -164,6 +344,7 @@ impl Trace {
             name,
             events,
             p99_ms,
+            slo_ref_by_model,
         })
     }
 
@@ -198,6 +379,29 @@ mod tests {
                 ..Default::default()
             },
             seed: 11,
+            models: Vec::new(),
+        }
+    }
+
+    fn mm_spec() -> TraceSpec {
+        TraceSpec {
+            name: "mm".into(),
+            dists: Vec::new(),
+            arrivals: AzureTraceConfig {
+                apps: 1,
+                rate_per_s: 80.0,
+                duration_s: 10.0,
+                ..Default::default()
+            },
+            seed: 21,
+            models: vec![
+                ModelTraffic::new(0, 0.8, vec![ExecTimeDist::constant("fast", 8.0)]),
+                ModelTraffic::new(
+                    1,
+                    0.2,
+                    vec![ExecTimeDist::multimodal("slow", 2, 20.0, 120.0, 1.0, None)],
+                ),
+            ],
         }
     }
 
@@ -221,7 +425,59 @@ mod tests {
             assert_eq!(a.exec_ms, b.exec_ms);
             assert!(b.deadline > a.deadline);
             assert_eq!(a.slo(), ms_to_us(2.0 * t.p99_ms));
+            assert_eq!(a.model, ModelId::DEFAULT);
         }
+    }
+
+    #[test]
+    fn multimodel_trace_mixes_models() {
+        let s = mm_spec();
+        let t = s.generate();
+        assert_eq!(t.model_ids(), vec![0, 1]);
+        let n0 = t.events.iter().filter(|e| e.model == 0).count();
+        let n1 = t.events.iter().filter(|e| e.model == 1).count();
+        assert!(n0 > 0 && n1 > 0);
+        // 80/20 share: the hot model clearly dominates.
+        assert!(n0 > 2 * n1, "n0={n0} n1={n1}");
+        // Deterministic regeneration.
+        assert_eq!(t.events, s.generate().events);
+        // Arrivals stay sorted after the per-model merge.
+        for w in t.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn multimodel_requests_use_per_model_slo() {
+        let t = mm_spec().generate();
+        // Model 0 is constant 8 ms, model 1 is bimodal up to ~120 ms —
+        // their SLO references must differ accordingly.
+        let fast_ref = t.slo_ref_ms(0);
+        let slow_ref = t.slo_ref_ms(1);
+        assert!(fast_ref < 12.0, "fast_ref={fast_ref}");
+        assert!(slow_ref > 40.0, "slow_ref={slow_ref}");
+        for r in t.requests(3.0) {
+            let want = ms_to_us(3.0 * t.slo_ref_ms(r.model.0));
+            assert_eq!(r.slo(), want);
+        }
+    }
+
+    #[test]
+    fn multimodel_seed_histograms_and_costs_cover_models() {
+        let s = mm_spec();
+        let seeds = s.seed_histograms(32);
+        assert_eq!(seeds.len(), 2);
+        assert!(seeds.iter().any(|(m, _, _)| *m == ModelId(0)));
+        assert!(seeds.iter().any(|(m, _, _)| *m == ModelId(1)));
+        let (_, _, fast) = seeds.iter().find(|(m, _, _)| *m == ModelId(0)).unwrap();
+        assert!((fast.mean() - 8.0).abs() < 0.5);
+        let costs = s.model_cost_models();
+        assert_eq!(costs.len(), 2);
+        let c0 = costs.iter().find(|(m, _)| *m == 0).unwrap().1;
+        let c1 = costs.iter().find(|(m, _)| *m == 1).unwrap().1;
+        assert!(c1.c0 > c0.c0, "slow model has the larger calibrated cost");
+        // Single-model specs report no per-model costs.
+        assert!(spec().model_cost_models().is_empty());
     }
 
     #[test]
@@ -232,6 +488,27 @@ mod tests {
         assert_eq!(back.events, t.events);
         assert_eq!(back.p99_ms, t.p99_ms);
         assert_eq!(back.name, t.name);
+    }
+
+    #[test]
+    fn json_roundtrip_multimodel() {
+        let t = mm_spec().generate();
+        let j = t.to_json();
+        let back = Trace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.events, t.events);
+        assert_eq!(back.slo_ref_by_model, t.slo_ref_by_model);
+    }
+
+    #[test]
+    fn legacy_three_column_events_still_load() {
+        let legacy = r#"{"name":"old","p99_ms":42.0,"events":[[1000,1,7.5],[2000,0,9.0]]}"#;
+        let t = Trace::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].app, 1);
+        assert_eq!(t.events[0].model, 0);
+        assert!((t.events[0].exec_ms - 7.5).abs() < 1e-12);
+        assert!(t.slo_ref_by_model.is_empty());
+        assert_eq!(t.slo_ref_ms(0), 42.0);
     }
 
     #[test]
@@ -258,10 +535,28 @@ mod tests {
     }
 
     #[test]
+    fn multimodel_load_scaling_weights_by_share() {
+        let mut hot_heavy = mm_spec();
+        hot_heavy.scale_rate_to_load(BatchCostModel::new(1.0, 0.25), 0.7, 8);
+        let mut cold_heavy = mm_spec();
+        cold_heavy.models[0].share = 0.2;
+        cold_heavy.models[1].share = 0.8;
+        cold_heavy.scale_rate_to_load(BatchCostModel::new(1.0, 0.25), 0.7, 8);
+        // More slow-model traffic → lower batched capacity → lower rate.
+        assert!(
+            cold_heavy.arrivals.rate_per_s < hot_heavy.arrivals.rate_per_s,
+            "cold {} vs hot {}",
+            cold_heavy.arrivals.rate_per_s,
+            hot_heavy.arrivals.rate_per_s
+        );
+    }
+
+    #[test]
     fn seed_histograms_cover_apps() {
         let s = spec();
         let seeds = s.seed_histograms(32);
         assert_eq!(seeds.len(), 2);
-        assert!((seeds[1].1.mean() - 10.0).abs() < 0.5);
+        assert!((seeds[1].2.mean() - 10.0).abs() < 0.5);
+        assert!(seeds.iter().all(|(m, _, _)| *m == ModelId::DEFAULT));
     }
 }

@@ -3,7 +3,7 @@
 use orloj::baselines::{self, PAPER_SYSTEMS};
 use orloj::clock::ms_to_us;
 use orloj::core::batchmodel::BatchCostModel;
-use orloj::core::request::{AppId, Outcome, Request};
+use orloj::core::request::{AppId, ModelId, Outcome, Request};
 use orloj::scheduler::orloj::OrlojScheduler;
 use orloj::scheduler::{Scheduler, SchedulerConfig};
 use orloj::server::metrics::RunReport;
@@ -27,6 +27,7 @@ fn spec(seed: u64, duration_s: f64) -> (TraceSpec, SchedulerConfig) {
             ..Default::default()
         },
         seed,
+        models: Vec::new(),
     };
     spec.scale_rate_to_load(model, 0.85, 8);
     let cfg = SchedulerConfig {
@@ -43,8 +44,8 @@ fn conservation_across_all_systems() {
     let trace = s.generate();
     for system in PAPER_SYSTEMS.iter().chain(["edf"].iter()) {
         let mut sched = baselines::by_name(system, cfg.clone(), 1).unwrap();
-        for (app, hist) in s.seed_histograms(cfg.bins) {
-            sched.seed_app_profile(app, &hist, 100);
+        for (model, app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(model, app, &hist, 100);
         }
         let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
         let reqs = trace.requests(3.0);
@@ -64,8 +65,8 @@ fn outcome_labels_are_truthful() {
     let (s, cfg) = spec(5, 12.0);
     let trace = s.generate();
     let mut sched = baselines::by_name("orloj", cfg.clone(), 1).unwrap();
-    for (app, hist) in s.seed_histograms(cfg.bins) {
-        sched.seed_app_profile(app, &hist, 100);
+    for (model, app, hist) in s.seed_histograms(cfg.bins) {
+        sched.seed_app_profile(model, app, &hist, 100);
     }
     let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
     let res = engine::run(sched.as_mut(), &mut worker, trace.requests(2.0));
@@ -86,8 +87,8 @@ fn full_stack_determinism() {
         let (s, cfg) = spec(7, 10.0);
         let trace = s.generate();
         let mut sched = baselines::by_name("orloj", cfg.clone(), 9).unwrap();
-        for (app, hist) in s.seed_histograms(cfg.bins) {
-            sched.seed_app_profile(app, &hist, 100);
+        for (model, app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(model, app, &hist, 100);
         }
         let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
         let res = engine::run(sched.as_mut(), &mut worker, trace.requests(3.0));
@@ -104,8 +105,8 @@ fn orloj_wins_on_dynamic_two_app_mix() {
     let mut rates = std::collections::BTreeMap::new();
     for system in PAPER_SYSTEMS {
         let mut sched = baselines::by_name(system, cfg.clone(), 2).unwrap();
-        for (app, hist) in s.seed_histograms(cfg.bins) {
-            sched.seed_app_profile(app, &hist, 100);
+        for (model, app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(model, app, &hist, 100);
         }
         let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
         let res = engine::run(sched.as_mut(), &mut worker, trace.requests(3.0));
@@ -141,6 +142,7 @@ fn static_workload_parity() {
             ..Default::default()
         },
         seed: 13,
+        models: Vec::new(),
     };
     s.scale_rate_to_load(model, 0.8, 8);
     let cfg = SchedulerConfig {
@@ -152,8 +154,8 @@ fn static_workload_parity() {
     let mut clockwork_rate = 0.0;
     for system in ["orloj", "clockwork"] {
         let mut sched = baselines::by_name(system, cfg.clone(), 3).unwrap();
-        for (app, hist) in s.seed_histograms(cfg.bins) {
-            sched.seed_app_profile(app, &hist, 100);
+        for (model, app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(model, app, &hist, 100);
         }
         let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
         let res = engine::run(sched.as_mut(), &mut worker, trace.requests(4.0));
@@ -181,6 +183,7 @@ fn long_run_with_base_resets() {
     };
     let mut sched = OrlojScheduler::new(cfg, 1);
     sched.seed_profile(
+        ModelId::DEFAULT,
         AppId(0),
         &orloj::core::histogram::Histogram::constant(20.0),
         100,
@@ -223,8 +226,8 @@ fn trace_replay_equivalence() {
     std::fs::remove_file(&path).ok();
     let run = |t: &orloj::workload::trace::Trace| {
         let mut sched = baselines::by_name("orloj", cfg.clone(), 4).unwrap();
-        for (app, hist) in s.seed_histograms(cfg.bins) {
-            sched.seed_app_profile(app, &hist, 100);
+        for (model, app, hist) in s.seed_histograms(cfg.bins) {
+            sched.seed_app_profile(model, app, &hist, 100);
         }
         let mut worker = SimWorker::new(cfg.cost_model, 0.0, 4);
         let res = engine::run(sched.as_mut(), &mut worker, t.requests(3.0));

@@ -7,7 +7,7 @@ use orloj::core::batchmodel::BatchCostModel;
 use orloj::core::histogram::Histogram;
 use orloj::core::orderstats;
 use orloj::core::priority::{reference_score, ScoreContext, ScoreSchedule};
-use orloj::core::request::{AppId, Request};
+use orloj::core::request::{AppId, ModelId, Request};
 use orloj::ds::fibheap::FibHeap;
 use orloj::ds::hull::point::{upper_hull_naive, Point};
 use orloj::ds::hull::DynamicHull;
@@ -179,8 +179,8 @@ fn prop_scheduler_conservation() {
             ..Default::default()
         };
         let mut s = OrlojScheduler::new(cfg, rng.next_u64());
-        s.seed_profile(AppId(0), &Histogram::constant(25.0), 100);
-        s.seed_profile(AppId(1), &Histogram::constant(80.0), 100);
+        s.seed_profile(ModelId::DEFAULT, AppId(0), &Histogram::constant(25.0), 100);
+        s.seed_profile(ModelId::DEFAULT, AppId(1), &Histogram::constant(80.0), 100);
         let n = 30 + rng.index(100) as u64;
         let mut dispatched = std::collections::BTreeSet::new();
         let mut dropped = 0usize;

@@ -5,21 +5,25 @@
 use orloj::baselines::ALL_SYSTEMS;
 use orloj::clock::{ms_to_us, RealClock, VirtualClock};
 use orloj::core::batchmodel::BatchCostModel;
-use orloj::core::request::{AppId, Request};
+use orloj::core::request::{AppId, ModelId, Request};
 use orloj::prop_assert;
 use orloj::scheduler::SchedulerConfig;
 use orloj::serve::realtime;
 use orloj::serve::replay;
-use orloj::serve::{router, Cluster, ServingLoop};
+use orloj::serve::{router, Cluster, Placement, ServingLoop};
 use orloj::sim::worker::SimWorker;
 use orloj::util::proptest::check_cases;
 use orloj::util::rng::Rng;
 use orloj::workload::azure::AzureTraceConfig;
 use orloj::workload::exectime::ExecTimeDist;
-use orloj::workload::trace::TraceSpec;
+use orloj::workload::trace::{ModelTraffic, TraceSpec};
 use std::collections::BTreeMap;
 
 const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Placement specs exercised by the multi-model properties: co-located,
+/// disjoint, and hot-model-everywhere.
+const PLACEMENTS: [&str; 3] = ["all", "partition", "skewed"];
 
 fn spec(seed: u64, duration_s: f64, load: f64) -> (TraceSpec, SchedulerConfig) {
     let model = BatchCostModel::calibrated(30.0);
@@ -36,6 +40,38 @@ fn spec(seed: u64, duration_s: f64, load: f64) -> (TraceSpec, SchedulerConfig) {
             ..Default::default()
         },
         seed,
+        models: Vec::new(),
+    };
+    spec.scale_rate_to_load(model, load, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    (spec, cfg)
+}
+
+/// A skewed two-model mix: a hot fast model taking 3/4 of the traffic and
+/// a cold slow one taking the rest.
+fn multimodel_spec(seed: u64, duration_s: f64, load: f64) -> (TraceSpec, SchedulerConfig) {
+    let model = BatchCostModel::calibrated(25.0);
+    let mut spec = TraceSpec {
+        name: "serve-mm-prop".into(),
+        dists: Vec::new(),
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0,
+            duration_s,
+            ..Default::default()
+        },
+        seed,
+        models: vec![
+            ModelTraffic::new(0, 0.75, vec![ExecTimeDist::constant("hot", 10.0)]),
+            ModelTraffic::new(
+                1,
+                0.25,
+                vec![ExecTimeDist::multimodal("cold", 2, 20.0, 90.0, 1.0, None)],
+            ),
+        ],
     };
     spec.scale_rate_to_load(model, load, 8);
     let cfg = SchedulerConfig {
@@ -53,8 +89,22 @@ fn seeded_cluster(
     n: usize,
 ) -> Cluster<Box<dyn orloj::scheduler::Scheduler>> {
     let mut cluster = Cluster::build(system, cfg, seed, n).expect("known system");
-    for (app, hist) in s.seed_histograms(cfg.bins) {
-        cluster.seed_app_profile(app, &hist, 100);
+    for (model, app, hist) in s.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile(model, app, &hist, 100);
+    }
+    cluster
+}
+
+fn seeded_placed_cluster(
+    system: &str,
+    s: &TraceSpec,
+    cfg: &SchedulerConfig,
+    seed: u64,
+    placement: Placement,
+) -> Cluster<Box<dyn orloj::scheduler::Scheduler>> {
+    let mut cluster = Cluster::build_placed(system, cfg, seed, placement).expect("known system");
+    for (model, app, hist) in s.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile(model, app, &hist, 100);
     }
     cluster
 }
@@ -116,6 +166,7 @@ fn prop_conservation_real_clock() {
             let mut cluster = Cluster::build(system, &cfg, 11, n).expect("known system");
             for app in 0..2u32 {
                 cluster.seed_app_profile(
+                    ModelId::DEFAULT,
                     AppId(app),
                     &orloj::core::histogram::Histogram::constant(10.0),
                     100,
@@ -160,6 +211,66 @@ fn prop_conservation_real_clock() {
                 );
             }
             assert_eq!(res.per_worker.len(), n);
+        }
+    }
+}
+
+/// Multi-model request conservation **and hosting**: for all five systems
+/// × worker counts {1, 2, 4} × skewed placements, every trace request
+/// completes exactly once, and no request is ever executed by a worker
+/// that does not host its model.
+#[test]
+fn prop_conservation_multimodel_placements() {
+    let (s, cfg) = multimodel_spec(0x77, 6.0, 0.8);
+    let trace = s.generate();
+    let requests = trace.requests(3.0);
+    let want: BTreeMap<u64, usize> = requests.iter().map(|r| (r.id.0, 1)).collect();
+    assert!(
+        requests.iter().any(|r| r.model == ModelId(1)),
+        "trace must actually mix models"
+    );
+    for system in ALL_SYSTEMS {
+        for n in WORKER_COUNTS {
+            for placement_spec in PLACEMENTS {
+                let placement = Placement::parse(placement_spec, n, 2).expect("placement");
+                let cluster =
+                    seeded_placed_cluster(system, &s, &cfg, 3, placement.clone());
+                let core = ServingLoop::new(
+                    VirtualClock::new(),
+                    cluster,
+                    router::by_name("least_loaded").unwrap(),
+                );
+                let res = replay::run_cluster(core, sim_workers(&cfg, 5, n), requests.clone());
+                let mut got: BTreeMap<u64, usize> = BTreeMap::new();
+                for c in &res.completions {
+                    *got.entry(c.request.id.0).or_insert(0) += 1;
+                    // The hosting invariant: an executed request ran on a
+                    // worker hosting its model (drops carry no worker).
+                    if let Some(w) = c.worker {
+                        assert!(
+                            placement.hosts(w, c.request.model),
+                            "{system} x{n} {placement_spec}: request {} (model {:?}) \
+                             executed on non-hosting worker {w}",
+                            c.request.id.0,
+                            c.request.model
+                        );
+                    }
+                }
+                assert_eq!(
+                    got, want,
+                    "{system} x{n} {placement_spec}: lost/duplicated requests"
+                );
+                // Both models must actually get served (the placement
+                // hosts both, and the mix offers both).
+                for m in [ModelId(0), ModelId(1)] {
+                    assert!(
+                        res.completions.iter().any(|c| {
+                            c.request.model == m && c.worker.is_some()
+                        }),
+                        "{system} x{n} {placement_spec}: model {m:?} never executed"
+                    );
+                }
+            }
         }
     }
 }
