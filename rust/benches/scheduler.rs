@@ -1,11 +1,15 @@
 //! Scheduler hot-path benchmarks (§5.7 overheads + §Perf):
 //!
-//! * Orloj `on_arrival` cost vs pending-queue depth (schedule build +
-//!   5-queue hull insert);
+//! * Orloj `on_arrival` cost vs pending-queue depth (template
+//!   instantiation + 5-queue hull insert);
 //! * `next_batch` iteration cost (milestones + feasibility pruning +
 //!   candidate selection + PopBatch);
-//! * estimator precompute cost (the §4.3 off-critical-path work);
+//! * estimator precompute cost (the §4.3 off-critical-path work, now
+//!   including the score-template build);
 //! * whole-simulation throughput in virtual requests/second.
+//!
+//! Emits `BENCH_sched.json` with per-iteration p50/p99 (see DESIGN.md §7).
+//! `ORLOJ_BENCH_QUICK=1` runs shrunk iteration counts (the CI smoke).
 //!
 //! Run: `cargo bench --bench scheduler`
 
@@ -17,7 +21,8 @@ use orloj::scheduler::estimator::Estimator;
 use orloj::scheduler::orloj::OrlojScheduler;
 use orloj::scheduler::profiler::OnlineProfiler;
 use orloj::scheduler::{Scheduler, SchedulerConfig};
-use orloj::util::benchmark::time_batched;
+use orloj::util::benchmark::{json_report, quick_or, summary_json, time_batched, time_per_iter};
+use orloj::util::json::Json;
 use orloj::util::rng::Rng;
 use std::time::Instant;
 
@@ -52,58 +57,98 @@ fn fill(s: &mut OrlojScheduler, n: usize, rng: &mut Rng) -> u64 {
     id
 }
 
+fn depths() -> Vec<usize> {
+    quick_or(vec![100, 1_000], vec![100, 1_000, 5_000, 10_000])
+}
+
+/// One JSON case row: the op + pending depth + the per-iter percentiles.
+fn case_with_summary(op: &str, pending: usize, s: &orloj::util::stats::Summary) -> Json {
+    let mut m = match summary_json(s) {
+        Json::Obj(m) => m,
+        _ => unreachable!("summary_json returns an object"),
+    };
+    m.insert("op".to_string(), Json::str(op));
+    m.insert("pending".to_string(), Json::num(pending as f64));
+    Json::Obj(m)
+}
+
 fn main() {
+    let mut cases: Vec<Json> = Vec::new();
     println!("### scheduler hot-path benchmarks");
 
     // --- on_arrival vs pending depth ---
-    println!("\non_arrival (schedule build + hull insert into |S|=5 queues):");
-    for &n in &[100usize, 1_000, 5_000, 10_000] {
+    println!("\non_arrival (template instantiation + hull insert into |S|=5 queues):");
+    for &n in &depths() {
         let mut s = seeded(3);
         let mut rng = Rng::new(9);
-        let mut id = fill(&mut s, n, &mut rng);
-        let ns = time_batched(50, 500, |i| {
+        let id = fill(&mut s, n, &mut rng);
+        let iters = quick_or(100, 500);
+        let summary = time_per_iter(quick_or(10, 50), iters, |i| {
             let app = AppId((i % 3) as u32);
             s.on_arrival(
                 Request::new(id + i as u64, app, 0, ms_to_us(2_000.0), 30.0),
                 0,
             );
         });
-        id += 500;
-        let _ = id;
-        println!("  pending={n:>6}: {:.1} µs/arrival", ns / 1000.0);
+        println!(
+            "  pending={n:>6}: {:.1} µs/arrival (p50 {:.1}, p99 {:.1})",
+            summary.mean / 1000.0,
+            summary.p50 / 1000.0,
+            summary.p99 / 1000.0
+        );
+        cases.push(case_with_summary("on_arrival", n, &summary));
     }
 
     // --- next_batch iteration ---
     println!("\nnext_batch (one Algorithm-1 iteration incl. PopBatch):");
-    for &n in &[100usize, 1_000, 5_000, 10_000] {
+    for &n in &depths() {
         let mut s = seeded(3);
         let mut rng = Rng::new(11);
         fill(&mut s, n, &mut rng);
         let mut t = 1_000u64;
-        let ns = time_batched(5, 200, |_| {
+        let iters = quick_or(50, 200);
+        let summary = time_per_iter(quick_or(2, 5), iters, |_| {
             t += 500;
             s.next_batch(t)
         });
-        println!("  pending={n:>6}: {:.1} µs/iteration", ns / 1000.0);
+        println!(
+            "  pending={n:>6}: {:.1} µs/iteration (p50 {:.1}, p99 {:.1})",
+            summary.mean / 1000.0,
+            summary.p50 / 1000.0,
+            summary.p99 / 1000.0
+        );
+        cases.push(case_with_summary("next_batch", n, &summary));
     }
 
     // --- estimator precompute ---
-    println!("\nestimator precompute (per (app, bs) batch-latency distribution):");
+    println!("\nestimator precompute (per (app, bs) batch-latency distribution + template):");
     let mut profiler = OnlineProfiler::new(4096, 1.0, 64, 3);
     let mut rng = Rng::new(13);
     for a in 0..4u32 {
         for _ in 0..2000 {
-            profiler.record(ModelId::DEFAULT, AppId(a), rng.lognormal(3.0 + a as f64 * 0.3, 0.7));
+            profiler.record(
+                ModelId::DEFAULT,
+                AppId(a),
+                rng.lognormal(3.0 + a as f64 * 0.3, 0.7),
+            );
         }
     }
     let snap = profiler.snapshot();
     for &bs in &[1usize, 4, 16] {
-        let ns = time_batched(3, 50, |i| {
+        let ns = time_batched(quick_or(1, 3), quick_or(10, 50), |i| {
             let mut e = Estimator::new(BatchCostModel::calibrated(30.0), 64, 0.5);
             e.refresh(snap.clone());
             e.batch_latency(ModelId::DEFAULT, AppId((i % 4) as u32), bs).mean
         });
-        println!("  bs={bs:>3}: {:.1} µs (cold compute incl. refresh)", ns / 1000.0);
+        println!(
+            "  bs={bs:>3}: {:.1} µs (cold compute incl. refresh)",
+            ns / 1000.0
+        );
+        cases.push(Json::obj(vec![
+            ("op", Json::str("estimator_precompute")),
+            ("bs", Json::num(bs as f64)),
+            ("ns_mean", Json::num(ns)),
+        ]));
     }
 
     // --- whole-sim throughput ---
@@ -119,7 +164,7 @@ fn main() {
             arrivals: AzureTraceConfig {
                 apps: 1,
                 rate_per_s: 0.0,
-                duration_s: 60.0,
+                duration_s: quick_or(8.0, 60.0),
                 ..Default::default()
             },
             seed: 1,
@@ -153,7 +198,19 @@ fn main() {
                 n as f64 / wall,
                 res.batches
             );
+            cases.push(Json::obj(vec![
+                ("op", Json::str("end_to_end_sim")),
+                ("system", Json::str(system)),
+                ("requests", Json::num(n as f64)),
+                ("batches", Json::num(res.batches as f64)),
+                ("wall_s", Json::num(wall)),
+                ("req_per_s", Json::num(n as f64 / wall)),
+            ]));
         }
     }
-    println!("\nscheduler bench OK");
+    match json_report("BENCH_sched.json", "scheduler", cases) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_sched.json: {e}"),
+    }
+    println!("scheduler bench OK");
 }

@@ -7,6 +7,10 @@
 //! An "event" is one `ServingLoop::on_event` ingestion: every arrival and
 //! every batch completion (wakes ride along for free in both pumps).
 //!
+//! Emits `BENCH_serve.json` (see DESIGN.md §7 for how to read it) so the
+//! perf trajectory is machine-readable. `ORLOJ_BENCH_QUICK=1` runs the
+//! same cases on a short trace (the CI smoke).
+//!
 //! Run: `cargo bench --bench serve_loop`
 
 use orloj::clock::VirtualClock;
@@ -14,11 +18,18 @@ use orloj::core::batchmodel::BatchCostModel;
 use orloj::scheduler::SchedulerConfig;
 use orloj::serve::{replay, router, Cluster, Placement, ServingLoop};
 use orloj::sim::worker::SimWorker;
+use orloj::util::benchmark::{json_report, quick_or};
+use orloj::util::json::Json;
 use orloj::workload::azure::AzureTraceConfig;
 use orloj::workload::exectime::ExecTimeDist;
 use orloj::workload::trace::{ModelTraffic, TraceSpec};
 use std::time::Instant;
 
+fn trace_duration_s() -> f64 {
+    quick_or(6.0, 45.0)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_bench(
     system: &str,
     spec: &TraceSpec,
@@ -27,6 +38,7 @@ fn run_bench(
     router_name: &str,
     placement_spec: &str,
     label: &str,
+    cases: &mut Vec<Json>,
 ) {
     let trace = spec.generate();
     let requests = trace.requests(3.0);
@@ -52,14 +64,29 @@ fn run_bench(
     let res = replay::run_cluster(core, workers, requests);
     let wall = t0.elapsed().as_secs_f64();
     let events = res.completions.len() + res.batches;
+    let events_per_s = events as f64 / wall;
+    let req_per_s = n_req as f64 / wall;
     println!(
         "  {label:>24} x{n_workers} ({router_name:>19}): {n_req:>6} requests, {:>6} batches, \
          {:>9.0} events/s, {:>8.0} req/s wall",
-        res.batches,
-        events as f64 / wall,
-        n_req as f64 / wall
+        res.batches, events_per_s, req_per_s
     );
     assert_eq!(res.completions.len(), n_req, "conservation in bench run");
+    cases.push(Json::obj(vec![
+        ("label", Json::str(label)),
+        ("system", Json::str(system)),
+        ("workers", Json::num(n_workers as f64)),
+        ("router", Json::str(router_name)),
+        ("placement", Json::str(placement_spec)),
+        ("models", Json::num(n_models as f64)),
+        ("requests", Json::num(n_req as f64)),
+        ("batches", Json::num(res.batches as f64)),
+        ("events", Json::num(events as f64)),
+        ("wall_s", Json::num(wall)),
+        ("events_per_s", Json::num(events_per_s)),
+        ("req_per_s", Json::num(req_per_s)),
+        ("us_per_event", Json::num(wall * 1e6 / events.max(1) as f64)),
+    ]));
 }
 
 fn single_model_spec(n_workers: usize) -> (TraceSpec, SchedulerConfig) {
@@ -70,7 +97,7 @@ fn single_model_spec(n_workers: usize) -> (TraceSpec, SchedulerConfig) {
         arrivals: AzureTraceConfig {
             apps: 1,
             rate_per_s: 0.0,
-            duration_s: 45.0,
+            duration_s: trace_duration_s(),
             ..Default::default()
         },
         seed: 1,
@@ -94,7 +121,7 @@ fn multi_model_spec(n_workers: usize) -> (TraceSpec, SchedulerConfig) {
         arrivals: AzureTraceConfig {
             apps: 1,
             rate_per_s: 0.0,
-            duration_s: 45.0,
+            duration_s: trace_duration_s(),
             ..Default::default()
         },
         seed: 2,
@@ -115,12 +142,14 @@ fn multi_model_spec(n_workers: usize) -> (TraceSpec, SchedulerConfig) {
     (spec, cfg)
 }
 
-fn bench_cluster(system: &str, n_workers: usize, router_name: &str) {
+fn bench_cluster(system: &str, n_workers: usize, router_name: &str, cases: &mut Vec<Json>) {
     let (spec, cfg) = single_model_spec(n_workers);
-    run_bench(system, &spec, &cfg, n_workers, router_name, "all", system);
+    run_bench(
+        system, &spec, &cfg, n_workers, router_name, "all", system, cases,
+    );
 }
 
-fn bench_multimodel(system: &str, n_workers: usize, placement: &str) {
+fn bench_multimodel(system: &str, n_workers: usize, placement: &str, cases: &mut Vec<Json>) {
     let (spec, cfg) = multi_model_spec(n_workers);
     run_bench(
         system,
@@ -130,26 +159,32 @@ fn bench_multimodel(system: &str, n_workers: usize, placement: &str) {
         "least_loaded",
         placement,
         &format!("{system}/2models/{placement}"),
+        cases,
     );
 }
 
 fn main() {
+    let mut cases: Vec<Json> = Vec::new();
     println!("### unified serving-loop dispatch benchmarks");
     println!("\nvirtual-time replay throughput (dispatch + routing hot path):");
     for system in ["edf", "orloj"] {
         for &n in &[1usize, 4] {
-            bench_cluster(system, n, "round_robin");
+            bench_cluster(system, n, "round_robin", &mut cases);
         }
     }
     println!("\nrouter comparison (orloj, 4 workers):");
     for router_name in router::ROUTERS {
-        bench_cluster("orloj", 4, router_name);
+        bench_cluster("orloj", 4, router_name, &mut cases);
     }
     println!("\nmulti-model placement (2 models × 4 workers):");
     for system in ["edf", "orloj"] {
         for placement in ["all", "skewed"] {
-            bench_multimodel(system, 4, placement);
+            bench_multimodel(system, 4, placement, &mut cases);
         }
     }
-    println!("\nserve_loop bench OK");
+    match json_report("BENCH_serve.json", "serve_loop", cases) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_serve.json: {e}"),
+    }
+    println!("serve_loop bench OK");
 }

@@ -14,14 +14,14 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{drain_fifo_model, ModelPending, Scheduler, SchedulerConfig};
-use std::collections::VecDeque;
+use crate::scheduler::{FifoQueues, Scheduler, SchedulerConfig};
 
 pub struct ClipperScheduler {
     cfg: SchedulerConfig,
-    queue: VecDeque<Request>,
+    /// Per-model FIFO lanes sharing one arrival order (§Perf: model-pure
+    /// batch fills are O(batch) pops, not O(n) scans).
+    queue: FifoQueues,
     dropped: Vec<(Request, Outcome)>,
-    per_model: ModelPending,
     /// Current AIMD batch-size target (float so additive increase is
     /// fractional and robust).
     target: f64,
@@ -35,9 +35,8 @@ impl ClipperScheduler {
     pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
         ClipperScheduler {
             cfg,
-            queue: VecDeque::new(),
+            queue: FifoQueues::new(),
             dropped: Vec::new(),
-            per_model: ModelPending::new(),
             target: 1.0,
             lat_track: 0.0,
             slo_track_ms: 0.0,
@@ -54,7 +53,6 @@ impl ClipperScheduler {
         while let Some(front) = self.queue.front() {
             if now > front.deadline + front.slo() {
                 let r = self.queue.pop_front().unwrap();
-                self.per_model.dec(r.model);
                 self.dropped.push((r, Outcome::TimedOut));
             } else {
                 break;
@@ -78,8 +76,7 @@ impl Scheduler for ClipperScheduler {
         } else {
             self.slo_track_ms = 0.95 * self.slo_track_ms + 0.05 * us_to_ms(req.slo());
         }
-        self.per_model.inc(req.model);
-        self.queue.push_back(req);
+        self.queue.push(req);
     }
 
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
@@ -88,13 +85,8 @@ impl Scheduler for ClipperScheduler {
         let want = (self.target.floor() as usize).clamp(1, self.max_bs());
         // FIFO within the head's model: other co-located models keep their
         // queue positions (a batch executes exactly one model).
-        let take = want.min(self.per_model.get(model).max(1));
-        Some(drain_fifo_model(
-            &mut self.queue,
-            &mut self.per_model,
-            model,
-            take,
-        ))
+        let take = want.min(self.queue.pending_for(model).max(1));
+        Some(self.queue.drain_model(model, take))
     }
 
     fn on_batch_complete(&mut self, _batch: &[Request], batch_ms: f64, _now: Micros) {
@@ -124,7 +116,7 @@ impl Scheduler for ClipperScheduler {
     }
 
     fn pending_for(&self, model: ModelId) -> usize {
-        self.per_model.get(model)
+        self.queue.pending_for(model)
     }
 }
 

@@ -18,17 +18,14 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{drain_edf_model, ModelPending, Scheduler, SchedulerConfig};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use crate::scheduler::{EdfQueues, Scheduler, SchedulerConfig};
 
 pub struct ClockworkScheduler {
     cfg: SchedulerConfig,
-    /// EDF queue: (deadline, seq) → request.
-    queue: BinaryHeap<Reverse<(Micros, u64)>>,
-    by_seq: std::collections::HashMap<u64, Request>,
+    /// Per-model EDF lanes carrying the requests inline (§Perf: no
+    /// id→request hash map, window fills are O(batch)).
+    queue: EdfQueues,
     dropped: Vec<(Request, Outcome)>,
-    per_model: ModelPending,
     /// Point estimate of the solo execution time (ms). Clockwork profiles
     /// once offline; we keep a slowly-converging estimate of the mean to
     /// mirror its calibration runs.
@@ -48,10 +45,8 @@ impl ClockworkScheduler {
     pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
         ClockworkScheduler {
             cfg,
-            queue: BinaryHeap::new(),
-            by_seq: std::collections::HashMap::new(),
+            queue: EdfQueues::new(),
             dropped: Vec::new(),
-            per_model: ModelPending::new(),
             exec_point_ms: 10.0,
             calibrated: false,
             window_end: None,
@@ -68,25 +63,6 @@ impl ClockworkScheduler {
 
     fn est(&self, bs: usize) -> f64 {
         self.cfg.cost_model.latency(bs, self.exec_point_ms)
-    }
-
-    fn pop_head(&mut self) -> Option<Request> {
-        while let Some(Reverse((_, seq))) = self.queue.pop() {
-            if let Some(r) = self.by_seq.remove(&seq) {
-                return Some(r);
-            }
-        }
-        None
-    }
-
-    fn peek_deadline(&mut self) -> Option<Micros> {
-        while let Some(&Reverse((d, seq))) = self.queue.peek() {
-            if self.by_seq.contains_key(&seq) {
-                return Some(d);
-            }
-            self.queue.pop();
-        }
-        None
     }
 }
 
@@ -120,25 +96,21 @@ impl Scheduler for ClockworkScheduler {
             self.dropped.push((req, Outcome::TimedOut));
             return;
         }
-        let seq = req.id.0;
-        self.queue.push(Reverse((req.deadline, seq)));
-        self.per_model.inc(req.model);
-        self.by_seq.insert(seq, req);
+        self.queue.push(req);
     }
 
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
         // Drop requests whose window can no longer be met.
-        loop {
-            match self.peek_deadline() {
-                Some(d) if us_to_ms(now) + self.est(1) > us_to_ms(d) => {
-                    let r = self.pop_head().unwrap();
-                    self.per_model.dec(r.model);
-                    self.dropped.push((r, Outcome::TimedOut));
-                }
-                _ => break,
+        while let Some(head) = self.queue.peek() {
+            if us_to_ms(now) + self.est(1) > us_to_ms(head.deadline) {
+                let r = self.queue.pop_head().unwrap();
+                self.dropped.push((r, Outcome::TimedOut));
+            } else {
+                break;
             }
         }
-        let head_deadline = self.peek_deadline()?;
+        let head = self.queue.peek()?;
+        let (model, head_deadline) = (head.model, head.deadline);
         let slack_ms = us_to_ms(head_deadline) - us_to_ms(now);
         // Largest batch size whose estimated window fits the head's slack.
         let mut bs = 1usize;
@@ -148,20 +120,9 @@ impl Scheduler for ClockworkScheduler {
             }
         }
         // EDF fill restricted to the head's model (a planned window
-        // executes exactly one model); other models' requests keep their
-        // queue positions.
-        let model = {
-            let Reverse((_, head_seq)) = self.queue.peek().copied()?;
-            self.by_seq[&head_seq].model
-        };
-        let take = bs.min(self.per_model.get(model).max(1));
-        let batch = drain_edf_model(
-            &mut self.queue,
-            &mut self.by_seq,
-            &mut self.per_model,
-            model,
-            take,
-        );
+        // executes exactly one model); other models' lanes are untouched.
+        let take = bs.min(self.queue.pending_for(model).max(1));
+        let batch = self.queue.drain_model(model, take);
         if batch.is_empty() {
             return None;
         }
@@ -198,15 +159,15 @@ impl Scheduler for ClockworkScheduler {
     }
 
     fn wake_hint(&self, _now: Micros) -> Option<Micros> {
-        self.queue.peek().map(|Reverse((d, _))| *d)
+        self.queue.min_deadline()
     }
 
     fn pending(&self) -> usize {
-        self.by_seq.len()
+        self.queue.len()
     }
 
     fn pending_for(&self, model: ModelId) -> usize {
-        self.per_model.get(model)
+        self.queue.pending_for(model)
     }
 }
 

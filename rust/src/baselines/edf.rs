@@ -7,29 +7,25 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{drain_edf_model, ModelPending, Scheduler, SchedulerConfig};
+use crate::scheduler::{EdfQueues, Scheduler, SchedulerConfig};
 use crate::util::stats::Welford;
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
 
 pub struct EdfScheduler {
     cfg: SchedulerConfig,
-    queue: BinaryHeap<Reverse<(Micros, u64)>>,
-    by_seq: HashMap<u64, Request>,
+    /// Per-model deadline heaps carrying the requests inline (§Perf: no
+    /// id→request hash map, no skipped-entry re-push churn).
+    queue: EdfQueues,
     dropped: Vec<(Request, Outcome)>,
     exec_mean: Welford,
-    per_model: ModelPending,
 }
 
 impl EdfScheduler {
     pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
         EdfScheduler {
             cfg,
-            queue: BinaryHeap::new(),
-            by_seq: HashMap::new(),
+            queue: EdfQueues::new(),
             dropped: Vec::new(),
             exec_mean: Welford::new(),
-            per_model: ModelPending::new(),
         }
     }
 
@@ -44,16 +40,6 @@ impl EdfScheduler {
             10.0
         };
         self.cfg.cost_model.latency(bs, exec)
-    }
-
-    fn peek(&mut self) -> Option<(Micros, u64)> {
-        while let Some(&Reverse((d, seq))) = self.queue.peek() {
-            if self.by_seq.contains_key(&seq) {
-                return Some((d, seq));
-            }
-            self.queue.pop();
-        }
-        None
     }
 }
 
@@ -77,25 +63,21 @@ impl Scheduler for EdfScheduler {
             self.dropped.push((req, Outcome::TimedOut));
             return;
         }
-        self.queue.push(Reverse((req.deadline, req.id.0)));
-        self.per_model.inc(req.model);
-        self.by_seq.insert(req.id.0, req);
+        self.queue.push(req);
     }
 
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
         // Drop heads that can't make it even solo.
-        while let Some((d, seq)) = self.peek() {
-            if us_to_ms(now) + self.est(1) > us_to_ms(d) {
-                let r = self.by_seq.remove(&seq).unwrap();
-                self.queue.pop();
-                self.per_model.dec(r.model);
+        while let Some(head) = self.queue.peek() {
+            if us_to_ms(now) + self.est(1) > us_to_ms(head.deadline) {
+                let r = self.queue.pop_head().unwrap();
                 self.dropped.push((r, Outcome::TimedOut));
             } else {
                 break;
             }
         }
-        let (head_deadline, head_seq) = self.peek()?;
-        let model = self.by_seq[&head_seq].model;
+        let head = self.queue.peek()?;
+        let (model, head_deadline) = (head.model, head.deadline);
         let slack = us_to_ms(head_deadline) - us_to_ms(now);
         let mut bs = 1usize;
         for &cand in &self.cfg.batch_sizes {
@@ -103,16 +85,10 @@ impl Scheduler for EdfScheduler {
                 bs = cand;
             }
         }
-        // Model-pure fill: take the head's model in deadline order,
-        // re-queueing other models' requests untouched.
-        let take = bs.min(self.per_model.get(model).max(1));
-        let batch = drain_edf_model(
-            &mut self.queue,
-            &mut self.by_seq,
-            &mut self.per_model,
-            model,
-            take,
-        );
+        // Model-pure fill: take the head's model in deadline order; other
+        // models' lanes are untouched.
+        let take = bs.min(self.queue.pending_for(model).max(1));
+        let batch = self.queue.drain_model(model, take);
         if batch.is_empty() {
             None
         } else {
@@ -131,15 +107,15 @@ impl Scheduler for EdfScheduler {
     }
 
     fn wake_hint(&self, _now: Micros) -> Option<Micros> {
-        self.queue.peek().map(|Reverse((d, _))| *d)
+        self.queue.min_deadline()
     }
 
     fn pending(&self) -> usize {
-        self.by_seq.len()
+        self.queue.len()
     }
 
     fn pending_for(&self, model: ModelId) -> usize {
-        self.per_model.get(model)
+        self.queue.pending_for(model)
     }
 }
 

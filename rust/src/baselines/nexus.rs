@@ -10,15 +10,15 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{drain_fifo_model, ModelPending, Scheduler, SchedulerConfig};
+use crate::scheduler::{FifoQueues, Scheduler, SchedulerConfig};
 use crate::util::stats::Welford;
-use std::collections::VecDeque;
 
 pub struct NexusScheduler {
     cfg: SchedulerConfig,
-    queue: VecDeque<Request>,
+    /// Per-model FIFO lanes sharing one arrival order (§Perf: model-pure
+    /// plan batches fill in O(batch)).
+    queue: FifoQueues,
     dropped: Vec<(Request, Outcome)>,
-    per_model: ModelPending,
     /// Mean solo exec time (ms) from observation (epoch input).
     exec_mean: Welford,
     /// Mean SLO (ms) from observation.
@@ -36,9 +36,8 @@ impl NexusScheduler {
     pub fn new(cfg: SchedulerConfig, _seed: u64) -> Self {
         NexusScheduler {
             cfg,
-            queue: VecDeque::new(),
+            queue: FifoQueues::new(),
             dropped: Vec::new(),
-            per_model: ModelPending::new(),
             exec_mean: Welford::new(),
             slo_mean: Welford::new(),
             plan_bs: 1,
@@ -87,7 +86,6 @@ impl NexusScheduler {
         while let Some(front) = self.queue.front() {
             if us_to_ms(now) + lat > us_to_ms(front.deadline) {
                 let r = self.queue.pop_front().unwrap();
-                self.per_model.dec(r.model);
                 self.dropped.push((r, Outcome::TimedOut));
             } else {
                 break;
@@ -123,8 +121,7 @@ impl Scheduler for NexusScheduler {
         if self.exec_mean.count() == 0 {
             self.replan(now);
         }
-        self.per_model.inc(req.model);
-        self.queue.push_back(req);
+        self.queue.push(req);
     }
 
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
@@ -137,18 +134,13 @@ impl Scheduler for NexusScheduler {
         // Execute only full planned batches (of the head's model — a batch
         // executes exactly one model), except when the head's deadline
         // forces a partial batch now.
-        let available = self.per_model.get(model).max(1);
+        let available = self.queue.pending_for(model).max(1);
         let forced = us_to_ms(now) + 2.0 * self.plan_latency_ms > us_to_ms(head_deadline);
         if available < self.plan_bs && !forced {
             return None; // wait for the plan's batch to fill
         }
         let take = self.plan_bs.min(available);
-        Some(drain_fifo_model(
-            &mut self.queue,
-            &mut self.per_model,
-            model,
-            take,
-        ))
+        Some(self.queue.drain_model(model, take))
     }
 
     fn on_batch_complete(&mut self, batch: &[Request], _batch_ms: f64, _now: Micros) {
@@ -180,7 +172,7 @@ impl Scheduler for NexusScheduler {
     }
 
     fn pending_for(&self, model: ModelId) -> usize {
-        self.per_model.get(model)
+        self.queue.pending_for(model)
     }
 }
 

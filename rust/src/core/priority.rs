@@ -27,9 +27,21 @@
 //! entering the exponentials are milliseconds relative to a shared
 //! [`ScoreContext`] base that the scheduler resets periodically
 //! (Algorithm 1 lines 2–4).
+//!
+//! **Templates (§Perf).** Every term of Eq. 2 depends on the deadline `D`
+//! only through (a) a uniform factor `e^{−bD}` on the α coefficients and
+//! (b) a uniform shift `D` of the milestone times; the miss penalty `c`
+//! scales both α and β uniformly. A [`ScoreTemplate`] therefore bakes all
+//! of the per-bin exponential math (the expensive part) once per
+//! `(model, app, batch-size)` latency distribution — the estimator owns it,
+//! shared via `Arc` — and [`ScoreSchedule::instantiate`] produces a
+//! request's [`ScoreSchedule`] with two multiplies and one `exp`, no
+//! per-bin work and no allocation. That is what makes `on_arrival` and the
+//! Algorithm-1 base-time reset O(segments) instead of O(bins·exp).
 
 use super::histogram::Histogram;
 use crate::clock::{us_to_ms, Micros};
+use std::sync::Arc;
 
 /// Shared scoring parameters: `b` (1/ms) of the anticipated-delay
 /// exponential, and the current base time for relative timestamps.
@@ -97,30 +109,38 @@ impl Coeffs {
     }
 }
 
-/// The full score schedule of one request (for one batch-size queue):
-/// (α, β) segments separated by milestones.
+/// Deadline-independent score schedule of one latency distribution: (α, β)
+/// segments separated by *deadline-relative* milestone offsets (offset 0 is
+/// the deadline itself, so every offset is ≤ 0). Built once per
+/// `(model, app, batch-size)` by the estimator and shared via `Arc`; a
+/// request's concrete [`ScoreSchedule`] is an O(1) instantiation.
+///
+/// The template stores the unit form (`c = 1`, `D = base`): instantiating
+/// at deadline `D` with penalty `c` scales every α by `c·e^{−bD}`, every β
+/// by `c`, and shifts every milestone by `D` (all relative ms).
 #[derive(Debug, Clone)]
-pub struct ScoreSchedule {
-    /// Segment boundaries in relative ms, strictly increasing. Segment `i`
-    /// covers `[boundary[i-1], boundary[i])` (segment 0 starts at −∞);
-    /// after the last boundary the score is identically 0.
-    boundaries: Vec<f64>,
-    /// `coeffs[i]` applies to segment `i` (len == boundaries.len() + 1;
-    /// the final entry is always ZERO).
+pub struct ScoreTemplate {
+    /// Score parameter `b` (1/ms) the per-bin exponentials were baked
+    /// with; instantiation must use a [`ScoreContext`] with the same `b`.
+    b: f64,
+    /// Segment boundaries as deadline-relative ms offsets, strictly
+    /// increasing. Segment `i` covers `[offsets[i-1], offsets[i])`
+    /// (segment 0 starts at −∞); after the last offset the score is
+    /// identically 0.
+    offsets: Vec<f64>,
+    /// `coeffs[i]` applies to segment `i` (len == offsets.len() + 1; the
+    /// final entry is always ZERO).
     coeffs: Vec<Coeffs>,
 }
 
-impl ScoreSchedule {
-    /// Build from the request's deadline (absolute Micros), its miss
-    /// penalty `c`, and the estimated batch latency distribution `l_b`.
-    ///
-    /// Within the schedule all times are relative ms (per `ctx.base`).
-    pub fn build(ctx: &ScoreContext, deadline: Micros, c: f64, l_b: &Histogram) -> ScoreSchedule {
-        let b = ctx.b;
-        let d_rel = ctx.rel_ms(deadline);
+impl ScoreTemplate {
+    /// Precompute the unit schedule of latency distribution `l_b` under
+    /// score parameter `b` (the expensive per-bin exponential math; §4.3
+    /// off-critical-path work).
+    pub fn new(b: f64, l_b: &Histogram) -> ScoreTemplate {
+        assert!(b > 0.0);
         let e_l = l_b.mean().max(1e-9);
-        let scale = c / (e_l * b);
-        let exp_neg_bd = (-b * d_rel).exp();
+        let scale = 1.0 / (e_l * b);
 
         // Histogram bins are contiguous with uniform width (`l1_i =
         // edge_i`, `l2_i = edge_{i+1}`), so as t advances exactly one bin
@@ -139,8 +159,8 @@ impl ScoreSchedule {
                 continue;
             }
             let dens = h / (l2 - l1).max(1e-12);
-            a_coef[i] = scale * dens * ((b * l2).exp() - (b * l1).exp()) * exp_neg_bd;
-            b_coef[i] = -scale * dens * (b * l1).exp() * exp_neg_bd;
+            a_coef[i] = scale * dens * ((b * l2).exp() - (b * l1).exp());
+            b_coef[i] = -scale * dens * (b * l1).exp();
             beta_b[i] = scale * dens;
         }
         // prefix_a[j] = Σ_{i<j} a_coef[i].
@@ -148,14 +168,14 @@ impl ScoreSchedule {
         for i in 0..nb {
             prefix_a[i + 1] = prefix_a[i] + a_coef[i];
         }
-        let mut boundaries = Vec::with_capacity(nb + 1);
+        let mut offsets = Vec::with_capacity(nb + 1);
         let mut coeffs = Vec::with_capacity(nb + 2);
         // Segment before the first boundary: all bins in regime A.
         coeffs.push(Coeffs {
             alpha: prefix_a[nb],
             beta: 0.0,
         });
-        // Walk boundaries in increasing t: t = D − edge_{nb−s}.
+        // Walk boundaries in increasing t: offset = −edge_{nb−s}.
         for s in 1..=nb {
             let j = nb - s; // the single regime-B bin in this segment
             let seg = Coeffs {
@@ -167,15 +187,80 @@ impl ScoreSchedule {
             if *coeffs.last().unwrap() == seg {
                 continue;
             }
-            boundaries.push(d_rel - l_b.edge(j + 1));
+            offsets.push(-l_b.edge(j + 1));
             coeffs.push(seg);
         }
         // Terminal segment: everything past D − edge_0 scores zero.
         if *coeffs.last().unwrap() != Coeffs::ZERO {
-            boundaries.push(d_rel - l_b.edge(0));
+            offsets.push(-l_b.edge(0));
             coeffs.push(Coeffs::ZERO);
         }
-        ScoreSchedule { boundaries, coeffs }
+        ScoreTemplate { b, offsets, coeffs }
+    }
+
+    /// Number of (α, β) segments (milestone count + 1).
+    pub fn num_segments(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Unit coefficients active at deadline-relative offset `local`.
+    fn segment_at(&self, local: f64) -> Coeffs {
+        let idx = self.offsets.partition_point(|&m| m <= local);
+        self.coeffs[idx]
+    }
+}
+
+/// The full score schedule of one request (for one batch-size queue): a
+/// shared [`ScoreTemplate`] plus the request's deadline shift and penalty
+/// scaling. All queries are O(log segments) and allocation-free.
+#[derive(Debug, Clone)]
+pub struct ScoreSchedule {
+    template: Arc<ScoreTemplate>,
+    /// The request's deadline in relative ms (per the `ScoreContext` base
+    /// active at build time).
+    shift: f64,
+    /// `c · e^{−bD}` applied to every template α.
+    alpha_scale: f64,
+    /// `c` applied to every template β.
+    beta_scale: f64,
+}
+
+impl ScoreSchedule {
+    /// Instantiate a shared template for one request: O(1), no per-bin
+    /// math, no allocation beyond the `Arc` refcount bump. This is the
+    /// hot-path constructor — the estimator owns one template per
+    /// `(model, app, bs)`.
+    pub fn instantiate(
+        template: &Arc<ScoreTemplate>,
+        ctx: &ScoreContext,
+        deadline: Micros,
+        c: f64,
+    ) -> ScoreSchedule {
+        debug_assert!(
+            template.b == ctx.b,
+            "template built for b={} instantiated under a context with b={}",
+            template.b,
+            ctx.b
+        );
+        let d_rel = ctx.rel_ms(deadline);
+        ScoreSchedule {
+            template: Arc::clone(template),
+            shift: d_rel,
+            alpha_scale: c * (-ctx.b * d_rel).exp(),
+            beta_scale: c,
+        }
+    }
+
+    /// Build from the request's deadline (absolute Micros), its miss
+    /// penalty `c`, and the estimated batch latency distribution `l_b`.
+    ///
+    /// Constructs a private template — the hot path instead shares one
+    /// template per `(model, app, bs)` via the estimator and calls
+    /// [`ScoreSchedule::instantiate`] directly.
+    ///
+    /// Within the schedule all times are relative ms (per `ctx.base`).
+    pub fn build(ctx: &ScoreContext, deadline: Micros, c: f64, l_b: &Histogram) -> ScoreSchedule {
+        ScoreSchedule::instantiate(&Arc::new(ScoreTemplate::new(ctx.b, l_b)), ctx, deadline, c)
     }
 
     /// Appendix B: schedule for a piecewise-step cost function — the sum
@@ -194,11 +279,17 @@ impl ScoreSchedule {
         if parts.len() == 1 {
             return parts.into_iter().next().unwrap();
         }
-        // Merge: union of boundaries; coefficients sum segment-wise.
-        let mut boundaries: Vec<f64> = parts
+        // Merge: union of boundaries; coefficients sum segment-wise. The
+        // merged schedule is materialized as its own (identity-scaled)
+        // template. Each part's boundaries are materialized in absolute
+        // relative-ms form once, and the segment lookups partition on those
+        // exact values — re-deriving `rep − shift` per query could round to
+        // the wrong side of a part's own boundary.
+        let abs_bounds: Vec<Vec<f64>> = parts
             .iter()
-            .flat_map(|p| p.boundaries.iter().copied())
+            .map(|p| p.template.offsets.iter().map(|&o| o + p.shift).collect())
             .collect();
+        let mut boundaries: Vec<f64> = abs_bounds.iter().flatten().copied().collect();
         boundaries.sort_by(|a, b| a.partial_cmp(b).unwrap());
         boundaries.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
         let mut coeffs = Vec::with_capacity(boundaries.len() + 1);
@@ -210,27 +301,46 @@ impl ScoreSchedule {
             };
             let mut alpha = 0.0;
             let mut beta = 0.0;
-            for p in &parts {
-                let c = p.coeffs_at(rep);
-                alpha += c.alpha;
-                beta += c.beta;
+            for (p, ab) in parts.iter().zip(&abs_bounds) {
+                let idx = ab.partition_point(|&m| m <= rep);
+                let unit = p.template.coeffs[idx];
+                alpha += unit.alpha * p.alpha_scale;
+                beta += unit.beta * p.beta_scale;
             }
             coeffs.push(Coeffs { alpha, beta });
         }
-        ScoreSchedule { boundaries, coeffs }
+        ScoreSchedule {
+            template: Arc::new(ScoreTemplate {
+                b: ctx.b,
+                offsets: boundaries,
+                coeffs,
+            }),
+            shift: 0.0,
+            alpha_scale: 1.0,
+            beta_scale: 1.0,
+        }
+    }
+
+    /// The shared template backing this schedule.
+    pub fn template(&self) -> &Arc<ScoreTemplate> {
+        &self.template
     }
 
     /// Coefficients active at relative time `t_rel` (ms).
     pub fn coeffs_at(&self, t_rel: f64) -> Coeffs {
-        let idx = self.boundaries.partition_point(|&m| m <= t_rel);
-        self.coeffs[idx]
+        let seg = self.template.segment_at(t_rel - self.shift);
+        Coeffs {
+            alpha: seg.alpha * self.alpha_scale,
+            beta: seg.beta * self.beta_scale,
+        }
     }
 
     /// Next milestone strictly after `t_rel`, if any (Algorithm 1 line 6's
     /// `Milestone(r)`).
     pub fn next_milestone(&self, t_rel: f64) -> Option<f64> {
-        let idx = self.boundaries.partition_point(|&m| m <= t_rel);
-        self.boundaries.get(idx).copied()
+        let local = t_rel - self.shift;
+        let idx = self.template.offsets.partition_point(|&m| m <= local);
+        self.template.offsets.get(idx).map(|&m| m + self.shift)
     }
 
     /// Evaluate `p(t)` at relative ms `t_rel` (for testing/plotting; the
@@ -241,9 +351,11 @@ impl ScoreSchedule {
 
     /// Whether the score is identically zero from `t_rel` on.
     pub fn exhausted(&self, t_rel: f64) -> bool {
-        self.boundaries
+        let local = t_rel - self.shift;
+        self.template
+            .offsets
             .last()
-            .map(|&m| t_rel >= m)
+            .map(|&m| local >= m)
             .unwrap_or(true)
     }
 }
@@ -459,6 +571,57 @@ mod tests {
         let p0 = s0.coeffs_at(c0.rel_ms(t)).eval(c0.multiplier(t));
         let p1 = s1.coeffs_at(c1.rel_ms(t)).eval(c1.multiplier(t));
         assert!((p0 - p1).abs() < 1e-6 * (1.0 + p0.abs()), "{p0} vs {p1}");
+    }
+
+    #[test]
+    fn shared_template_instantiation_matches_direct_build() {
+        // The hot path instantiates one shared template per (model, app,
+        // bs); every instantiation must equal an independent build at that
+        // deadline — bit-for-bit, since `build` routes through the same
+        // template math.
+        let c = ctx();
+        let l_b = Histogram::from_weights(3.0, 2.5, &[1.0, 4.0, 2.0, 0.0, 1.0]);
+        let tpl = std::sync::Arc::new(ScoreTemplate::new(B, &l_b));
+        for d_ms in [40.0, 120.0, 333.25, 1_000.0, 9_999.5] {
+            let d = ms_to_us(d_ms);
+            let inst = ScoreSchedule::instantiate(&tpl, &c, d, 1.0);
+            let direct = ScoreSchedule::build(&c, d, 1.0, &l_b);
+            for t in [-10.0, 0.0, d_ms * 0.5, d_ms - 4.0, d_ms - 0.1, d_ms + 5.0] {
+                let a = inst.coeffs_at(t);
+                let b = direct.coeffs_at(t);
+                assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "alpha at t={t} d={d_ms}");
+                assert_eq!(a.beta.to_bits(), b.beta.to_bits(), "beta at t={t} d={d_ms}");
+                assert_eq!(inst.next_milestone(t), direct.next_milestone(t));
+                assert_eq!(inst.exhausted(t), direct.exhausted(t));
+            }
+        }
+    }
+
+    #[test]
+    fn template_is_shared_not_copied() {
+        let c = ctx();
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 2.0, 1.0]);
+        let tpl = std::sync::Arc::new(ScoreTemplate::new(B, &l_b));
+        let s1 = ScoreSchedule::instantiate(&tpl, &c, ms_to_us(100.0), 1.0);
+        let s2 = ScoreSchedule::instantiate(&tpl, &c, ms_to_us(700.0), 2.0);
+        assert!(std::sync::Arc::ptr_eq(s1.template(), s2.template()));
+        assert!(std::sync::Arc::ptr_eq(s1.template(), &tpl));
+        assert!(tpl.num_segments() >= 2);
+    }
+
+    #[test]
+    fn penalty_scales_score_linearly() {
+        // c multiplies both α and β uniformly, so p_c(t) = c · p_1(t).
+        let c = ctx();
+        let l_b = Histogram::from_weights(5.0, 5.0, &[1.0, 3.0]);
+        let tpl = std::sync::Arc::new(ScoreTemplate::new(B, &l_b));
+        let s1 = ScoreSchedule::instantiate(&tpl, &c, ms_to_us(200.0), 1.0);
+        let s3 = ScoreSchedule::instantiate(&tpl, &c, ms_to_us(200.0), 3.0);
+        for t in [0.0, 100.0, 185.0, 192.0] {
+            let p1 = s1.score_at(B, t);
+            let p3 = s3.score_at(B, t);
+            assert!((p3 - 3.0 * p1).abs() < 1e-12 * (1.0 + p3.abs()), "t={t}");
+        }
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct FibHeap<T> {
     free: Vec<usize>,
     min: Option<usize>,
     len: usize,
+    /// Reusable consolidate scratch (§Perf): the root list snapshot and the
+    /// by-degree table were previously allocated fresh on every `pop_min` /
+    /// `delete`; keeping them on the heap makes warm pops allocation-free.
+    scratch_roots: Vec<usize>,
+    scratch_by_deg: Vec<Option<usize>>,
 }
 
 impl<T> Default for FibHeap<T> {
@@ -44,6 +49,8 @@ impl<T> FibHeap<T> {
             free: Vec::new(),
             min: None,
             len: 0,
+            scratch_roots: Vec::new(),
+            scratch_by_deg: Vec::new(),
         }
     }
 
@@ -178,30 +185,36 @@ impl<T> FibHeap<T> {
         Some((key, value))
     }
 
+    // Index loops: the body mutates `self.nodes` while walking the scratch
+    // buffers, which iterators would hold borrowed.
+    #[allow(clippy::needless_range_loop)]
     fn consolidate(&mut self) {
         let max_deg = (64 - (self.len.max(1) as u64).leading_zeros()) as usize + 2;
-        let mut by_deg: Vec<Option<usize>> = vec![None; max_deg + 2];
-        // Collect roots first (the ring is mutated during linking).
+        // Collect roots first (the ring is mutated during linking), into
+        // the reusable scratch buffers — no allocation once warm.
         let start = match self.min {
             Some(m) => m,
             None => return,
         };
-        let mut roots = Vec::new();
+        self.scratch_by_deg.clear();
+        self.scratch_by_deg.resize(max_deg + 2, None);
+        self.scratch_roots.clear();
         let mut cur = start;
         loop {
-            roots.push(cur);
+            self.scratch_roots.push(cur);
             cur = self.nodes[cur].right;
             if cur == start {
                 break;
             }
         }
-        for mut x in roots {
+        for ri in 0..self.scratch_roots.len() {
+            let mut x = self.scratch_roots[ri];
             // x may have been linked under another root already.
             if self.nodes[x].parent.is_some() {
                 continue;
             }
             let mut d = self.nodes[x].degree as usize;
-            while let Some(y) = by_deg[d] {
+            while let Some(y) = self.scratch_by_deg[d] {
                 if y == x {
                     break;
                 }
@@ -229,15 +242,18 @@ impl<T> FibHeap<T> {
                     }
                 }
                 self.nodes[hi].degree += 1;
-                by_deg[d] = None;
+                self.scratch_by_deg[d] = None;
                 x = hi;
                 d = self.nodes[x].degree as usize;
             }
-            by_deg[d] = Some(x);
+            self.scratch_by_deg[d] = Some(x);
         }
         // Recompute min over remaining roots.
         let mut min_idx = None;
-        for root in by_deg.into_iter().flatten() {
+        for di in 0..self.scratch_by_deg.len() {
+            let Some(root) = self.scratch_by_deg[di] else {
+                continue;
+            };
             if self.nodes[root].parent.is_none() {
                 min_idx = match min_idx {
                     None => Some(root),

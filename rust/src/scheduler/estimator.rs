@@ -15,8 +15,11 @@ use super::profiler::ProfileSnapshot;
 use crate::core::batchmodel::BatchCostModel;
 use crate::core::histogram::Histogram;
 use crate::core::orderstats;
+use crate::core::priority::ScoreTemplate;
 use crate::core::request::{AppId, ModelId};
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Precomputed batch latency info for one (model, app, batch-size) triple.
 #[derive(Debug, Clone)]
@@ -26,6 +29,10 @@ pub struct BatchLatency {
     /// Coarsened copy used for the priority-score schedule (fewer
     /// milestones; see SchedulerConfig::score_bins).
     pub score_dist: Histogram,
+    /// Deadline-relative score-schedule template over `score_dist` (§Perf):
+    /// `on_arrival` / base resets instantiate it in O(1) instead of
+    /// re-deriving the per-bin exponential math per request.
+    pub template: Arc<ScoreTemplate>,
     /// E[L_B] (Eq. 5).
     pub mean: f64,
     /// Quantile used for the Algorithm-1 feasibility check.
@@ -47,6 +54,9 @@ pub struct Estimator {
     cache: HashMap<(u32, u32, usize), BatchLatency>,
     /// Fallback solo execution time (ms) before any profile exists.
     cold_start_ms: f64,
+    /// Score parameter `b` used to precompute the schedule templates
+    /// (matches `SchedulerConfig::b`).
+    priority_b: f64,
 }
 
 impl Estimator {
@@ -70,11 +80,22 @@ impl Estimator {
             mixtures: Vec::new(),
             cache: HashMap::new(),
             cold_start_ms: 10.0,
+            priority_b: 1e-4,
         }
     }
 
     pub fn cost_model(&self) -> BatchCostModel {
         self.cost
+    }
+
+    /// Set the score parameter `b` the schedule templates are built for
+    /// (invalidates the cache). Defaults to the paper's 1e-4 per ms.
+    pub fn set_priority_b(&mut self, b: f64) {
+        assert!(b > 0.0);
+        if b != self.priority_b {
+            self.priority_b = b;
+            self.cache.clear();
+        }
     }
 
     /// Install per-model cost models (invalidates the cache).
@@ -85,10 +106,7 @@ impl Estimator {
 
     /// Cost model for one model (falls back to the shared default).
     pub fn cost_for(&self, model: ModelId) -> BatchCostModel {
-        self.model_costs
-            .iter()
-            .find(|(m, _)| *m == model.0)
-            .map_or(self.cost, |(_, c)| *c)
+        cost_for_in(&self.model_costs, self.cost, model)
     }
 
     /// Install a fresh profiler snapshot (invalidates the cache).
@@ -102,58 +120,102 @@ impl Estimator {
         self.snapshot.version
     }
 
-    fn mixture_for(&self, model: ModelId) -> Option<&Histogram> {
-        self.mixtures
-            .iter()
-            .find(|(m, _)| *m == model)
-            .map(|(_, h)| h)
-    }
-
     /// Batch latency for a request of `(model, app)` at batch size `k`
-    /// (cached).
-    // The entry API would need `&mut self` while `compute` borrows `&self`.
-    #[allow(clippy::map_entry)]
+    /// (cached). Single map lookup on both hit and miss: the `entry` API
+    /// plus field-level split borrows replaces the historical
+    /// `contains_key` + `insert` + `get` triple.
     pub fn batch_latency(&mut self, model: ModelId, app: AppId, k: usize) -> &BatchLatency {
         let key = (model.0, app.0, k);
-        if !self.cache.contains_key(&key) {
-            let bl = self.compute(model, app, k);
-            self.cache.insert(key, bl);
-        }
-        self.cache.get(&key).unwrap()
-    }
-
-    fn compute(&self, model: ModelId, app: AppId, k: usize) -> BatchLatency {
-        assert!(k >= 1);
-        let own = self
-            .snapshot
-            .histogram_for(model, app)
-            .or_else(|| self.mixture_for(model))
-            .cloned()
-            .unwrap_or_else(|| Histogram::constant(self.cold_start_ms));
-        let max_dist = if k == 1 {
-            own
-        } else {
-            match self.mixture_for(model) {
-                Some(mix) => orderstats::max_grouped(&[&own, mix], &[1, k - 1], self.bins),
-                None => orderstats::max_iid(&own, k),
-            }
-        };
-        let cost = self.cost_for(model);
-        let dist = max_dist.affine(cost.c1 * k as f64, cost.c0);
-        let mean = dist.mean();
-        let feasibility_ms = dist.quantile(self.feasibility_quantile);
-        let score_dist = dist.coarsen(self.score_bins);
-        BatchLatency {
-            dist,
-            score_dist,
-            mean,
-            feasibility_ms,
+        let Estimator {
+            cache,
+            snapshot,
+            mixtures,
+            cost,
+            model_costs,
+            bins,
+            score_bins,
+            feasibility_quantile,
+            cold_start_ms,
+            priority_b,
+        } = self;
+        match cache.entry(key) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => v.insert(compute_batch_latency(
+                snapshot,
+                mixtures,
+                cost_for_in(model_costs, *cost, model),
+                *bins,
+                *score_bins,
+                *feasibility_quantile,
+                *cold_start_ms,
+                *priority_b,
+                model,
+                app,
+                k,
+            )),
         }
     }
 
     /// Feasibility latency (ms) for Algorithm 1 line 11.
     pub fn feasibility_ms(&mut self, model: ModelId, app: AppId, k: usize) -> f64 {
         self.batch_latency(model, app, k).feasibility_ms
+    }
+}
+
+fn cost_for_in(
+    model_costs: &[(u32, BatchCostModel)],
+    default: BatchCostModel,
+    model: ModelId,
+) -> BatchCostModel {
+    model_costs
+        .iter()
+        .find(|(m, _)| *m == model.0)
+        .map_or(default, |(_, c)| *c)
+}
+
+/// The §4.3 precompute for one (model, app, k) triple — a free function so
+/// `batch_latency` can run it inside the cache's vacant `entry` while
+/// holding only field-level borrows.
+#[allow(clippy::too_many_arguments)]
+fn compute_batch_latency(
+    snapshot: &ProfileSnapshot,
+    mixtures: &[(ModelId, Histogram)],
+    cost: BatchCostModel,
+    bins: usize,
+    score_bins: usize,
+    feasibility_quantile: f64,
+    cold_start_ms: f64,
+    priority_b: f64,
+    model: ModelId,
+    app: AppId,
+    k: usize,
+) -> BatchLatency {
+    assert!(k >= 1);
+    let mixture_for = |m: ModelId| mixtures.iter().find(|(mm, _)| *mm == m).map(|(_, h)| h);
+    let own = snapshot
+        .histogram_for(model, app)
+        .or_else(|| mixture_for(model))
+        .cloned()
+        .unwrap_or_else(|| Histogram::constant(cold_start_ms));
+    let max_dist = if k == 1 {
+        own
+    } else {
+        match mixture_for(model) {
+            Some(mix) => orderstats::max_grouped(&[&own, mix], &[1, k - 1], bins),
+            None => orderstats::max_iid(&own, k),
+        }
+    };
+    let dist = max_dist.affine(cost.c1 * k as f64, cost.c0);
+    let mean = dist.mean();
+    let feasibility_ms = dist.quantile(feasibility_quantile);
+    let score_dist = dist.coarsen(score_bins);
+    let template = Arc::new(ScoreTemplate::new(priority_b, &score_dist));
+    BatchLatency {
+        dist,
+        score_dist,
+        template,
+        mean,
+        feasibility_ms,
     }
 }
 
@@ -243,6 +305,40 @@ mod tests {
         let unk = e.batch_latency(M0, AppId(42), 1).mean;
         // mixture mean ≈ (5+43)/2 = 24
         assert!((unk - 24.0).abs() < 3.0, "unk={unk}");
+    }
+
+    #[test]
+    fn cached_entries_share_one_template() {
+        // The whole point of the template: every arrival of the same
+        // (model, app, k) class instantiates the *same* Arc until the next
+        // snapshot refresh.
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 32, 0.5);
+        e.refresh(snapshot_two_apps());
+        let t1 = Arc::clone(&e.batch_latency(M0, AppId(0), 4).template);
+        let t2 = Arc::clone(&e.batch_latency(M0, AppId(0), 4).template);
+        assert!(Arc::ptr_eq(&t1, &t2));
+        assert!(t1.num_segments() >= 2);
+        // Different class → different template.
+        let t3 = Arc::clone(&e.batch_latency(M0, AppId(1), 4).template);
+        assert!(!Arc::ptr_eq(&t1, &t3));
+        // Refresh rebuilds.
+        e.refresh(snapshot_two_apps());
+        let t4 = Arc::clone(&e.batch_latency(M0, AppId(0), 4).template);
+        assert!(!Arc::ptr_eq(&t1, &t4));
+    }
+
+    #[test]
+    fn priority_b_change_invalidates_cache() {
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 32, 0.5);
+        e.refresh(snapshot_two_apps());
+        let t1 = Arc::clone(&e.batch_latency(M0, AppId(0), 2).template);
+        e.set_priority_b(1e-3);
+        let t2 = Arc::clone(&e.batch_latency(M0, AppId(0), 2).template);
+        assert!(!Arc::ptr_eq(&t1, &t2));
+        // Same b again is a no-op (cache kept).
+        e.set_priority_b(1e-3);
+        let t3 = Arc::clone(&e.batch_latency(M0, AppId(0), 2).template);
+        assert!(Arc::ptr_eq(&t2, &t3));
     }
 
     #[test]

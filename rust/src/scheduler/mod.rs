@@ -17,7 +17,7 @@ use crate::core::batchmodel::BatchCostModel;
 use crate::core::histogram::Histogram;
 use crate::core::request::{AppId, ModelId, Outcome, Request};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Shared scheduler configuration.
 #[derive(Debug, Clone)]
@@ -67,91 +67,226 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// Per-model pending counters: the bookkeeping schedulers use to answer
-/// [`Scheduler::pending_for`] without scanning their queues (routing calls
-/// it once per candidate worker per arrival — it sits on the hot path).
+/// Per-model FIFO sub-queues with a shared arrival order (§Perf).
+///
+/// The historical layout was one global `VecDeque` with an O(n) scan-and-
+/// `remove(i)` per popped request when filling a model-pure batch. Here
+/// each model owns its own FIFO lane; `push` stamps a monotone sequence
+/// number so the *global* head (earliest arrival across lanes — what
+/// head-of-queue policies like Clipper/Nexus key their decisions on) is an
+/// O(models) peek, and a model-pure batch fill is O(batch) pops from one
+/// lane. Lane lookup is a linear probe over the handful of co-located
+/// models — no hashing.
 #[derive(Debug, Default)]
-pub struct ModelPending(Vec<(ModelId, usize)>);
+pub struct FifoQueues {
+    lanes: Vec<(ModelId, VecDeque<(u64, Request)>)>,
+    next_seq: u64,
+    len: usize,
+}
 
-impl ModelPending {
+impl FifoQueues {
     pub fn new() -> Self {
-        ModelPending(Vec::new())
+        Self::default()
     }
 
-    pub fn inc(&mut self, model: ModelId) {
-        match self.0.iter_mut().find(|(m, _)| *m == model) {
-            Some((_, c)) => *c += 1,
-            None => self.0.push((model, 1)),
+    pub fn push(&mut self, req: Request) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.len += 1;
+        let model = req.model;
+        match self.lanes.iter_mut().find(|(m, _)| *m == model) {
+            Some((_, lane)) => lane.push_back((seq, req)),
+            None => {
+                let mut lane = VecDeque::new();
+                lane.push_back((seq, req));
+                self.lanes.push((model, lane));
+            }
         }
     }
 
-    pub fn dec(&mut self, model: ModelId) {
-        if let Some((_, c)) = self.0.iter_mut().find(|(m, _)| *m == model) {
-            *c = c.saturating_sub(1);
-        }
+    /// Index of the lane holding the global FIFO head.
+    fn head_lane(&self) -> Option<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, (_, lane))| lane.front().map(|(seq, _)| (*seq, i)))
+            .min()
+            .map(|(_, i)| i)
     }
 
-    pub fn get(&self, model: ModelId) -> usize {
-        self.0
+    /// The earliest-arrived request across all models.
+    pub fn front(&self) -> Option<&Request> {
+        self.head_lane()
+            .map(|i| &self.lanes[i].1.front().unwrap().1)
+    }
+
+    /// Pop the global FIFO head.
+    pub fn pop_front(&mut self) -> Option<Request> {
+        let i = self.head_lane()?;
+        self.len -= 1;
+        Some(self.lanes[i].1.pop_front().unwrap().1)
+    }
+
+    /// Pop up to `take` requests of `model` in arrival order — O(batch).
+    pub fn drain_model(&mut self, model: ModelId, take: usize) -> Vec<Request> {
+        let mut batch = Vec::with_capacity(take);
+        if let Some((_, lane)) = self.lanes.iter_mut().find(|(m, _)| *m == model) {
+            while batch.len() < take {
+                match lane.pop_front() {
+                    Some((_, r)) => {
+                        self.len -= 1;
+                        batch.push(r);
+                    }
+                    None => break,
+                }
+            }
+        }
+        batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queued requests of one model — O(1) per lane, no counters to keep
+    /// in sync (routing calls this once per candidate worker per arrival).
+    pub fn pending_for(&self, model: ModelId) -> usize {
+        self.lanes
             .iter()
             .find(|(m, _)| *m == model)
-            .map_or(0, |(_, c)| *c)
+            .map_or(0, |(_, lane)| lane.len())
     }
 }
 
-/// Pop up to `take` requests of `model` from a FIFO queue, preserving the
-/// relative order of other models' entries (the shared model-pure batch
-/// fill for FIFO baselines — Clipper, Nexus).
-pub fn drain_fifo_model(
-    queue: &mut VecDeque<Request>,
-    counts: &mut ModelPending,
-    model: ModelId,
-    take: usize,
-) -> Vec<Request> {
-    let mut batch = Vec::with_capacity(take);
-    let mut i = 0;
-    while i < queue.len() && batch.len() < take {
-        if queue[i].model == model {
-            let r = queue.remove(i).unwrap();
-            counts.dec(model);
-            batch.push(r);
-        } else {
-            i += 1;
-        }
+/// A heap item ordered by (deadline, request id) — the tie-break the
+/// historical `(deadline, id)` global heap used.
+#[derive(Debug)]
+struct EdfItem(Request);
+
+impl PartialEq for EdfItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.deadline == other.0.deadline && self.0.id == other.0.id
     }
-    batch
 }
 
-/// Pop up to `take` requests of `model` in deadline order from an EDF
-/// heap (`(deadline, id)` min-heap + id→request map), re-pushing skipped
-/// entries of other models untouched and discarding stale heap entries
-/// (the shared model-pure batch fill for EDF-ordered baselines — EDF,
-/// Clockwork).
-pub fn drain_edf_model(
-    queue: &mut BinaryHeap<Reverse<(Micros, u64)>>,
-    by_seq: &mut HashMap<u64, Request>,
-    counts: &mut ModelPending,
-    model: ModelId,
-    take: usize,
-) -> Vec<Request> {
-    let mut batch = Vec::with_capacity(take);
-    let mut skipped: Vec<Reverse<(Micros, u64)>> = Vec::new();
-    while batch.len() < take {
-        let Some(Reverse((d, seq))) = queue.pop() else {
-            break;
-        };
-        match by_seq.get(&seq) {
-            Some(r) if r.model == model => {
-                let r = by_seq.remove(&seq).unwrap();
-                counts.dec(model);
-                batch.push(r);
+impl Eq for EdfItem {}
+
+impl PartialOrd for EdfItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EdfItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.0.deadline, self.0.id.0).cmp(&(other.0.deadline, other.0.id.0))
+    }
+}
+
+/// Per-model earliest-deadline-first sub-queues (§Perf).
+///
+/// The historical layout was one global `(deadline, id)` heap plus an
+/// id→request hash map, with model-pure fills popping and *re-pushing*
+/// every skipped entry of other models (O(n log n) per batch worst case).
+/// Here each model owns its own deadline heap carrying the requests
+/// inline: the global EDF head is an O(models) peek over lane minima, a
+/// model-pure fill is O(batch·log lane), and there is no hash map and no
+/// stale-entry bookkeeping at all.
+#[derive(Debug, Default)]
+pub struct EdfQueues {
+    lanes: Vec<(ModelId, BinaryHeap<Reverse<EdfItem>>)>,
+    len: usize,
+}
+
+impl EdfQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.len += 1;
+        let model = req.model;
+        match self.lanes.iter_mut().find(|(m, _)| *m == model) {
+            Some((_, lane)) => lane.push(Reverse(EdfItem(req))),
+            None => {
+                let mut lane = BinaryHeap::new();
+                lane.push(Reverse(EdfItem(req)));
+                self.lanes.push((model, lane));
             }
-            Some(_) => skipped.push(Reverse((d, seq))),
-            None => {} // stale heap entry: already dispatched/dropped
         }
     }
-    queue.extend(skipped);
-    batch
+
+    /// Index of the lane holding the global EDF head (min (deadline, id)).
+    fn head_lane(&self) -> Option<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, (_, lane))| {
+                lane.peek()
+                    .map(|Reverse(item)| ((item.0.deadline, item.0.id.0), i))
+            })
+            .min()
+            .map(|(_, i)| i)
+    }
+
+    /// The earliest-deadline request across all models.
+    pub fn peek(&self) -> Option<&Request> {
+        self.head_lane()
+            .map(|i| &self.lanes[i].1.peek().unwrap().0 .0)
+    }
+
+    /// Pop the global EDF head.
+    pub fn pop_head(&mut self) -> Option<Request> {
+        let i = self.head_lane()?;
+        self.len -= 1;
+        Some(self.lanes[i].1.pop().unwrap().0 .0)
+    }
+
+    /// Earliest deadline across all models (wake hints) — O(models).
+    pub fn min_deadline(&self) -> Option<Micros> {
+        self.lanes
+            .iter()
+            .filter_map(|(_, lane)| lane.peek().map(|Reverse(item)| item.0.deadline))
+            .min()
+    }
+
+    /// Pop up to `take` requests of `model` in deadline order — O(batch·
+    /// log lane), nothing re-pushed.
+    pub fn drain_model(&mut self, model: ModelId, take: usize) -> Vec<Request> {
+        let mut batch = Vec::with_capacity(take);
+        if let Some((_, lane)) = self.lanes.iter_mut().find(|(m, _)| *m == model) {
+            while batch.len() < take {
+                match lane.pop() {
+                    Some(Reverse(EdfItem(r))) => {
+                        self.len -= 1;
+                        batch.push(r);
+                    }
+                    None => break,
+                }
+            }
+        }
+        batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queued requests of one model — O(1) per lane.
+    pub fn pending_for(&self, model: ModelId) -> usize {
+        self.lanes
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(0, |(_, lane)| lane.len())
+    }
 }
 
 /// A scheduling policy. Drives one worker (the paper's per-GPU scheduler;
@@ -266,62 +401,72 @@ mod tests {
     }
 
     #[test]
-    fn drain_fifo_model_preserves_other_models_order() {
-        let mut q: VecDeque<Request> = VecDeque::new();
-        let mut counts = ModelPending::new();
+    fn fifo_queues_preserve_global_arrival_order() {
+        let mut q = FifoQueues::new();
         for i in 0..6 {
-            let r = req(i, (i % 2) as u32, 1_000_000);
-            counts.inc(r.model);
-            q.push_back(r);
+            q.push(req(i, (i % 2) as u32, 1_000_000));
         }
-        let batch = drain_fifo_model(&mut q, &mut counts, ModelId(0), 2);
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.front().unwrap().id.0, 0);
+        // Model-pure fill in arrival order, other lanes untouched.
+        let batch = q.drain_model(ModelId(0), 2);
         assert_eq!(batch.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 2]);
-        assert_eq!(counts.get(ModelId(0)), 1);
-        // Remaining queue keeps its relative order: 1, 3, 4, 5.
-        assert_eq!(
-            q.iter().map(|r| r.id.0).collect::<Vec<_>>(),
-            vec![1, 3, 4, 5]
-        );
+        assert_eq!(q.pending_for(ModelId(0)), 1);
+        assert_eq!(q.pending_for(ModelId(1)), 3);
+        // Global head is now the earliest remaining arrival (id 1).
+        assert_eq!(q.front().unwrap().id.0, 1);
+        // Popping the global head interleaves lanes back into one FIFO.
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_front()).map(|r| r.id.0).collect();
+        assert_eq!(order, vec![1, 3, 4, 5]);
+        assert!(q.is_empty());
     }
 
     #[test]
-    fn drain_edf_model_repushes_skipped_and_skips_stale() {
-        let mut heap: BinaryHeap<Reverse<(Micros, u64)>> = BinaryHeap::new();
-        let mut by_seq: HashMap<u64, Request> = HashMap::new();
-        let mut counts = ModelPending::new();
-        for i in 0..6u64 {
-            let r = req(i, (i % 2) as u32, 1_000 * (i + 1));
-            heap.push(Reverse((r.deadline, i)));
-            counts.inc(r.model);
-            by_seq.insert(i, r);
+    fn fifo_drain_caps_at_lane_length() {
+        let mut q = FifoQueues::new();
+        for i in 0..3 {
+            q.push(req(i, 0, 1_000));
         }
-        // A stale heap entry (id 9 has no by_seq record) is discarded.
-        heap.push(Reverse((1, 9)));
-        let batch = drain_edf_model(&mut heap, &mut by_seq, &mut counts, ModelId(1), 2);
-        // Model 1 in deadline order: ids 1, 3.
-        assert_eq!(batch.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![1, 3]);
-        assert_eq!(counts.get(ModelId(1)), 1);
-        // Skipped model-0 entries are back in the heap, still popping in
-        // deadline order.
-        let next = drain_edf_model(&mut heap, &mut by_seq, &mut counts, ModelId(0), 3);
-        assert_eq!(next.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 2, 4]);
+        let batch = q.drain_model(ModelId(0), 10);
+        assert_eq!(batch.len(), 3);
+        assert!(q.drain_model(ModelId(7), 4).is_empty());
+        assert_eq!(q.len(), 0);
     }
 
     #[test]
-    fn model_pending_counts() {
-        let mut p = ModelPending::new();
-        assert_eq!(p.get(ModelId(0)), 0);
-        p.inc(ModelId(0));
-        p.inc(ModelId(0));
-        p.inc(ModelId(1));
-        assert_eq!(p.get(ModelId(0)), 2);
-        assert_eq!(p.get(ModelId(1)), 1);
-        p.dec(ModelId(0));
-        assert_eq!(p.get(ModelId(0)), 1);
-        // Underflow saturates; unknown models decrement to nothing.
-        p.dec(ModelId(9));
-        p.dec(ModelId(1));
-        p.dec(ModelId(1));
-        assert_eq!(p.get(ModelId(1)), 0);
+    fn edf_queues_order_by_deadline_then_id() {
+        let mut q = EdfQueues::new();
+        for i in 0..6u64 {
+            q.push(req(i, (i % 2) as u32, 1_000 * (i + 1)));
+        }
+        // Same-deadline tie-break by id.
+        q.push(req(9, 1, 1_000));
+        assert_eq!(q.len(), 7);
+        // Global head: deadline 1000, smaller id wins.
+        assert_eq!(q.peek().unwrap().id.0, 0);
+        assert_eq!(q.min_deadline(), Some(req(0, 0, 1_000).deadline));
+        // Model-1 fill in deadline order: id 9 (d=1000) before 1 (d=2000).
+        let batch = q.drain_model(ModelId(1), 2);
+        assert_eq!(batch.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![9, 1]);
+        assert_eq!(q.pending_for(ModelId(1)), 2);
+        // Other lane untouched; global pops stay in deadline order.
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop_head()).map(|r| r.id.0).collect();
+        assert_eq!(rest, vec![0, 2, 3, 4, 5]);
+        assert!(q.is_empty());
+        assert_eq!(q.min_deadline(), None);
+    }
+
+    #[test]
+    fn edf_pending_counts_track_lanes() {
+        let mut q = EdfQueues::new();
+        assert_eq!(q.pending_for(ModelId(0)), 0);
+        q.push(req(0, 0, 5_000));
+        q.push(req(1, 0, 4_000));
+        q.push(req(2, 3, 1_000));
+        assert_eq!(q.pending_for(ModelId(0)), 2);
+        assert_eq!(q.pending_for(ModelId(3)), 1);
+        assert_eq!(q.peek().unwrap().id.0, 2, "model-3 deadline is earliest");
+        q.pop_head();
+        assert_eq!(q.pending_for(ModelId(3)), 0);
     }
 }

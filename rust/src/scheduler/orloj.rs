@@ -18,6 +18,18 @@
 //!    (earliest deadline, bs) descending, first with `|Q_bs| ≥ bs`
 //!    (lines 15–21);
 //! 5. pop the top-priority requests from the candidate queue (line 22).
+//!
+//! **Hot-path layout (§Perf, DESIGN.md §7).** Pending requests live in a
+//! *generational slab*: hull point ids, Fibonacci-heap payloads and
+//! milestone-heap payloads all carry the dense slab key, so none of the
+//! per-decision steps hash anything. Score schedules are instantiated from
+//! the estimator's shared per-`(model, app, bs)` [`ScoreTemplate`]s in
+//! O(1). Candidate selection reads a persistent index of per-queue minimum
+//! deadlines that is maintained eagerly at each queue mutation — the
+//! historical allocate-and-sort of every `(model, bs)` pair per
+//! `next_batch` is gone, and `wake_hint` answers from the same index in
+//! O(1). Steady-state `next_batch` performs no heap allocation in the
+//! scheduler-owned bookkeeping (see DESIGN.md §7 for the audit).
 
 use super::estimator::Estimator;
 use super::profiler::OnlineProfiler;
@@ -30,7 +42,7 @@ use crate::ds::fibheap::{FibHeap, Handle};
 use crate::ds::hull::point::Point;
 use crate::ds::hull::DynamicHull;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 /// Per-(request, batch-size) queue residency.
 struct BsEntry {
@@ -50,10 +62,157 @@ struct Entry {
     milestone: Option<Micros>,
 }
 
+/// Slab key: `(generation << 32) | slot`. The generation guards against
+/// slot reuse: a stale key (e.g. a milestone registered by a dispatched
+/// request whose slot now holds a newer one) simply fails to resolve.
+#[inline]
+fn slab_key(slot: u32, gen: u32) -> u64 {
+    ((gen as u64) << 32) | slot as u64
+}
+
+struct SlotCell {
+    gen: u32,
+    entry: Option<Entry>,
+}
+
+/// Generational slab of pending entries — the dense, hash-free store
+/// behind every per-decision lookup (hull point ids, fib-heap payloads and
+/// milestone payloads are all slab keys).
+#[derive(Default)]
+struct EntrySlab {
+    slots: Vec<SlotCell>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl EntrySlab {
+    /// The key the next [`EntrySlab::insert`] will return (so hull/fib
+    /// state can be tagged before the entry itself is stored).
+    fn next_key(&self) -> u64 {
+        match self.free.last() {
+            Some(&slot) => slab_key(slot, self.slots[slot as usize].gen),
+            None => slab_key(self.slots.len() as u32, 0),
+        }
+    }
+
+    fn insert(&mut self, entry: Entry) -> u64 {
+        self.live += 1;
+        match self.free.pop() {
+            Some(slot) => {
+                let cell = &mut self.slots[slot as usize];
+                debug_assert!(cell.entry.is_none(), "free list pointed at a live slot");
+                cell.entry = Some(entry);
+                slab_key(slot, cell.gen)
+            }
+            None => {
+                self.slots.push(SlotCell {
+                    gen: 0,
+                    entry: Some(entry),
+                });
+                slab_key((self.slots.len() - 1) as u32, 0)
+            }
+        }
+    }
+
+    fn get(&self, key: u64) -> Option<&Entry> {
+        let cell = self.slots.get((key & 0xffff_ffff) as usize)?;
+        if cell.gen != (key >> 32) as u32 {
+            return None;
+        }
+        cell.entry.as_ref()
+    }
+
+    fn get_mut(&mut self, key: u64) -> Option<&mut Entry> {
+        let cell = self.slots.get_mut((key & 0xffff_ffff) as usize)?;
+        if cell.gen != (key >> 32) as u32 {
+            return None;
+        }
+        cell.entry.as_mut()
+    }
+
+    /// Remove and return the entry; bumps the slot's generation so stale
+    /// keys can never alias the next resident.
+    fn remove(&mut self, key: u64) -> Option<Entry> {
+        let slot = (key & 0xffff_ffff) as usize;
+        let cell = self.slots.get_mut(slot)?;
+        if cell.gen != (key >> 32) as u32 {
+            return None;
+        }
+        let entry = cell.entry.take()?;
+        cell.gen = cell.gen.wrapping_add(1);
+        self.free.push(slot as u32);
+        self.live -= 1;
+        Some(entry)
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Key of the live entry in `slot`, if any (for full scans like the
+    /// Algorithm-1 base reset).
+    fn key_at(&self, slot: usize) -> Option<u64> {
+        let cell = &self.slots[slot];
+        cell.entry.as_ref().map(|_| slab_key(slot as u32, cell.gen))
+    }
+}
+
+/// One candidate-index entry: a queue's (min deadline, bs, group, queue).
+type QueueKey = (Micros, usize, usize, usize);
+
+/// Persistent Algorithm-1 line-16 candidate order: every non-empty queue's
+/// `(D_Qbs, bs, gi, qi)`, iterated in descending tuple order (the `(gi,
+/// qi)` tail keeps exact ties deterministic). Maintained eagerly whenever
+/// a queue's earliest deadline changes, so steady-state candidate
+/// selection does no sorting and no allocation — O(changed queues) per
+/// mutation, O(1) for `wake_hint`'s earliest-deadline query.
+#[derive(Default)]
+struct CandidateIndex {
+    /// Sorted ascending by `Reverse(key)`, i.e. in-order iteration yields
+    /// descending `(deadline, bs, gi, qi)`.
+    entries: Vec<Reverse<QueueKey>>,
+}
+
+impl CandidateIndex {
+    fn insert(&mut self, key: QueueKey) {
+        match self.entries.binary_search(&Reverse(key)) {
+            Err(pos) => self.entries.insert(pos, Reverse(key)),
+            Ok(_) => debug_assert!(false, "duplicate candidate-index entry {key:?}"),
+        }
+    }
+
+    fn remove(&mut self, key: QueueKey) {
+        match self.entries.binary_search(&Reverse(key)) {
+            Ok(pos) => {
+                self.entries.remove(pos);
+            }
+            Err(_) => debug_assert!(false, "missing candidate-index entry {key:?}"),
+        }
+    }
+
+    /// Descending (deadline, bs, gi, qi) — the line-16 scan order.
+    fn iter(&self) -> impl Iterator<Item = QueueKey> + '_ {
+        self.entries.iter().map(|r| r.0)
+    }
+
+    /// Earliest deadline across all non-empty queues (the index is sorted
+    /// descending, so it is the last entry). O(1).
+    fn earliest_deadline(&self) -> Option<Micros> {
+        self.entries.last().map(|r| r.0 .0)
+    }
+}
+
 struct BsQueue {
     bs: usize,
     hull: DynamicHull,
-    deadlines: FibHeap<u64>, // key: deadline µs, value: request id
+    deadlines: FibHeap<u64>, // key: deadline µs, value: slab key
+    /// This queue's entry in the candidate index (its cached min deadline;
+    /// None = not indexed because empty).
+    index_key: Option<Micros>,
 }
 
 /// The per-model partition of the Algorithm-1 queue set.
@@ -71,7 +230,8 @@ pub struct OrlojScheduler {
     /// Sorted copy of `cfg.batch_sizes` used to build new groups.
     batch_sizes: Vec<usize>,
     groups: Vec<ModelGroup>,
-    entries: HashMap<u64, Entry>,
+    entries: EntrySlab,
+    index: CandidateIndex,
     milestones: BinaryHeap<Reverse<(Micros, u64)>>,
     dropped: Vec<(Request, Outcome)>,
     profiler: OnlineProfiler,
@@ -80,6 +240,9 @@ pub struct OrlojScheduler {
     /// Uniform SLO-miss penalty `c` (Fig. 5); relative scores are
     /// insensitive to its absolute value.
     cost_c: f64,
+    /// Recycled `per_bs` vectors so the steady-state arrival→dispatch
+    /// cycle reuses its own buffers instead of allocating.
+    per_bs_pool: Vec<Vec<Option<BsEntry>>>,
 }
 
 impl OrlojScheduler {
@@ -93,19 +256,22 @@ impl OrlojScheduler {
             cfg.score_bins,
             cfg.feasibility_quantile,
         );
+        estimator.set_priority_b(cfg.b);
         estimator.set_model_costs(&cfg.model_costs);
         OrlojScheduler {
             ctx: ScoreContext::new(cfg.b),
             cfg,
             batch_sizes,
             groups: Vec::new(),
-            entries: HashMap::new(),
+            entries: EntrySlab::default(),
+            index: CandidateIndex::default(),
             milestones: BinaryHeap::new(),
             dropped: Vec::new(),
             profiler,
             estimator,
             last_refresh: 0,
             cost_c: 1.0,
+            per_bs_pool: Vec::new(),
         }
     }
 
@@ -140,6 +306,7 @@ impl OrlojScheduler {
                 bs,
                 hull: DynamicHull::new(),
                 deadlines: FibHeap::new(),
+                index_key: None,
             })
             .collect();
         self.groups.push(ModelGroup {
@@ -150,8 +317,68 @@ impl OrlojScheduler {
         self.groups.len() - 1
     }
 
+    /// Re-sync one queue's candidate-index entry after its fib heap
+    /// mutated. O(1) when the min deadline is unchanged (the common case —
+    /// e.g. an arrival behind the current head).
+    fn sync_queue_index(&mut self, gi: usize, qi: usize) {
+        let (bs, old, new) = {
+            let q = &mut self.groups[gi].queues[qi];
+            let new = q.deadlines.min_key();
+            if q.index_key == new {
+                return;
+            }
+            let old = q.index_key;
+            q.index_key = new;
+            (q.bs, old, new)
+        };
+        if let Some(d) = old {
+            self.index.remove((d, bs, gi, qi));
+        }
+        if let Some(d) = new {
+            self.index.insert((d, bs, gi, qi));
+        }
+    }
+
+    /// Full cross-check of the candidate index against the queue state —
+    /// compiled into every debug/test build so any behavior drift of the
+    /// incremental maintenance trips immediately. Allocation-free so the
+    /// steady-state allocation audit holds in debug builds too.
+    #[cfg(debug_assertions)]
+    fn debug_assert_index(&self) {
+        debug_assert!(
+            self.index.entries.windows(2).all(|w| w[0] < w[1]),
+            "candidate index unsorted or duplicated"
+        );
+        let mut nonempty = 0usize;
+        for (gi, g) in self.groups.iter().enumerate() {
+            for (qi, q) in g.queues.iter().enumerate() {
+                debug_assert_eq!(
+                    q.index_key,
+                    q.deadlines.min_key(),
+                    "stale cached min deadline at ({gi},{qi})"
+                );
+                if let Some(d) = q.index_key {
+                    nonempty += 1;
+                    debug_assert!(
+                        self.index
+                            .entries
+                            .binary_search(&Reverse((d, q.bs, gi, qi)))
+                            .is_ok(),
+                        "queue ({gi},{qi}) missing from candidate index"
+                    );
+                }
+            }
+        }
+        debug_assert_eq!(
+            nonempty,
+            self.index.entries.len(),
+            "candidate index holds entries for empty queues"
+        );
+    }
+
     /// Build the per-bs score state for a request at time `now`; returns
-    /// None if the batch size is infeasible already.
+    /// None if the batch size is infeasible already. `key` is the slab key
+    /// the entry will be stored under (hull point id + fib payload).
     fn build_bs_entry(
         ctx: &ScoreContext,
         estimator: &mut Estimator,
@@ -159,27 +386,30 @@ impl OrlojScheduler {
         req: &Request,
         now: Micros,
         cost_c: f64,
+        key: u64,
     ) -> Option<BsEntry> {
         let bl = estimator.batch_latency(req.model, req.app, queue.bs);
         let feasible = us_to_ms(now) + bl.feasibility_ms <= us_to_ms(req.deadline);
         if !feasible {
             return None;
         }
-        let sched = ScoreSchedule::build(ctx, req.deadline, cost_c, &bl.score_dist);
+        // O(1) instantiation of the shared template — no per-bin math.
+        let sched = ScoreSchedule::instantiate(&bl.template, ctx, req.deadline, cost_c);
         let coeffs = sched.coeffs_at(ctx.rel_ms(now));
-        let point = Point::new(coeffs.alpha, coeffs.beta, req.id.0);
+        let point = Point::new(coeffs.alpha, coeffs.beta, key);
         queue.hull.insert(point);
-        let fib = queue.deadlines.insert(req.deadline, req.id.0);
+        let fib = queue.deadlines.insert(req.deadline, key);
         Some(BsEntry { sched, point, fib })
     }
 
     /// Register the next milestone for an entry.
-    fn schedule_milestone(&mut self, id: u64, now: Micros) {
-        let entry = match self.entries.get_mut(&id) {
+    fn schedule_milestone(&mut self, key: u64, now: Micros) {
+        let base = self.ctx.base;
+        let entry = match self.entries.get_mut(key) {
             Some(e) => e,
             None => return,
         };
-        let rel_now = us_to_ms(now.saturating_sub(self.ctx.base));
+        let rel_now = us_to_ms(now.saturating_sub(base));
         let next = entry
             .per_bs
             .iter()
@@ -187,14 +417,10 @@ impl OrlojScheduler {
             .filter_map(|bse| bse.sched.next_milestone(rel_now))
             .fold(f64::INFINITY, f64::min);
         if next.is_finite() {
-            let at = if next <= 0.0 {
-                self.ctx.base
-            } else {
-                self.ctx.base + ms_to_us(next)
-            };
+            let at = if next <= 0.0 { base } else { base + ms_to_us(next) };
             let at = at.max(now + 1);
             entry.milestone = Some(at);
-            self.milestones.push(Reverse((at, id)));
+            self.milestones.push(Reverse((at, key)));
         } else {
             entry.milestone = None;
         }
@@ -202,34 +428,36 @@ impl OrlojScheduler {
 
     /// Lines 5–9: refresh hull points for requests whose milestone passed.
     fn process_milestones(&mut self, now: Micros) {
-        while let Some(&Reverse((at, id))) = self.milestones.peek() {
+        while let Some(&Reverse((at, key))) = self.milestones.peek() {
             if at > now {
                 break;
             }
             self.milestones.pop();
+            // Stale keys (dispatched/dropped entries, or a slot reused by a
+            // newer request) fail the generation check and are skipped.
             let valid = self
                 .entries
-                .get(&id)
+                .get(key)
                 .map(|e| e.milestone == Some(at))
                 .unwrap_or(false);
             if !valid {
                 continue;
             }
-            self.refresh_entry_points(id, now);
-            self.schedule_milestone(id, now);
+            self.refresh_entry_points(key, now);
+            self.schedule_milestone(key, now);
         }
     }
 
     /// Delete + re-insert the hull points of one request at the current
     /// coefficients.
-    fn refresh_entry_points(&mut self, id: u64, now: Micros) {
-        let rel_now = self.rel_ms(now);
-        if let Some(entry) = self.entries.get_mut(&id) {
+    fn refresh_entry_points(&mut self, key: u64, now: Micros) {
+        let rel_now = self.ctx.rel_ms(now);
+        if let Some(entry) = self.entries.get_mut(key) {
             let gi = entry.group;
             for (qi, slot) in entry.per_bs.iter_mut().enumerate() {
                 if let Some(bse) = slot {
                     let coeffs = bse.sched.coeffs_at(rel_now);
-                    let new_point = Point::new(coeffs.alpha, coeffs.beta, id);
+                    let new_point = Point::new(coeffs.alpha, coeffs.beta, key);
                     if new_point.x != bse.point.x || new_point.y != bse.point.y {
                         self.groups[gi].queues[qi].hull.delete(&bse.point);
                         self.groups[gi].queues[qi].hull.insert(new_point);
@@ -240,53 +468,58 @@ impl OrlojScheduler {
         }
     }
 
-    /// Lines 2–4: base-time reset — rebuild every schedule and hull point
-    /// against the new base.
+    /// Lines 2–4: base-time reset — re-instantiate every schedule (O(1)
+    /// each, from the shared templates) and refresh every hull point
+    /// against the new base. Deadlines don't change, so the candidate
+    /// index is untouched.
     fn reset_base(&mut self, now: Micros) {
         self.ctx.reset(now);
-        let ids: Vec<u64> = self.entries.keys().copied().collect();
         let rel_now = self.rel_ms(now);
-        for id in ids {
-            let entry = self.entries.get_mut(&id).unwrap();
+        for slot in 0..self.entries.num_slots() {
+            let Some(key) = self.entries.key_at(slot) else {
+                continue;
+            };
+            let entry = self.entries.get_mut(key).unwrap();
             let (deadline, app, model) = (entry.req.deadline, entry.req.app, entry.req.model);
             let gi = entry.group;
-            for (qi, slot) in entry.per_bs.iter_mut().enumerate() {
-                if let Some(bse) = slot {
+            for (qi, bs_slot) in entry.per_bs.iter_mut().enumerate() {
+                if let Some(bse) = bs_slot {
                     let bs = self.groups[gi].queues[qi].bs;
                     let bl = self.estimator.batch_latency(model, app, bs);
-                    let sched =
-                        ScoreSchedule::build(&self.ctx, deadline, self.cost_c, &bl.score_dist);
+                    let sched = ScoreSchedule::instantiate(&bl.template, &self.ctx, deadline, self.cost_c);
                     let coeffs = sched.coeffs_at(rel_now);
-                    let new_point = Point::new(coeffs.alpha, coeffs.beta, id);
+                    let new_point = Point::new(coeffs.alpha, coeffs.beta, key);
                     self.groups[gi].queues[qi].hull.delete(&bse.point);
                     self.groups[gi].queues[qi].hull.insert(new_point);
                     bse.sched = sched;
                     bse.point = new_point;
                 }
             }
-            self.schedule_milestone(id, now);
+            self.schedule_milestone(key, now);
         }
     }
 
     /// Remove from every queue (request is being dispatched or dropped).
-    fn remove_everywhere(&mut self, id: u64) -> Option<Request> {
-        let (gi, slots) = {
-            let entry = self.entries.get_mut(&id)?;
-            let slots: Vec<usize> = entry
-                .per_bs
-                .iter()
-                .enumerate()
-                .filter_map(|(qi, s)| s.as_ref().map(|_| qi))
-                .collect();
-            (entry.group, slots)
-        };
-        for qi in slots {
-            let bse = self.entries.get_mut(&id).unwrap().per_bs[qi].take().unwrap();
-            self.groups[gi].queues[qi].hull.delete(&bse.point);
-            self.groups[gi].queues[qi].deadlines.delete(bse.fib);
+    /// Owns the entry up front, so no per-pop slot collection is needed.
+    fn remove_everywhere(&mut self, key: u64) -> Option<Request> {
+        let entry = self.entries.remove(key)?;
+        let Entry {
+            req,
+            group: gi,
+            mut per_bs,
+            ..
+        } = entry;
+        for (qi, slot) in per_bs.iter_mut().enumerate() {
+            if let Some(bse) = slot.take() {
+                self.groups[gi].queues[qi].hull.delete(&bse.point);
+                self.groups[gi].queues[qi].deadlines.delete(bse.fib);
+                self.sync_queue_index(gi, qi);
+            }
         }
+        per_bs.clear();
+        self.per_bs_pool.push(per_bs);
         self.groups[gi].members = self.groups[gi].members.saturating_sub(1);
-        self.entries.remove(&id).map(|e| e.req)
+        Some(req)
     }
 
     /// Lines 10–14: drop infeasible requests from each queue.
@@ -298,16 +531,18 @@ impl OrlojScheduler {
         for gi in 0..self.groups.len() {
             let model = self.groups[gi].model;
             for qi in 0..self.groups[gi].queues.len() {
+                let mut changed = false;
                 loop {
-                    let (deadline, id) = match self.groups[gi].queues[qi].deadlines.min() {
-                        Some((d, &id)) => (d, id),
+                    let (deadline, key) = match self.groups[gi].queues[qi].deadlines.min() {
+                        Some((d, &k)) => (d, k),
                         None => break,
                     };
-                    let app = match self.entries.get(&id) {
+                    let app = match self.entries.get(key) {
                         Some(e) => e.req.app,
                         None => {
                             // Stale fib entry should not exist; defensive pop.
                             self.groups[gi].queues[qi].deadlines.pop_min();
+                            changed = true;
                             continue;
                         }
                     };
@@ -318,41 +553,38 @@ impl OrlojScheduler {
                     }
                     // Pop from this queue's fib heap and hull.
                     self.groups[gi].queues[qi].deadlines.pop_min();
+                    changed = true;
                     let last = {
-                        let entry = self.entries.get_mut(&id).unwrap();
+                        let entry = self.entries.get_mut(key).unwrap();
                         let bse = entry.per_bs[qi].take().expect("fib/slot desync");
                         self.groups[gi].queues[qi].hull.delete(&bse.point);
                         entry.per_bs.iter().all(|s| s.is_none())
                     };
                     if last {
                         // Line 13–14: timed out.
-                        if let Some(e) = self.entries.remove(&id) {
+                        if let Some(e) = self.entries.remove(key) {
                             self.groups[gi].members = self.groups[gi].members.saturating_sub(1);
+                            let mut per_bs = e.per_bs;
+                            per_bs.clear();
+                            self.per_bs_pool.push(per_bs);
                             self.dropped.push((e.req, Outcome::TimedOut));
                         }
                     }
+                }
+                if changed {
+                    self.sync_queue_index(gi, qi);
                 }
             }
         }
     }
 
     /// Lines 15–21: candidate queue selection, across every (model, bs)
-    /// pair.
+    /// pair — a plain scan of the persistent index, no sort, no
+    /// allocation.
     fn candidate(&self) -> Option<(usize, usize)> {
-        let mut order: Vec<(Micros, usize, usize, usize)> = self
-            .groups
-            .iter()
-            .enumerate()
-            .flat_map(|(gi, g)| {
-                g.queues.iter().enumerate().filter_map(move |(qi, q)| {
-                    q.deadlines.min_key().map(|d| (d, q.bs, gi, qi))
-                })
-            })
-            .collect();
-        // Ordered by (D_Qbs, bs) descending (Algorithm 1 line 16); the
-        // (gi, qi) tail keeps exact ties deterministic.
-        order.sort_by(|a, b| b.cmp(a));
-        for (_, bs, gi, qi) in order {
+        #[cfg(debug_assertions)]
+        self.debug_assert_index();
+        for (_, bs, gi, qi) in self.index.iter() {
             if self.groups[gi].queues[qi].hull.len() >= bs {
                 return Some((gi, qi));
             }
@@ -409,9 +641,10 @@ impl Scheduler for OrlojScheduler {
             self.dropped.push((req, Outcome::TimedOut));
             return;
         }
-        let id = req.id.0;
         let gi = self.group_for(req.model);
-        let mut per_bs: Vec<Option<BsEntry>> = Vec::with_capacity(self.batch_sizes.len());
+        let key = self.entries.next_key();
+        let mut per_bs = self.per_bs_pool.pop().unwrap_or_default();
+        debug_assert!(per_bs.is_empty());
         for queue in self.groups[gi].queues.iter_mut() {
             per_bs.push(Self::build_bs_entry(
                 &self.ctx,
@@ -420,24 +653,28 @@ impl Scheduler for OrlojScheduler {
                 &req,
                 now,
                 self.cost_c,
+                key,
             ));
         }
         if per_bs.iter().all(|s| s.is_none()) {
             // No feasible batch size at all.
+            per_bs.clear();
+            self.per_bs_pool.push(per_bs);
             self.dropped.push((req, Outcome::TimedOut));
             return;
         }
         self.groups[gi].members += 1;
-        self.entries.insert(
-            id,
-            Entry {
-                req,
-                group: gi,
-                per_bs,
-                milestone: None,
-            },
-        );
-        self.schedule_milestone(id, now);
+        let _stored = self.entries.insert(Entry {
+            req,
+            group: gi,
+            per_bs,
+            milestone: None,
+        });
+        debug_assert_eq!(_stored, key, "slab key reservation desync");
+        for qi in 0..self.groups[gi].queues.len() {
+            self.sync_queue_index(gi, qi);
+        }
+        self.schedule_milestone(key, now);
     }
 
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
@@ -472,14 +709,10 @@ impl Scheduler for OrlojScheduler {
     fn wake_hint(&self, _now: Micros) -> Option<Micros> {
         // Wake at the next milestone or the earliest deadline (whichever is
         // sooner) so prune/milestone work happens on time even when no
-        // arrivals/completions occur.
+        // arrivals/completions occur. Both reads are O(1): the milestone
+        // heap's peek and the candidate index's tail.
         let mile = self.milestones.peek().map(|Reverse((t, _))| *t);
-        let dl = self
-            .groups
-            .iter()
-            .flat_map(|g| g.queues.iter())
-            .filter_map(|q| q.deadlines.min_key())
-            .min();
+        let dl = self.index.earliest_deadline();
         match (mile, dl) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -687,6 +920,73 @@ mod tests {
         s.on_arrival(req(1, 0, 100.0), 0);
         let hint = s.wake_hint(0).expect("hint");
         assert!(hint <= ms_to_us(100.0));
+    }
+
+    #[test]
+    fn wake_hint_matches_full_scan() {
+        // Satellite: wake_hint serves from the O(1) cached index; it must
+        // equal the historical full scan over every queue's fib-heap min.
+        let mut s = seeded_sched();
+        for i in 0..12 {
+            s.on_arrival(req(i, 0, 80.0 + 37.0 * i as f64), ms_to_us(i as f64));
+        }
+        let _ = s.next_batch(ms_to_us(15.0));
+        let scan_dl = s
+            .groups
+            .iter()
+            .flat_map(|g| g.queues.iter())
+            .filter_map(|q| q.deadlines.min_key())
+            .min();
+        let mile = s.milestones.peek().map(|Reverse((t, _))| *t);
+        let expect = match (mile, scan_dl) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        assert_eq!(s.wake_hint(ms_to_us(15.0)), expect);
+    }
+
+    #[test]
+    fn slab_slots_recycle_under_churn() {
+        // Long arrival→dispatch→drop churn: slot reuse with generation
+        // bumps must keep every invariant (the candidate-index cross-check
+        // in candidate() runs on every iteration in debug builds), and the
+        // slab must not grow past the high-water mark of pending entries.
+        let mut s = seeded_sched();
+        let mut t = 0u64;
+        let mut served = 0usize;
+        let mut dropped = 0usize;
+        let mut next_id = 0u64;
+        for round in 0..200 {
+            for _ in 0..3 {
+                // Mix of roomy and hopelessly tight SLOs → both dispatch
+                // and prune paths recycle slots.
+                let slo = if next_id % 5 == 4 { 12.0 } else { 400.0 };
+                s.on_arrival(req(next_id, t, slo), t);
+                next_id += 1;
+            }
+            t += ms_to_us(7.0);
+            if let Some(b) = s.next_batch(t) {
+                served += b.len();
+                s.on_batch_complete(&b, 10.0, t);
+            }
+            dropped += s.drain_dropped().len();
+            if round == 100 {
+                assert!(s.entries.num_slots() <= 64, "slab should stay compact");
+            }
+        }
+        // Drain the tail.
+        let mut guard = 0;
+        while s.pending() > 0 && guard < 10_000 {
+            t += ms_to_us(5.0);
+            if let Some(b) = s.next_batch(t) {
+                served += b.len();
+                s.on_batch_complete(&b, 10.0, t);
+            }
+            dropped += s.drain_dropped().len();
+            guard += 1;
+        }
+        assert_eq!(served + dropped, next_id as usize, "conservation under churn");
+        assert_eq!(s.pending(), 0);
     }
 
     #[test]

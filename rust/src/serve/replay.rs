@@ -6,21 +6,48 @@
 //! Batch executions cost zero wall time: worker `w`'s simulated latency
 //! schedules a `BatchDone` at `now + latency`, exactly as the historical
 //! single-worker `sim::engine` did — but for N replicas at once.
+//!
+//! **Hot loop (§Perf).** The pump is driven by a single min-heap of
+//! pending `(finish time, worker)` completions plus a draining iterator
+//! over the release-sorted trace: each iteration touches only the events
+//! that are actually due, instead of re-scanning every worker slot and
+//! re-deriving the next event time from all N of them. Requests are moved
+//! out of the trace by value — the historical per-arrival `Request` clone
+//! is gone.
 
-use super::{Event, ServingLoop};
+use super::{Dispatch, Event, ServingLoop};
 use crate::clock::{ms_to_us, Micros, VirtualClock};
 use crate::core::request::Request;
 use crate::scheduler::Scheduler;
 use crate::sim::engine::EngineResult;
 use crate::sim::worker::Worker;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Run the trace to completion on a cluster; `workers[i]` executes the
 /// batches of replica `i`.
 pub fn run_cluster<S: Scheduler, W: Worker>(
+    core: ServingLoop<VirtualClock, S>,
+    workers: Vec<W>,
+    requests: Vec<Request>,
+) -> EngineResult {
+    run_cluster_traced(core, workers, requests, |_, _| {})
+}
+
+/// [`run_cluster`] with a dispatch observer: `on_dispatch(now, d)` fires
+/// for every dispatch decision in virtual-time order (the golden
+/// dispatch-sequence regression tests record these).
+pub fn run_cluster_traced<S, W, F>(
     mut core: ServingLoop<VirtualClock, S>,
     mut workers: Vec<W>,
     mut requests: Vec<Request>,
-) -> EngineResult {
+    mut on_dispatch: F,
+) -> EngineResult
+where
+    S: Scheduler,
+    W: Worker,
+    F: FnMut(Micros, &Dispatch),
+{
     assert_eq!(
         workers.len(),
         core.workers(),
@@ -29,60 +56,50 @@ pub fn run_cluster<S: Scheduler, W: Worker>(
     requests.sort_by_key(|r| r.release);
     let clock = core.clock().clone();
     let n = workers.len();
-    // Per-replica pending completion: (virtual finish time, batch ms).
-    let mut done_at: Vec<Option<(Micros, f64)>> = vec![None; n];
-    let mut next_arrival = 0usize;
+    // The event heap holds one (finish time, worker) entry per in-flight
+    // batch; same-time completions pop in worker order, matching the
+    // historical per-worker scan. The measured batch time rides in a side
+    // slot (f64 is not Ord).
+    let mut done: BinaryHeap<Reverse<(Micros, usize)>> = BinaryHeap::with_capacity(n);
+    let mut done_ms = vec![0.0f64; n];
+    let mut arrivals = requests.into_iter().peekable();
 
     loop {
         let now = clock.now();
-        // Deliver all arrivals due now.
-        while next_arrival < requests.len() && requests[next_arrival].release <= now {
-            core.on_event(Event::Arrival(requests[next_arrival].clone()));
-            next_arrival += 1;
+        // Deliver all arrivals due now, draining the trace in place.
+        while arrivals.peek().is_some_and(|r| r.release <= now) {
+            core.on_event(Event::Arrival(arrivals.next().unwrap()));
         }
         // Complete every in-flight batch that is due.
-        for (w, slot) in done_at.iter_mut().enumerate() {
-            if let Some((t, ms)) = *slot {
-                if t <= now {
-                    *slot = None;
-                    core.on_event(Event::BatchDone {
-                        worker: w,
-                        batch_ms: ms,
-                    });
-                }
+        while let Some(&Reverse((t, w))) = done.peek() {
+            if t > now {
+                break;
             }
+            done.pop();
+            core.on_event(Event::BatchDone {
+                worker: w,
+                batch_ms: done_ms[w],
+            });
         }
         // Drain drops and dispatch to every idle replica.
         for d in core.on_event(Event::Wake) {
             let ms = workers[d.worker].execute(&d.batch);
-            done_at[d.worker] = Some((now + ms_to_us(ms), ms));
+            on_dispatch(now, &d);
+            done_ms[d.worker] = ms;
+            done.push(Reverse((now + ms_to_us(ms), d.worker)));
         }
         // Everything delivered and drained → done.
-        if next_arrival >= requests.len()
-            && done_at.iter().all(|d| d.is_none())
-            && core.pending() == 0
-        {
+        if arrivals.peek().is_none() && done.is_empty() && core.pending() == 0 {
             core.drain_all();
             break;
         }
         // Advance to the next event: arrival, completion, or wake.
-        let mut next: Option<Micros> = None;
-        let mut consider = |t: Micros| {
-            next = Some(match next {
-                Some(n) => n.min(t),
-                None => t,
-            });
-        };
-        if next_arrival < requests.len() {
-            consider(requests[next_arrival].release);
-        }
-        for slot in &done_at {
-            if let Some((t, _)) = *slot {
-                consider(t);
-            }
+        let mut next: Option<Micros> = arrivals.peek().map(|r| r.release);
+        if let Some(&Reverse((t, _))) = done.peek() {
+            next = Some(next.map_or(t, |v| v.min(t)));
         }
         if let Some(h) = core.next_wake(now) {
-            consider(h);
+            next = Some(next.map_or(h, |v| v.min(h)));
         }
         match next {
             Some(t) if t > now => clock.advance_to(t),
@@ -169,6 +186,33 @@ mod tests {
             res.busy_us,
             res.per_worker.iter().map(|w| w.busy_us).sum::<u64>()
         );
+    }
+
+    #[test]
+    fn traced_pump_sees_every_dispatch_in_time_order() {
+        let core = ServingLoop::new(
+            VirtualClock::new(),
+            cluster(2),
+            router::by_name("round_robin").unwrap(),
+        );
+        let mut times: Vec<Micros> = Vec::new();
+        let mut dispatched = 0usize;
+        let mut batches = 0usize;
+        let res = run_cluster_traced(core, workers(2), requests(40, 4.0, 1_000.0), |t, d| {
+            times.push(t);
+            dispatched += d.batch.len();
+            batches += 1;
+            assert!(d.worker < 2);
+            assert!(!d.batch.is_empty());
+        });
+        assert_eq!(batches, res.batches, "observer sees every dispatch");
+        let executed = res
+            .completions
+            .iter()
+            .filter(|c| c.outcome == Outcome::Finished || c.outcome == Outcome::Late)
+            .count();
+        assert_eq!(dispatched, executed, "every executed request was observed");
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "virtual-time order");
     }
 
     #[test]

@@ -2,9 +2,82 @@
 //!
 //! Warmup + timed iterations, reporting mean/p50/p99 per iteration in
 //! nanoseconds. Used by the `cargo bench` targets (`harness = false`).
+//!
+//! Bench targets additionally emit machine-readable reports
+//! (`BENCH_serve.json`, `BENCH_sched.json`) via [`json_report`] so the
+//! repo's perf trajectory has durable data points; `ORLOJ_BENCH_QUICK=1`
+//! shrinks every target to a CI-sized smoke run (same code paths, fewer
+//! iterations), and `ORLOJ_BENCH_OUT` overrides the output directory
+//! (default: the cargo manifest dir, falling back to the cwd).
 
+use super::json::Json;
 use super::stats::Summary;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+/// True when `ORLOJ_BENCH_QUICK` is set to a non-empty, non-"0" value —
+/// the CI smoke mode: every bench runs the same code with shrunk
+/// iteration counts / trace durations.
+pub fn quick_mode() -> bool {
+    std::env::var("ORLOJ_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// Pick a parameter by bench mode.
+pub fn quick_or<T>(quick: T, full: T) -> T {
+    if quick_mode() {
+        quick
+    } else {
+        full
+    }
+}
+
+/// Where bench JSON artifacts go: `$ORLOJ_BENCH_OUT`, else the cargo
+/// manifest dir (cargo sets it for bench processes), else the cwd.
+pub fn bench_out_path(file: &str) -> PathBuf {
+    let dir = std::env::var("ORLOJ_BENCH_OUT")
+        .or_else(|_| std::env::var("CARGO_MANIFEST_DIR"))
+        .unwrap_or_else(|_| ".".to_string());
+    Path::new(&dir).join(file)
+}
+
+/// Assemble a bench report document (pure; [`json_report`] writes it).
+pub fn report_json(bench: &str, cases: Vec<Json>) -> Json {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("schema", Json::num(1.0)),
+        ("quick", Json::Bool(quick_mode())),
+        ("unix_time_s", Json::num(unix_s)),
+        ("cases", Json::Arr(cases)),
+    ])
+}
+
+/// Write a machine-readable bench report and return its path. Every case
+/// is one measured configuration; by convention rows carry the knobs
+/// (`system`, `workers`, `router`, …) and the measurements (`events_per_s`,
+/// `req_per_s`, per-iter `ns_*` percentiles).
+pub fn json_report(file: &str, bench: &str, cases: Vec<Json>) -> std::io::Result<PathBuf> {
+    let path = bench_out_path(file);
+    std::fs::write(&path, report_json(bench, cases).to_pretty())?;
+    Ok(path)
+}
+
+/// JSON row for a per-iteration [`Summary`] (nanoseconds).
+pub fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("ns_mean", Json::num(s.mean)),
+        ("ns_p50", Json::num(s.p50)),
+        ("ns_p90", Json::num(s.p90)),
+        ("ns_p99", Json::num(s.p99)),
+        ("ns_max", Json::num(s.max)),
+    ])
+}
 
 /// Time `iters` runs of `f` after `warmup` runs; returns per-iteration
 /// nanoseconds. `f` gets the iteration index and should return something
@@ -66,5 +139,32 @@ mod tests {
     fn summary_has_iters() {
         let s = time_per_iter(1, 50, |i| i + 1);
         assert_eq!(s.count, 50);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let case = Json::obj(vec![
+            ("system", Json::str("orloj")),
+            ("workers", Json::num(4.0)),
+            ("events_per_s", Json::num(123456.0)),
+        ]);
+        let doc = report_json("serve_loop", vec![case]);
+        let parsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("serve_loop"));
+        assert_eq!(parsed.get("schema").as_u64(), Some(1));
+        assert_eq!(
+            parsed.get("cases").at(0).get("system").as_str(),
+            Some("orloj")
+        );
+        assert_eq!(parsed.get("cases").at(0).get("workers").as_u64(), Some(4));
+    }
+
+    #[test]
+    fn summary_json_carries_percentiles() {
+        let s = time_per_iter(1, 40, |i| i * i);
+        let j = summary_json(&s);
+        assert_eq!(j.get("count").as_u64(), Some(40));
+        assert!(j.get("ns_p50").as_f64().unwrap() >= 0.0);
+        assert!(j.get("ns_p99").as_f64().unwrap() >= j.get("ns_p50").as_f64().unwrap());
     }
 }

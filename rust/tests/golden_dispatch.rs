@@ -1,0 +1,152 @@
+//! Golden dispatch-sequence regression test (§Perf acceptance): the
+//! hot-path optimizations (score templates, slab entries, incremental
+//! candidate index, per-model sub-queues, event-heap pump) change *cost*,
+//! not *decisions*. Each of the five systems replays a fixed seeded trace
+//! and its exact (dispatch time, worker, request ids) sequence is compared
+//! bit-for-bit against a recorded snapshot.
+//!
+//! Snapshot protocol: on the first run (or with `ORLOJ_GOLDEN_RECORD=1`)
+//! the sequences are recorded to `tests/golden/dispatch_sequences.json`
+//! and the test passes; subsequent runs assert equality. After an
+//! *intentional* policy change, re-record and commit the new snapshot.
+//! Independently of the snapshot, every configuration is run twice and the
+//! two runs must agree exactly — scheduling is deterministic by
+//! construction (no HashMap iteration, no wall-clock, seeded RNGs).
+
+use orloj::baselines::ALL_SYSTEMS;
+use orloj::clock::{ms_to_us, Micros, VirtualClock};
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::histogram::Histogram;
+use orloj::core::request::{AppId, ModelId, Request};
+use orloj::scheduler::SchedulerConfig;
+use orloj::serve::{replay, router, Cluster, ServingLoop};
+use orloj::sim::worker::SimWorker;
+use orloj::util::json::Json;
+use orloj::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// A fixed two-model, two-app trace: bursty arrivals, mixed SLO tightness,
+/// exercising dispatch, milestone refresh, pruning and admission control.
+fn fixed_trace() -> Vec<Request> {
+    let mut rng = Rng::new(0xD15C);
+    let mut reqs = Vec::new();
+    let mut t: Micros = 0;
+    for i in 0..400u64 {
+        t += ms_to_us(rng.exponential(1.0 / 4.0)); // ~4 ms mean gap
+        let model = ModelId((rng.index(2)) as u32);
+        let app = AppId(rng.index(2) as u32);
+        let exec = 4.0 + rng.f64() * 22.0;
+        let slo_ms = if rng.chance(0.2) {
+            25.0 + rng.f64() * 30.0 // tight: prune/admission paths
+        } else {
+            120.0 + rng.f64() * 500.0 // roomy: batching paths
+        };
+        reqs.push(
+            Request::new(i, app, t, ms_to_us(slo_ms), exec).with_model(model),
+        );
+    }
+    reqs
+}
+
+fn seed_hists() -> Vec<(ModelId, AppId, Histogram)> {
+    let fast = Histogram::from_weights(4.0, 2.0, &[2.0, 3.0, 2.0, 1.0]);
+    let slow = Histogram::from_weights(8.0, 3.0, &[1.0, 2.0, 2.0, 1.0, 1.0]);
+    vec![
+        (ModelId(0), AppId(0), fast.clone()),
+        (ModelId(0), AppId(1), slow.clone()),
+        (ModelId(1), AppId(0), fast),
+        (ModelId(1), AppId(1), slow),
+    ]
+}
+
+/// The (time, worker, ids...) dispatch sequence of one system/worker-count
+/// configuration, as a JSON array of `[t_us, worker, [ids...]]` rows.
+fn dispatch_sequence(system: &str, workers: usize) -> Json {
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::new(0.5, 0.5),
+        ..Default::default()
+    };
+    let mut cluster = Cluster::build(system, &cfg, 7, workers).expect("known system");
+    for (model, app, hist) in seed_hists() {
+        cluster.seed_app_profile(model, app, &hist, 500);
+    }
+    let sim_workers: Vec<SimWorker> = (0..workers)
+        .map(|w| SimWorker::new(cfg.cost_model, 0.0, 0x90 + w as u64))
+        .collect();
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        cluster,
+        router::by_name("round_robin").unwrap(),
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let res = replay::run_cluster_traced(core, sim_workers, fixed_trace(), |t, d| {
+        rows.push(Json::arr(vec![
+            Json::num(t as f64),
+            Json::num(d.worker as f64),
+            Json::Arr(d.batch.iter().map(|r| Json::num(r.id.0 as f64)).collect()),
+        ]));
+    });
+    assert_eq!(res.completions.len(), 400, "conservation for {system} x{workers}");
+    Json::Arr(rows)
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/dispatch_sequences.json")
+}
+
+#[test]
+fn dispatch_sequences_are_deterministic_and_match_golden() {
+    let mut got: BTreeMap<String, Json> = BTreeMap::new();
+    for system in ALL_SYSTEMS {
+        for workers in [1usize, 3] {
+            let a = dispatch_sequence(system, workers);
+            let b = dispatch_sequence(system, workers);
+            assert_eq!(
+                a, b,
+                "nondeterministic dispatch sequence for {system} x{workers}"
+            );
+            assert!(
+                !a.as_arr().unwrap().is_empty(),
+                "{system} x{workers} dispatched nothing"
+            );
+            got.insert(format!("{system}/w{workers}"), a);
+        }
+    }
+    let got = Json::Obj(got);
+
+    let path = golden_path();
+    let force_record = std::env::var("ORLOJ_GOLDEN_RECORD")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if force_record || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.to_pretty()).unwrap();
+        eprintln!(
+            "recorded golden dispatch sequences to {} — COMMIT this file so the \
+             regression gate actually compares on fresh checkouts (until it is \
+             committed, this test only asserts run-to-run determinism)",
+            path.display()
+        );
+        return;
+    }
+    let want = Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .expect("golden file parses");
+    // Compare per configuration for a readable failure.
+    let want_obj = want.as_obj().expect("golden file is an object");
+    let got_obj = got.as_obj().unwrap();
+    for (key, w) in want_obj {
+        let g = got.get(key);
+        assert_eq!(
+            g, w,
+            "dispatch sequence for {key} diverged from the golden snapshot; \
+             if the policy change is intentional, re-record with \
+             ORLOJ_GOLDEN_RECORD=1 cargo test --test golden_dispatch"
+        );
+    }
+    assert_eq!(
+        got_obj.len(),
+        want_obj.len(),
+        "configuration set changed; re-record the golden snapshot"
+    );
+}
