@@ -16,7 +16,9 @@
 use orloj::clock::VirtualClock;
 use orloj::core::batchmodel::BatchCostModel;
 use orloj::scheduler::SchedulerConfig;
-use orloj::serve::{replay, router, Cluster, Placement, ServingLoop};
+use orloj::serve::{
+    replay, router, Cluster, ElasticConfig, Placement, PlacementController, ServingLoop,
+};
 use orloj::sim::worker::SimWorker;
 use orloj::util::benchmark::{json_report, quick_or};
 use orloj::util::json::Json;
@@ -163,6 +165,78 @@ fn bench_multimodel(system: &str, n_workers: usize, placement: &str, cases: &mut
     );
 }
 
+/// Placement-churn case: a drifting 2-model mix on capacity-1 workers,
+/// with the elastic controller on or off — measures the dispatch-path
+/// cost of live placement control (demand tracking, warming windows,
+/// evict-drain re-routes) against the identical static run.
+fn bench_churn(system: &str, n_workers: usize, elastic: bool, cases: &mut Vec<Json>) {
+    let (spec, cfg) = multi_model_spec(n_workers);
+    let mut spec = spec.drift_rotating(quick_or(3.0, 9.0), 0.85);
+    // Re-scale *after* installing the drift schedule: the calibration
+    // weights by the time-averaged (rotating ≈ even) mix, not the static
+    // 0.7/0.3 shares, so the churn case runs at the same 0.9×N load as
+    // the other bench cases.
+    spec.scale_rate_to_load(cfg.cost_model, 0.9 * n_workers as f64, 8);
+    let trace = spec.generate();
+    let requests = trace.requests(3.0);
+    let n_req = requests.len();
+    let placement = Placement::parse("partition", n_workers, 2).unwrap();
+    let mut cluster = Cluster::build_placed(system, &cfg, 1, placement).unwrap();
+    for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile_everywhere(model, app, &hist, 1000);
+    }
+    let workers: Vec<SimWorker> = (0..n_workers)
+        .map(|w| {
+            SimWorker::new(cfg.cost_model, 0.0, 0x51 ^ (w as u64))
+                .with_model_costs(spec.model_cost_models())
+        })
+        .collect();
+    let mut core = ServingLoop::new(
+        VirtualClock::new(),
+        cluster,
+        router::by_name("least_loaded").unwrap(),
+    );
+    if elastic {
+        core = core.with_elastic(PlacementController::new(ElasticConfig {
+            capacity: 1,
+            ..Default::default()
+        }));
+    }
+    let t0 = Instant::now();
+    let res = replay::run_cluster(core, workers, requests);
+    let wall = t0.elapsed().as_secs_f64();
+    let events = res.completions.len() + res.batches;
+    let mode = if elastic { "elastic" } else { "static" };
+    let label = format!("{system}/drift/{mode}");
+    println!(
+        "  {label:>24} x{n_workers} ({:>19}): {n_req:>6} requests, {:>6} batches, \
+         {:>9.0} events/s, {:>4} placement actions",
+        "least_loaded",
+        res.batches,
+        events as f64 / wall,
+        res.placement.actions(),
+    );
+    assert_eq!(res.completions.len(), n_req, "conservation in churn bench");
+    cases.push(Json::obj(vec![
+        ("label", Json::str(&label)),
+        ("system", Json::str(system)),
+        ("workers", Json::num(n_workers as f64)),
+        ("router", Json::str("least_loaded")),
+        ("placement", Json::str("partition")),
+        ("models", Json::num(2.0)),
+        ("elastic", Json::Bool(elastic)),
+        ("requests", Json::num(n_req as f64)),
+        ("batches", Json::num(res.batches as f64)),
+        ("events", Json::num(events as f64)),
+        ("wall_s", Json::num(wall)),
+        ("events_per_s", Json::num(events as f64 / wall)),
+        ("req_per_s", Json::num(n_req as f64 / wall)),
+        ("load_actions", Json::num(res.placement.loads as f64)),
+        ("unload_actions", Json::num(res.placement.unloads as f64)),
+        ("rerouted", Json::num(res.placement.rerouted as f64)),
+    ]));
+}
+
 fn main() {
     let mut cases: Vec<Json> = Vec::new();
     println!("### unified serving-loop dispatch benchmarks");
@@ -180,6 +254,12 @@ fn main() {
     for system in ["edf", "orloj"] {
         for placement in ["all", "skewed"] {
             bench_multimodel(system, 4, placement, &mut cases);
+        }
+    }
+    println!("\nplacement churn (drifting mix × 4 capacity-1 workers, elastic on/off):");
+    for system in ["edf", "orloj"] {
+        for elastic in [false, true] {
+            bench_churn(system, 4, elastic, &mut cases);
         }
     }
     match json_report("BENCH_serve.json", "serve_loop", cases) {

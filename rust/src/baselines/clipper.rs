@@ -66,6 +66,21 @@ impl Scheduler for ClipperScheduler {
         "clipper"
     }
 
+    fn install_model(&mut self, model: ModelId, _cold_start_ms: f64, _now: Micros) {
+        // Reactive system: no plan-ahead to charge the cold start into;
+        // the AIMD controller reacts to the slow first batch on its own.
+        self.queue.ensure_lane(model);
+    }
+
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        self.queue.remove_lane(model)
+    }
+
+    fn reap(&mut self, now: Micros) {
+        // Exactly the next_batch-top shed: hopelessly-old front entries.
+        self.drop_expired(now);
+    }
+
     fn on_arrival(&mut self, req: Request, now: Micros) {
         if req.expired(now) {
             self.dropped.push((req, Outcome::TimedOut));
@@ -201,6 +216,31 @@ mod tests {
         assert_eq!(s.pending_for(ModelId(1)), 3);
         let b2 = s.next_batch(0).unwrap();
         assert!(b2.iter().all(|r| r.model == ModelId(1)));
+    }
+
+    #[test]
+    fn evict_drains_fifo_and_reap_sheds_hopeless_front() {
+        let mut s = ClipperScheduler::new(SchedulerConfig::default(), 0);
+        s.on_arrival(req(0, 0, 5.0), 0);
+        for i in 1..4 {
+            let m = ModelId((i % 2) as u32);
+            s.on_arrival(req(i, 0, 1000.0).with_model(m), 0);
+        }
+        // Evicting model 1 drains its lane in arrival order.
+        let drained = s.evict_model(ModelId(1));
+        assert_eq!(drained.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(s.pending(), 2);
+        assert_eq!(s.pending_for(ModelId(1)), 0);
+        // Reap sheds only the hopelessly-old front (id 0: >2×SLO past
+        // release at 11 ms), exactly like the next_batch-top shed.
+        s.reap(ms_to_us(11.0));
+        let d = s.drain_dropped();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0.id.0, 0);
+        assert_eq!(s.pending(), 1);
+        // install_model pre-creates an empty lane (no-op for counts).
+        s.install_model(ModelId(5), 0.0, 0);
+        assert_eq!(s.pending_for(ModelId(5)), 0);
     }
 
     #[test]

@@ -64,6 +64,19 @@ impl ClockworkScheduler {
     fn est(&self, bs: usize) -> f64 {
         self.cfg.cost_model.latency(bs, self.exec_point_ms)
     }
+
+    /// Drop queue heads whose window can no longer be met even solo —
+    /// the shed `next_batch` performs before planning a window.
+    fn shed_hopeless(&mut self, now: Micros) {
+        while let Some(head) = self.queue.peek() {
+            if us_to_ms(now) + self.est(1) > us_to_ms(head.deadline) {
+                let r = self.queue.pop_head().unwrap();
+                self.dropped.push((r, Outcome::TimedOut));
+            } else {
+                break;
+            }
+        }
+    }
 }
 
 impl Scheduler for ClockworkScheduler {
@@ -99,16 +112,24 @@ impl Scheduler for ClockworkScheduler {
         self.queue.push(req);
     }
 
+    fn install_model(&mut self, model: ModelId, _cold_start_ms: f64, _now: Micros) {
+        // Clockwork's point estimate is per-model-fleet and offline; the
+        // cold start is outside its model (precisely its §2.3 blind
+        // spot), so only the queue state is created.
+        self.queue.ensure_lane(model);
+    }
+
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        self.queue.remove_lane(model)
+    }
+
+    fn reap(&mut self, now: Micros) {
+        self.shed_hopeless(now);
+    }
+
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
         // Drop requests whose window can no longer be met.
-        while let Some(head) = self.queue.peek() {
-            if us_to_ms(now) + self.est(1) > us_to_ms(head.deadline) {
-                let r = self.queue.pop_head().unwrap();
-                self.dropped.push((r, Outcome::TimedOut));
-            } else {
-                break;
-            }
-        }
+        self.shed_hopeless(now);
         let head = self.queue.peek()?;
         let (model, head_deadline) = (head.model, head.deadline);
         let slack_ms = us_to_ms(head_deadline) - us_to_ms(now);

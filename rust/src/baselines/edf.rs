@@ -41,6 +41,19 @@ impl EdfScheduler {
         };
         self.cfg.cost_model.latency(bs, exec)
     }
+
+    /// Drop queue heads that can't make it even solo — the shed
+    /// `next_batch` performs before filling a batch.
+    fn shed_hopeless(&mut self, now: Micros) {
+        while let Some(head) = self.queue.peek() {
+            if us_to_ms(now) + self.est(1) > us_to_ms(head.deadline) {
+                let r = self.queue.pop_head().unwrap();
+                self.dropped.push((r, Outcome::TimedOut));
+            } else {
+                break;
+            }
+        }
+    }
 }
 
 impl Scheduler for EdfScheduler {
@@ -66,16 +79,21 @@ impl Scheduler for EdfScheduler {
         self.queue.push(req);
     }
 
+    fn install_model(&mut self, model: ModelId, _cold_start_ms: f64, _now: Micros) {
+        self.queue.ensure_lane(model);
+    }
+
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        self.queue.remove_lane(model)
+    }
+
+    fn reap(&mut self, now: Micros) {
+        self.shed_hopeless(now);
+    }
+
     fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
         // Drop heads that can't make it even solo.
-        while let Some(head) = self.queue.peek() {
-            if us_to_ms(now) + self.est(1) > us_to_ms(head.deadline) {
-                let r = self.queue.pop_head().unwrap();
-                self.dropped.push((r, Outcome::TimedOut));
-            } else {
-                break;
-            }
-        }
+        self.shed_hopeless(now);
         let head = self.queue.peek()?;
         let (model, head_deadline) = (head.model, head.deadline);
         let slack = us_to_ms(head_deadline) - us_to_ms(now);
@@ -143,6 +161,34 @@ mod tests {
         s.on_arrival(Request::new(2, AppId(0), 0, ms_to_us(100.0), 5.0), 0);
         let b = s.next_batch(0).unwrap();
         assert_eq!(b[0].id.0, 2);
+    }
+
+    #[test]
+    fn evict_drains_in_deadline_order_and_reap_sheds_heads() {
+        let mut s = sched();
+        s.install_model(ModelId(1), 50.0, 0);
+        s.on_arrival(Request::new(0, AppId(0), 0, ms_to_us(300.0), 5.0), 0);
+        s.on_arrival(
+            Request::new(1, AppId(0), 0, ms_to_us(90.0), 5.0).with_model(ModelId(1)),
+            0,
+        );
+        s.on_arrival(
+            Request::new(2, AppId(0), 0, ms_to_us(40.0), 5.0).with_model(ModelId(1)),
+            0,
+        );
+        let drained = s.evict_model(ModelId(1));
+        assert_eq!(
+            drained.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            vec![2, 1],
+            "deadline order"
+        );
+        assert_eq!(s.pending(), 1);
+        assert!(s.drain_dropped().is_empty(), "evict drains, never drops");
+        // Reap sheds exactly the hopeless head (deadline 300 ms, est 5 ms
+        // → hopeless from ~295 ms).
+        s.reap(ms_to_us(299.0));
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.drain_dropped().len(), 1);
     }
 
     #[test]

@@ -112,6 +112,23 @@ impl Scheduler for NexusScheduler {
         }
     }
 
+    fn install_model(&mut self, model: ModelId, _cold_start_ms: f64, _now: Micros) {
+        // Nexus plans on the mean; the cold start perturbs one epoch and
+        // washes out of the plan, so only the queue state is created.
+        self.queue.ensure_lane(model);
+    }
+
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        self.queue.remove_lane(model)
+    }
+
+    fn reap(&mut self, now: Micros) {
+        // The next_batch-top shed under the *current* plan. Deliberately
+        // no replan here: epoch boundaries must keep shifting only at
+        // batch-formation time, or reaping would change the plan cadence.
+        self.drop_expired(now);
+    }
+
     fn on_arrival(&mut self, req: Request, now: Micros) {
         if req.expired(now) {
             self.dropped.push((req, Outcome::TimedOut));

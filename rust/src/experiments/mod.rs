@@ -12,6 +12,7 @@ use crate::core::histogram::Histogram;
 use crate::core::orderstats;
 use crate::core::priority::{reference_score, ScoreContext, ScoreSchedule};
 use crate::scheduler::SchedulerConfig;
+use crate::serve::ElasticConfig;
 use crate::sim::runner::{self, Cell, ClusterSpec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -37,11 +38,19 @@ pub struct ExpOptions {
     pub workers: usize,
     /// Router admitting arrivals to replicas (see `serve::router`).
     pub router: String,
-    /// Co-served models for the `multimodel` grid (≥2 there; other
-    /// experiments stay single-model).
+    /// Co-served models for the `multimodel`/`elastic` grids (≥2 there;
+    /// other experiments stay single-model).
     pub models: usize,
     /// Model placement spec (see `serve::Placement::parse`).
     pub placement: String,
+    /// Run every grid cell under the elastic placement controller
+    /// (`--elastic`; the `elastic` experiment compares both regardless).
+    pub elastic: bool,
+    /// Per-worker model capacity budget for elastic runs (`--capacity`).
+    pub capacity: usize,
+    /// Hot-model rotation period for drifting mixes, seconds (`--drift`;
+    /// 0 = the experiment's default).
+    pub drift_period_s: f64,
 }
 
 impl Default for ExpOptions {
@@ -56,6 +65,9 @@ impl Default for ExpOptions {
             router: "round_robin".into(),
             models: 1,
             placement: "all".into(),
+            elastic: false,
+            capacity: 2,
+            drift_period_s: 0.0,
         }
     }
 }
@@ -72,7 +84,15 @@ impl ExpOptions {
 
     /// Cluster shape for the runner.
     fn cluster(&self) -> ClusterSpec {
-        ClusterSpec::new(self.workers, &self.router).with_placement(&self.placement)
+        let spec = ClusterSpec::new(self.workers, &self.router).with_placement(&self.placement);
+        if self.elastic {
+            spec.with_elastic(ElasticConfig {
+                capacity: self.capacity.max(1),
+                ..Default::default()
+            })
+        } else {
+            spec
+        }
     }
 }
 
@@ -188,6 +208,12 @@ fn print_grid(title: &str, cells: &[Cell]) {
             runner::render_model_rates("per-model finish rates", cells)
         );
     }
+    if cells.iter().any(|c| c.placement.actions() > 0) {
+        print!(
+            "{}",
+            runner::render_placement_actions("placement actions", cells)
+        );
+    }
 }
 
 fn cells_to_json(case: &str, cells: &[Cell]) -> Json {
@@ -202,6 +228,17 @@ fn cells_to_json(case: &str, cells: &[Cell]) -> Json {
             ("timed_out", Json::num(c.report.timed_out as f64)),
             ("utilization", Json::num(c.utilization)),
             ("workers", Json::num(c.workers as f64)),
+            ("load_actions", Json::num(c.placement.loads as f64)),
+            ("unload_actions", Json::num(c.placement.unloads as f64)),
+            ("rerouted", Json::num(c.placement.rerouted as f64)),
+            (
+                "react_s",
+                Json::num(c.placement.first_action_at as f64 / 1e6),
+            ),
+            (
+                "converge_s",
+                Json::num(c.placement.last_action_at as f64 / 1e6),
+            ),
             (
                 "per_worker_utilization",
                 Json::arr(
@@ -638,6 +675,158 @@ pub fn multimodel(opts: &ExpOptions) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Elastic placement (beyond the paper): static vs elastic under drift
+// ---------------------------------------------------------------------
+
+/// Static-vs-elastic placement on drifting traffic mixes: the hot model
+/// rotates every `--drift` seconds while the cluster has only
+/// `--capacity` model slots per worker, so a fixed placement is wrong for
+/// most of the run. Reports finish rate per mode, the elastic
+/// controller's load/unload action counts, and its time-to-converge
+/// (last placement action) for all five systems at two skew levels.
+pub fn elastic(opts: &ExpOptions) -> Json {
+    let m = opts.models.max(3);
+    let workers = opts.workers.max(4);
+    let period = if opts.drift_period_s > 0.0 {
+        opts.drift_period_s
+    } else {
+        8.0
+    };
+    // Feasibility floor: every model must fit the cluster even statically.
+    let capacity = opts.capacity.max(1).max(m.div_ceil(workers));
+    let slo = *opts.slos.get(opts.slos.len() / 2).unwrap_or(&3.0);
+    println!(
+        "### elastic — static vs elastic placement under a drifting mix \
+         ({workers} workers × {m} models, capacity {capacity}, rotation {period}s, slo {slo}x)\n"
+    );
+    let static_placements = ["partition", "skewed"];
+    let mut all = Vec::new();
+    for hot in [0.70, 0.90] {
+        let case = format!("drift-hot{:.0}", hot * 100.0);
+        let shares = vec![1.0 / m as f64; m];
+        let models = multimodel_models(m, &shares);
+        // Shared cost model calibrated to the (time-averaged) even mix.
+        let mut rng = Rng::new(opts.seed ^ 0xE1A5);
+        let mean: f64 = models
+            .iter()
+            .map(|mt| {
+                mt.dists
+                    .iter()
+                    .map(|d| d.histogram(&mut rng, 4000, 64).mean())
+                    .sum::<f64>()
+                    / mt.dists.len() as f64
+            })
+            .sum::<f64>()
+            / m as f64;
+        let cost_model = BatchCostModel::calibrated(mean);
+        let cfg = SchedulerConfig {
+            cost_model,
+            ..Default::default()
+        };
+        let mut spec = TraceSpec {
+            name: case.clone(),
+            dists: Vec::new(),
+            arrivals: AzureTraceConfig {
+                apps: 1,
+                rate_per_s: 0.0,
+                duration_s: opts.duration_s,
+                ..Default::default()
+            },
+            seed: opts.seed ^ 0xE1A5,
+            models,
+        };
+        spec.scale_rate_to_load(cost_model, opts.util * workers as f64, 8);
+        let spec = spec.drift_rotating(period, hot);
+        let trace = spec.generate();
+        let ecfg = ElasticConfig {
+            capacity,
+            ..Default::default()
+        };
+        println!(
+            "{:>10} {:>12} {:>12} {:>12} {:>7} {:>9} {:>9} {:>8}  [{case}]",
+            "system", "partition", "skewed", "elastic", "loads", "unloads", "react(s)", "last(s)"
+        );
+        let mut rows = Vec::new();
+        for system in ALL_SYSTEMS {
+            let mut static_rates = Vec::new();
+            for ps in static_placements {
+                let cell = runner::run_one(
+                    system,
+                    &spec,
+                    &trace,
+                    slo,
+                    &cfg,
+                    spec.seed,
+                    &ClusterSpec::new(workers, &opts.router).with_placement(ps),
+                );
+                static_rates.push(cell.report.finish_rate());
+                rows.push(Json::obj(vec![
+                    ("case", Json::str(&case)),
+                    ("system", Json::str(system)),
+                    ("mode", Json::str(&format!("static-{ps}"))),
+                    ("slo", Json::num(slo)),
+                    ("finish_rate", Json::num(cell.report.finish_rate())),
+                    ("load_actions", Json::num(0.0)),
+                    ("unload_actions", Json::num(0.0)),
+                    ("converge_s", Json::num(0.0)),
+                ]));
+            }
+            let ecell = runner::run_one(
+                system,
+                &spec,
+                &trace,
+                slo,
+                &cfg,
+                spec.seed,
+                &ClusterSpec::new(workers, &opts.router)
+                    .with_placement("partition")
+                    .with_elastic(ecfg.clone()),
+            );
+            let erate = ecell.report.finish_rate();
+            println!(
+                "{:>10} {:>12.3} {:>12.3} {:>12.3} {:>7} {:>9} {:>9.1} {:>8.1}",
+                system,
+                static_rates[0],
+                static_rates[1],
+                erate,
+                ecell.placement.loads,
+                ecell.placement.unloads,
+                ecell.placement.first_action_at as f64 / 1e6,
+                ecell.placement.last_action_at as f64 / 1e6,
+            );
+            rows.push(Json::obj(vec![
+                ("case", Json::str(&case)),
+                ("system", Json::str(system)),
+                ("mode", Json::str("elastic")),
+                ("slo", Json::num(slo)),
+                ("finish_rate", Json::num(erate)),
+                ("load_actions", Json::num(ecell.placement.loads as f64)),
+                (
+                    "unload_actions",
+                    Json::num(ecell.placement.unloads as f64),
+                ),
+                ("rerouted", Json::num(ecell.placement.rerouted as f64)),
+                (
+                    "react_s",
+                    Json::num(ecell.placement.first_action_at as f64 / 1e6),
+                ),
+                (
+                    "converge_s",
+                    Json::num(ecell.placement.last_action_at as f64 / 1e6),
+                ),
+                (
+                    "best_static",
+                    Json::num(static_rates.iter().cloned().fold(f64::MIN, f64::max)),
+                ),
+            ]));
+        }
+        println!();
+        all.push(Json::arr(rows));
+    }
+    Json::arr(all)
+}
+
+// ---------------------------------------------------------------------
 // Ablation (beyond the paper): EDF baseline + feasibility quantile
 // ---------------------------------------------------------------------
 
@@ -679,6 +868,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
         "fig13" => fig13(opts),
         "fig14" => fig14(opts),
         "multimodel" => multimodel(opts),
+        "elastic" => elastic(opts),
         "ablation" => ablation(opts),
         _ => return None,
     };
@@ -686,9 +876,9 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
 }
 
 /// All experiment ids in run order.
-pub const ALL: [&str; 11] = [
+pub const ALL: [&str; 12] = [
     "fig2", "fig3", "fig6", "table2", "table3", "table4", "table5", "fig13", "fig14", "multimodel",
-    "ablation",
+    "elastic", "ablation",
 ];
 
 #[cfg(test)]
@@ -746,6 +936,35 @@ mod tests {
                     assert!(entry.get("total").as_f64().unwrap() > 0.0);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn elastic_quick_compares_static_and_elastic_modes() {
+        let mut opts = ExpOptions::quick();
+        opts.duration_s = 6.0;
+        opts.slos = vec![3.0];
+        opts.drift_period_s = 3.0;
+        opts.capacity = 1;
+        let j = elastic(&opts);
+        let cases = j.as_arr().unwrap();
+        assert_eq!(cases.len(), 2, "two skew levels");
+        for case in cases {
+            let rows = case.as_arr().unwrap();
+            // 5 systems × (2 static placements + 1 elastic).
+            assert_eq!(rows.len(), 15);
+            let mut elastic_rows = 0;
+            for row in rows {
+                let fr = row.get("finish_rate").as_f64().unwrap();
+                assert!((0.0..=1.0).contains(&fr), "finish_rate={fr}");
+                if row.get("mode").as_str() == Some("elastic") {
+                    elastic_rows += 1;
+                    assert!(row.get("load_actions").as_f64().unwrap() >= 0.0);
+                    assert!(row.get("converge_s").as_f64().unwrap() >= 0.0);
+                    assert!(row.get("best_static").as_f64().is_some());
+                }
+            }
+            assert_eq!(elastic_rows, 5);
         }
     }
 

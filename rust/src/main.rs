@@ -23,8 +23,11 @@ fn usage() -> ! {
              --runs <n>            repetitions to average    (default 1)\n\
              --workers <n>         scheduling replicas       (default 1)\n\
              --router <name>       {}  (default round_robin)\n\
-             --models <n>          co-served models for the multimodel grid (default 2 there)\n\
+             --models <n>          co-served models for the multimodel/elastic grids (default 2/3 there)\n\
              --placement <spec>    {}|'0,1;1;0'  worker→models (default all)\n\
+             --elastic             run cells under the elastic placement controller\n\
+             --capacity <n>        per-worker model budget for elastic runs (default 2)\n\
+             --drift <s>           hot-model rotation period for the elastic experiment (default 8)\n\
              --quick               fast settings for smoke runs\n\
            serve                 PJRT serving demo (needs `make artifacts`)\n\
              --artifacts <dir>     artifact directory        (default artifacts)\n\
@@ -34,12 +37,15 @@ fn usage() -> ! {
              --router <name>       arrival router            (default round_robin)\n\
              --models <n>          co-served model copies (default 1; each loads its own runtime)\n\
              --placement <spec>    worker→models spec        (default all)\n\
+             --elastic             elastic placement (lazy PJRT runtime loads on LoadModel)\n\
+             --capacity <n>        per-worker model budget   (default 2)\n\
              --slo-ms <ms>         per-request SLO           (default 12x deep solo latency)\n\
              --gap-us <us>         inter-arrival gap         (default 500)\n\
            trace                 generate a trace JSON\n\
              --out <path>          output path (default trace.json)\n\
              --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
              --models <n>          multi-model trace: n models with skewed shares (default 1)\n\
+             --drift <s>           rotate the hot model every <s> seconds (multi-model only)\n\
            list                  list experiment ids",
         experiments::ALL.join(", "),
         orloj::serve::router::ROUTERS.join("|"),
@@ -67,6 +73,9 @@ fn exp_options(args: &Args) -> ExpOptions {
     if let Some(placement) = args.get("placement") {
         opts.placement = placement.to_string();
     }
+    opts.elastic = args.flag("elastic");
+    opts.capacity = args.get_usize("capacity", opts.capacity).max(1);
+    opts.drift_period_s = args.get_f64("drift", opts.drift_period_s);
     opts
 }
 
@@ -143,6 +152,13 @@ fn cmd_trace(args: &Args) {
         seed: args.get_u64("seed", 1),
         models,
     };
+    // Optional drifting mix: rotate the hot model every --drift seconds.
+    let drift_s = args.get_f64("drift", 0.0);
+    let spec = if drift_s > 0.0 && n_models > 1 {
+        spec.drift_rotating(drift_s, 0.8)
+    } else {
+        spec
+    };
     let trace = spec.generate();
     let out = args.get_or("out", "trace.json").to_string();
     trace.save(std::path::Path::new(&out)).expect("write trace");
@@ -174,8 +190,12 @@ fn cmd_serve(args: &Args) {
     let n_models = args.get_usize("models", 1).max(1);
     let router_name = args.get_or("router", "round_robin").to_string();
     let placement_spec = args.get_or("placement", "all").to_string();
-    let placement = Placement::parse(&placement_spec, n_workers, n_models)
-        .expect("valid placement covering every model");
+    let elastic = args.flag("elastic");
+    let capacity = args.get_usize("capacity", 2).max(1);
+    let placement = match Placement::parse_checked(&placement_spec, n_workers, n_models) {
+        Ok(p) => p,
+        Err(why) => panic!("invalid placement: {why}"),
+    };
     let rt = Arc::new(ModelRuntime::load(std::path::Path::new(&dir)).expect("load artifacts"));
     let mut calib_worker = PjrtWorker::new(rt.clone());
     let calib = calib_worker.calibrate(10);
@@ -205,12 +225,20 @@ fn cmd_serve(args: &Args) {
         std::path::Path::new(&dir),
         &placement,
         Some(rt),
+        elastic,
     )
     .expect("known system");
     let router = orloj::serve::router::by_name(&router_name).expect("known router");
     let (submitter, rx) =
         Server::<Box<dyn orloj::scheduler::Scheduler>, MultiModelPjrtWorker>::channel();
-    let server = Server::cluster(replicas, router).with_placement(placement);
+    let mut server = Server::cluster(replicas, router).with_placement(placement);
+    if elastic {
+        use orloj::serve::{ElasticConfig, PlacementController};
+        server = server.with_elastic(PlacementController::new(ElasticConfig {
+            capacity,
+            ..Default::default()
+        }));
+    }
     let handle = std::thread::spawn(move || server.run(rx));
     let mut rng = Rng::new(99);
     let slo_ms = args.get_f64("slo-ms", mean_ms * max_depth as f64 * 12.0);
@@ -236,8 +264,18 @@ fn cmd_serve(args: &Args) {
     let report = RunReport::from_completions(&res.completions)
         .with_worker_stats(&res.per_worker, res.end_time);
     println!(
-        "[{system} x{n_workers} router={router_name} models={n_models} placement={placement_spec}] {report}"
+        "[{system} x{n_workers} router={router_name} models={n_models} placement={placement_spec}{}] {report}",
+        if elastic { " elastic" } else { "" }
     );
+    if res.placement.actions() > 0 {
+        println!(
+            "  placement: {} loads, {} unloads, {} rerouted, last action at {:.1}s",
+            res.placement.loads,
+            res.placement.unloads,
+            res.placement.rerouted,
+            res.placement.last_action_at as f64 / 1e6
+        );
+    }
     for w in &report.per_worker {
         println!(
             "  worker {}: utilization={:.2} batches={} busy={:.1}ms",

@@ -60,9 +60,15 @@ pub fn pjrt_replicas(
 /// fleet). `reuse` is installed into the first hosted slot instead of
 /// reloading from disk (callers typically have a calibration runtime in
 /// hand). Every hosted model's scheduler profile is seeded from the
-/// shared per-depth calibration. Returns None for an unknown system;
-/// panics on an unconstrained placement (it names no models — parse one)
-/// or if artifacts fail to load (demo path).
+/// shared per-depth calibration. With `elastic` set, every worker keeps
+/// the artifact directory for *lazy* runtime loads — an elastic
+/// `LoadModel` dispatch loads the runtime on the worker's own thread at
+/// placement time — every scheduler is seeded for every model (any
+/// replica may acquire any model at runtime), and unloads release the
+/// runtime. Returns None for an unknown system; panics on an
+/// unconstrained placement (it names no models — parse one) or if
+/// artifacts fail to load (demo path).
+#[allow(clippy::too_many_arguments)]
 pub fn pjrt_placed_replicas(
     system: &str,
     cfg: &SchedulerConfig,
@@ -71,6 +77,7 @@ pub fn pjrt_placed_replicas(
     dir: &Path,
     placement: &Placement,
     mut reuse: Option<Arc<ModelRuntime>>,
+    elastic: bool,
 ) -> Option<Vec<PlacedReplica>> {
     let all_models = placement.models();
     assert!(
@@ -84,31 +91,43 @@ pub fn pjrt_placed_replicas(
             crate::baselines::by_name(system, cfg.clone(), seed ^ ((w as u64) << 24))?;
         let mut by_model = Vec::new();
         for &model in &all_models {
+            let seeded = elastic || placement.hosts(w, model);
+            if seeded {
+                for (depth, ms) in calib {
+                    sched.seed_app_profile(
+                        model,
+                        AppId(*depth as u32 - 1),
+                        &Histogram::constant(*ms),
+                        100,
+                    );
+                }
+            }
             if !placement.hosts(w, model) {
                 continue;
             }
             let rt = reuse
                 .take()
                 .unwrap_or_else(|| Arc::new(ModelRuntime::load(dir).expect("load artifacts")));
-            for (depth, ms) in calib {
-                sched.seed_app_profile(
-                    model,
-                    AppId(*depth as u32 - 1),
-                    &Histogram::constant(*ms),
-                    100,
-                );
-            }
             by_model.push((model.0, PjrtWorker::new(rt)));
         }
-        replicas.push((sched, MultiModelPjrtWorker { by_model }));
+        let mut worker = MultiModelPjrtWorker { by_model, artifacts: None };
+        if elastic {
+            worker.artifacts = Some(dir.to_path_buf());
+        }
+        replicas.push((sched, worker));
     }
     Some(replicas)
 }
 
 /// A worker hosting one PJRT runtime per model (cluster placement).
-/// Batches are model-pure, so the batch's model picks the runtime.
+/// Batches are model-pure, so the batch's model picks the runtime. With
+/// an artifact directory installed (elastic placement), a `LoadModel`
+/// dispatch loads the model's runtime lazily on this worker's thread and
+/// an unload releases it.
 pub struct MultiModelPjrtWorker {
     by_model: Vec<(u32, PjrtWorker)>,
+    /// Artifact directory for lazy loads (None = static hosting only).
+    artifacts: Option<std::path::PathBuf>,
 }
 
 impl Worker for MultiModelPjrtWorker {
@@ -126,6 +145,33 @@ impl Worker for MultiModelPjrtWorker {
                 debug_assert!(false, "batch for unhosted model {model}");
                 0.0
             }
+        }
+    }
+
+    fn load_model(&mut self, model: ModelId, cost_hint_ms: f64) -> f64 {
+        if self.by_model.iter().any(|(m, _)| *m == model.0) {
+            return 0.0; // already resident (e.g. re-install after a keep)
+        }
+        match &self.artifacts {
+            Some(dir) => {
+                // The real cold start: load the runtime on this worker's
+                // own thread (the PJRT client is thread-compatible, not
+                // thread-safe) and report the measured time.
+                let t0 = Instant::now();
+                let rt = Arc::new(ModelRuntime::load(dir).expect("load artifacts"));
+                self.by_model.push((model.0, PjrtWorker::new(rt)));
+                t0.elapsed().as_secs_f64() * 1000.0
+            }
+            None => cost_hint_ms,
+        }
+    }
+
+    fn unload_model(&mut self, model: ModelId) {
+        // Only elastic workers release runtimes: a static placement never
+        // unloads, and keeping the runtime would make a later reload free
+        // in a way the cold-start model doesn't account for.
+        if self.artifacts.is_some() {
+            self.by_model.retain(|(m, _)| *m != model.0);
         }
     }
 }

@@ -57,6 +57,12 @@ pub struct Estimator {
     /// Score parameter `b` used to precompute the schedule templates
     /// (matches `SchedulerConfig::b`).
     priority_b: f64,
+    /// One-shot per-model warm-up surcharge (ms), charged into the
+    /// feasibility latency after an elastic model install until the
+    /// model's first batch completes (DESIGN.md §8). Kept outside the
+    /// `BatchLatency` cache so installing/clearing it never invalidates
+    /// the precomputed templates.
+    warmup: Vec<(u32, f64)>,
 }
 
 impl Estimator {
@@ -81,6 +87,7 @@ impl Estimator {
             cache: HashMap::new(),
             cold_start_ms: 10.0,
             priority_b: 1e-4,
+            warmup: Vec::new(),
         }
     }
 
@@ -156,9 +163,40 @@ impl Estimator {
         }
     }
 
-    /// Feasibility latency (ms) for Algorithm 1 line 11.
+    /// Feasibility latency (ms) for Algorithm 1 line 11, including any
+    /// pending warm-up surcharge for the model (elastic installs).
     pub fn feasibility_ms(&mut self, model: ModelId, app: AppId, k: usize) -> f64 {
-        self.batch_latency(model, app, k).feasibility_ms
+        let base = self.batch_latency(model, app, k).feasibility_ms;
+        base + self.warmup_ms(model)
+    }
+
+    /// Charge a one-shot warm-up surcharge for `model` (an elastic
+    /// install's cold-start cost): until [`Estimator::clear_warmup`] runs,
+    /// the model's feasibility latency includes it, so the scheduler
+    /// won't promise deadlines the warming replica cannot keep.
+    pub fn set_warmup_ms(&mut self, model: ModelId, ms: f64) {
+        self.clear_warmup(model);
+        if ms > 0.0 {
+            self.warmup.push((model.0, ms));
+        }
+    }
+
+    /// Clear `model`'s warm-up surcharge (its first batch completed).
+    pub fn clear_warmup(&mut self, model: ModelId) {
+        self.warmup.retain(|(m, _)| *m != model.0);
+    }
+
+    /// Pending warm-up surcharge for `model` (0 when fully warm).
+    pub fn warmup_ms(&self, model: ModelId) -> f64 {
+        self.warmup
+            .iter()
+            .find(|(m, _)| *m == model.0)
+            .map_or(0.0, |(_, w)| *w)
+    }
+
+    /// Whether any model currently carries a warm-up surcharge.
+    pub fn has_warmup(&self) -> bool {
+        !self.warmup.is_empty()
     }
 }
 
@@ -339,6 +377,35 @@ mod tests {
         e.set_priority_b(1e-3);
         let t3 = Arc::clone(&e.batch_latency(M0, AppId(0), 2).template);
         assert!(Arc::ptr_eq(&t2, &t3));
+    }
+
+    #[test]
+    fn warmup_surcharge_is_one_shot_and_per_model() {
+        let mut e = Estimator::new(BatchCostModel::new(0.0, 1.0), 64, 0.5);
+        e.refresh(snapshot_two_apps());
+        let base = e.feasibility_ms(M0, AppId(0), 2);
+        assert!(!e.has_warmup());
+        e.set_warmup_ms(M0, 200.0);
+        assert!(e.has_warmup());
+        assert!(
+            (e.feasibility_ms(M0, AppId(0), 2) - (base + 200.0)).abs() < 1e-9,
+            "cold start charged into feasibility"
+        );
+        // Other models are untouched.
+        let other = e.feasibility_ms(ModelId(7), AppId(0), 1);
+        e.set_warmup_ms(ModelId(7), 50.0);
+        assert!((e.feasibility_ms(ModelId(7), AppId(0), 1) - (other + 50.0)).abs() < 1e-9);
+        assert!((e.feasibility_ms(M0, AppId(0), 2) - (base + 200.0)).abs() < 1e-9);
+        // Re-set replaces, clear removes.
+        e.set_warmup_ms(M0, 80.0);
+        assert!((e.warmup_ms(M0) - 80.0).abs() < 1e-12);
+        e.clear_warmup(M0);
+        assert!((e.feasibility_ms(M0, AppId(0), 2) - base).abs() < 1e-12);
+        // The template cache was never invalidated by warm-up churn.
+        let t1 = Arc::clone(&e.batch_latency(M0, AppId(0), 2).template);
+        e.set_warmup_ms(M0, 10.0);
+        let t2 = Arc::clone(&e.batch_latency(M0, AppId(0), 2).template);
+        assert!(Arc::ptr_eq(&t1, &t2));
     }
 
     #[test]

@@ -104,6 +104,29 @@ impl FifoQueues {
         }
     }
 
+    /// Create `model`'s (empty) lane if absent — the elastic
+    /// `install_model` hook, so a freshly loaded model's queue state
+    /// exists before its first arrival.
+    pub fn ensure_lane(&mut self, model: ModelId) {
+        if !self.lanes.iter().any(|(m, _)| *m == model) {
+            self.lanes.push((model, VecDeque::new()));
+        }
+    }
+
+    /// Tear down `model`'s lane (elastic `evict_model`), returning its
+    /// queued requests in arrival order so the serving core can re-route
+    /// them instead of dropping them.
+    pub fn remove_lane(&mut self, model: ModelId) -> Vec<Request> {
+        match self.lanes.iter().position(|(m, _)| *m == model) {
+            Some(i) => {
+                let (_, lane) = self.lanes.remove(i);
+                self.len -= lane.len();
+                lane.into_iter().map(|(_, r)| r).collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
     /// Index of the lane holding the global FIFO head.
     fn head_lane(&self) -> Option<usize> {
         self.lanes
@@ -220,6 +243,31 @@ impl EdfQueues {
         }
     }
 
+    /// Create `model`'s (empty) lane if absent — the elastic
+    /// `install_model` hook.
+    pub fn ensure_lane(&mut self, model: ModelId) {
+        if !self.lanes.iter().any(|(m, _)| *m == model) {
+            self.lanes.push((model, BinaryHeap::new()));
+        }
+    }
+
+    /// Tear down `model`'s lane (elastic `evict_model`), returning its
+    /// queued requests in deadline order so the serving core can re-route
+    /// them instead of dropping them.
+    pub fn remove_lane(&mut self, model: ModelId) -> Vec<Request> {
+        match self.lanes.iter().position(|(m, _)| *m == model) {
+            Some(i) => {
+                let (_, lane) = self.lanes.remove(i);
+                self.len -= lane.len();
+                let mut out: Vec<Request> =
+                    lane.into_iter().map(|Reverse(EdfItem(r))| r).collect();
+                out.sort_by_key(|r| (r.deadline, r.id.0));
+                out
+            }
+            None => Vec::new(),
+        }
+    }
+
     /// Index of the lane holding the global EDF head (min (deadline, id)).
     fn head_lane(&self) -> Option<usize> {
         self.lanes
@@ -301,6 +349,29 @@ pub trait Scheduler: Send {
     /// Default: ignore.
     fn seed_app_profile(&mut self, _model: ModelId, _app: AppId, _hist: &Histogram, _weight: u64) {}
 
+    /// A model finished loading onto this replica (elastic placement):
+    /// create its per-model queue state, and charge `cold_start_ms` into
+    /// the model's first post-load batch's expected latency so the SLO
+    /// math stays honest during warm-up (DESIGN.md §8). Default: queue
+    /// state appears lazily on first arrival and no surcharge is applied.
+    fn install_model(&mut self, _model: ModelId, _cold_start_ms: f64, _now: Micros) {}
+
+    /// A model left this replica (elastic placement): tear down its queue
+    /// state and return the queued requests so the serving core can
+    /// re-route them to the remaining hosts — evictions drain, they never
+    /// drop (DESIGN.md §8). Default: nothing hosted, nothing to drain.
+    fn evict_model(&mut self, _model: ModelId) -> Vec<Request> {
+        Vec::new()
+    }
+
+    /// Shed queued requests that this policy would drop at its next
+    /// batch-formation opportunity anyway. Called by the serving core on
+    /// `Wake` for replicas whose worker is busy (they never reach
+    /// `next_batch` mid-batch, so doomed requests would otherwise inflate
+    /// the load counts routers see). Must shed exactly the policy's own
+    /// next-dequeue discipline — never more. Default: no-op.
+    fn reap(&mut self, _now: Micros) {}
+
     /// A request entered the system.
     fn on_arrival(&mut self, req: Request, now: Micros);
 
@@ -339,6 +410,15 @@ impl<S: Scheduler + ?Sized> Scheduler for &mut S {
     fn seed_app_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
         (**self).seed_app_profile(model, app, hist, weight)
     }
+    fn install_model(&mut self, model: ModelId, cold_start_ms: f64, now: Micros) {
+        (**self).install_model(model, cold_start_ms, now)
+    }
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        (**self).evict_model(model)
+    }
+    fn reap(&mut self, now: Micros) {
+        (**self).reap(now)
+    }
     fn on_arrival(&mut self, req: Request, now: Micros) {
         (**self).on_arrival(req, now)
     }
@@ -368,6 +448,15 @@ impl Scheduler for Box<dyn Scheduler> {
     }
     fn seed_app_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram, weight: u64) {
         (**self).seed_app_profile(model, app, hist, weight)
+    }
+    fn install_model(&mut self, model: ModelId, cold_start_ms: f64, now: Micros) {
+        (**self).install_model(model, cold_start_ms, now)
+    }
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        (**self).evict_model(model)
+    }
+    fn reap(&mut self, now: Micros) {
+        (**self).reap(now)
     }
     fn on_arrival(&mut self, req: Request, now: Micros) {
         (**self).on_arrival(req, now)
@@ -454,6 +543,50 @@ mod tests {
         assert_eq!(rest, vec![0, 2, 3, 4, 5]);
         assert!(q.is_empty());
         assert_eq!(q.min_deadline(), None);
+    }
+
+    #[test]
+    fn fifo_lane_lifecycle_installs_and_drains() {
+        let mut q = FifoQueues::new();
+        q.ensure_lane(ModelId(3));
+        assert_eq!(q.pending_for(ModelId(3)), 0);
+        assert!(q.is_empty(), "ensure_lane creates empty state only");
+        for i in 0..5 {
+            q.push(req(i, (i % 2) as u32, 1_000_000));
+        }
+        // Evicting model 0 drains its lane in arrival order; model 1 and
+        // the global sequence numbering are untouched.
+        let drained = q.remove_lane(ModelId(0));
+        assert_eq!(
+            drained.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            vec![0, 2, 4]
+        );
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pending_for(ModelId(0)), 0);
+        assert_eq!(q.pending_for(ModelId(1)), 2);
+        assert!(q.remove_lane(ModelId(9)).is_empty(), "absent lane is a no-op");
+        // Reinstall and refill: the lane works again.
+        q.ensure_lane(ModelId(0));
+        q.push(req(7, 0, 1_000_000));
+        assert_eq!(q.pending_for(ModelId(0)), 1);
+    }
+
+    #[test]
+    fn edf_lane_lifecycle_drains_in_deadline_order() {
+        let mut q = EdfQueues::new();
+        q.ensure_lane(ModelId(0));
+        q.push(req(0, 0, 9_000));
+        q.push(req(1, 0, 1_000));
+        q.push(req(2, 1, 4_000));
+        let drained = q.remove_lane(ModelId(0));
+        assert_eq!(
+            drained.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            vec![1, 0],
+            "deadline order"
+        );
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.min_deadline(), Some(req(2, 1, 4_000).deadline));
+        assert!(q.remove_lane(ModelId(5)).is_empty());
     }
 
     #[test]

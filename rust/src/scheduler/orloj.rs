@@ -388,8 +388,12 @@ impl OrlojScheduler {
         cost_c: f64,
         key: u64,
     ) -> Option<BsEntry> {
+        // Warm-up surcharge first (elastic cold start, 0 when warm): the
+        // first post-load batch must fit `deadline - cold_start`, not the
+        // steady-state latency alone.
+        let warm = estimator.warmup_ms(req.model);
         let bl = estimator.batch_latency(req.model, req.app, queue.bs);
-        let feasible = us_to_ms(now) + bl.feasibility_ms <= us_to_ms(req.deadline);
+        let feasible = us_to_ms(now) + bl.feasibility_ms + warm <= us_to_ms(req.deadline);
         if !feasible {
             return None;
         }
@@ -633,6 +637,48 @@ impl Scheduler for OrlojScheduler {
         self.seed_profile(model, app, hist, weight);
     }
 
+    fn install_model(&mut self, model: ModelId, cold_start_ms: f64, _now: Micros) {
+        // Create the model's queue group eagerly (deterministic group
+        // order no longer depends on the first arrival), and charge the
+        // cold start into the model's first post-load batch feasibility.
+        let _ = self.group_for(model);
+        if cold_start_ms > 0.0 {
+            self.estimator.set_warmup_ms(model, cold_start_ms);
+        }
+    }
+
+    fn evict_model(&mut self, model: ModelId) -> Vec<Request> {
+        let Some(gi) = self.groups.iter().position(|g| g.model == model) else {
+            return Vec::new();
+        };
+        // Drain every resident entry of the group back to the caller.
+        // The group itself stays as an empty shell: entries store their
+        // group *index*, so groups are never removed or reordered (a
+        // reinstalled model reuses its shell).
+        let mut out = Vec::new();
+        for slot in 0..self.entries.num_slots() {
+            let Some(key) = self.entries.key_at(slot) else {
+                continue;
+            };
+            let belongs = self.entries.get(key).map(|e| e.group == gi).unwrap_or(false);
+            if belongs {
+                if let Some(req) = self.remove_everywhere(key) {
+                    out.push(req);
+                }
+            }
+        }
+        self.estimator.clear_warmup(model);
+        debug_assert_eq!(self.groups[gi].members, 0, "evict left residents behind");
+        out
+    }
+
+    fn reap(&mut self, now: Micros) {
+        // Exactly the shedding `next_batch` would perform first (lines
+        // 10–14) — no milestone processing, no candidate selection, so a
+        // reaped queue forms the same batches it would have anyway.
+        self.prune_infeasible(now);
+    }
+
     fn on_arrival(&mut self, req: Request, now: Micros) {
         if self.ctx.needs_reset(now) {
             self.reset_base(now);
@@ -688,6 +734,14 @@ impl Scheduler for OrlojScheduler {
         if batch.is_empty() {
             None
         } else {
+            // Forming the first post-install batch of a warming model ends
+            // its warm-up surcharge: the cold start is being paid by this
+            // batch. Clearing at *formation* (not completion) means a
+            // stale pre-eviction batch finishing later can never wipe a
+            // re-install's fresh surcharge.
+            if self.estimator.has_warmup() {
+                self.estimator.clear_warmup(batch[0].model);
+            }
             Some(batch)
         }
     }
@@ -987,6 +1041,103 @@ mod tests {
         }
         assert_eq!(served + dropped, next_id as usize, "conservation under churn");
         assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn install_creates_group_and_warmup_gates_feasibility() {
+        let mut s = seeded_sched();
+        // Install a second model with a 100 ms cold-start surcharge.
+        s.install_model(ModelId(1), 100.0, 0);
+        let h = Histogram::from_weights(8.0, 1.0, &[1.0, 2.0, 1.0]);
+        s.seed_profile(ModelId(1), AppId(0), &h, 100);
+        assert_eq!(s.pending_for(ModelId(1)), 0);
+        // An 80 ms SLO fits the steady state (~10 ms) but not warm-up +
+        // steady state → dropped on arrival.
+        s.on_arrival(
+            Request::new(1, AppId(0), 0, ms_to_us(80.0), 10.0).with_model(ModelId(1)),
+            0,
+        );
+        assert_eq!(s.pending(), 0, "warm-up surcharge must gate admission");
+        assert_eq!(s.drain_dropped().len(), 1);
+        // A roomy SLO is admitted; *forming* its batch ends warm-up (the
+        // cold start is paid by that batch — and a stale pre-eviction
+        // batch completing later can never wipe a fresh surcharge).
+        s.on_arrival(
+            Request::new(2, AppId(0), 0, ms_to_us(2_000.0), 10.0).with_model(ModelId(1)),
+            0,
+        );
+        let batch = s.next_batch(1_000).expect("warm-up batch");
+        assert_eq!(batch.len(), 1);
+        s.on_batch_complete(&batch, 110.0, ms_to_us(110.0));
+        // Post-warm-up the 80 ms SLO is feasible again.
+        let t = ms_to_us(200.0);
+        s.on_arrival(
+            Request::new(3, AppId(0), t, ms_to_us(80.0), 10.0).with_model(ModelId(1)),
+            t,
+        );
+        assert_eq!(s.pending(), 1, "surcharge cleared after the first batch");
+    }
+
+    #[test]
+    fn evict_drains_residents_and_leaves_other_models() {
+        let mut s = OrlojScheduler::new(cfg(), 42);
+        let h = Histogram::from_weights(8.0, 1.0, &[1.0, 2.0, 1.0, 1.0]);
+        s.seed_profile(ModelId(0), AppId(0), &h, 100);
+        s.seed_profile(ModelId(1), AppId(0), &h, 100);
+        for i in 0..6u64 {
+            let model = ModelId((i % 2) as u32);
+            s.on_arrival(
+                Request::new(i, AppId(0), 0, ms_to_us(5_000.0), 10.0).with_model(model),
+                0,
+            );
+        }
+        assert_eq!(s.pending(), 6);
+        let drained = s.evict_model(ModelId(0));
+        let mut ids: Vec<u64> = drained.iter().map(|r| r.id.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 2, 4]);
+        assert_eq!(s.pending(), 3);
+        assert_eq!(s.pending_for(ModelId(0)), 0);
+        assert_eq!(s.pending_for(ModelId(1)), 3);
+        // The survivors still schedule (model 1's group untouched), and
+        // the evicted model's shell accepts a reinstall + new arrivals.
+        let b = s.next_batch(1_000).expect("model 1 still schedulable");
+        assert!(b.iter().all(|r| r.model == ModelId(1)));
+        s.install_model(ModelId(0), 0.0, 2_000);
+        s.on_arrival(
+            Request::new(9, AppId(0), 2_000, ms_to_us(5_000.0), 10.0).with_model(ModelId(0)),
+            2_000,
+        );
+        assert_eq!(s.pending_for(ModelId(0)), 1);
+        assert!(s.evict_model(ModelId(7)).is_empty(), "unknown model no-ops");
+    }
+
+    #[test]
+    fn reap_matches_next_batch_shedding() {
+        // Reaping at t must drop exactly what next_batch(t) would drop
+        // before forming a batch — same policy, earlier bookkeeping.
+        let mk = || {
+            let mut s = seeded_sched();
+            s.on_arrival(req(1, 0, 40.0), 0); // doomed by t = 38 ms
+            s.on_arrival(req(2, 0, 2_000.0), 0); // comfortable
+            s
+        };
+        let t = ms_to_us(38.0);
+        let mut reaped = mk();
+        reaped.reap(t);
+        let dropped_by_reap: Vec<u64> =
+            reaped.drain_dropped().iter().map(|(r, _)| r.id.0).collect();
+        assert_eq!(dropped_by_reap, vec![1]);
+        assert_eq!(reaped.pending(), 1);
+        // The subsequent batch is identical to the un-reaped path's.
+        let mut plain = mk();
+        let a = reaped.next_batch(t).expect("batch");
+        let b = plain.next_batch(t).expect("batch");
+        assert_eq!(
+            a.iter().map(|r| r.id.0).collect::<Vec<_>>(),
+            b.iter().map(|r| r.id.0).collect::<Vec<_>>()
+        );
+        assert_eq!(plain.drain_dropped().len(), 1, "same shed either way");
     }
 
     #[test]

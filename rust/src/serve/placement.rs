@@ -1,4 +1,5 @@
-//! Cluster placement: which workers host which models (DESIGN.md §3).
+//! Cluster placement: which workers host which models, and the elastic
+//! controller that changes the answer at runtime (DESIGN.md §3, §8).
 //!
 //! Production clusters multiplex many models across their workers the way
 //! Clockwork does per-model placement; a [`Placement`] records the
@@ -6,7 +7,18 @@
 //! ever routed to a worker hosting its model. The default
 //! ([`Placement::unconstrained`]) hosts every model everywhere, which is
 //! exactly the historical single-model behaviour.
+//!
+//! Under *elastic* placement the assignment is live: a
+//! [`PlacementController`] tracks per-model demand (arrival counts plus
+//! router-side queue-depth snapshots), decides `Load`/`Unload` actions
+//! under a per-worker capacity budget, and models each load as a
+//! Clockwork-style cold start ([`ColdStartCost`]: fixed fetch plus
+//! per-weight transfer). A warming worker is not routed to until its
+//! load completes (`serve::Event::PlacementDone`); an eviction drains the
+//! model's queued requests back to the router for re-routing rather than
+//! dropping them (the evict-drain invariant, DESIGN.md §8).
 
+use crate::clock::Micros;
 use crate::core::request::ModelId;
 
 /// Worker→models assignment for a cluster.
@@ -54,11 +66,19 @@ impl Placement {
     /// * `skewed` — model 0 (the hot model) is hosted everywhere; each
     ///   model `m > 0` only on worker `m % workers`;
     /// * explicit `"0,1;1;0"` — semicolon-separated per-worker model
-    ///   lists (must name exactly `workers` groups).
+    ///   lists (must name exactly `workers` groups; a model may appear
+    ///   at most once per group — duplicates would silently double-count
+    ///   against capacity budgets).
     ///
     /// Returns None for an unknown spec, a malformed explicit list, or an
-    /// explicit list that leaves some model `< models` unhosted.
+    /// explicit list that leaves some model `< models` unhosted; see
+    /// [`Placement::parse_checked`] for the error message.
     pub fn parse(spec: &str, workers: usize, models: usize) -> Option<Placement> {
+        Self::parse_checked(spec, workers, models).ok()
+    }
+
+    /// [`Placement::parse`] with a human-readable rejection reason.
+    pub fn parse_checked(spec: &str, workers: usize, models: usize) -> Result<Placement, String> {
         let (workers, models) = (workers.max(1), models.max(1));
         let hosted: Vec<Vec<ModelId>> = match spec {
             "all" => (0..workers)
@@ -83,13 +103,25 @@ impl Placement {
             explicit => {
                 let groups: Vec<&str> = explicit.split(';').collect();
                 if groups.len() != workers {
-                    return None;
+                    return Err(format!(
+                        "placement '{explicit}' names {} worker group(s), cluster has {workers}",
+                        groups.len()
+                    ));
                 }
                 let mut hosted = Vec::with_capacity(workers);
-                for g in groups {
-                    let mut ms = Vec::new();
+                for (w, g) in groups.iter().enumerate() {
+                    let mut ms: Vec<ModelId> = Vec::new();
                     for tok in g.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-                        ms.push(ModelId(tok.parse::<u32>().ok()?));
+                        let id = tok.parse::<u32>().map_err(|_| {
+                            format!("placement '{explicit}': worker {w} lists bad model id '{tok}'")
+                        })?;
+                        if ms.contains(&ModelId(id)) {
+                            return Err(format!(
+                                "placement '{explicit}': worker {w} lists model {id} more than \
+                                 once — duplicates would double-count against the capacity budget"
+                            ));
+                        }
+                        ms.push(ModelId(id));
                     }
                     hosted.push(ms);
                 }
@@ -99,7 +131,12 @@ impl Placement {
         let p = Placement::new(hosted);
         // Every model must be hosted somewhere, or its requests could
         // never be served.
-        (0..models).all(|m| p.hosts_anywhere(ModelId(m as u32))).then_some(p)
+        for m in 0..models {
+            if !p.hosts_anywhere(ModelId(m as u32)) {
+                return Err(format!("placement '{spec}' leaves model {m} unhosted"));
+            }
+        }
+        Ok(p)
     }
 
     pub fn workers(&self) -> usize {
@@ -136,6 +173,453 @@ impl Placement {
         all.dedup();
         all
     }
+
+    /// True for [`Placement::unconstrained`] placements (no explicit
+    /// worker→models lists; elastic control needs an explicit one).
+    pub fn is_unconstrained(&self) -> bool {
+        self.hosted.is_empty()
+    }
+
+    /// Number of models hosted on worker `w` (0 when unconstrained — the
+    /// model set is open, so capacity budgets do not apply).
+    pub fn hosted_count(&self, w: usize) -> usize {
+        self.hosted.get(w).map_or(0, |ms| ms.len())
+    }
+
+    /// Install `model` on worker `w` (elastic placement; no-op when
+    /// already hosted). Panics on an unconstrained placement — it has no
+    /// per-worker lists to mutate; parse an explicit one first.
+    pub fn install(&mut self, w: usize, model: ModelId) {
+        assert!(
+            !self.hosted.is_empty(),
+            "cannot mutate an unconstrained placement"
+        );
+        let ms = &mut self.hosted[w];
+        if let Err(pos) = ms.binary_search(&model) {
+            ms.insert(pos, model);
+        }
+    }
+
+    /// Remove `model` from worker `w` (elastic placement; no-op when not
+    /// hosted). Panics on an unconstrained placement.
+    pub fn evict(&mut self, w: usize, model: ModelId) {
+        assert!(
+            !self.hosted.is_empty(),
+            "cannot mutate an unconstrained placement"
+        );
+        if let Some(ms) = self.hosted.get_mut(w) {
+            ms.retain(|m| *m != model);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Elastic placement: cold-start cost model + controller (DESIGN.md §8)
+// ---------------------------------------------------------------------
+
+/// Clockwork-style model-load cost curve: a fixed fetch latency plus a
+/// per-weight-unit transfer term. Weight units default to 1.0 per model
+/// (override per model for heterogeneous fleets).
+#[derive(Debug, Clone)]
+pub struct ColdStartCost {
+    /// Fixed fetch/setup latency per load (ms).
+    pub fetch_ms: f64,
+    /// Transfer latency per weight unit (ms).
+    pub per_weight_ms: f64,
+    /// Per-model weight units (unlisted models weigh 1.0).
+    weights: Vec<(u32, f64)>,
+}
+
+impl ColdStartCost {
+    pub fn new(fetch_ms: f64, per_weight_ms: f64) -> Self {
+        assert!(fetch_ms >= 0.0 && per_weight_ms >= 0.0);
+        ColdStartCost {
+            fetch_ms,
+            per_weight_ms,
+            weights: Vec::new(),
+        }
+    }
+
+    /// Override one model's weight units.
+    pub fn with_weight(mut self, model: ModelId, units: f64) -> Self {
+        assert!(units >= 0.0);
+        match self.weights.iter_mut().find(|(m, _)| *m == model.0) {
+            Some((_, u)) => *u = units,
+            None => self.weights.push((model.0, units)),
+        }
+        self
+    }
+
+    /// Weight units of one model (1.0 unless overridden).
+    pub fn weight(&self, model: ModelId) -> f64 {
+        self.weights
+            .iter()
+            .find(|(m, _)| *m == model.0)
+            .map_or(1.0, |(_, u)| *u)
+    }
+
+    /// Predicted load latency for one model (ms).
+    pub fn load_ms(&self, model: ModelId) -> f64 {
+        self.fetch_ms + self.per_weight_ms * self.weight(model)
+    }
+}
+
+impl Default for ColdStartCost {
+    /// ~200 ms per load: 50 ms fetch + 150 ms transfer per weight unit
+    /// (the order of magnitude Clockwork reports for PCIe model loads).
+    fn default() -> Self {
+        ColdStartCost::new(50.0, 150.0)
+    }
+}
+
+/// Elastic-controller knobs.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Max models per worker, counting warming loads (0 = unlimited).
+    pub capacity: usize,
+    /// Controller decision interval (µs). Decisions piggyback on serve
+    /// events (`Wake`), so the effective cadence is `max(interval,
+    /// inter-event gap)`.
+    pub interval_us: Micros,
+    /// EWMA weight of the newest demand observation (0..1].
+    pub alpha: f64,
+    /// Minimum dwell after a load before the same (worker, model) pair
+    /// may be unloaded (anti-thrash hysteresis, µs).
+    pub min_dwell_us: Micros,
+    /// Cold-start cost curve for loads.
+    pub cold_start: ColdStartCost,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            capacity: 2,
+            interval_us: 500_000,
+            alpha: 0.4,
+            min_dwell_us: 2_000_000,
+            cold_start: ColdStartCost::default(),
+        }
+    }
+}
+
+/// One placement action the serving core must apply/dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementAction {
+    /// Begin loading `model` onto `worker` (completes asynchronously with
+    /// `Event::PlacementDone` after the cold-start latency).
+    Load { worker: usize, model: ModelId },
+    /// Remove `model` from `worker` immediately, draining its queued
+    /// requests back to the router.
+    Unload { worker: usize, model: ModelId },
+}
+
+/// Per-worker snapshot the controller decides over (built by the serving
+/// core; `queued[i]` is the queue depth of `hosted[i]`).
+#[derive(Debug, Clone)]
+pub struct WorkerView {
+    pub worker: usize,
+    /// Ready (routing-visible) models.
+    pub hosted: Vec<ModelId>,
+    /// Model currently warming on this worker, if any (≤1 load in flight
+    /// per worker).
+    pub loading: Option<ModelId>,
+    /// Queued requests per hosted model, aligned with `hosted`.
+    pub queued: Vec<usize>,
+}
+
+impl WorkerView {
+    fn queued_of(&self, model: ModelId) -> usize {
+        self.hosted
+            .iter()
+            .position(|m| *m == model)
+            .map_or(0, |i| self.queued[i])
+    }
+
+    fn total_queued(&self) -> usize {
+        self.queued.iter().sum()
+    }
+}
+
+/// The live placement controller (DESIGN.md §8).
+///
+/// Demand per model is an EWMA over decision intervals of `arrivals in
+/// the window + queued backlog` (the backlog term is the miss-pressure
+/// feedback: a model whose queues grow is under-replicated even at a
+/// steady arrival rate). Desired replica counts are a D'Hondt
+/// apportionment of the `workers × capacity` slot budget over the demand
+/// shares — every known model keeps at least one replica, the rest of
+/// the budget follows demand. The diff against the current hosting emits
+/// `Unload`s first (freeing budget), then `Load`s onto the emptiest
+/// eligible workers. Invariants:
+///
+/// * a model is never unloaded below one *ready* (non-warming) replica;
+/// * at most one load is in flight per worker;
+/// * a pair loaded less than `min_dwell_us` ago is not unloaded;
+/// * with zero observed demand the controller holds still (no actions on
+///   startup before traffic shapes the EWMA).
+///
+/// All tie-breaks are deterministic (model id, worker index), so elastic
+/// runs stay replayable.
+pub struct PlacementController {
+    cfg: ElasticConfig,
+    /// EWMA demand per model, kept sorted by model id.
+    demand: Vec<(ModelId, f64)>,
+    /// Arrivals per model since the last decision.
+    window: Vec<(ModelId, u64)>,
+    /// (worker, model, installed_at) dwell records for loads we issued.
+    installed: Vec<(usize, ModelId, Micros)>,
+    next_decision: Micros,
+}
+
+impl PlacementController {
+    pub fn new(cfg: ElasticConfig) -> Self {
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha in (0, 1]");
+        PlacementController {
+            cfg,
+            demand: Vec::new(),
+            window: Vec::new(),
+            installed: Vec::new(),
+            next_decision: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ElasticConfig {
+        &self.cfg
+    }
+
+    pub fn cold_start(&self) -> &ColdStartCost {
+        &self.cfg.cold_start
+    }
+
+    /// Earliest time `actions` will do anything (cheap pre-gate so the
+    /// serving core does not build views on every wake).
+    pub fn next_decision_at(&self) -> Micros {
+        self.next_decision
+    }
+
+    /// Count one arrival of `model` into the demand window.
+    pub fn note_arrival(&mut self, model: ModelId) {
+        match self.window.iter_mut().find(|(m, _)| *m == model) {
+            Some((_, c)) => *c += 1,
+            None => self.window.push((model, 1)),
+        }
+    }
+
+    /// Fold the window into the EWMA demand table.
+    fn update_demand(&mut self, views: &[WorkerView]) {
+        let mut models: Vec<ModelId> = views
+            .iter()
+            .flat_map(|v| v.hosted.iter().copied())
+            .chain(views.iter().filter_map(|v| v.loading))
+            .chain(self.window.iter().map(|(m, _)| *m))
+            .chain(self.demand.iter().map(|(m, _)| *m))
+            .collect();
+        models.sort_unstable();
+        models.dedup();
+        for m in models {
+            let arr = self
+                .window
+                .iter()
+                .find(|(wm, _)| *wm == m)
+                .map_or(0, |(_, c)| *c) as f64;
+            let queued: usize = views.iter().map(|v| v.queued_of(m)).sum();
+            let obs = arr + queued as f64;
+            match self.demand.iter_mut().find(|(dm, _)| *dm == m) {
+                Some((_, d)) => *d = self.cfg.alpha * obs + (1.0 - self.cfg.alpha) * *d,
+                None => {
+                    // Keep the table sorted by id for deterministic scans.
+                    let pos = self
+                        .demand
+                        .partition_point(|(dm, _)| *dm < m);
+                    self.demand.insert(pos, (m, self.cfg.alpha * obs));
+                }
+            }
+        }
+        self.window.clear();
+    }
+
+    fn demand_of(&self, model: ModelId) -> f64 {
+        self.demand
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(0.0, |(_, d)| *d)
+    }
+
+    /// Whether (worker, model) was loaded too recently to unload.
+    fn dwell_blocked(&self, w: usize, m: ModelId, now: Micros) -> bool {
+        self.installed.iter().any(|(iw, im, at)| {
+            *iw == w && *im == m && now.saturating_sub(*at) < self.cfg.min_dwell_us
+        })
+    }
+
+    /// D'Hondt apportionment of the slot budget over demand shares:
+    /// every model starts at one replica, each further slot goes to the
+    /// model maximizing `demand / current`, capped at the worker count.
+    fn desired(&self, n_workers: usize) -> Vec<(ModelId, usize)> {
+        let k = self.demand.len();
+        if k == 0 || n_workers == 0 {
+            return Vec::new();
+        }
+        let cap = if self.cfg.capacity == 0 {
+            k
+        } else {
+            self.cfg.capacity.min(k)
+        };
+        let slots = n_workers * cap;
+        let mut desired: Vec<(ModelId, usize)> =
+            self.demand.iter().map(|(m, _)| (*m, 1)).collect();
+        let mut used = k.min(slots);
+        while used < slots {
+            let mut best: Option<(f64, usize)> = None;
+            for (i, (m, d)) in desired.iter().enumerate() {
+                if *d >= n_workers {
+                    continue;
+                }
+                let score = self.demand_of(*m) / *d as f64;
+                if score <= 0.0 {
+                    continue;
+                }
+                // Strictly-greater keeps the lowest model id on ties.
+                let better = match best {
+                    None => true,
+                    Some((bs, _)) => score > bs,
+                };
+                if better {
+                    best = Some((score, i));
+                }
+            }
+            match best {
+                Some((_, i)) => {
+                    desired[i].1 += 1;
+                    used += 1;
+                }
+                None => break,
+            }
+        }
+        desired
+    }
+
+    /// Decide the placement actions for this instant. No-op before the
+    /// next decision interval or while demand is all-zero.
+    pub fn actions(&mut self, now: Micros, views: &[WorkerView]) -> Vec<PlacementAction> {
+        if now < self.next_decision {
+            return Vec::new();
+        }
+        debug_assert!(
+            views.iter().enumerate().all(|(i, v)| v.worker == i),
+            "worker views must be dense and ordered by worker id"
+        );
+        self.next_decision = now + self.cfg.interval_us.max(1);
+        self.update_demand(views);
+        if self.demand.iter().all(|(_, d)| *d <= 1e-9) {
+            return Vec::new(); // no signal yet — hold the placement still
+        }
+        let n = views.len();
+        let desired = self.desired(n);
+        let cap = if self.cfg.capacity == 0 {
+            usize::MAX
+        } else {
+            self.cfg.capacity
+        };
+        let mut acts = Vec::new();
+        // Effective per-worker hosted counts as this round's actions land.
+        let mut eff_count: Vec<usize> = views
+            .iter()
+            .map(|v| v.hosted.len() + v.loading.is_some() as usize)
+            .collect();
+        let mut load_busy: Vec<bool> = views.iter().map(|v| v.loading.is_some()).collect();
+        // Hosting sets mutated by this round's own actions.
+        let mut ready: Vec<Vec<usize>> = Vec::with_capacity(desired.len());
+        for (m, _) in &desired {
+            ready.push(
+                views
+                    .iter()
+                    .filter(|v| v.hosted.contains(m))
+                    .map(|v| v.worker)
+                    .collect(),
+            );
+        }
+
+        // Unloads first: free budget before placing loads.
+        for (mi, (m, want)) in desired.iter().enumerate() {
+            let warming = views.iter().filter(|v| v.loading == Some(*m)).count();
+            let mut cur = ready[mi].len() + warming;
+            if cur <= *want {
+                continue;
+            }
+            // Candidates: ready hosts past their dwell, cheapest drain
+            // first (fewest queued of m, then highest worker index so
+            // low-index workers keep stable hosting).
+            let mut cands: Vec<(usize, usize)> = ready[mi]
+                .iter()
+                .filter(|&&w| !self.dwell_blocked(w, *m, now))
+                .map(|&w| (views[w].queued_of(*m), w))
+                .collect();
+            cands.sort_by(|a, b| (a.0, std::cmp::Reverse(a.1)).cmp(&(b.0, std::cmp::Reverse(b.1))));
+            for (_, w) in cands {
+                // Never drop the last ready replica of a model.
+                if cur <= *want || ready[mi].len() <= 1 {
+                    break;
+                }
+                acts.push(PlacementAction::Unload { worker: w, model: *m });
+                ready[mi].retain(|&rw| rw != w);
+                eff_count[w] = eff_count[w].saturating_sub(1);
+                self.installed.retain(|(iw, im, _)| !(*iw == w && *im == *m));
+                cur -= 1;
+            }
+        }
+
+        // Loads: highest-demand models pick workers first.
+        let mut order: Vec<usize> = (0..desired.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (da, db) = (self.demand_of(desired[a].0), self.demand_of(desired[b].0));
+            db.partial_cmp(&da)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(desired[a].0.cmp(&desired[b].0))
+        });
+        for mi in order {
+            let (m, want) = desired[mi];
+            let warming = views.iter().filter(|v| v.loading == Some(m)).count();
+            let mut cur = ready[mi].len() + warming;
+            while cur < want {
+                // Eligible: no load in flight, not hosting m (including
+                // hosts this round just kept), free budget. Pick the
+                // emptiest worker (count, then queue, then index).
+                let unloaded_m_this_round = |w: usize| {
+                    acts.iter().any(|a| {
+                        matches!(a, PlacementAction::Unload { worker, model }
+                                 if *worker == w && *model == m)
+                    })
+                };
+                let mut best: Option<(usize, usize, usize)> = None; // (count, queued, worker)
+                for v in views {
+                    let w = v.worker;
+                    if load_busy[w]
+                        || ready[mi].contains(&w)
+                        || unloaded_m_this_round(w)
+                        || eff_count[w] >= cap
+                    {
+                        continue;
+                    }
+                    let key = (eff_count[w], v.total_queued(), w);
+                    let better = match best {
+                        None => true,
+                        Some(b) => key < b,
+                    };
+                    if better {
+                        best = Some(key);
+                    }
+                }
+                let Some((_, _, w)) = best else { break };
+                acts.push(PlacementAction::Load { worker: w, model: m });
+                load_busy[w] = true;
+                eff_count[w] += 1;
+                self.installed.push((w, m, now));
+                cur += 1;
+            }
+        }
+        acts
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +635,8 @@ mod tests {
         assert!(p.hosts_anywhere(ModelId(7)));
         assert!(p.models().is_empty());
         assert!(p.hosted_on(1).is_none());
+        assert!(p.is_unconstrained());
+        assert_eq!(p.hosted_count(0), 0);
     }
 
     #[test]
@@ -162,6 +648,8 @@ mod tests {
             }
         }
         assert_eq!(p.models(), vec![ModelId(0), ModelId(1), ModelId(2)]);
+        assert!(!p.is_unconstrained());
+        assert_eq!(p.hosted_count(1), 3);
     }
 
     #[test]
@@ -210,5 +698,221 @@ mod tests {
         assert!(Placement::parse("0;0;0", 2, 1).is_none(), "wrong worker count");
         assert!(Placement::parse("0;0", 2, 2).is_none(), "model 1 unhosted");
         assert!(Placement::parse("0,x;1", 2, 2).is_none(), "bad model id");
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_models_in_one_group() {
+        // Satellite bugfix: "0,0;1" silently deduped before, which would
+        // double-count capacity under a budget. Now a hard error.
+        assert!(Placement::parse("0,0;1", 2, 2).is_none());
+        let err = Placement::parse_checked("0,0;1", 2, 2).unwrap_err();
+        assert!(err.contains("more than once"), "unclear error: {err}");
+        let err = Placement::parse_checked("0;1,1,0", 2, 2).unwrap_err();
+        assert!(err.contains("worker 1"), "should name the group: {err}");
+        // Repetition across different workers is fine (that's replication).
+        assert!(Placement::parse("0;0,1", 2, 2).is_some());
+    }
+
+    #[test]
+    fn parse_checked_reports_reasons() {
+        assert!(Placement::parse_checked("0;1", 3, 2)
+            .unwrap_err()
+            .contains("2 worker group(s)"));
+        assert!(Placement::parse_checked("0;0", 2, 2)
+            .unwrap_err()
+            .contains("unhosted"));
+    }
+
+    #[test]
+    fn install_and_evict_mutate_hosting() {
+        let mut p = Placement::parse("partition", 2, 2).unwrap();
+        assert!(!p.hosts(0, ModelId(1)));
+        p.install(0, ModelId(1));
+        assert!(p.hosts(0, ModelId(1)));
+        assert_eq!(p.hosted_count(0), 2);
+        p.install(0, ModelId(1)); // idempotent
+        assert_eq!(p.hosted_count(0), 2);
+        p.evict(0, ModelId(0));
+        assert!(!p.hosts(0, ModelId(0)));
+        assert!(p.hosts_anywhere(ModelId(0)), "worker 1 still hosts it");
+        // Hosted lists stay sorted for binary_search.
+        p.install(0, ModelId(0));
+        assert_eq!(p.hosted_on(0), Some(&[ModelId(0), ModelId(1)][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "unconstrained")]
+    fn unconstrained_placements_cannot_mutate() {
+        Placement::unconstrained(2).install(0, ModelId(0));
+    }
+
+    #[test]
+    fn cold_start_cost_curve() {
+        let c = ColdStartCost::new(50.0, 100.0).with_weight(ModelId(1), 3.0);
+        assert!((c.load_ms(ModelId(0)) - 150.0).abs() < 1e-12);
+        assert!((c.load_ms(ModelId(1)) - 350.0).abs() < 1e-12);
+        assert!((c.weight(ModelId(9)) - 1.0).abs() < 1e-12);
+    }
+
+    fn view(worker: usize, hosted: &[u32], queued: &[usize]) -> WorkerView {
+        WorkerView {
+            worker,
+            hosted: hosted.iter().map(|&m| ModelId(m)).collect(),
+            loading: None,
+            queued: queued.to_vec(),
+        }
+    }
+
+    fn drained_cfg() -> ElasticConfig {
+        ElasticConfig {
+            capacity: 1,
+            interval_us: 1_000,
+            alpha: 1.0,        // no smoothing: decisions follow the window
+            min_dwell_us: 0,   // no hysteresis in unit tests
+            cold_start: ColdStartCost::new(10.0, 10.0),
+        }
+    }
+
+    #[test]
+    fn controller_holds_still_without_demand() {
+        let mut c = PlacementController::new(drained_cfg());
+        let views = vec![view(0, &[0], &[0]), view(1, &[1], &[0])];
+        assert!(c.actions(0, &views).is_empty(), "no signal, no actions");
+    }
+
+    #[test]
+    fn controller_shifts_replicas_toward_the_hot_model() {
+        // 4 workers × capacity 1, models {0, 1}, demand 9:1 → desired
+        // (3, 1): the controller unloads model 1 from one replica and
+        // loads model 0 there.
+        let mut c = PlacementController::new(drained_cfg());
+        for _ in 0..9 {
+            c.note_arrival(ModelId(0));
+        }
+        c.note_arrival(ModelId(1));
+        let views = vec![
+            view(0, &[0], &[0]),
+            view(1, &[1], &[0]),
+            view(2, &[0], &[0]),
+            view(3, &[1], &[0]),
+        ];
+        let acts = c.actions(0, &views);
+        // Unload first (frees the slot), then load into it.
+        assert_eq!(
+            acts,
+            vec![
+                PlacementAction::Unload { worker: 3, model: ModelId(1) },
+                PlacementAction::Load { worker: 3, model: ModelId(0) },
+            ],
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn controller_never_drops_the_last_ready_host() {
+        let mut c = PlacementController::new(drained_cfg());
+        for _ in 0..20 {
+            c.note_arrival(ModelId(0));
+        }
+        // Model 1 has zero demand but one host: it must keep it.
+        let views = vec![view(0, &[0], &[5]), view(1, &[1], &[0])];
+        let acts = c.actions(0, &views);
+        assert!(
+            !acts.iter().any(|a| matches!(
+                a,
+                PlacementAction::Unload { model: ModelId(1), .. }
+            )),
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn controller_respects_capacity_and_loading_slots() {
+        let mut cfg = drained_cfg();
+        cfg.capacity = 1;
+        let mut c = PlacementController::new(cfg);
+        for _ in 0..10 {
+            c.note_arrival(ModelId(0));
+        }
+        c.note_arrival(ModelId(1));
+        // Worker 1 is already warming model 0: it must not receive a
+        // second load, and its slot counts against capacity.
+        let mut v1 = view(1, &[], &[]);
+        v1.loading = Some(ModelId(0));
+        let views = vec![view(0, &[0], &[3]), v1, view(2, &[1], &[0])];
+        let acts = c.actions(0, &views);
+        for a in &acts {
+            if let PlacementAction::Load { worker, .. } = a {
+                assert_ne!(*worker, 1, "worker 1 already has a load in flight");
+            }
+        }
+        // Nobody exceeds capacity 1: the only legal load target would be
+        // a worker freed by an unload this round.
+        assert!(
+            acts.len() <= 2,
+            "capacity 1 bounds the action set: {acts:?}"
+        );
+    }
+
+    #[test]
+    fn controller_interval_gates_decisions() {
+        let mut cfg = drained_cfg();
+        cfg.interval_us = 1_000_000;
+        let mut c = PlacementController::new(cfg);
+        for _ in 0..10 {
+            c.note_arrival(ModelId(0));
+        }
+        let views = vec![view(0, &[0], &[0]), view(1, &[1], &[0])];
+        let _ = c.actions(0, &views);
+        assert_eq!(c.next_decision_at(), 1_000_000);
+        for _ in 0..10 {
+            c.note_arrival(ModelId(0));
+        }
+        assert!(
+            c.actions(500_000, &views).is_empty(),
+            "inside the decision interval"
+        );
+    }
+
+    #[test]
+    fn dwell_protects_fresh_loads_from_thrash() {
+        let mut cfg = drained_cfg();
+        cfg.min_dwell_us = 1_000_000;
+        cfg.interval_us = 1;
+        let mut c = PlacementController::new(cfg);
+        // Round 1 (t=0): model 0 is hot → worker 2 sheds model 1 and
+        // loads model 0 (recorded as installed at t=0).
+        for _ in 0..10 {
+            c.note_arrival(ModelId(0));
+        }
+        c.note_arrival(ModelId(1));
+        let views = vec![view(0, &[0], &[0]), view(1, &[1], &[0]), view(2, &[1], &[0])];
+        let acts = c.actions(0, &views);
+        assert!(
+            acts.contains(&PlacementAction::Load { worker: 2, model: ModelId(0) }),
+            "hot model should replicate onto the freed worker: {acts:?}"
+        );
+        // Round 2 (t=10 ms, inside the dwell): demand flips hard to model
+        // 1. The fresh (worker 2, model 0) install is dwell-protected, so
+        // the rebalance must shed model 0 from worker 0 instead.
+        let views = vec![view(0, &[0], &[0]), view(1, &[1], &[0]), view(2, &[0], &[0])];
+        for _ in 0..50 {
+            c.note_arrival(ModelId(1));
+        }
+        let acts = c.actions(10_000, &views);
+        assert!(
+            !acts.contains(&PlacementAction::Unload { worker: 2, model: ModelId(0) }),
+            "dwell must protect the fresh load: {acts:?}"
+        );
+        // Round 3 (t=2 s, dwell expired, same hosting shape): the
+        // (worker 2, model 0) pair is now fair game for the rebalance.
+        for _ in 0..50 {
+            c.note_arrival(ModelId(1));
+        }
+        let acts = c.actions(2_000_000, &views);
+        assert!(
+            acts.contains(&PlacementAction::Unload { worker: 2, model: ModelId(0) }),
+            "post-dwell rebalance: {acts:?}"
+        );
     }
 }

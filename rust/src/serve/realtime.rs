@@ -5,13 +5,18 @@
 //! Arrivals come in through an mpsc channel from any number of client
 //! threads; each dispatch is shipped to its replica's worker thread, which
 //! executes the batch (PJRT on the real path) and reports a `BatchDone`.
+//! Elastic model loads ride the same per-worker channel: a
+//! [`Dispatch::Load`](super::Dispatch) runs `Worker::load_model` on the
+//! worker's thread (the PJRT worker actually loads the runtime there) and
+//! answers with a `PlacementDone`; unloads are fire-and-forget
+//! notifications that let the worker release executor-side state.
 //! Unlike the historical single-worker `server::Server`, execution never
 //! blocks the scheduling loop — N batches run concurrently, one per
 //! replica.
 
-use super::{Event, ServingLoop, WorkerStats};
+use super::{Dispatch, Event, PlacementStats, ServingLoop, WorkerStats};
 use crate::clock::{Clock, Micros};
-use crate::core::request::{Completion, Request};
+use crate::core::request::{Completion, ModelId, Request};
 use crate::scheduler::Scheduler;
 use crate::sim::worker::Worker;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -36,8 +41,20 @@ pub struct ServeResult {
     pub completions: Vec<Completion>,
     /// Per-replica execution counters.
     pub per_worker: Vec<WorkerStats>,
+    /// Elastic placement counters (all zero on static runs).
+    pub placement: PlacementStats,
     /// Wall-clock length of the run (µs since the serving clock's epoch).
     pub end_time: Micros,
+}
+
+/// Work items shipped to a replica's executor thread.
+enum Work {
+    Batch(Vec<Request>),
+    /// Load `model` (predicted cold-start hint, ms); answered with
+    /// `Msg::Loaded`.
+    Load(ModelId, f64),
+    /// Release `model`'s executor-side state; no reply.
+    Unload(ModelId),
 }
 
 /// Internal event-channel message: external arrivals and worker-thread
@@ -46,9 +63,17 @@ enum Msg {
     Arrival(Request),
     ArrivalsClosed,
     Done { worker: usize, batch_ms: f64 },
-    /// `Worker::execute` panicked on this replica's thread. Re-raised on
-    /// the scheduling thread — a dead replica with a batch marked
-    /// in-flight would otherwise hang the loop forever.
+    /// A model load finished on this replica's thread; `load_ms` is the
+    /// measured load time (the PJRT worker times the actual runtime
+    /// load).
+    Loaded {
+        worker: usize,
+        model: ModelId,
+        load_ms: f64,
+    },
+    /// `Worker::execute`/`load_model` panicked on this replica's thread.
+    /// Re-raised on the scheduling thread — a dead replica with a batch
+    /// marked in-flight would otherwise hang the loop forever.
     WorkerPanicked { worker: usize },
 }
 
@@ -60,6 +85,17 @@ fn ingest<C: Clock, S: Scheduler>(core: &mut ServingLoop<C, S>, msg: Msg, open: 
         Msg::ArrivalsClosed => *open = false,
         Msg::Done { worker, batch_ms } => {
             core.on_event(Event::BatchDone { worker, batch_ms });
+        }
+        Msg::Loaded {
+            worker,
+            model,
+            load_ms,
+        } => {
+            core.on_event(Event::PlacementDone {
+                worker,
+                model,
+                load_ms,
+            });
         }
         Msg::WorkerPanicked { worker } => {
             panic!("worker thread {worker} panicked during batch execution");
@@ -81,22 +117,51 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
     std::thread::scope(|scope| {
         // One executor thread per replica; exits when its dispatch channel
         // closes.
-        let mut dispatch_txs: Vec<Sender<Vec<Request>>> = Vec::with_capacity(n);
+        let mut dispatch_txs: Vec<Sender<Work>> = Vec::with_capacity(n);
         for (w, mut worker) in workers.into_iter().enumerate() {
-            let (dtx, drx) = mpsc::channel::<Vec<Request>>();
+            let (dtx, drx) = mpsc::channel::<Work>();
             dispatch_txs.push(dtx);
             let etx = etx.clone();
             scope.spawn(move || {
-                while let Ok(batch) = drx.recv() {
-                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        worker.execute(&batch)
-                    }));
-                    let msg = match result {
-                        Ok(ms) => Msg::Done {
-                            worker: w,
-                            batch_ms: ms,
-                        },
-                        Err(_) => Msg::WorkerPanicked { worker: w },
+                while let Ok(work) = drx.recv() {
+                    let msg = match work {
+                        Work::Batch(batch) => {
+                            let result =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    worker.execute(&batch)
+                                }));
+                            match result {
+                                Ok(ms) => Msg::Done {
+                                    worker: w,
+                                    batch_ms: ms,
+                                },
+                                Err(_) => Msg::WorkerPanicked { worker: w },
+                            }
+                        }
+                        Work::Load(model, hint_ms) => {
+                            let result =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    worker.load_model(model, hint_ms)
+                                }));
+                            match result {
+                                Ok(ms) => Msg::Loaded {
+                                    worker: w,
+                                    model,
+                                    load_ms: ms,
+                                },
+                                Err(_) => Msg::WorkerPanicked { worker: w },
+                            }
+                        }
+                        Work::Unload(model) => {
+                            let result =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    worker.unload_model(model)
+                                }));
+                            match result {
+                                Ok(()) => continue, // fire-and-forget
+                                Err(_) => Msg::WorkerPanicked { worker: w },
+                            }
+                        }
                     };
                     let fatal = matches!(msg, Msg::WorkerPanicked { .. });
                     if etx.send(msg).is_err() || fatal {
@@ -153,11 +218,20 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
             // should have surfaced already — fail loudly, don't strand the
             // batch as forever-in-flight.
             for d in core.on_event(Event::Wake) {
-                dispatch_txs[d.worker]
-                    .send(d.batch)
-                    .unwrap_or_else(|_| panic!("worker thread {} is gone", d.worker));
+                let (worker, work) = match d {
+                    Dispatch::Execute { worker, batch } => (worker, Work::Batch(batch)),
+                    Dispatch::Load {
+                        worker,
+                        model,
+                        cost_ms,
+                    } => (worker, Work::Load(model, cost_ms)),
+                    Dispatch::Unload { worker, model } => (worker, Work::Unload(model)),
+                };
+                dispatch_txs[worker]
+                    .send(work)
+                    .unwrap_or_else(|_| panic!("worker thread {worker} is gone"));
             }
-            if !open && core.pending() == 0 && core.in_flight() == 0 {
+            if !open && core.pending() == 0 && core.in_flight() == 0 && core.loading() == 0 {
                 break;
             }
             // Idle: block briefly for new events or the next wake hint.
@@ -179,10 +253,12 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
 
     core.drain_all();
     let end_time = core.now();
+    let placement = core.placement_stats();
     let (completions, per_worker) = core.into_completions();
     ServeResult {
         completions,
         per_worker,
+        placement,
         end_time,
     }
 }
@@ -195,25 +271,30 @@ mod tests {
     use crate::core::batchmodel::BatchCostModel;
     use crate::core::request::AppId;
     use crate::scheduler::SchedulerConfig;
-    use crate::serve::{router, Cluster};
+    use crate::serve::{
+        router, Cluster, ColdStartCost, ElasticConfig, Placement, PlacementController,
+    };
     use crate::sim::worker::SimWorker;
 
-    #[test]
-    fn drains_and_reports_per_worker() {
+    fn edf_scheds(n: usize) -> Vec<EdfScheduler> {
         let cfg = SchedulerConfig {
             cost_model: BatchCostModel::new(0.0, 1.0),
             ..Default::default()
         };
-        let scheds: Vec<EdfScheduler> = (0..2)
+        (0..n)
             .map(|_| {
                 let mut s = EdfScheduler::new(cfg.clone(), 0);
                 s.seed_exec_mean(1.0);
                 s
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn drains_and_reports_per_worker() {
         let core = ServingLoop::new(
             RealClock::new(),
-            Cluster::new(scheds),
+            Cluster::new(edf_scheds(2)),
             router::by_name("round_robin").unwrap(),
         );
         let workers: Vec<SimWorker> = (0..2)
@@ -229,5 +310,48 @@ mod tests {
         assert_eq!(res.completions.len(), 16);
         assert_eq!(res.per_worker.len(), 2);
         assert!(res.per_worker.iter().map(|w| w.batches).sum::<usize>() > 0);
+        assert_eq!(res.placement.actions(), 0);
+    }
+
+    #[test]
+    fn elastic_loads_complete_on_worker_threads() {
+        // Two workers, partition placement over two models, all traffic on
+        // model 0: the controller must replicate model 0 onto worker 1
+        // through the worker thread's load_model and the run must still
+        // drain (the exit condition waits for in-flight loads).
+        let placement = Placement::parse("partition", 2, 2).unwrap();
+        let cluster = Cluster::with_placement(edf_scheds(2), placement);
+        let ctl = PlacementController::new(ElasticConfig {
+            capacity: 2,
+            interval_us: 1_000,
+            alpha: 1.0,
+            min_dwell_us: 0,
+            cold_start: ColdStartCost::new(0.5, 0.5),
+        });
+        let core = ServingLoop::new(
+            RealClock::new(),
+            cluster,
+            router::by_name("least_loaded").unwrap(),
+        )
+        .with_elastic(ctl);
+        let workers: Vec<SimWorker> = (0..2)
+            .map(|w| SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, w))
+            .collect();
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            for i in 0..60u64 {
+                tx.send(Request::new(i, AppId(0), 0, ms_to_us(5_000.0), 1.0))
+                    .unwrap();
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        });
+        let res = serve_cluster(core, workers, rx);
+        handle.join().unwrap();
+        assert_eq!(res.completions.len(), 60, "conservation under elastic");
+        assert!(
+            res.placement.loads >= 1,
+            "hot model should replicate: {:?}",
+            res.placement
+        );
     }
 }

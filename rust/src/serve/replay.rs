@@ -5,7 +5,10 @@
 //!
 //! Batch executions cost zero wall time: worker `w`'s simulated latency
 //! schedules a `BatchDone` at `now + latency`, exactly as the historical
-//! single-worker `sim::engine` did — but for N replicas at once.
+//! single-worker `sim::engine` did — but for N replicas at once. Elastic
+//! model loads are scheduled the same way: a [`Dispatch::Load`] books a
+//! `PlacementDone` at `now + load latency`, so cold starts share the one
+//! event heap with batch completions.
 //!
 //! **Hot loop (§Perf).** The pump is driven by a single min-heap of
 //! pending `(finish time, worker)` completions plus a draining iterator
@@ -17,7 +20,7 @@
 
 use super::{Dispatch, Event, ServingLoop};
 use crate::clock::{ms_to_us, Micros, VirtualClock};
-use crate::core::request::Request;
+use crate::core::request::{ModelId, Request};
 use crate::scheduler::Scheduler;
 use crate::sim::engine::EngineResult;
 use crate::sim::worker::Worker;
@@ -35,8 +38,9 @@ pub fn run_cluster<S: Scheduler, W: Worker>(
 }
 
 /// [`run_cluster`] with a dispatch observer: `on_dispatch(now, d)` fires
-/// for every dispatch decision in virtual-time order (the golden
-/// dispatch-sequence regression tests record these).
+/// for every dispatch decision — batch executions *and* placement
+/// loads/unloads — in virtual-time order (the golden dispatch-sequence
+/// regression tests record these).
 pub fn run_cluster_traced<S, W, F>(
     mut core: ServingLoop<VirtualClock, S>,
     mut workers: Vec<W>,
@@ -59,9 +63,18 @@ where
     // The event heap holds one (finish time, worker) entry per in-flight
     // batch; same-time completions pop in worker order, matching the
     // historical per-worker scan. The measured batch time rides in a side
-    // slot (f64 is not Ord).
+    // slot (f64 is not Ord). Model loads get their own small heap so the
+    // static path's heap discipline is untouched.
     let mut done: BinaryHeap<Reverse<(Micros, usize)>> = BinaryHeap::with_capacity(n);
     let mut done_ms = vec![0.0f64; n];
+    let mut loads: BinaryHeap<Reverse<(Micros, usize, u32)>> = BinaryHeap::new();
+    let mut loads_ms = vec![0.0f64; n];
+    // A worker is one execution resource: loads and batches dispatched to
+    // it serialize, exactly like the realtime pump's per-worker channel
+    // (a load landing behind a running batch starts when the batch
+    // finishes). Static runs only ever dispatch to idle workers, so this
+    // never moves a batch completion there.
+    let mut busy_until: Vec<Micros> = vec![0; n];
     let mut arrivals = requests.into_iter().peekable();
 
     loop {
@@ -69,6 +82,19 @@ where
         // Deliver all arrivals due now, draining the trace in place.
         while arrivals.peek().is_some_and(|r| r.release <= now) {
             core.on_event(Event::Arrival(arrivals.next().unwrap()));
+        }
+        // Complete every model load that is due (installs must land
+        // before dispatching, so a finished replica is routable at once).
+        while let Some(&Reverse((t, w, m))) = loads.peek() {
+            if t > now {
+                break;
+            }
+            loads.pop();
+            core.on_event(Event::PlacementDone {
+                worker: w,
+                model: ModelId(m),
+                load_ms: loads_ms[w],
+            });
         }
         // Complete every in-flight batch that is due.
         while let Some(&Reverse((t, w))) = done.peek() {
@@ -81,21 +107,48 @@ where
                 batch_ms: done_ms[w],
             });
         }
-        // Drain drops and dispatch to every idle replica.
+        // Drain drops, run the placement controller, dispatch.
         for d in core.on_event(Event::Wake) {
-            let ms = workers[d.worker].execute(&d.batch);
             on_dispatch(now, &d);
-            done_ms[d.worker] = ms;
-            done.push(Reverse((now + ms_to_us(ms), d.worker)));
+            match d {
+                Dispatch::Execute { worker, batch } => {
+                    let ms = workers[worker].execute(&batch);
+                    done_ms[worker] = ms;
+                    let fin = busy_until[worker].max(now) + ms_to_us(ms);
+                    busy_until[worker] = fin;
+                    done.push(Reverse((fin, worker)));
+                }
+                Dispatch::Load {
+                    worker,
+                    model,
+                    cost_ms,
+                } => {
+                    let ms = workers[worker].load_model(model, cost_ms);
+                    loads_ms[worker] = ms;
+                    let fin = busy_until[worker].max(now) + ms_to_us(ms).max(1);
+                    busy_until[worker] = fin;
+                    loads.push(Reverse((fin, worker, model.0)));
+                }
+                Dispatch::Unload { worker, model } => {
+                    workers[worker].unload_model(model);
+                }
+            }
         }
         // Everything delivered and drained → done.
-        if arrivals.peek().is_none() && done.is_empty() && core.pending() == 0 {
+        if arrivals.peek().is_none()
+            && done.is_empty()
+            && loads.is_empty()
+            && core.pending() == 0
+        {
             core.drain_all();
             break;
         }
-        // Advance to the next event: arrival, completion, or wake.
+        // Advance to the next event: arrival, completion, load, or wake.
         let mut next: Option<Micros> = arrivals.peek().map(|r| r.release);
         if let Some(&Reverse((t, _))) = done.peek() {
+            next = Some(next.map_or(t, |v| v.min(t)));
+        }
+        if let Some(&Reverse((t, _, _))) = loads.peek() {
             next = Some(next.map_or(t, |v| v.min(t)));
         }
         if let Some(h) = core.next_wake(now) {
@@ -109,6 +162,7 @@ where
     }
 
     let end_time = clock.now();
+    let placement = core.placement_stats();
     let (completions, per_worker) = core.into_completions();
     let batches = per_worker.iter().map(|w| w.batches).sum();
     let busy_us = per_worker.iter().map(|w| w.busy_us).sum();
@@ -118,6 +172,7 @@ where
         batches,
         busy_us,
         per_worker,
+        placement,
     }
 }
 
@@ -128,7 +183,9 @@ mod tests {
     use crate::core::batchmodel::BatchCostModel;
     use crate::core::request::{AppId, Outcome};
     use crate::scheduler::SchedulerConfig;
-    use crate::serve::{router, Cluster};
+    use crate::serve::{
+        router, Cluster, ColdStartCost, ElasticConfig, Placement, PlacementController,
+    };
     use crate::sim::worker::SimWorker;
 
     fn cluster(n: usize) -> Cluster<EdfScheduler> {
@@ -186,6 +243,7 @@ mod tests {
             res.busy_us,
             res.per_worker.iter().map(|w| w.busy_us).sum::<u64>()
         );
+        assert_eq!(res.placement.actions(), 0, "static runs take no actions");
     }
 
     #[test]
@@ -200,10 +258,15 @@ mod tests {
         let mut batches = 0usize;
         let res = run_cluster_traced(core, workers(2), requests(40, 4.0, 1_000.0), |t, d| {
             times.push(t);
-            dispatched += d.batch.len();
-            batches += 1;
-            assert!(d.worker < 2);
-            assert!(!d.batch.is_empty());
+            match d {
+                Dispatch::Execute { worker, batch } => {
+                    dispatched += batch.len();
+                    batches += 1;
+                    assert!(*worker < 2);
+                    assert!(!batch.is_empty());
+                }
+                other => panic!("static run produced {other:?}"),
+            }
         });
         assert_eq!(batches, res.batches, "observer sees every dispatch");
         let executed = res
@@ -235,5 +298,65 @@ mod tests {
         let four = finished(4);
         assert!(four > one, "4 workers ({four}) must beat 1 ({one})");
         assert!(four > 150, "4 workers should clear most of the load: {four}");
+    }
+
+    #[test]
+    fn elastic_load_completes_on_the_virtual_clock() {
+        // Two workers, partition placement, single-model trace: the
+        // controller replicates model 0 onto worker 1 after a cold start,
+        // and the pump books the PlacementDone like a batch completion.
+        let cfg = SchedulerConfig {
+            cost_model: BatchCostModel::new(0.0, 1.0),
+            ..Default::default()
+        };
+        let scheds: Vec<EdfScheduler> = (0..2)
+            .map(|_| {
+                let mut s = EdfScheduler::new(cfg.clone(), 0);
+                s.seed_exec_mean(10.0);
+                s
+            })
+            .collect();
+        let placement = Placement::parse("partition", 2, 2).unwrap();
+        let cluster = Cluster::with_placement(scheds, placement);
+        let ctl = PlacementController::new(ElasticConfig {
+            capacity: 2,
+            interval_us: 10_000,
+            alpha: 1.0,
+            min_dwell_us: 0,
+            cold_start: ColdStartCost::new(10.0, 10.0),
+        });
+        let core = ServingLoop::new(
+            VirtualClock::new(),
+            cluster,
+            router::by_name("least_loaded").unwrap(),
+        )
+        .with_elastic(ctl);
+        let mut load_seen_at: Option<Micros> = None;
+        let mut first_exec_w1: Option<Micros> = None;
+        let res = run_cluster_traced(core, workers(2), requests(120, 1.0, 2_000.0), |t, d| {
+            match d {
+                Dispatch::Load { worker: 1, model: ModelId(0), cost_ms } => {
+                    assert!((cost_ms - 20.0).abs() < 1e-9);
+                    if load_seen_at.is_none() {
+                        load_seen_at = Some(t);
+                    }
+                }
+                Dispatch::Execute { worker: 1, batch } if batch[0].model == ModelId(0) => {
+                    if first_exec_w1.is_none() {
+                        first_exec_w1 = Some(t);
+                    }
+                }
+                _ => {}
+            }
+        });
+        assert_eq!(res.completions.len(), 120, "conservation under elastic");
+        let loaded = load_seen_at.expect("controller should replicate the hot model");
+        assert!(res.placement.loads >= 1);
+        if let Some(t1) = first_exec_w1 {
+            assert!(
+                t1 >= loaded + ms_to_us(20.0),
+                "worker 1 executed model 0 at {t1} before its load finished ({loaded} + 20ms)"
+            );
+        }
     }
 }

@@ -14,7 +14,7 @@ use crate::core::request::Request;
 use crate::scheduler::Scheduler;
 use crate::serve::realtime::{self, ServeResult};
 use crate::serve::router::{self, Router};
-use crate::serve::{Cluster, Placement, ServingLoop};
+use crate::serve::{Cluster, Placement, PlacementController, ServingLoop};
 use crate::sim::worker::Worker;
 use std::sync::mpsc::{self, Receiver, Sender};
 
@@ -43,6 +43,8 @@ pub struct Server<S: Scheduler, W: Worker> {
     /// Which models each replica hosts (None = every replica hosts every
     /// model, the historical single-model behaviour).
     placement: Option<Placement>,
+    /// Elastic placement controller (requires `with_placement`).
+    elastic: Option<PlacementController>,
     /// Anchored at construction so callers can stamp release times before
     /// the serving thread spins up.
     clock: RealClock,
@@ -56,6 +58,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             workers: vec![worker],
             router: router::by_name("round_robin").expect("registry has round_robin"),
             placement: None,
+            elastic: None,
             clock: RealClock::new(),
         }
     }
@@ -69,6 +72,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             workers,
             router,
             placement: None,
+            elastic: None,
             clock: RealClock::new(),
         }
     }
@@ -78,6 +82,18 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
     pub fn with_placement(mut self, placement: Placement) -> Self {
         assert_eq!(placement.workers(), self.scheds.len());
         self.placement = Some(placement);
+        self
+    }
+
+    /// Enable elastic placement: `ctl` rebalances model hosting at
+    /// runtime (loads run on the worker threads; see `serve::realtime`).
+    /// Requires an explicit placement via [`Server::with_placement`].
+    pub fn with_elastic(mut self, ctl: PlacementController) -> Self {
+        assert!(
+            self.placement.is_some(),
+            "elastic serving needs with_placement first"
+        );
+        self.elastic = Some(ctl);
         self
     }
 
@@ -99,7 +115,10 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             Some(p) => Cluster::with_placement(self.scheds, p),
             None => Cluster::new(self.scheds),
         };
-        let core = ServingLoop::new(self.clock, cluster, self.router);
+        let mut core = ServingLoop::new(self.clock, cluster, self.router);
+        if let Some(ctl) = self.elastic {
+            core = core.with_elastic(ctl);
+        }
         realtime::serve_cluster(core, self.workers, rx)
     }
 }

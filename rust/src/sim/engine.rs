@@ -12,7 +12,7 @@ use super::worker::Worker;
 use crate::clock::{Micros, VirtualClock};
 use crate::core::request::{Completion, Request};
 use crate::scheduler::Scheduler;
-use crate::serve::{replay, router, Cluster, ServingLoop, WorkerStats};
+use crate::serve::{replay, router, Cluster, PlacementStats, ServingLoop, WorkerStats};
 
 /// Result of an engine run.
 #[derive(Debug)]
@@ -27,6 +27,8 @@ pub struct EngineResult {
     pub busy_us: Micros,
     /// Per-replica batch counts and busy time.
     pub per_worker: Vec<WorkerStats>,
+    /// Elastic placement counters (all zero on static runs).
+    pub placement: PlacementStats,
 }
 
 /// Run the trace to completion on a single worker.

@@ -10,21 +10,27 @@
 
 use crate::clock::VirtualClock;
 use crate::scheduler::SchedulerConfig;
-use crate::serve::{replay, router, Cluster, Placement, ServingLoop};
+use crate::serve::{
+    replay, router, Cluster, ElasticConfig, Placement, PlacementController, PlacementStats,
+    ServingLoop,
+};
 use crate::server::metrics::RunReport;
 use crate::sim::worker::SimWorker;
 use crate::workload::trace::{Trace, TraceSpec};
 
-/// Replica-count, routing and model-placement knobs for a run (workers=1
-/// with the default "all" placement reproduces the historical single-loop
-/// harness exactly).
+/// Replica-count, routing, model-placement and elasticity knobs for a
+/// run (workers=1 with the default "all" placement and no controller
+/// reproduces the historical single-loop harness exactly).
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub workers: usize,
     pub router: String,
     /// Placement spec (`serve::Placement::parse`): `all`, `partition`,
-    /// `skewed`, or an explicit `"0,1;1;0"` worker→models list.
+    /// `skewed`, or an explicit `"0,1;1;0"` worker→models list. Under
+    /// elastic control this is the *initial* placement.
     pub placement: String,
+    /// Elastic placement controller config (None = static placement).
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for ClusterSpec {
@@ -33,6 +39,7 @@ impl Default for ClusterSpec {
             workers: 1,
             router: "round_robin".into(),
             placement: "all".into(),
+            elastic: None,
         }
     }
 }
@@ -43,11 +50,20 @@ impl ClusterSpec {
             workers: workers.max(1),
             router: router.to_string(),
             placement: "all".into(),
+            elastic: None,
         }
     }
 
     pub fn with_placement(mut self, placement: &str) -> Self {
         self.placement = placement.to_string();
+        self
+    }
+
+    /// Enable the elastic placement controller (requires an explicit
+    /// placement spec — `all`/`partition`/`skewed`/explicit lists all
+    /// qualify; they parse to concrete worker→models tables).
+    pub fn with_elastic(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic = Some(cfg);
         self
     }
 }
@@ -61,6 +77,8 @@ pub struct Cell {
     /// Aggregate utilization: total busy time / (workers × run length).
     pub utilization: f64,
     pub workers: usize,
+    /// Elastic placement counters (all zero on static runs).
+    pub placement: PlacementStats,
 }
 
 /// Run one system over one trace at one SLO multiple.
@@ -75,8 +93,13 @@ pub fn run_one(
 ) -> Cell {
     let n = cluster.workers.max(1);
     let n_models = spec.models.len().max(1);
-    let placement = Placement::parse(&cluster.placement, n, n_models)
-        .unwrap_or_else(|| panic!("bad placement '{}' for {n} workers × {n_models} models", cluster.placement));
+    let placement = match Placement::parse_checked(&cluster.placement, n, n_models) {
+        Ok(p) => p,
+        Err(why) => panic!(
+            "bad placement '{}' for {n} workers × {n_models} models: {why}",
+            cluster.placement
+        ),
+    };
     // Heterogeneous co-located models get per-model cost curves derived
     // from the spec (no-op for single-model specs).
     let mut cfg = cfg.clone();
@@ -86,7 +109,13 @@ pub fn run_one(
     let mut replicas = Cluster::build_placed(system, &cfg, seed, placement)
         .unwrap_or_else(|| panic!("unknown system {system}"));
     for (model, app, hist) in spec.seed_histograms(cfg.bins) {
-        replicas.seed_app_profile(model, app, &hist, 1000);
+        if cluster.elastic.is_some() {
+            // Any replica may acquire any model at runtime: deployment-
+            // time profiles go everywhere, hosting or not.
+            replicas.seed_app_profile_everywhere(model, app, &hist, 1000);
+        } else {
+            replicas.seed_app_profile(model, app, &hist, 1000);
+        }
     }
     let workers: Vec<SimWorker> = (0..n)
         .map(|w| {
@@ -96,7 +125,10 @@ pub fn run_one(
         .collect();
     let route = router::by_name(&cluster.router)
         .unwrap_or_else(|| panic!("unknown router {}", cluster.router));
-    let core = ServingLoop::new(VirtualClock::new(), replicas, route);
+    let mut core = ServingLoop::new(VirtualClock::new(), replicas, route);
+    if let Some(ecfg) = &cluster.elastic {
+        core = core.with_elastic(PlacementController::new(ecfg.clone()));
+    }
     let requests = trace.requests(slo_multiple);
     let res = replay::run_cluster(core, workers, requests);
     let report =
@@ -112,6 +144,7 @@ pub fn run_one(
         report,
         utilization,
         workers: n,
+        placement: res.placement,
     }
 }
 
@@ -182,6 +215,29 @@ pub fn render_worker_util(title: &str, cells: &[Cell]) -> String {
             c.system,
             format!("{:.1}", c.slo_multiple),
             utils.join(" ")
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Render elastic placement counters (load/unload actions, re-routed
+/// requests, convergence time) for cells run under a controller.
+pub fn render_placement_actions(title: &str, cells: &[Cell]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "-- {title} --").unwrap();
+    for c in cells {
+        writeln!(
+            out,
+            "{:>10} slo={:<4} loads={} unloads={} rerouted={} react={:.1}s last={:.1}s",
+            c.system,
+            format!("{:.1}", c.slo_multiple),
+            c.placement.loads,
+            c.placement.unloads,
+            c.placement.rerouted,
+            c.placement.first_action_at as f64 / 1e6,
+            c.placement.last_action_at as f64 / 1e6,
         )
         .unwrap();
     }
@@ -435,6 +491,48 @@ mod tests {
                 assert!(rendered.contains("m1="), "{rendered}");
             }
         }
+    }
+
+    #[test]
+    fn elastic_runs_conserve_and_take_actions() {
+        // A drifting 2-model mix over 4 capacity-1 workers: the elastic
+        // controller must act (the hot model rotates), and conservation
+        // must hold across every evict-triggered re-route.
+        let spec = multimodel_spec().drift_rotating(5.0, 0.9);
+        let trace = spec.generate();
+        let ecfg = ElasticConfig {
+            capacity: 1,
+            interval_us: 250_000,
+            alpha: 0.5,
+            min_dwell_us: 1_000_000,
+            ..Default::default()
+        };
+        let cells = run_grid(
+            &["edf", "orloj"],
+            &spec,
+            &[3.0],
+            &cfg(),
+            9,
+            &ClusterSpec::new(4, "least_loaded")
+                .with_placement("partition")
+                .with_elastic(ecfg),
+        );
+        for c in &cells {
+            assert_eq!(
+                c.report.total,
+                trace.events.len(),
+                "{}: conservation under elastic placement",
+                c.system
+            );
+            assert!(
+                c.placement.actions() > 0,
+                "{}: a rotating hot model must force placement actions",
+                c.system
+            );
+            assert!(c.placement.last_action_at > 0);
+        }
+        let rendered = render_placement_actions("elastic", &cells);
+        assert!(rendered.contains("loads="), "{rendered}");
     }
 
     #[test]

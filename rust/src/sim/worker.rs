@@ -6,13 +6,26 @@
 //! `runtime::executor`).
 
 use crate::core::batchmodel::BatchCostModel;
-use crate::core::request::Request;
+use crate::core::request::{ModelId, Request};
 use crate::util::rng::Rng;
 
 /// A batch executor.
 pub trait Worker: Send {
     /// Execute the batch; returns the measured batch latency in ms.
     fn execute(&mut self, batch: &[Request]) -> f64;
+
+    /// Load `model` onto this worker (elastic placement cold start);
+    /// returns the measured load time in ms. The default accepts the
+    /// caller's predicted cost — virtual workers have nothing to actually
+    /// fetch, so the cold-start curve *is* the measurement. Real workers
+    /// (PJRT) override this to load the runtime and time it.
+    fn load_model(&mut self, _model: ModelId, cost_hint_ms: f64) -> f64 {
+        cost_hint_ms
+    }
+
+    /// Release `model`'s executor-side state after an eviction (elastic
+    /// placement). Default: nothing to release.
+    fn unload_model(&mut self, _model: ModelId) {}
 }
 
 /// Mutable borrows and boxes are workers too, so the unified serve pumps
@@ -22,11 +35,23 @@ impl<W: Worker + ?Sized> Worker for &mut W {
     fn execute(&mut self, batch: &[Request]) -> f64 {
         (**self).execute(batch)
     }
+    fn load_model(&mut self, model: ModelId, cost_hint_ms: f64) -> f64 {
+        (**self).load_model(model, cost_hint_ms)
+    }
+    fn unload_model(&mut self, model: ModelId) {
+        (**self).unload_model(model)
+    }
 }
 
 impl<W: Worker + ?Sized> Worker for Box<W> {
     fn execute(&mut self, batch: &[Request]) -> f64 {
         (**self).execute(batch)
+    }
+    fn load_model(&mut self, model: ModelId, cost_hint_ms: f64) -> f64 {
+        (**self).load_model(model, cost_hint_ms)
+    }
+    fn unload_model(&mut self, model: ModelId) {
+        (**self).unload_model(model)
     }
 }
 

@@ -43,13 +43,22 @@ pub struct Trace {
 
 /// One model's traffic in a multi-model trace: its share of the aggregate
 /// arrival rate, its per-app execution-time distributions, and its SLO
-/// scale.
+/// scale. Under a *drifting* mix ([`TraceSpec::drift`]) the share follows
+/// a piecewise-linear schedule over the trace instead of staying
+/// constant.
 #[derive(Debug, Clone)]
 pub struct ModelTraffic {
     pub model: u32,
     /// Fraction of the aggregate arrival rate (normalized over all
-    /// models).
+    /// models) when no drift schedule is installed.
     pub share: f64,
+    /// Piecewise-linear share-over-time schedule: `(time_s, share)`
+    /// knots, sorted by time, linearly interpolated between knots and
+    /// clamped at the ends. Empty = constant `share` for the whole trace.
+    /// Installed by [`TraceSpec::drift`] / [`TraceSpec::drift_rotating`];
+    /// drifting specs should keep the per-instant shares summing to ~1
+    /// across models (the presets do).
+    pub share_knots: Vec<(f64, f64)>,
     /// Per-app execution time distributions (app i uses dists[i]).
     pub dists: Vec<ExecTimeDist>,
     /// Extra scale on this model's SLO reference (1.0 = its own P99).
@@ -62,9 +71,71 @@ impl ModelTraffic {
         ModelTraffic {
             model,
             share,
+            share_knots: Vec::new(),
             dists,
             slo_scale: 1.0,
         }
+    }
+
+    /// Share at `t_s` seconds: the knot interpolation, or the constant
+    /// `share` when no schedule is installed.
+    pub fn share_at(&self, t_s: f64) -> f64 {
+        if self.share_knots.is_empty() {
+            return self.share;
+        }
+        let first = self.share_knots[0];
+        if t_s <= first.0 {
+            return first.1;
+        }
+        for w in self.share_knots.windows(2) {
+            let ((t0, s0), (t1, s1)) = (w[0], w[1]);
+            if t_s <= t1 {
+                if t1 <= t0 {
+                    return s1;
+                }
+                let f = (t_s - t0) / (t1 - t0);
+                return s0 + f * (s1 - s0);
+            }
+        }
+        self.share_knots.last().unwrap().1
+    }
+
+    /// Peak share over the schedule (piecewise-linear → the max sits on a
+    /// knot). Equals `share` without a schedule.
+    pub fn peak_share(&self) -> f64 {
+        if self.share_knots.is_empty() {
+            return self.share;
+        }
+        self.share_knots
+            .iter()
+            .map(|(_, s)| *s)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Time-averaged share over `[0, duration_s]` (trapezoid over the
+    /// clamped schedule). Equals `share` without a schedule — so static
+    /// load-scaling math is bit-identical.
+    pub fn mean_share(&self, duration_s: f64) -> f64 {
+        if self.share_knots.is_empty() || duration_s <= 0.0 {
+            return self.share;
+        }
+        // Integrate the clamped piecewise-linear curve on a knot-aligned
+        // grid: ends plus every interior knot.
+        let mut ts: Vec<f64> = vec![0.0];
+        ts.extend(
+            self.share_knots
+                .iter()
+                .map(|(t, _)| *t)
+                .filter(|t| *t > 0.0 && *t < duration_s),
+        );
+        ts.push(duration_s);
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut area = 0.0;
+        for w in ts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            area += 0.5 * (self.share_at(a) + self.share_at(b)) * (b - a);
+        }
+        area / duration_s
     }
 }
 
@@ -89,15 +160,21 @@ impl TraceSpec {
     /// Multi-model specs use the share-weighted mixture across models.
     pub fn scale_rate_to_load(&mut self, cost_model: BatchCostModel, util: f64, bs_ref: usize) {
         let mut rng = Rng::new(self.seed ^ 0xABCD);
+        let duration_s = self.arrivals.duration_s;
         // Capacity is governed by the *max order statistic* of a batch
         // (Eq. 4: the batch pads to its longest member), not the mean —
         // using the mean here would silently overload every run.
+        // Drifting mixes weight by the time-averaged share (identical to
+        // `share` for static mixes).
         let parts_spec: Vec<(&ExecTimeDist, f64)> = if self.models.is_empty() {
             self.dists.iter().map(|d| (d, 1.0)).collect()
         } else {
             self.models
                 .iter()
-                .flat_map(|mt| mt.dists.iter().map(move |d| (d, mt.share)))
+                .flat_map(|mt| {
+                    let w = mt.mean_share(duration_s);
+                    mt.dists.iter().map(move |d| (d, w))
+                })
                 .collect()
         };
         let hists: Vec<(Histogram, f64)> = parts_spec
@@ -111,6 +188,58 @@ impl TraceSpec {
         self.arrivals.rate_per_s = util * capacity;
     }
 
+    /// Install a piecewise-linear per-model share schedule (drift): row
+    /// `knots[i]` is `(time_s, shares)` with one share per entry of
+    /// `self.models`, in the same order. Drifting shares are *absolute*
+    /// fractions of `arrivals.rate_per_s` (keep each row summing to ~1).
+    pub fn drift(mut self, knots: &[(f64, Vec<f64>)]) -> Self {
+        assert!(!self.models.is_empty(), "drift needs a multi-model spec");
+        assert!(!knots.is_empty(), "drift needs at least one knot");
+        let m = self.models.len();
+        for (t, shares) in knots {
+            assert!(
+                shares.len() == m,
+                "drift knot at t={t}s names {} shares for {m} models",
+                shares.len()
+            );
+        }
+        for (j, mt) in self.models.iter_mut().enumerate() {
+            mt.share_knots = knots.iter().map(|(t, shares)| (*t, shares[j])).collect();
+        }
+        self
+    }
+
+    /// Rotating-hot-model drift preset: every `period_s` the hot model
+    /// (share `hot`) advances to the next model id, the others splitting
+    /// the remainder evenly — the "traffic mix shifts under a fixed
+    /// provisioning" scenario the elastic experiment sweeps.
+    pub fn drift_rotating(self, period_s: f64, hot: f64) -> Self {
+        let m = self.models.len();
+        assert!(m >= 2, "rotation needs at least two models");
+        assert!(period_s > 0.0 && hot > 0.0 && hot <= 1.0);
+        let cold = (1.0 - hot) / (m - 1) as f64;
+        let duration = self.arrivals.duration_s;
+        let segs = (duration / period_s).ceil().max(1.0) as usize;
+        // Near-step rotation: two knots per segment with a sharp ramp in
+        // between (piecewise-linear everywhere).
+        let eps = (period_s * 0.01).min(0.05);
+        let mut knots: Vec<(f64, Vec<f64>)> = Vec::with_capacity(2 * segs);
+        for k in 0..segs {
+            let mut shares = vec![cold; m];
+            shares[k % m] = hot;
+            let t0 = k as f64 * period_s;
+            let t1 = (((k + 1) as f64) * period_s - eps).min(duration);
+            knots.push((t0, shares.clone()));
+            knots.push((t1, shares));
+        }
+        self.drift(&knots)
+    }
+
+    /// Whether any model carries a drift schedule.
+    pub fn has_drift(&self) -> bool {
+        self.models.iter().any(|m| !m.share_knots.is_empty())
+    }
+
     pub fn generate(&self) -> Trace {
         if self.models.is_empty() {
             return self.generate_single();
@@ -121,28 +250,56 @@ impl TraceSpec {
         let mut all_execs = Vec::new();
         for mt in &self.models {
             // One decorrelated arrival process per model; rates split by
-            // normalized share.
+            // normalized share. The static path below is byte-identical
+            // to the pre-drift code (same RNG consumption).
             let mut rng = Rng::new(self.seed ^ ((mt.model as u64 + 1) << 40));
             let mut arr_rng = rng.fork();
             let mut exec_rng = rng.fork();
             let mut cfg = self.arrivals.clone();
             cfg.apps = mt.dists.len().max(1);
-            cfg.rate_per_s = self.arrivals.rate_per_s * mt.share / share_sum.max(1e-12);
             let mut execs = Vec::new();
-            for (at, app) in azure::generate(&cfg, &mut arr_rng) {
-                let dist = &mt.dists[app % mt.dists.len()];
-                let exec_ms = dist.sample(&mut exec_rng);
-                execs.push(exec_ms);
-                events.push(TraceEvent {
-                    at,
-                    app: app as u32,
-                    model: mt.model,
-                    exec_ms,
-                });
+            if mt.share_knots.is_empty() {
+                cfg.rate_per_s = self.arrivals.rate_per_s * mt.share / share_sum.max(1e-12);
+                for (at, app) in azure::generate(&cfg, &mut arr_rng) {
+                    let dist = &mt.dists[app % mt.dists.len()];
+                    let exec_ms = dist.sample(&mut exec_rng);
+                    execs.push(exec_ms);
+                    events.push(TraceEvent {
+                        at,
+                        app: app as u32,
+                        model: mt.model,
+                        exec_ms,
+                    });
+                }
+            } else {
+                // Drifting model: generate the azure process at the peak
+                // share and thin each arrival down to the instantaneous
+                // share — the process keeps its burst structure while the
+                // mix drifts. Deterministic via a dedicated thinning rng.
+                let peak = mt.peak_share().max(1e-12);
+                cfg.rate_per_s = self.arrivals.rate_per_s * peak;
+                let mut thin_rng = rng.fork();
+                for (at, app) in azure::generate(&cfg, &mut arr_rng) {
+                    let keep = (mt.share_at(at as f64 / 1e6) / peak).clamp(0.0, 1.0);
+                    if !thin_rng.chance(keep) {
+                        continue;
+                    }
+                    let dist = &mt.dists[app % mt.dists.len()];
+                    let exec_ms = dist.sample(&mut exec_rng);
+                    execs.push(exec_ms);
+                    events.push(TraceEvent {
+                        at,
+                        app: app as u32,
+                        model: mt.model,
+                        exec_ms,
+                    });
+                }
             }
             execs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let model_p99 = crate::util::stats::percentile_sorted(&execs, 99.0);
-            slo_ref.push((mt.model, model_p99 * mt.slo_scale));
+            if !execs.is_empty() {
+                let model_p99 = crate::util::stats::percentile_sorted(&execs, 99.0);
+                slo_ref.push((mt.model, model_p99 * mt.slo_scale));
+            }
             all_execs.extend(execs);
         }
         // Deterministic merge of the per-model streams.
@@ -478,6 +635,74 @@ mod tests {
         assert!(c1.c0 > c0.c0, "slow model has the larger calibrated cost");
         // Single-model specs report no per-model costs.
         assert!(spec().model_cost_models().is_empty());
+    }
+
+    #[test]
+    fn drift_schedule_interpolates_and_averages() {
+        let mut mt = ModelTraffic::new(0, 0.5, vec![ExecTimeDist::constant("x", 5.0)]);
+        assert_eq!(mt.share_at(3.0), 0.5, "no schedule → constant share");
+        assert_eq!(mt.mean_share(10.0), 0.5);
+        mt.share_knots = vec![(0.0, 0.8), (10.0, 0.2)];
+        assert!((mt.share_at(0.0) - 0.8).abs() < 1e-12);
+        assert!((mt.share_at(5.0) - 0.5).abs() < 1e-12);
+        assert!((mt.share_at(10.0) - 0.2).abs() < 1e-12);
+        assert!((mt.share_at(99.0) - 0.2).abs() < 1e-12, "clamped past the end");
+        assert!((mt.peak_share() - 0.8).abs() < 1e-12);
+        assert!((mt.mean_share(10.0) - 0.5).abs() < 1e-9, "trapezoid average");
+    }
+
+    #[test]
+    fn drift_rotating_shifts_the_hot_model() {
+        let mut s = mm_spec();
+        s.arrivals.duration_s = 20.0;
+        s.arrivals.rate_per_s = 200.0;
+        let s = s.drift_rotating(10.0, 0.9);
+        assert!(s.has_drift());
+        let t = s.generate();
+        // Segment 1 (0..10 s): model 0 hot; segment 2 (10..20 s): model 1.
+        let count = |model: u32, lo_s: f64, hi_s: f64| {
+            t.events
+                .iter()
+                .filter(|e| {
+                    let ts = e.at as f64 / 1e6;
+                    e.model == model && ts >= lo_s && ts < hi_s
+                })
+                .count()
+        };
+        let (a0, a1) = (count(0, 1.0, 9.0), count(1, 1.0, 9.0));
+        let (b0, b1) = (count(0, 11.0, 19.0), count(1, 11.0, 19.0));
+        assert!(a0 > 3 * a1.max(1), "seg 1 hot=model0: {a0} vs {a1}");
+        assert!(b1 > 3 * b0.max(1), "seg 2 hot=model1: {b1} vs {b0}");
+        // Deterministic regeneration.
+        assert_eq!(t.events, s.generate().events);
+        // Arrivals stay sorted after the per-model merge.
+        for w in t.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn drift_leaves_static_specs_untouched() {
+        // The static multi-model path must stay byte-identical whether or
+        // not the drift machinery exists: same spec, same events.
+        let base = mm_spec().generate();
+        let again = mm_spec().generate();
+        assert_eq!(base.events, again.events);
+        assert!(!mm_spec().has_drift());
+        // Load scaling with a drift schedule uses the time-averaged
+        // share, which for a symmetric rotation matches the even mix.
+        let mut even = mm_spec();
+        even.models[0].share = 0.5;
+        even.models[1].share = 0.5;
+        even.arrivals.duration_s = 10.0;
+        let mut rotated = even.clone().drift_rotating(5.0, 0.9);
+        even.scale_rate_to_load(BatchCostModel::new(1.0, 0.25), 0.7, 8);
+        rotated.scale_rate_to_load(BatchCostModel::new(1.0, 0.25), 0.7, 8);
+        let ratio = rotated.arrivals.rate_per_s / even.arrivals.rate_per_s;
+        assert!(
+            (0.8..=1.25).contains(&ratio),
+            "symmetric rotation ≈ even mix for capacity math: {ratio}"
+        );
     }
 
     #[test]

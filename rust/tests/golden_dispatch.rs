@@ -19,7 +19,10 @@ use orloj::core::batchmodel::BatchCostModel;
 use orloj::core::histogram::Histogram;
 use orloj::core::request::{AppId, ModelId, Request};
 use orloj::scheduler::SchedulerConfig;
-use orloj::serve::{replay, router, Cluster, ServingLoop};
+use orloj::serve::{
+    replay, router, Cluster, ColdStartCost, Dispatch, ElasticConfig, Placement,
+    PlacementController, ServingLoop,
+};
 use orloj::sim::worker::SimWorker;
 use orloj::util::json::Json;
 use orloj::util::rng::Rng;
@@ -81,13 +84,105 @@ fn dispatch_sequence(system: &str, workers: usize) -> Json {
     );
     let mut rows: Vec<Json> = Vec::new();
     let res = replay::run_cluster_traced(core, sim_workers, fixed_trace(), |t, d| {
+        let Dispatch::Execute { worker, batch } = d else {
+            panic!("static golden run produced a placement dispatch: {d:?}");
+        };
         rows.push(Json::arr(vec![
             Json::num(t as f64),
-            Json::num(d.worker as f64),
-            Json::Arr(d.batch.iter().map(|r| Json::num(r.id.0 as f64)).collect()),
+            Json::num(*worker as f64),
+            Json::Arr(batch.iter().map(|r| Json::num(r.id.0 as f64)).collect()),
         ]));
     });
     assert_eq!(res.completions.len(), 400, "conservation for {system} x{workers}");
+    Json::Arr(rows)
+}
+
+/// A drifting two-model trace for the elastic configurations: ~500
+/// arrivals at a ~3 ms mean gap span ~1.5 s, and the hot model flips
+/// every 400 ms — several full rotations land inside the trace, so the
+/// snapshot captures repeated unload/reload churn, not just the initial
+/// adaptation.
+fn drifting_trace() -> Vec<Request> {
+    let mut rng = Rng::new(0xDB1F7);
+    let mut reqs = Vec::new();
+    let mut t: Micros = 0;
+    for i in 0..500u64 {
+        t += ms_to_us(rng.exponential(1.0 / 3.0)); // ~3 ms mean gap
+        let seg = (t / 400_000) % 2; // 400 ms hot phases
+        let hot = seg as u32; // model 0 hot first, then model 1
+        let model = if rng.chance(0.85) {
+            ModelId(hot)
+        } else {
+            ModelId(1 - hot)
+        };
+        let app = AppId(rng.index(2) as u32);
+        let exec = 4.0 + rng.f64() * 20.0;
+        let slo_ms = 100.0 + rng.f64() * 400.0;
+        reqs.push(Request::new(i, app, t, ms_to_us(slo_ms), exec).with_model(model));
+    }
+    reqs
+}
+
+/// The dispatch sequence of one system under the elastic controller on
+/// the drifting trace: `Execute` rows as `[t, worker, [ids...]]`, `Load`
+/// rows as `[t, worker, "load", model]`, `Unload` rows as
+/// `[t, worker, "unload", model]` — placement churn is part of the
+/// snapshot, so a controller behaviour drift trips the gate too.
+fn elastic_dispatch_sequence(system: &str, workers: usize) -> Json {
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::new(0.5, 0.5),
+        ..Default::default()
+    };
+    let placement = Placement::parse("partition", workers, 2).unwrap();
+    let mut cluster = Cluster::build_placed(system, &cfg, 7, placement).expect("known system");
+    for (model, app, hist) in seed_hists() {
+        cluster.seed_app_profile_everywhere(model, app, &hist, 500);
+    }
+    let sim_workers: Vec<SimWorker> = (0..workers)
+        .map(|w| SimWorker::new(cfg.cost_model, 0.0, 0x90 + w as u64))
+        .collect();
+    // Decision cadence, dwell and cold start all sized well inside the
+    // 400 ms hot phases so every rotation triggers visible churn.
+    let ctl = PlacementController::new(ElasticConfig {
+        capacity: 1,
+        interval_us: 50_000,
+        alpha: 0.6,
+        min_dwell_us: 150_000,
+        cold_start: ColdStartCost::new(10.0, 20.0),
+    });
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        cluster,
+        router::by_name("least_loaded").unwrap(),
+    )
+    .with_elastic(ctl);
+    let mut rows: Vec<Json> = Vec::new();
+    let res = replay::run_cluster_traced(core, sim_workers, drifting_trace(), |t, d| {
+        rows.push(match d {
+            Dispatch::Execute { worker, batch } => Json::arr(vec![
+                Json::num(t as f64),
+                Json::num(*worker as f64),
+                Json::Arr(batch.iter().map(|r| Json::num(r.id.0 as f64)).collect()),
+            ]),
+            Dispatch::Load { worker, model, .. } => Json::arr(vec![
+                Json::num(t as f64),
+                Json::num(*worker as f64),
+                Json::str("load"),
+                Json::num(model.0 as f64),
+            ]),
+            Dispatch::Unload { worker, model } => Json::arr(vec![
+                Json::num(t as f64),
+                Json::num(*worker as f64),
+                Json::str("unload"),
+                Json::num(model.0 as f64),
+            ]),
+        });
+    });
+    assert_eq!(
+        res.completions.len(),
+        500,
+        "conservation for elastic {system} x{workers}"
+    );
     Json::Arr(rows)
 }
 
@@ -112,6 +207,19 @@ fn dispatch_sequences_are_deterministic_and_match_golden() {
             );
             got.insert(format!("{system}/w{workers}"), a);
         }
+        // One drifting elastic configuration per system: controller
+        // decisions (loads/unloads) are snapshotted alongside executes.
+        let a = elastic_dispatch_sequence(system, 4);
+        let b = elastic_dispatch_sequence(system, 4);
+        assert_eq!(
+            a, b,
+            "nondeterministic elastic dispatch sequence for {system}"
+        );
+        assert!(
+            !a.as_arr().unwrap().is_empty(),
+            "elastic {system} dispatched nothing"
+        );
+        got.insert(format!("elastic/{system}/w4"), a);
     }
     let got = Json::Obj(got);
 

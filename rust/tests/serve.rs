@@ -10,7 +10,10 @@ use orloj::prop_assert;
 use orloj::scheduler::SchedulerConfig;
 use orloj::serve::realtime;
 use orloj::serve::replay;
-use orloj::serve::{router, Cluster, Placement, ServingLoop};
+use orloj::serve::{
+    router, Cluster, ColdStartCost, Dispatch, ElasticConfig, Placement, PlacementController,
+    ServingLoop,
+};
 use orloj::sim::worker::SimWorker;
 use orloj::util::proptest::check_cases;
 use orloj::util::rng::Rng;
@@ -273,6 +276,96 @@ fn prop_conservation_multimodel_placements() {
             }
         }
     }
+}
+
+/// Elastic placement property, for all five systems × worker counts
+/// {1, 2, 4}: (a) no batch is ever dispatched for a model on a worker
+/// that has not finished loading it — a `Load` opens a warming window of
+/// exactly the predicted cold-start length (SimWorker realizes the
+/// prediction), and no `Execute` of that (worker, model) pair may land
+/// inside it; (b) request conservation holds across every
+/// evict-triggered re-route (every trace request completes exactly
+/// once). The drifting mix guarantees the controller actually acts on
+/// the multi-worker configurations.
+#[test]
+fn prop_elastic_no_dispatch_before_load_and_conservation() {
+    let (s, cfg) = multimodel_spec(0x7E, 8.0, 0.9);
+    let s = s.drift_rotating(3.0, 0.9);
+    let trace = s.generate();
+    let requests = trace.requests(3.0);
+    let want: BTreeMap<u64, usize> = requests.iter().map(|r| (r.id.0, 1)).collect();
+    let mut total_actions = 0usize;
+    let mut total_rerouted = 0usize;
+    for system in ALL_SYSTEMS {
+        for n in WORKER_COUNTS {
+            // Capacity floor so both models always fit the cluster.
+            let capacity = 2usize.div_ceil(n).max(1);
+            let placement = Placement::parse("partition", n, 2).expect("placement");
+            let mut cluster = Cluster::build_placed(system, &cfg, 3, placement).unwrap();
+            for (model, app, hist) in s.seed_histograms(cfg.bins) {
+                // Elastic: any replica may acquire any model.
+                cluster.seed_app_profile_everywhere(model, app, &hist, 100);
+            }
+            let ctl = PlacementController::new(ElasticConfig {
+                capacity,
+                interval_us: 200_000,
+                alpha: 0.5,
+                min_dwell_us: 500_000,
+                cold_start: ColdStartCost::new(20.0, 30.0),
+            });
+            let core = ServingLoop::new(
+                VirtualClock::new(),
+                cluster,
+                router::by_name("least_loaded").unwrap(),
+            )
+            .with_elastic(ctl);
+            // Warming windows: (worker, model, until) opened by each Load.
+            let mut warming: Vec<(usize, u32, u64)> = Vec::new();
+            let res = replay::run_cluster_traced(
+                core,
+                sim_workers(&cfg, 5, n),
+                requests.clone(),
+                |t, d| match d {
+                    Dispatch::Load {
+                        worker,
+                        model,
+                        cost_ms,
+                    } => {
+                        warming.push((*worker, model.0, t + ms_to_us(*cost_ms)));
+                    }
+                    Dispatch::Execute { worker, batch } => {
+                        let m = batch[0].model.0;
+                        for &(ww, wm, until) in &warming {
+                            assert!(
+                                !(ww == *worker && wm == m && t < until),
+                                "{system} x{n}: worker {worker} executed model {m} at {t} \
+                                 inside its warming window (until {until})"
+                            );
+                        }
+                    }
+                    Dispatch::Unload { .. } => {}
+                },
+            );
+            let mut got: BTreeMap<u64, usize> = BTreeMap::new();
+            for c in &res.completions {
+                *got.entry(c.request.id.0).or_insert(0) += 1;
+            }
+            assert_eq!(
+                got, want,
+                "{system} x{n}: lost/duplicated requests under elastic placement"
+            );
+            total_actions += res.placement.actions();
+            total_rerouted += res.placement.rerouted;
+        }
+    }
+    // The drifting mix must actually exercise the elastic machinery
+    // somewhere in the sweep (the 4-worker capacity-1 configurations
+    // leave the controller no choice).
+    assert!(total_actions > 0, "no placement actions across the sweep");
+    assert!(
+        total_rerouted > 0 || total_actions > 0,
+        "evict-drain path never exercised"
+    );
 }
 
 /// Round-robin admission spreads a steady trace over every replica.
