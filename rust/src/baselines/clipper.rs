@@ -14,7 +14,7 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{FifoQueues, Scheduler, SchedulerConfig};
+use crate::scheduler::{BatchPrediction, FifoQueues, Scheduler, SchedulerConfig};
 
 pub struct ClipperScheduler {
     cfg: SchedulerConfig,
@@ -29,6 +29,9 @@ pub struct ClipperScheduler {
     lat_track: f64,
     /// Mean observed SLO (budget reference), EWMA.
     slo_track_ms: f64,
+    /// Controller's latency belief at the last batch formation
+    /// (telemetry; see `Scheduler::last_batch_prediction`).
+    last_prediction: Option<BatchPrediction>,
 }
 
 impl ClipperScheduler {
@@ -40,6 +43,7 @@ impl ClipperScheduler {
             target: 1.0,
             lat_track: 0.0,
             slo_track_ms: 0.0,
+            last_prediction: None,
         }
     }
 
@@ -101,6 +105,10 @@ impl Scheduler for ClipperScheduler {
         // FIFO within the head's model: other co-located models keep their
         // queue positions (a batch executes exactly one model).
         let take = want.min(self.queue.pending_for(model).max(1));
+        // Clipper's only latency belief is the controller's decaying-max
+        // tracker — record it as the formation-time prediction (wide ±50%
+        // band: a reactive point estimate carries no distribution).
+        self.last_prediction = Some(BatchPrediction::point(self.lat_track, 0.5));
         Some(self.queue.drain_model(model, take))
     }
 
@@ -132,6 +140,10 @@ impl Scheduler for ClipperScheduler {
 
     fn pending_for(&self, model: ModelId) -> usize {
         self.queue.pending_for(model)
+    }
+
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        self.last_prediction
     }
 }
 

@@ -18,7 +18,7 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{EdfQueues, Scheduler, SchedulerConfig};
+use crate::scheduler::{BatchPrediction, EdfQueues, Scheduler, SchedulerConfig};
 
 pub struct ClockworkScheduler {
     cfg: SchedulerConfig,
@@ -39,6 +39,9 @@ pub struct ClockworkScheduler {
     /// True when the previous batch blew its window: the next planned
     /// batch fails.
     misfire: bool,
+    /// Point estimate used for the window most recently planned
+    /// (telemetry; see `Scheduler::last_batch_prediction`).
+    last_prediction: Option<BatchPrediction>,
 }
 
 impl ClockworkScheduler {
@@ -52,6 +55,7 @@ impl ClockworkScheduler {
             window_end: None,
             overrun_tol: 0.10,
             misfire: false,
+            last_prediction: None,
         }
     }
 
@@ -158,6 +162,9 @@ impl Scheduler for ClockworkScheduler {
         }
         let est = self.est(batch.len());
         self.window_end = Some(now + crate::clock::ms_to_us(est * (1.0 + self.overrun_tol)));
+        // Clockwork believes the point estimate is near-exact: its band is
+        // exactly the overrun tolerance around the planned window.
+        self.last_prediction = Some(BatchPrediction::point(est, self.overrun_tol));
         Some(batch)
     }
 
@@ -189,6 +196,10 @@ impl Scheduler for ClockworkScheduler {
 
     fn pending_for(&self, model: ModelId) -> usize {
         self.queue.pending_for(model)
+    }
+
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        self.last_prediction
     }
 }
 

@@ -7,7 +7,7 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{EdfQueues, Scheduler, SchedulerConfig};
+use crate::scheduler::{BatchPrediction, EdfQueues, Scheduler, SchedulerConfig};
 use crate::util::stats::Welford;
 
 pub struct EdfScheduler {
@@ -17,6 +17,9 @@ pub struct EdfScheduler {
     queue: EdfQueues,
     dropped: Vec<(Request, Outcome)>,
     exec_mean: Welford,
+    /// Mean-exec estimate for the batch most recently formed (telemetry;
+    /// see `Scheduler::last_batch_prediction`).
+    last_prediction: Option<BatchPrediction>,
 }
 
 impl EdfScheduler {
@@ -26,6 +29,7 @@ impl EdfScheduler {
             queue: EdfQueues::new(),
             dropped: Vec::new(),
             exec_mean: Welford::new(),
+            last_prediction: None,
         }
     }
 
@@ -110,6 +114,16 @@ impl Scheduler for EdfScheduler {
         if batch.is_empty() {
             None
         } else {
+            // Online-mean belief re-costed at the size actually taken;
+            // Welford's stddev scales the band (±1σ around the mean, with
+            // a ±10% floor before enough samples accrue).
+            let est = self.est(batch.len());
+            let frac = if self.exec_mean.count() > 1 && self.exec_mean.mean() > 0.0 {
+                (self.exec_mean.stddev() / self.exec_mean.mean()).max(0.1)
+            } else {
+                0.1
+            };
+            self.last_prediction = Some(BatchPrediction::point(est, frac));
             Some(batch)
         }
     }
@@ -134,6 +148,10 @@ impl Scheduler for EdfScheduler {
 
     fn pending_for(&self, model: ModelId) -> usize {
         self.queue.pending_for(model)
+    }
+
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        self.last_prediction
     }
 }
 

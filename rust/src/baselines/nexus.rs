@@ -10,7 +10,7 @@
 
 use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{ModelId, Outcome, Request};
-use crate::scheduler::{FifoQueues, Scheduler, SchedulerConfig};
+use crate::scheduler::{BatchPrediction, FifoQueues, Scheduler, SchedulerConfig};
 use crate::util::stats::Welford;
 
 pub struct NexusScheduler {
@@ -30,6 +30,9 @@ pub struct NexusScheduler {
     /// Epoch bookkeeping.
     last_plan: Micros,
     epoch: Micros,
+    /// Plan's latency belief for the batch most recently formed
+    /// (telemetry; see `Scheduler::last_batch_prediction`).
+    last_prediction: Option<BatchPrediction>,
 }
 
 impl NexusScheduler {
@@ -44,6 +47,7 @@ impl NexusScheduler {
             plan_latency_ms: 10.0,
             last_plan: 0,
             epoch: 1_000_000, // 1 s epochs
+            last_prediction: None,
         }
     }
 
@@ -157,6 +161,18 @@ impl Scheduler for NexusScheduler {
             return None; // wait for the plan's batch to fill
         }
         let take = self.plan_bs.min(available);
+        // The plan's mean-exec belief for the batch actually taken (a
+        // forced partial batch is re-costed at its real size). Nexus plans
+        // on a point mean — record a narrow ±10% band.
+        let exec = if self.exec_mean.count() > 0 {
+            self.exec_mean.mean()
+        } else {
+            10.0
+        };
+        self.last_prediction = Some(BatchPrediction::point(
+            self.cfg.cost_model.latency(take, exec),
+            0.1,
+        ));
         Some(self.queue.drain_model(model, take))
     }
 
@@ -190,6 +206,10 @@ impl Scheduler for NexusScheduler {
 
     fn pending_for(&self, model: ModelId) -> usize {
         self.queue.pending_for(model)
+    }
+
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        self.last_prediction
     }
 }
 

@@ -51,6 +51,10 @@ pub struct ExpOptions {
     /// Hot-model rotation period for drifting mixes, seconds (`--drift`;
     /// 0 = the experiment's default).
     pub drift_period_s: f64,
+    /// Capture request-lifecycle telemetry and write
+    /// `TELEMETRY_<case>.json` / `TELEMETRY_<case>.trace.json` into this
+    /// directory (`--telemetry[=dir]`; empty string = `results/`).
+    pub telemetry: Option<String>,
 }
 
 impl Default for ExpOptions {
@@ -68,6 +72,7 @@ impl Default for ExpOptions {
             elastic: false,
             capacity: 2,
             drift_period_s: 0.0,
+            telemetry: None,
         }
     }
 }
@@ -84,15 +89,17 @@ impl ExpOptions {
 
     /// Cluster shape for the runner.
     fn cluster(&self) -> ClusterSpec {
-        let spec = ClusterSpec::new(self.workers, &self.router).with_placement(&self.placement);
+        let mut spec = ClusterSpec::new(self.workers, &self.router).with_placement(&self.placement);
         if self.elastic {
-            spec.with_elastic(ElasticConfig {
+            spec = spec.with_elastic(ElasticConfig {
                 capacity: self.capacity.max(1),
                 ..Default::default()
-            })
-        } else {
-            spec
+            });
         }
+        if self.telemetry.is_some() {
+            spec = spec.with_telemetry();
+        }
+        spec
     }
 }
 
@@ -194,7 +201,7 @@ fn grid(name: &str, dists: Vec<ExecTimeDist>, opts: &ExpOptions, seed_off: u64) 
     acc
 }
 
-fn print_grid(title: &str, cells: &[Cell]) {
+fn print_grid(title: &str, cells: &[Cell], opts: &ExpOptions) {
     print!("{}", runner::render_table(title, cells, &ALL_SYSTEMS));
     if cells.iter().any(|c| c.workers > 1) {
         print!(
@@ -213,6 +220,58 @@ fn print_grid(title: &str, cells: &[Cell]) {
             "{}",
             runner::render_placement_actions("placement actions", cells)
         );
+    }
+    if cells.iter().any(|c| c.telemetry.is_some()) {
+        print!(
+            "{}",
+            runner::render_calibration("estimator calibration (predicted vs realized, ms)", cells)
+        );
+    }
+    if let Some(dir) = &opts.telemetry {
+        export_telemetry(dir, title, cells);
+    }
+}
+
+/// Write the telemetry exports for one grid case: the windowed time
+/// series + calibration stream for every telemetry-bearing cell
+/// (`TELEMETRY_<case>.json`) and a Perfetto-loadable Chrome trace for a
+/// representative cell (`TELEMETRY_<case>.trace.json`; the first `orloj`
+/// cell, else the first cell with telemetry). No-op when no cell
+/// recorded telemetry.
+pub fn export_telemetry(dir: &str, label: &str, cells: &[Cell]) {
+    if cells.iter().all(|c| c.telemetry.is_none()) {
+        return;
+    }
+    let dir = if dir.is_empty() { "results" } else { dir };
+    std::fs::create_dir_all(dir).ok();
+    let slug: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    let series = Json::arr(cells.iter().filter_map(|c| {
+        let rec = c.telemetry.as_ref()?;
+        Some(Json::obj(vec![
+            ("system", Json::str(&c.system)),
+            ("slo", Json::num(c.slo_multiple)),
+            ("series", rec.time_series()),
+        ]))
+    }));
+    let path = std::path::Path::new(dir).join(format!("TELEMETRY_{slug}.json"));
+    std::fs::write(&path, series.to_pretty()).ok();
+    let rep = cells
+        .iter()
+        .find(|c| c.system == "orloj" && c.telemetry.is_some())
+        .or_else(|| cells.iter().find(|c| c.telemetry.is_some()));
+    if let Some(rec) = rep.and_then(|c| c.telemetry.as_ref()) {
+        let tpath = std::path::Path::new(dir).join(format!("TELEMETRY_{slug}.trace.json"));
+        std::fs::write(&tpath, rec.chrome_trace().to_string()).ok();
+        println!(
+            "(telemetry written to {} and {})",
+            path.display(),
+            tpath.display()
+        );
+    } else {
+        println!("(telemetry written to {})", path.display());
     }
 }
 
@@ -343,7 +402,7 @@ pub fn fig3(opts: &ExpOptions) -> Json {
     let mut all = Vec::new();
     for (case, dists) in cases {
         let cells = grid(case, dists, opts, 0x31);
-        print_grid(case, &cells);
+        print_grid(case, &cells, opts);
         println!();
         all.push(cells_to_json(case, &cells));
     }
@@ -419,7 +478,7 @@ pub fn table2(opts: &ExpOptions) -> Json {
     let mut all = Vec::new();
     for (case, dists) in cases {
         let cells = grid(case, dists, opts, 0x92);
-        print_grid(case, &cells);
+        print_grid(case, &cells, opts);
         println!();
         all.push(cells_to_json(case, &cells));
     }
@@ -446,7 +505,7 @@ pub fn table3(opts: &ExpOptions) -> Json {
     for (i, case) in names.iter().enumerate() {
         let k = i + 1;
         let cells = grid(case, modal_apps(k, 1.0, None), opts, 0x30 + k as u64);
-        print_grid(case, &cells);
+        print_grid(case, &cells, opts);
         println!();
         all.push(cells_to_json(case, &cells));
     }
@@ -462,7 +521,7 @@ pub fn table4(opts: &ExpOptions) -> Json {
     let mut all = Vec::new();
     for task in static_tasks() {
         let cells = grid(task.id, vec![task.dist.clone()], opts, 0x40);
-        print_grid(task.id, &cells);
+        print_grid(task.id, &cells, opts);
         println!();
         all.push(cells_to_json(task.id, &cells));
     }
@@ -478,7 +537,7 @@ pub fn table5(opts: &ExpOptions) -> Json {
     let mut all = Vec::new();
     for task in table1_tasks() {
         let cells = grid(task.id, vec![task.dist.clone()], opts, 0x50);
-        print_grid(task.id, &cells);
+        print_grid(task.id, &cells, opts);
         println!();
         all.push(cells_to_json(task.id, &cells));
     }
@@ -667,7 +726,7 @@ pub fn multimodel(opts: &ExpOptions) -> Json {
             spec.seed,
             &opts.cluster(),
         );
-        print_grid(&case, &cells);
+        print_grid(&case, &cells, opts);
         println!();
         all.push(cells_to_json(&case, &cells));
     }
@@ -747,6 +806,7 @@ pub fn elastic(opts: &ExpOptions) -> Json {
             "system", "partition", "skewed", "elastic", "loads", "unloads", "react(s)", "last(s)"
         );
         let mut rows = Vec::new();
+        let mut ecells = Vec::new();
         for system in ALL_SYSTEMS {
             let mut static_rates = Vec::new();
             for ps in static_placements {
@@ -771,17 +831,13 @@ pub fn elastic(opts: &ExpOptions) -> Json {
                     ("converge_s", Json::num(0.0)),
                 ]));
             }
-            let ecell = runner::run_one(
-                system,
-                &spec,
-                &trace,
-                slo,
-                &cfg,
-                spec.seed,
-                &ClusterSpec::new(workers, &opts.router)
-                    .with_placement("partition")
-                    .with_elastic(ecfg.clone()),
-            );
+            let mut ecspec = ClusterSpec::new(workers, &opts.router)
+                .with_placement("partition")
+                .with_elastic(ecfg.clone());
+            if opts.telemetry.is_some() {
+                ecspec = ecspec.with_telemetry();
+            }
+            let ecell = runner::run_one(system, &spec, &trace, slo, &cfg, spec.seed, &ecspec);
             let erate = ecell.report.finish_rate();
             println!(
                 "{:>10} {:>12.3} {:>12.3} {:>12.3} {:>7} {:>9} {:>9.1} {:>8.1}",
@@ -819,6 +875,16 @@ pub fn elastic(opts: &ExpOptions) -> Json {
                     Json::num(static_rates.iter().cloned().fold(f64::MIN, f64::max)),
                 ),
             ]));
+            ecells.push(ecell);
+        }
+        if ecells.iter().any(|c| c.telemetry.is_some()) {
+            print!(
+                "{}",
+                runner::render_calibration("estimator calibration (elastic mode)", &ecells)
+            );
+        }
+        if let Some(dir) = &opts.telemetry {
+            export_telemetry(dir, &case, &ecells);
         }
         println!();
         all.push(Json::arr(rows));
@@ -966,6 +1032,34 @@ mod tests {
             }
             assert_eq!(elastic_rows, 5);
         }
+    }
+
+    #[test]
+    fn telemetry_option_exports_series_and_chrome_trace() {
+        let mut opts = ExpOptions::quick();
+        opts.duration_s = 4.0;
+        opts.slos = vec![3.0];
+        let dir = std::env::temp_dir().join("orloj_exp_telemetry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        opts.telemetry = Some(dir.to_string_lossy().into_owned());
+        let (spec, cfg) = spec_for("tel", modal_apps(2, 1.0, None), &opts, 0x77);
+        let cells = runner::run_grid(
+            &["orloj"],
+            &spec,
+            &opts.slos,
+            &cfg,
+            spec.seed,
+            &opts.cluster(),
+        );
+        assert!(cells[0].telemetry.is_some(), "cluster() must enable capture");
+        print_grid("tel-case", &cells, &opts);
+        let ts = std::fs::read_to_string(dir.join("TELEMETRY_tel-case.json")).unwrap();
+        let parsed = Json::parse(&ts).unwrap();
+        assert!(!parsed.as_arr().unwrap().is_empty());
+        let tr = std::fs::read_to_string(dir.join("TELEMETRY_tel-case.trace.json")).unwrap();
+        let trace = Json::parse(&tr).unwrap();
+        assert!(!trace.get("traceEvents").as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -23,11 +23,15 @@ pub mod clock;
 pub mod core;
 pub mod ds;
 pub mod experiments;
+/// The PJRT execution path needs the `xla` FFI crate (not available in
+/// the offline build) — see the `pjrt` feature in Cargo.toml.
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
 pub mod serve;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

@@ -28,6 +28,8 @@ fn usage() -> ! {
              --elastic             run cells under the elastic placement controller\n\
              --capacity <n>        per-worker model budget for elastic runs (default 2)\n\
              --drift <s>           hot-model rotation period for the elastic experiment (default 8)\n\
+             --telemetry[=dir]     record lifecycle telemetry; writes TELEMETRY_<case>.json and\n\
+                                   a Perfetto-loadable TELEMETRY_<case>.trace.json (default dir: results)\n\
              --quick               fast settings for smoke runs\n\
            serve                 PJRT serving demo (needs `make artifacts`)\n\
              --artifacts <dir>     artifact directory        (default artifacts)\n\
@@ -41,17 +43,29 @@ fn usage() -> ! {
              --capacity <n>        per-worker model budget   (default 2)\n\
              --slo-ms <ms>         per-request SLO           (default 12x deep solo latency)\n\
              --gap-us <us>         inter-arrival gap         (default 500)\n\
+             --telemetry[=dir]     record lifecycle telemetry (TELEMETRY_serve.json + .trace.json)\n\
            trace                 generate a trace JSON\n\
              --out <path>          output path (default trace.json)\n\
              --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
              --models <n>          multi-model trace: n models with skewed shares (default 1)\n\
              --drift <s>           rotate the hot model every <s> seconds (multi-model only)\n\
+             --telemetry[=dir]     also replay the trace through orloj and write telemetry files\n\
            list                  list experiment ids",
         experiments::ALL.join(", "),
         orloj::serve::router::ROUTERS.join("|"),
         orloj::serve::placement::PLACEMENTS.join("|"),
     );
     std::process::exit(2);
+}
+
+/// `--telemetry[=dir]`: bare flag → default dir (empty string, resolved
+/// to `results/` downstream), explicit value → that directory.
+fn telemetry_opt(args: &Args) -> Option<String> {
+    if args.flag("telemetry") {
+        Some(String::new())
+    } else {
+        args.get("telemetry").map(str::to_string)
+    }
 }
 
 fn exp_options(args: &Args) -> ExpOptions {
@@ -76,6 +90,7 @@ fn exp_options(args: &Args) -> ExpOptions {
     opts.elastic = args.flag("elastic");
     opts.capacity = args.get_usize("capacity", opts.capacity).max(1);
     opts.drift_period_s = args.get_f64("drift", opts.drift_period_s);
+    opts.telemetry = telemetry_opt(args);
     opts
 }
 
@@ -168,8 +183,48 @@ fn cmd_trace(args: &Args) {
         trace.model_ids().len(),
         trace.p99_ms
     );
+    // --telemetry: replay the freshly generated trace through orloj with
+    // the recorder on and write the telemetry exports next to the bench
+    // results (the quickest way to get a Perfetto-loadable trace).
+    if let Some(dir) = telemetry_opt(args) {
+        use orloj::core::batchmodel::BatchCostModel;
+        use orloj::scheduler::SchedulerConfig;
+        use orloj::sim::runner::{self, ClusterSpec};
+        let cfg = SchedulerConfig {
+            cost_model: BatchCostModel::gpu_like(),
+            ..Default::default()
+        };
+        let slo = args.get_f64("slo", 3.0);
+        let cell = runner::run_one(
+            "orloj",
+            &spec,
+            &trace,
+            slo,
+            &cfg,
+            spec.seed,
+            &ClusterSpec::default().with_telemetry(),
+        );
+        let cells = [cell];
+        print!(
+            "{}",
+            runner::render_calibration("estimator calibration (predicted vs realized, ms)", &cells)
+        );
+        orloj::experiments::export_telemetry(&dir, "trace", &cells);
+    }
 }
 
+/// The PJRT demo needs the vendored runtime; without the `pjrt` feature
+/// the command explains itself instead of failing to link.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) {
+    eprintln!(
+        "the `serve` command needs the PJRT runtime — rebuild with \
+         `cargo run --features pjrt -- serve ...` (and `make artifacts`)"
+    );
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) {
     use orloj::clock::ms_to_us;
     use orloj::core::batchmodel::BatchCostModel;
@@ -239,6 +294,15 @@ fn cmd_serve(args: &Args) {
             ..Default::default()
         }));
     }
+    let telemetry_dir = telemetry_opt(args);
+    if telemetry_dir.is_some() {
+        server = server.with_telemetry(orloj::telemetry::Recorder::with_config(
+            orloj::telemetry::RecorderConfig {
+                capacity: (n * 16).max(1 << 14),
+                ..Default::default()
+            },
+        ));
+    }
     let handle = std::thread::spawn(move || server.run(rx));
     let mut rng = Rng::new(99);
     let slo_ms = args.get_f64("slo-ms", mean_ms * max_depth as f64 * 12.0);
@@ -294,6 +358,22 @@ fn cmd_serve(args: &Args) {
             r.latency.p50,
             r.latency.p99
         );
+    }
+    if let (Some(dir), Some(rec)) = (&telemetry_dir, &res.telemetry) {
+        let dir = if dir.is_empty() { "results" } else { dir };
+        std::fs::create_dir_all(dir).ok();
+        let p = std::path::Path::new(dir).join("TELEMETRY_serve.json");
+        std::fs::write(&p, rec.time_series().to_pretty()).ok();
+        let tp = std::path::Path::new(dir).join("TELEMETRY_serve.trace.json");
+        std::fs::write(&tp, rec.chrome_trace().to_string()).ok();
+        println!(
+            "  telemetry: {} events ({} dropped) -> {} and {}",
+            rec.recorded(),
+            rec.dropped_events(),
+            p.display(),
+            tp.display()
+        );
+        print!("{}", orloj::telemetry::calibration_table(&rec.calibration()));
     }
 }
 

@@ -39,6 +39,19 @@ pub struct BatchLatency {
     pub feasibility_ms: f64,
 }
 
+impl BatchLatency {
+    /// The telemetry-facing prediction: mean exec time plus the p10/p90
+    /// band of the estimated distribution (Eq. 1–2), against which the
+    /// calibration report measures realized batch times.
+    pub fn prediction(&self) -> crate::scheduler::BatchPrediction {
+        crate::scheduler::BatchPrediction {
+            ms: self.mean,
+            lo_ms: self.dist.quantile(0.1),
+            hi_ms: self.dist.quantile(0.9),
+        }
+    }
+}
+
 /// Estimator over the current profile snapshot.
 #[derive(Debug)]
 pub struct Estimator {

@@ -337,6 +337,34 @@ impl EdfQueues {
     }
 }
 
+/// The scheduler's latency prediction for the batch it most recently
+/// formed: the expected exec time plus a variance band. Orloj reports the
+/// p10/p90 of its estimated batch-latency distribution (paper Eq. 1–2);
+/// point-estimate systems report a degenerate band around their statistic.
+/// Consumed by the telemetry recorder at batch formation, so calibration
+/// (predicted vs. realized) can be measured per (model, app).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPrediction {
+    /// Expected batch execution time, ms.
+    pub ms: f64,
+    /// Lower edge of the variance band (Orloj: p10), ms.
+    pub lo_ms: f64,
+    /// Upper edge of the variance band (Orloj: p90), ms.
+    pub hi_ms: f64,
+}
+
+impl BatchPrediction {
+    /// A degenerate band for point-estimate schedulers: ±`frac` around the
+    /// point prediction.
+    pub fn point(ms: f64, frac: f64) -> BatchPrediction {
+        BatchPrediction {
+            ms,
+            lo_ms: ms * (1.0 - frac),
+            hi_ms: ms * (1.0 + frac),
+        }
+    }
+}
+
 /// A scheduling policy. Drives one worker (the paper's per-GPU scheduler;
 /// scale-out runs one scheduler per replica, each possibly hosting
 /// several models).
@@ -398,6 +426,15 @@ pub trait Scheduler: Send {
     /// Number of queued requests for one model (per-model load accounting
     /// for the routers).
     fn pending_for(&self, model: ModelId) -> usize;
+
+    /// The prediction made for the batch most recently returned by
+    /// `next_batch` (telemetry; read by the serving core right after
+    /// formation). None = this policy does not predict. Storing it must
+    /// not change scheduling decisions — the golden dispatch snapshots
+    /// pin that.
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        None
+    }
 }
 
 /// Mutable borrows are schedulers too, so the clock-generic serving core
@@ -440,6 +477,9 @@ impl<S: Scheduler + ?Sized> Scheduler for &mut S {
     fn pending_for(&self, model: ModelId) -> usize {
         (**self).pending_for(model)
     }
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        (**self).last_batch_prediction()
+    }
 }
 
 impl Scheduler for Box<dyn Scheduler> {
@@ -478,6 +518,9 @@ impl Scheduler for Box<dyn Scheduler> {
     }
     fn pending_for(&self, model: ModelId) -> usize {
         (**self).pending_for(model)
+    }
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        (**self).last_batch_prediction()
     }
 }
 

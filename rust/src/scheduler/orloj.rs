@@ -33,7 +33,7 @@
 
 use super::estimator::Estimator;
 use super::profiler::OnlineProfiler;
-use super::{Scheduler, SchedulerConfig};
+use super::{BatchPrediction, Scheduler, SchedulerConfig};
 use crate::clock::{ms_to_us, us_to_ms, Micros};
 use crate::core::histogram::Histogram;
 use crate::core::priority::{ScoreContext, ScoreSchedule};
@@ -243,6 +243,9 @@ pub struct OrlojScheduler {
     /// Recycled `per_bs` vectors so the steady-state arrival→dispatch
     /// cycle reuses its own buffers instead of allocating.
     per_bs_pool: Vec<Vec<Option<BsEntry>>>,
+    /// Estimator prediction for the batch most recently formed
+    /// (telemetry; see `Scheduler::last_batch_prediction`).
+    last_prediction: Option<BatchPrediction>,
 }
 
 impl OrlojScheduler {
@@ -272,6 +275,7 @@ impl OrlojScheduler {
             last_refresh: 0,
             cost_c: 1.0,
             per_bs_pool: Vec::new(),
+            last_prediction: None,
         }
     }
 
@@ -742,6 +746,14 @@ impl Scheduler for OrlojScheduler {
             if self.estimator.has_warmup() {
                 self.estimator.clear_warmup(batch[0].model);
             }
+            // Record the estimator's view of the batch just formed (pure
+            // cache lookup + arithmetic; decisions are unaffected, so the
+            // golden dispatch snapshots stay bit-identical).
+            self.last_prediction = Some(
+                self.estimator
+                    .batch_latency(batch[0].model, batch[0].app, batch.len())
+                    .prediction(),
+            );
             Some(batch)
         }
     }
@@ -782,6 +794,10 @@ impl Scheduler for OrlojScheduler {
             .iter()
             .find(|g| g.model == model)
             .map_or(0, |g| g.members)
+    }
+
+    fn last_batch_prediction(&self) -> Option<BatchPrediction> {
+        self.last_prediction
     }
 }
 

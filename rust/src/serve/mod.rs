@@ -37,6 +37,7 @@ use crate::clock::{Clock, Micros};
 use crate::core::histogram::Histogram;
 use crate::core::request::{AppId, Completion, ModelId, Outcome, Request};
 use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::telemetry::{EventKind, Recorder};
 pub use placement::{
     ColdStartCost, ElasticConfig, Placement, PlacementAction, PlacementController, WorkerView,
 };
@@ -170,6 +171,8 @@ impl PlacementStats {
 
 struct InFlight {
     batch: Vec<Request>,
+    /// Telemetry batch id assigned at formation (None when disabled).
+    telemetry_batch: Option<u32>,
 }
 
 struct Slot<S> {
@@ -303,6 +306,11 @@ pub struct ServingLoop<C: Clock, S: Scheduler> {
     /// Reused per-arrival candidate snapshot (routing sits on the dispatch
     /// hot path — one request, one route call; no allocation).
     loads_buf: Vec<WorkerLoad>,
+    /// Event recorder (None = telemetry off, the default). Every hook is
+    /// a single branch on this option, so the disabled hot path stays
+    /// allocation-free and bit-identical (the golden snapshots and the
+    /// steady-state alloc audit pin this).
+    telemetry: Option<Box<Recorder>>,
 }
 
 impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
@@ -315,7 +323,29 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             completions: Vec::new(),
             elastic: None,
             loads_buf: Vec::with_capacity(n),
+            telemetry: None,
         }
+    }
+
+    /// Enable event recording. The recorder's ring is pre-allocated here,
+    /// off the serving path.
+    pub fn with_telemetry(mut self, rec: Recorder) -> Self {
+        self.telemetry = Some(Box::new(rec));
+        self
+    }
+
+    pub fn telemetry(&self) -> Option<&Recorder> {
+        self.telemetry.as_deref()
+    }
+
+    pub fn telemetry_mut(&mut self) -> Option<&mut Recorder> {
+        self.telemetry.as_deref_mut()
+    }
+
+    /// Detach the recorder (pumps hand it to `EngineResult`/`ServeResult`
+    /// before consuming the loop).
+    pub fn take_telemetry(&mut self) -> Option<Box<Recorder>> {
+        self.telemetry.take()
     }
 
     /// Enable elastic placement: `ctl` watches per-model demand on every
@@ -435,6 +465,17 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             // `Placement::parse` rejects placements that leave a model
             // unhosted, and the elastic controller never evicts a model's
             // last ready host, so this only fires on ad-hoc traces).
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(now, EventKind::RouteDrop { req: req.id });
+                tel.record(
+                    now,
+                    EventKind::Terminal {
+                        req: req.id,
+                        outcome: Outcome::TimedOut,
+                        worker: None,
+                    },
+                );
+            }
             self.completions.push(Completion {
                 request: req,
                 outcome: Outcome::TimedOut,
@@ -448,6 +489,15 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         let i = self.router.route(&req, &self.loads_buf);
         debug_assert!(i < n, "router returned candidate {i} of {n}");
         let w = self.loads_buf[i.min(n - 1)].worker;
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.record(
+                now,
+                EventKind::Routed {
+                    req: req.id,
+                    worker: w as u32,
+                },
+            );
+        }
         self.cluster.slots[w].sched.on_arrival(req, now);
     }
 
@@ -462,6 +512,16 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             Event::Arrival(req) => {
                 if let Some(el) = &mut self.elastic {
                     el.ctl.note_arrival(req.model);
+                }
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.record(
+                        now,
+                        EventKind::Arrival {
+                            req: req.id,
+                            model: req.model,
+                            app: req.app,
+                        },
+                    );
                 }
                 self.route(req, now);
                 Vec::new()
@@ -480,6 +540,10 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             }
             Event::Wake => {
                 let mut out = Vec::new();
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.record(now, EventKind::Wake);
+                }
+                self.sample_telemetry(now);
                 self.control_placement(now, &mut out);
                 // Reaping keeps router-visible counts honest: busy
                 // replicas never reach `next_batch`, so their queues would
@@ -492,6 +556,9 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 for w in 0..self.cluster.len() {
                     if reap && self.cluster.slots[w].inflight.is_some() {
                         self.cluster.slots[w].sched.reap(now);
+                        if let Some(tel) = self.telemetry.as_mut() {
+                            tel.record(now, EventKind::Reap { worker: w as u32 });
+                        }
                     }
                     self.drain_dropped(w, now);
                     if let Some(d) = self.dispatch_from(w, now) {
@@ -553,6 +620,54 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         (self.completions, stats)
     }
 
+    /// Once per telemetry window (gated by the recorder), sample queue
+    /// depth per worker and backlog per model. One branch when disabled.
+    fn sample_telemetry(&mut self, now: Micros) {
+        let due = match self.telemetry.as_mut() {
+            Some(tel) => tel.sample_due(now),
+            None => false,
+        };
+        if !due {
+            return;
+        }
+        for w in 0..self.cluster.len() {
+            let pending = self.cluster.slots[w].sched.pending() as u32;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(
+                    now,
+                    EventKind::QueueSample {
+                        worker: w as u32,
+                        pending,
+                    },
+                );
+            }
+        }
+        // Index-based iteration: `model_at` returns by value, so the
+        // recorder is free to be borrowed mutably again for the record.
+        let n_models = self.telemetry.as_ref().map_or(0, |t| t.models_len());
+        for i in 0..n_models {
+            let m = match self.telemetry.as_ref() {
+                Some(tel) => tel.model_at(i),
+                None => continue,
+            };
+            let pending: usize = self
+                .cluster
+                .slots
+                .iter()
+                .map(|s| s.sched.pending_for(m))
+                .sum();
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(
+                    now,
+                    EventKind::ModelBacklog {
+                        model: m,
+                        pending: pending as u32,
+                    },
+                );
+            }
+        }
+    }
+
     /// Run the placement controller (elastic runs only): apply unloads
     /// (evict + drain + re-route) and emit load dispatches.
     fn control_placement(&mut self, now: Micros, out: &mut Vec<Dispatch>) {
@@ -575,6 +690,16 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                         self.cluster.slots[worker].loading = Some(model);
                         el.stats.loads += 1;
                         el.stats.last_action_at = now;
+                        if let Some(tel) = self.telemetry.as_mut() {
+                            tel.record(
+                                now,
+                                EventKind::Load {
+                                    worker: worker as u32,
+                                    model,
+                                    cost_ms,
+                                },
+                            );
+                        }
                         out.push(Dispatch::Load {
                             worker,
                             model,
@@ -590,6 +715,15 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                         el.stats.unloads += 1;
                         el.stats.last_action_at = now;
                         el.stats.rerouted += evicted.len();
+                        if let Some(tel) = self.telemetry.as_mut() {
+                            tel.record(
+                                now,
+                                EventKind::Unload {
+                                    worker: worker as u32,
+                                    model,
+                                },
+                            );
+                        }
                         for r in evicted {
                             self.route(r, now);
                         }
@@ -642,6 +776,16 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         );
         slot.sched.install_model(model, load_ms, now);
         self.cluster.placement.install(w, model);
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.record(
+                now,
+                EventKind::LoadDone {
+                    worker: w as u32,
+                    model,
+                    load_ms,
+                },
+            );
+        }
     }
 
     /// Book a finished batch: label outcomes against deadlines, account
@@ -653,12 +797,34 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             return;
         };
         let bs = f.batch.len();
+        if let Some(tel) = self.telemetry.as_mut() {
+            if let Some(b) = f.telemetry_batch {
+                tel.record(
+                    now,
+                    EventKind::BatchDone {
+                        batch: b,
+                        worker: w as u32,
+                        batch_ms,
+                    },
+                );
+            }
+        }
         for r in &f.batch {
             let outcome = if now <= r.deadline {
                 Outcome::Finished
             } else {
                 Outcome::Late
             };
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(
+                    now,
+                    EventKind::Terminal {
+                        req: r.id,
+                        outcome,
+                        worker: Some(w as u32),
+                    },
+                );
+            }
             self.completions.push(Completion {
                 request: r.clone(),
                 outcome,
@@ -699,8 +865,46 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                             .unwrap_or(true),
                         "worker {w} dispatched a batch for a model it does not host"
                     );
+                    let telemetry_batch = match self.telemetry.as_mut() {
+                        Some(tel) => {
+                            let id = tel.begin_batch(w);
+                            // The scheduler stored its prediction for this
+                            // batch when forming it; a policy that does not
+                            // predict reports a zero-width nothing.
+                            let (pm, lo, hi) =
+                                match self.cluster.slots[w].sched.last_batch_prediction() {
+                                    Some(p) => (p.ms, p.lo_ms, p.hi_ms),
+                                    None => (0.0, 0.0, 0.0),
+                                };
+                            tel.record(
+                                now,
+                                EventKind::BatchFormed {
+                                    batch: id,
+                                    worker: w as u32,
+                                    model: batch[0].model,
+                                    app: batch[0].app,
+                                    size: batch.len() as u32,
+                                    predicted_ms: pm,
+                                    lo_ms: lo,
+                                    hi_ms: hi,
+                                },
+                            );
+                            for r in &batch {
+                                tel.record(
+                                    now,
+                                    EventKind::InBatch {
+                                        req: r.id,
+                                        batch: id,
+                                    },
+                                );
+                            }
+                            Some(id)
+                        }
+                        None => None,
+                    };
                     self.cluster.slots[w].inflight = Some(InFlight {
                         batch: batch.clone(),
+                        telemetry_batch,
                     });
                     return Some(Dispatch::Execute { worker: w, batch });
                 }
@@ -718,6 +922,16 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         let dropped = self.cluster.slots[w].sched.drain_dropped();
         let any = !dropped.is_empty();
         for (r, outcome) in dropped {
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(
+                    now,
+                    EventKind::Terminal {
+                        req: r.id,
+                        outcome,
+                        worker: None,
+                    },
+                );
+            }
             self.completions.push(Completion {
                 request: r,
                 outcome,

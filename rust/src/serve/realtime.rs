@@ -45,6 +45,9 @@ pub struct ServeResult {
     pub placement: PlacementStats,
     /// Wall-clock length of the run (µs since the serving clock's epoch).
     pub end_time: Micros,
+    /// Lifecycle recorder, present when the loop was built with
+    /// [`ServingLoop::with_telemetry`].
+    pub telemetry: Option<Box<crate::telemetry::Recorder>>,
 }
 
 /// Work items shipped to a replica's executor thread.
@@ -219,7 +222,23 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
             // batch as forever-in-flight.
             for d in core.on_event(Event::Wake) {
                 let (worker, work) = match d {
-                    Dispatch::Execute { worker, batch } => (worker, Work::Batch(batch)),
+                    Dispatch::Execute { worker, batch } => {
+                        // The batch starts executing as soon as it is
+                        // shipped — the replica thread was idle.
+                        let now = core.now();
+                        if let Some(tel) = core.telemetry_mut() {
+                            if let Some(b) = tel.last_batch_for(worker) {
+                                tel.record(
+                                    now,
+                                    crate::telemetry::EventKind::ExecStart {
+                                        batch: b,
+                                        worker: worker as u32,
+                                    },
+                                );
+                            }
+                        }
+                        (worker, Work::Batch(batch))
+                    }
                     Dispatch::Load {
                         worker,
                         model,
@@ -254,12 +273,14 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
     core.drain_all();
     let end_time = core.now();
     let placement = core.placement_stats();
+    let telemetry = core.take_telemetry();
     let (completions, per_worker) = core.into_completions();
     ServeResult {
         completions,
         per_worker,
         placement,
         end_time,
+        telemetry,
     }
 }
 

@@ -24,6 +24,7 @@ use crate::core::request::{ModelId, Request};
 use crate::scheduler::Scheduler;
 use crate::sim::engine::EngineResult;
 use crate::sim::worker::Worker;
+use crate::telemetry::EventKind;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -114,8 +115,22 @@ where
                 Dispatch::Execute { worker, batch } => {
                     let ms = workers[worker].execute(&batch);
                     done_ms[worker] = ms;
-                    let fin = busy_until[worker].max(now) + ms_to_us(ms);
+                    let start = busy_until[worker].max(now);
+                    let fin = start + ms_to_us(ms);
                     busy_until[worker] = fin;
+                    // Execution begins when the worker frees, not at
+                    // dispatch: stamp the span's start accordingly.
+                    if let Some(tel) = core.telemetry_mut() {
+                        if let Some(b) = tel.last_batch_for(worker) {
+                            tel.record(
+                                start,
+                                EventKind::ExecStart {
+                                    batch: b,
+                                    worker: worker as u32,
+                                },
+                            );
+                        }
+                    }
                     done.push(Reverse((fin, worker)));
                 }
                 Dispatch::Load {
@@ -163,6 +178,7 @@ where
 
     let end_time = clock.now();
     let placement = core.placement_stats();
+    let telemetry = core.take_telemetry();
     let (completions, per_worker) = core.into_completions();
     let batches = per_worker.iter().map(|w| w.batches).sum();
     let busy_us = per_worker.iter().map(|w| w.busy_us).sum();
@@ -173,6 +189,7 @@ where
         busy_us,
         per_worker,
         placement,
+        telemetry,
     }
 }
 

@@ -22,8 +22,8 @@ pub struct WorkerUtil {
 pub struct ModelRates {
     pub finished: usize,
     pub total: usize,
-    /// Latency summary over this model's completed (finished + late)
-    /// requests, ms.
+    /// Latency summary over this model's serviced (finished + late)
+    /// requests, ms — the same outcome set as [`RunReport::latency`].
     pub latency: Summary,
 }
 
@@ -38,6 +38,14 @@ impl ModelRates {
 }
 
 /// Aggregated result of a serving run.
+///
+/// Outcome semantics (uniform across every summary in this report):
+/// * `finished` counts [`Outcome::Finished`] only — the paper's finish
+///   rate numerator (§5.2).
+/// * *Serviced* requests — `Finished` **and** `Late` — feed every latency
+///   summary (global and per-model) and `mean_batch_size`: they ran on a
+///   worker, so they have a real latency and a real batch. `TimedOut` and
+///   `Aborted` requests never executed and contribute to counts only.
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub total: usize,
@@ -45,9 +53,10 @@ pub struct RunReport {
     pub late: usize,
     pub timed_out: usize,
     pub aborted: usize,
-    /// Latency summary over completed (finished + late) requests, ms.
+    /// Latency summary over serviced (finished + late) requests, ms.
     pub latency: Summary,
-    /// Mean batch size over executed batches.
+    /// Mean batch size over serviced requests (request-weighted, not
+    /// batch-weighted: a size-8 batch contributes 8 samples of 8).
     pub mean_batch_size: f64,
     /// Per-app finish rates.
     pub per_app: BTreeMap<u32, (usize, usize)>, // app -> (finished, total)
@@ -163,7 +172,10 @@ impl std::fmt::Display for RunReport {
             self.latency.p99,
             self.mean_batch_size
         )?;
-        if self.per_model.len() > 1 {
+        // Always show the per-model line when the breakdown exists —
+        // hiding it on single-model runs made `m0`'s latency detail
+        // unreachable from the printed report.
+        if !self.per_model.is_empty() {
             let rates: Vec<String> = self
                 .per_model
                 .iter()
@@ -227,12 +239,41 @@ mod tests {
         assert_eq!(r.per_app[&1], (1, 3));
         assert_eq!(r.timed_out, 1);
         assert_eq!(r.aborted, 1);
-        // Single model → one per-model entry matching the aggregates, not
-        // shown in Display.
+        // Single model → one per-model entry matching the aggregates,
+        // shown in Display too (the breakdown is never hidden).
         assert_eq!(r.per_model.len(), 1);
         assert_eq!(r.per_model[&0].finished, 2);
         assert_eq!(r.per_model[&0].total, 5);
-        assert!(!format!("{r}").contains("models=["));
+        assert!(format!("{r}").contains("models=["), "{r}");
+    }
+
+    #[test]
+    fn serviced_outcomes_feed_latency_and_batch_size() {
+        // Pin which outcomes feed each summary: Finished + Late (serviced)
+        // drive latency and mean_batch_size; TimedOut/Aborted only counts.
+        let mk = |id, outcome, at, batch_size| Completion {
+            request: Request::new(id, AppId(0), 0, 1_000_000, 5.0),
+            outcome,
+            at,
+            batch_size,
+            worker: Some(0),
+        };
+        let comps = vec![
+            mk(1, Outcome::Finished, 100_000, 2),
+            mk(2, Outcome::Late, 2_000_000, 4),
+            mk(3, Outcome::TimedOut, 500, 0),
+            mk(4, Outcome::Aborted, 900, 0),
+        ];
+        let r = RunReport::from_completions(&comps);
+        assert_eq!((r.finished, r.late, r.timed_out, r.aborted), (1, 1, 1, 1));
+        // Two serviced requests → two latency samples; the shed pair's
+        // zero batch sizes must not drag the mean down.
+        assert_eq!(r.latency.count, 2);
+        assert!((r.mean_batch_size - 3.0).abs() < 1e-12, "{}", r.mean_batch_size);
+        // The per-model summary sees the same serviced set.
+        assert_eq!(r.per_model[&0].latency.count, 2);
+        assert_eq!(r.per_model[&0].total, 4);
+        assert_eq!(r.per_model[&0].finished, 1);
     }
 
     #[test]

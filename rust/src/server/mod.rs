@@ -45,6 +45,8 @@ pub struct Server<S: Scheduler, W: Worker> {
     placement: Option<Placement>,
     /// Elastic placement controller (requires `with_placement`).
     elastic: Option<PlacementController>,
+    /// Lifecycle recorder handed to the serving loop (off by default).
+    telemetry: Option<crate::telemetry::Recorder>,
     /// Anchored at construction so callers can stamp release times before
     /// the serving thread spins up.
     clock: RealClock,
@@ -59,6 +61,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             router: router::by_name("round_robin").expect("registry has round_robin"),
             placement: None,
             elastic: None,
+            telemetry: None,
             clock: RealClock::new(),
         }
     }
@@ -73,6 +76,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             router,
             placement: None,
             elastic: None,
+            telemetry: None,
             clock: RealClock::new(),
         }
     }
@@ -97,6 +101,13 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
         self
     }
 
+    /// Record request-lifecycle telemetry into `rec`; the filled recorder
+    /// comes back on [`ServeResult::telemetry`].
+    pub fn with_telemetry(mut self, rec: crate::telemetry::Recorder) -> Self {
+        self.telemetry = Some(rec);
+        self
+    }
+
     /// Create the submission channel. Call before `run`.
     pub fn channel() -> (Submitter, Receiver<Request>) {
         let (tx, rx) = mpsc::channel();
@@ -118,6 +129,9 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
         let mut core = ServingLoop::new(self.clock, cluster, self.router);
         if let Some(ctl) = self.elastic {
             core = core.with_elastic(ctl);
+        }
+        if let Some(rec) = self.telemetry {
+            core = core.with_telemetry(rec);
         }
         realtime::serve_cluster(core, self.workers, rx)
     }

@@ -29,6 +29,10 @@ pub struct EngineResult {
     pub per_worker: Vec<WorkerStats>,
     /// Elastic placement counters (all zero on static runs).
     pub placement: PlacementStats,
+    /// Lifecycle recorder, present when the run was built with
+    /// [`ServingLoop::with_telemetry`]; `None` (the default) costs one
+    /// branch per hook on the hot path.
+    pub telemetry: Option<Box<crate::telemetry::Recorder>>,
 }
 
 /// Run the trace to completion on a single worker.

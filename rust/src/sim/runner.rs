@@ -16,6 +16,7 @@ use crate::serve::{
 };
 use crate::server::metrics::RunReport;
 use crate::sim::worker::SimWorker;
+use crate::telemetry::{Recorder, RecorderConfig};
 use crate::workload::trace::{Trace, TraceSpec};
 
 /// Replica-count, routing, model-placement and elasticity knobs for a
@@ -31,6 +32,10 @@ pub struct ClusterSpec {
     pub placement: String,
     /// Elastic placement controller config (None = static placement).
     pub elastic: Option<ElasticConfig>,
+    /// Record request-lifecycle telemetry (off by default: the recorder
+    /// costs one branch per hook even when disabled, and real memory when
+    /// enabled).
+    pub telemetry: bool,
 }
 
 impl Default for ClusterSpec {
@@ -40,6 +45,7 @@ impl Default for ClusterSpec {
             router: "round_robin".into(),
             placement: "all".into(),
             elastic: None,
+            telemetry: false,
         }
     }
 }
@@ -51,6 +57,7 @@ impl ClusterSpec {
             router: router.to_string(),
             placement: "all".into(),
             elastic: None,
+            telemetry: false,
         }
     }
 
@@ -66,6 +73,13 @@ impl ClusterSpec {
         self.elastic = Some(cfg);
         self
     }
+
+    /// Capture request-lifecycle telemetry; the filled recorder comes
+    /// back on [`Cell::telemetry`].
+    pub fn with_telemetry(mut self) -> Self {
+        self.telemetry = true;
+        self
+    }
 }
 
 /// One (system, slo) cell of a results table.
@@ -79,6 +93,9 @@ pub struct Cell {
     pub workers: usize,
     /// Elastic placement counters (all zero on static runs).
     pub placement: PlacementStats,
+    /// Filled lifecycle recorder (only when the [`ClusterSpec`] asked
+    /// for telemetry).
+    pub telemetry: Option<Box<Recorder>>,
 }
 
 /// Run one system over one trace at one SLO multiple.
@@ -130,6 +147,16 @@ pub fn run_one(
         core = core.with_elastic(PlacementController::new(ecfg.clone()));
     }
     let requests = trace.requests(slo_multiple);
+    if cluster.telemetry {
+        // Generous ring: every request produces a handful of lifecycle
+        // events plus per-batch and per-wake events; undersizing would
+        // drop the early Terminals that the conservation checks need.
+        let capacity = (requests.len() * 16).max(1 << 14);
+        core = core.with_telemetry(Recorder::with_config(RecorderConfig {
+            capacity,
+            ..Default::default()
+        }));
+    }
     let res = replay::run_cluster(core, workers, requests);
     let report =
         RunReport::from_completions(&res.completions).with_worker_stats(&res.per_worker, res.end_time);
@@ -145,6 +172,7 @@ pub fn run_one(
         utilization,
         workers: n,
         placement: res.placement,
+        telemetry: res.telemetry,
     }
 }
 
@@ -272,6 +300,32 @@ pub fn render_model_rates(title: &str, cells: &[Cell]) -> String {
             rates.join(" ")
         )
         .unwrap();
+    }
+    out
+}
+
+/// Render estimator calibration (predicted vs. realized batch latency,
+/// per (model, app)) for cells run with telemetry enabled.
+pub fn render_calibration(title: &str, cells: &[Cell]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "-- {title} --").unwrap();
+    for c in cells {
+        let Some(rec) = &c.telemetry else { continue };
+        let rows = rec.calibration();
+        if rows.is_empty() {
+            continue;
+        }
+        writeln!(
+            out,
+            "{:>10} slo={:<4} ({} events, {} dropped)",
+            c.system,
+            format!("{:.1}", c.slo_multiple),
+            rec.recorded(),
+            rec.dropped_events(),
+        )
+        .unwrap();
+        out.push_str(&crate::telemetry::calibration_table(&rows));
     }
     out
 }

@@ -1,0 +1,908 @@
+//! End-to-end telemetry: request-lifecycle tracing, windowed time-series
+//! and estimator calibration (DESIGN.md §9).
+//!
+//! The [`Recorder`] is a pre-allocated ring buffer of fixed-size
+//! [`TelemetryEvent`]s. It is threaded through the serve core as an
+//! `Option<Box<Recorder>>`: with telemetry disabled (the default) every
+//! hook is a single `if let Some(..)` on a `None` — branch-cheap and
+//! allocation-free, so the PR 4 zero-alloc audit and the golden dispatch
+//! snapshots hold bit-exactly. With telemetry enabled, recording an event
+//! is a bounds-checked store into the pre-allocated ring; when the ring is
+//! full the *oldest* event is overwritten and a dropped-events counter is
+//! bumped — the recorder never blocks or grows on the pump's hot path.
+//!
+//! Timestamps are the crate-wide [`Micros`] tick, so the virtual-time
+//! replay pump and the wall-clock realtime pump share one schema; a trace
+//! recorded under `VirtualClock` loads in Perfetto exactly like one
+//! recorded under `RealClock`.
+//!
+//! Post-hoc analysis (all allocation is after the run):
+//! * [`Recorder::chrome_trace`] — Chrome trace-event JSON, loadable in
+//!   Perfetto / `chrome://tracing`: one track per worker (batch execution
+//!   and model load spans) plus one counter track per model queue.
+//! * [`Recorder::time_series`] — windowed per-window arrivals, finish and
+//!   shed rates, batch sizes, utilization, queue depth and per-model
+//!   backlog, plus the calibration stream; this is what the CLI writes to
+//!   `TELEMETRY_*.json`.
+//! * [`Recorder::calibration`] — the estimator calibration report:
+//!   predicted vs. realized batch exec time per (model, app), signed
+//!   error quantiles, and coverage of the predicted [p10, p90] band
+//!   (the paper's Eq. 1–2 machinery, measured).
+
+use crate::clock::{us_to_ms, Micros};
+use crate::core::request::{AppId, ModelId, Outcome, RequestId};
+use crate::util::json::Json;
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// One recorded event: a clock-generic timestamp plus the payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryEvent {
+    pub at: Micros,
+    pub kind: EventKind,
+}
+
+/// Fixed-size event payloads. Worker indices are narrowed to `u32`; batch
+/// ids are assigned by [`Recorder::begin_batch`] and are monotone across
+/// the whole run (unique across workers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Request entered the serving loop.
+    Arrival {
+        req: RequestId,
+        model: ModelId,
+        app: AppId,
+    },
+    /// Router picked a replica; the request is now in that worker's queue.
+    Routed { req: RequestId, worker: u32 },
+    /// Router found no replica for the request's model; it was shed.
+    RouteDrop { req: RequestId },
+    /// Scheduler formed a batch, with the estimator's prediction at
+    /// formation time: mean `predicted_ms` and the [`lo_ms`, `hi_ms`]
+    /// variance band (p10/p90 of the predicted distribution).
+    BatchFormed {
+        batch: u32,
+        worker: u32,
+        model: ModelId,
+        app: AppId,
+        size: u32,
+        predicted_ms: f64,
+        lo_ms: f64,
+        hi_ms: f64,
+    },
+    /// Request → batch membership.
+    InBatch { req: RequestId, batch: u32 },
+    /// Batch began executing on its worker.
+    ExecStart { batch: u32, worker: u32 },
+    /// Batch finished; `batch_ms` is the realized execution time.
+    BatchDone {
+        batch: u32,
+        worker: u32,
+        batch_ms: f64,
+    },
+    /// Terminal state of a request (exactly one per request).
+    Terminal {
+        req: RequestId,
+        outcome: Outcome,
+        worker: Option<u32>,
+    },
+    /// The serving loop woke (timer or arrival) and polled schedulers.
+    Wake,
+    /// Scheduler-side reap of infeasible requests on a worker's queue.
+    Reap { worker: u32 },
+    /// Placement decision: start loading `model` onto `worker`.
+    Load {
+        worker: u32,
+        model: ModelId,
+        cost_ms: f64,
+    },
+    /// Placement decision: evict `model` from `worker`.
+    Unload { worker: u32, model: ModelId },
+    /// Cold start finished; the replica is live after `load_ms`.
+    LoadDone {
+        worker: u32,
+        model: ModelId,
+        load_ms: f64,
+    },
+    /// Windowed sample: requests pending on a worker's scheduler.
+    QueueSample { worker: u32, pending: u32 },
+    /// Windowed sample: cluster-wide backlog for one model.
+    ModelBacklog { model: ModelId, pending: u32 },
+}
+
+/// Ring capacity and sampling window for a [`Recorder`].
+#[derive(Debug, Clone, Copy)]
+pub struct RecorderConfig {
+    /// Maximum events held; once full, the oldest event is overwritten
+    /// (drop-oldest) and [`Recorder::dropped_events`] counts the loss.
+    pub capacity: usize,
+    /// Width of the time-series sampling window, in microseconds.
+    pub window_us: Micros,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        RecorderConfig {
+            capacity: 1 << 16,
+            window_us: 100_000,
+        }
+    }
+}
+
+/// Pre-allocated ring-buffer event recorder. Construction allocates the
+/// full ring up front; recording never allocates.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    cfg: RecorderConfig,
+    events: Vec<TelemetryEvent>,
+    /// Total events ever recorded; `pos % capacity` is the write slot.
+    pos: usize,
+    dropped: u64,
+    next_batch: u32,
+    /// Last batch id formed per worker (pump looks this up at dispatch).
+    last_batch: Vec<Option<u32>>,
+    /// Models observed in arrivals, in first-seen order.
+    models: Vec<ModelId>,
+    next_sample_at: Micros,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::with_config(RecorderConfig::default())
+    }
+
+    pub fn with_config(cfg: RecorderConfig) -> Recorder {
+        Recorder {
+            cfg,
+            events: Vec::with_capacity(cfg.capacity.max(1)),
+            pos: 0,
+            dropped: 0,
+            next_batch: 0,
+            last_batch: Vec::new(),
+            models: Vec::new(),
+            next_sample_at: 0,
+        }
+    }
+
+    /// Record one event. Never allocates: once the ring is full the oldest
+    /// event is overwritten and the dropped counter is bumped.
+    pub fn record(&mut self, at: Micros, kind: EventKind) {
+        if let EventKind::Arrival { model, .. } = kind {
+            if !self.models.contains(&model) {
+                self.models.push(model);
+            }
+        }
+        let ev = TelemetryEvent { at, kind };
+        let cap = self.cfg.capacity.max(1);
+        if self.events.len() < cap {
+            self.events.push(ev);
+        } else {
+            if self.dropped == 0 {
+                crate::log_trace!(
+                    "telemetry",
+                    "ring full at {} events; dropping oldest from here on",
+                    cap
+                );
+            }
+            self.events[self.pos % cap] = ev;
+            self.dropped += 1;
+        }
+        self.pos += 1;
+    }
+
+    /// Assign the next batch id and remember it as `worker`'s most recent
+    /// formation, so the pump can tag the imminent `ExecStart`.
+    pub fn begin_batch(&mut self, worker: usize) -> u32 {
+        let id = self.next_batch;
+        self.next_batch += 1;
+        if self.last_batch.len() <= worker {
+            self.last_batch.resize(worker + 1, None);
+        }
+        self.last_batch[worker] = Some(id);
+        id
+    }
+
+    /// The most recently formed batch id on `worker`, if any.
+    pub fn last_batch_for(&self, worker: usize) -> Option<u32> {
+        self.last_batch.get(worker).copied().flatten()
+    }
+
+    /// True once per sampling window: the caller should emit
+    /// `QueueSample`/`ModelBacklog` events now. Advances the gate to the
+    /// next window boundary.
+    pub fn sample_due(&mut self, now: Micros) -> bool {
+        if now < self.next_sample_at {
+            return false;
+        }
+        let w = self.cfg.window_us.max(1);
+        self.next_sample_at = (now / w + 1) * w;
+        true
+    }
+
+    /// Number of distinct models seen in arrivals so far. Paired with
+    /// [`Recorder::model_at`] so samplers can interleave reads with
+    /// `record` calls without holding a borrow of the recorder.
+    pub fn models_len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn model_at(&self, i: usize) -> ModelId {
+        self.models[i]
+    }
+
+    /// Events currently held, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TelemetryEvent> {
+        let cap = self.cfg.capacity.max(1);
+        let split = if self.events.len() < cap {
+            0
+        } else {
+            self.pos % cap
+        };
+        self.events[split..].iter().chain(self.events[..split].iter())
+    }
+
+    /// Events currently held in the ring.
+    pub fn recorded(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Events lost to drop-oldest overwrites.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn window_us(&self) -> Micros {
+        self.cfg.window_us
+    }
+
+    /// Highest worker index mentioned by any event, plus one.
+    fn worker_count(&self) -> usize {
+        let mut max_w: Option<u32> = None;
+        let mut bump = |w: u32| {
+            max_w = Some(max_w.map_or(w, |m: u32| m.max(w)));
+        };
+        for ev in self.events() {
+            match ev.kind {
+                EventKind::Routed { worker, .. }
+                | EventKind::BatchFormed { worker, .. }
+                | EventKind::ExecStart { worker, .. }
+                | EventKind::BatchDone { worker, .. }
+                | EventKind::Reap { worker }
+                | EventKind::Load { worker, .. }
+                | EventKind::Unload { worker, .. }
+                | EventKind::LoadDone { worker, .. }
+                | EventKind::QueueSample { worker, .. } => bump(worker),
+                EventKind::Terminal {
+                    worker: Some(w), ..
+                } => bump(w),
+                _ => {}
+            }
+        }
+        max_w.map_or(1, |m| m as usize + 1)
+    }
+
+    // ---- exporters (post-hoc; free to allocate) --------------------------
+
+    /// Chrome trace-event JSON (load in Perfetto or `chrome://tracing`).
+    ///
+    /// Layout: pid 1 is the serving loop; tid 0 is the scheduler/router
+    /// track (shed instants), tid `w + 1` is worker `w` (batch-execution
+    /// and model-load spans). Each model queue gets its own counter track
+    /// (`backlog m<id>`), each worker queue likewise (`queue w<id>`).
+    /// `ts`/`dur` are microseconds, as the format requires.
+    pub fn chrome_trace(&self) -> Json {
+        let mut out: Vec<Json> = Vec::new();
+        let meta = |tid: f64, name: &str| {
+            Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid)),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::str(name.to_string()))]),
+                ),
+            ])
+        };
+        out.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str("orloj"))])),
+        ]));
+        out.push(meta(0.0, "scheduler"));
+        for w in 0..self.worker_count() {
+            out.push(meta(w as f64 + 1.0, &format!("worker {w}")));
+        }
+
+        struct Formed {
+            model: ModelId,
+            app: AppId,
+            size: u32,
+            predicted_ms: f64,
+            at: Micros,
+            exec_at: Option<Micros>,
+        }
+        let mut formed: BTreeMap<u32, Formed> = BTreeMap::new();
+        let mut loads: BTreeMap<(u32, u32), Micros> = BTreeMap::new();
+        let span = |name: String, cat: &str, tid: u32, ts: Micros, dur_us: f64, args: Json| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str(cat.to_string())),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(ts as f64)),
+                ("dur", Json::num(dur_us.max(0.0))),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64 + 1.0)),
+                ("args", args),
+            ])
+        };
+        let counter = |name: String, ts: Micros, key: &str, v: f64| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("ph", Json::str("C")),
+                ("ts", Json::num(ts as f64)),
+                ("pid", Json::num(1.0)),
+                ("args", Json::obj(vec![(key, Json::num(v))])),
+            ])
+        };
+        for ev in self.events() {
+            match ev.kind {
+                EventKind::BatchFormed {
+                    batch,
+                    model,
+                    app,
+                    size,
+                    predicted_ms,
+                    ..
+                } => {
+                    formed.insert(
+                        batch,
+                        Formed {
+                            model,
+                            app,
+                            size,
+                            predicted_ms,
+                            at: ev.at,
+                            exec_at: None,
+                        },
+                    );
+                }
+                EventKind::ExecStart { batch, .. } => {
+                    if let Some(f) = formed.get_mut(&batch) {
+                        f.exec_at = Some(ev.at);
+                    }
+                }
+                EventKind::BatchDone {
+                    batch,
+                    worker,
+                    batch_ms,
+                } => {
+                    if let Some(f) = formed.get(&batch) {
+                        let start = f.exec_at.unwrap_or(f.at);
+                        out.push(span(
+                            format!("batch {} m{} ×{}", batch, f.model.0, f.size),
+                            "exec",
+                            worker,
+                            start,
+                            batch_ms * 1000.0,
+                            Json::obj(vec![
+                                ("model", Json::num(f.model.0 as f64)),
+                                ("app", Json::num(f.app.0 as f64)),
+                                ("size", Json::num(f.size as f64)),
+                                ("predicted_ms", Json::num(f.predicted_ms)),
+                                ("realized_ms", Json::num(batch_ms)),
+                            ]),
+                        ));
+                    }
+                }
+                EventKind::Load { worker, model, .. } => {
+                    loads.insert((worker, model.0), ev.at);
+                }
+                EventKind::LoadDone {
+                    worker,
+                    model,
+                    load_ms,
+                } => {
+                    let start = loads
+                        .remove(&(worker, model.0))
+                        .unwrap_or_else(|| ev.at.saturating_sub(crate::clock::ms_to_us(load_ms)));
+                    out.push(span(
+                        format!("load m{}", model.0),
+                        "placement",
+                        worker,
+                        start,
+                        (ev.at.saturating_sub(start)) as f64,
+                        Json::obj(vec![("load_ms", Json::num(load_ms))]),
+                    ));
+                }
+                EventKind::Unload { worker, model } => {
+                    out.push(Json::obj(vec![
+                        ("name", Json::str(format!("unload m{}", model.0))),
+                        ("cat", Json::str("placement")),
+                        ("ph", Json::str("i")),
+                        ("s", Json::str("t")),
+                        ("ts", Json::num(ev.at as f64)),
+                        ("pid", Json::num(1.0)),
+                        ("tid", Json::num(worker as f64 + 1.0)),
+                    ]));
+                }
+                EventKind::Terminal { req, outcome, .. } => {
+                    if !matches!(outcome, Outcome::Finished | Outcome::Late) {
+                        out.push(Json::obj(vec![
+                            ("name", Json::str(format!("shed r{} {outcome:?}", req.0))),
+                            ("cat", Json::str("shed")),
+                            ("ph", Json::str("i")),
+                            ("s", Json::str("t")),
+                            ("ts", Json::num(ev.at as f64)),
+                            ("pid", Json::num(1.0)),
+                            ("tid", Json::num(0.0)),
+                        ]));
+                    }
+                }
+                EventKind::QueueSample { worker, pending } => {
+                    out.push(counter(
+                        format!("queue w{worker}"),
+                        ev.at,
+                        "pending",
+                        pending as f64,
+                    ));
+                }
+                EventKind::ModelBacklog { model, pending } => {
+                    out.push(counter(
+                        format!("backlog m{}", model.0),
+                        ev.at,
+                        "pending",
+                        pending as f64,
+                    ));
+                }
+                EventKind::Arrival { .. }
+                | EventKind::Routed { .. }
+                | EventKind::RouteDrop { .. }
+                | EventKind::InBatch { .. }
+                | EventKind::Wake
+                | EventKind::Reap { .. } => {}
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::arr(out)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+
+    /// Windowed time-series + calibration stream, as written to
+    /// `TELEMETRY_*.json`. Utilization attributes a batch's realized exec
+    /// time to the window its completion lands in (documented
+    /// approximation; windows are much wider than batches).
+    pub fn time_series(&self) -> Json {
+        #[derive(Default)]
+        struct Win {
+            arrivals: u64,
+            routed: u64,
+            finished: u64,
+            late: u64,
+            shed: u64,
+            batches: u64,
+            batched_reqs: u64,
+            busy_ms: f64,
+            queue: BTreeMap<u32, u32>,
+            backlog: BTreeMap<u32, u32>,
+        }
+        let w_us = self.cfg.window_us.max(1);
+        let workers = self.worker_count();
+        let mut wins: BTreeMap<u64, Win> = BTreeMap::new();
+        for ev in self.events() {
+            let win = wins.entry(ev.at / w_us).or_default();
+            match ev.kind {
+                EventKind::Arrival { .. } => win.arrivals += 1,
+                EventKind::Routed { .. } => win.routed += 1,
+                // RouteDrop is always followed by a Terminal{TimedOut} for
+                // the same request — only the Terminal feeds the shed rate.
+                EventKind::BatchFormed { size, .. } => {
+                    win.batches += 1;
+                    win.batched_reqs += size as u64;
+                }
+                EventKind::BatchDone { batch_ms, .. } => win.busy_ms += batch_ms,
+                EventKind::Terminal { outcome, .. } => match outcome {
+                    Outcome::Finished => win.finished += 1,
+                    Outcome::Late => win.late += 1,
+                    Outcome::TimedOut | Outcome::Aborted => win.shed += 1,
+                },
+                EventKind::QueueSample { worker, pending } => {
+                    win.queue.insert(worker, pending);
+                }
+                EventKind::ModelBacklog { model, pending } => {
+                    win.backlog.insert(model.0, pending);
+                }
+                _ => {}
+            }
+        }
+        let window_ms = us_to_ms(w_us);
+        let rows = wins.into_iter().map(|(idx, w)| {
+            let mean_batch = if w.batches > 0 {
+                w.batched_reqs as f64 / w.batches as f64
+            } else {
+                0.0
+            };
+            let queue_depth: u64 = w.queue.values().map(|&v| v as u64).sum();
+            let backlog = Json::Obj(
+                w.backlog
+                    .into_iter()
+                    .map(|(m, n)| (format!("m{m}"), Json::num(n as f64)))
+                    .collect(),
+            );
+            Json::obj(vec![
+                ("t_ms", Json::num(idx as f64 * window_ms)),
+                ("arrivals", Json::num(w.arrivals as f64)),
+                ("routed", Json::num(w.routed as f64)),
+                ("finished", Json::num(w.finished as f64)),
+                ("late", Json::num(w.late as f64)),
+                ("shed", Json::num(w.shed as f64)),
+                ("batches", Json::num(w.batches as f64)),
+                ("mean_batch", Json::num(mean_batch)),
+                ("busy_ms", Json::num(w.busy_ms)),
+                (
+                    "utilization",
+                    Json::num(w.busy_ms / (window_ms * workers as f64)),
+                ),
+                ("queue_depth", Json::num(queue_depth as f64)),
+                ("backlog", backlog),
+            ])
+        });
+        let cal = Json::arr(self.calibration().iter().map(CalibrationRow::to_json));
+        Json::obj(vec![
+            ("window_ms", Json::num(window_ms)),
+            ("workers", Json::num(workers as f64)),
+            ("recorded", Json::num(self.recorded() as f64)),
+            ("dropped_events", Json::num(self.dropped as f64)),
+            ("windows", Json::arr(rows)),
+            ("calibration", cal),
+        ])
+    }
+
+    /// Every (prediction, realization) pair recoverable from the ring:
+    /// a `BatchFormed` joined to its `BatchDone` by batch id.
+    pub fn prediction_pairs(&self) -> Vec<PredictionPair> {
+        let mut formed: BTreeMap<u32, PredictionPair> = BTreeMap::new();
+        let mut out = Vec::new();
+        for ev in self.events() {
+            match ev.kind {
+                EventKind::BatchFormed {
+                    batch,
+                    model,
+                    app,
+                    size,
+                    predicted_ms,
+                    lo_ms,
+                    hi_ms,
+                    ..
+                } => {
+                    formed.insert(
+                        batch,
+                        PredictionPair {
+                            batch,
+                            model,
+                            app,
+                            size,
+                            predicted_ms,
+                            lo_ms,
+                            hi_ms,
+                            realized_ms: 0.0,
+                        },
+                    );
+                }
+                EventKind::BatchDone {
+                    batch, batch_ms, ..
+                } => {
+                    if let Some(mut p) = formed.remove(&batch) {
+                        p.realized_ms = batch_ms;
+                        out.push(p);
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Estimator calibration per (model, app): signed error quantiles of
+    /// realized − predicted batch exec time, and how often the realized
+    /// time fell inside the predicted [lo, hi] variance band.
+    pub fn calibration(&self) -> Vec<CalibrationRow> {
+        let mut classes: BTreeMap<(u32, u32), (Vec<f64>, usize)> = BTreeMap::new();
+        for p in self.prediction_pairs() {
+            let (errs, covered) = classes.entry((p.model.0, p.app.0)).or_default();
+            errs.push(p.realized_ms - p.predicted_ms);
+            if p.realized_ms >= p.lo_ms && p.realized_ms <= p.hi_ms {
+                *covered += 1;
+            }
+        }
+        classes
+            .into_iter()
+            .map(|((m, a), (errs, covered))| CalibrationRow {
+                model: ModelId(m),
+                app: AppId(a),
+                n: errs.len(),
+                mean_err_ms: stats::mean(&errs),
+                p10_ms: stats::percentile(&errs, 10.0),
+                p50_ms: stats::percentile(&errs, 50.0),
+                p90_ms: stats::percentile(&errs, 90.0),
+                coverage: covered as f64 / errs.len() as f64,
+            })
+            .collect()
+    }
+}
+
+/// One `BatchFormed`/`BatchDone` join (see [`Recorder::prediction_pairs`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictionPair {
+    pub batch: u32,
+    pub model: ModelId,
+    pub app: AppId,
+    pub size: u32,
+    pub predicted_ms: f64,
+    pub lo_ms: f64,
+    pub hi_ms: f64,
+    pub realized_ms: f64,
+}
+
+/// Calibration summary for one (model, app) class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationRow {
+    pub model: ModelId,
+    pub app: AppId,
+    /// Completed batches contributing to the class.
+    pub n: usize,
+    /// Mean signed error (realized − predicted), ms.
+    pub mean_err_ms: f64,
+    pub p10_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    /// Fraction of realized times inside the predicted [lo, hi] band.
+    pub coverage: f64,
+}
+
+impl CalibrationRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::num(self.model.0 as f64)),
+            ("app", Json::num(self.app.0 as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("mean_err_ms", Json::num(self.mean_err_ms)),
+            ("p10_ms", Json::num(self.p10_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p90_ms", Json::num(self.p90_ms)),
+            ("coverage", Json::num(self.coverage)),
+        ])
+    }
+}
+
+/// Render the calibration report as the fixed-width table shown in
+/// `experiment` output. Empty string when there is nothing to report.
+pub fn calibration_table(rows: &[CalibrationRow]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from(
+        "  model  app      n  mean_err    p10     p50     p90  coverage\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "  m{:<5} a{:<3} {:>5}  {:>+7.2} {:>+7.2} {:>+7.2} {:>+7.2}    {:>5.1}%\n",
+            r.model.0,
+            r.app.0,
+            r.n,
+            r.mean_err_ms,
+            r.p10_ms,
+            r.p50_ms,
+            r.p90_ms,
+            r.coverage * 100.0,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn formed(batch: u32, worker: u32, pred: f64, lo: f64, hi: f64) -> EventKind {
+        EventKind::BatchFormed {
+            batch,
+            worker,
+            model: ModelId(0),
+            app: AppId(0),
+            size: 4,
+            predicted_ms: pred,
+            lo_ms: lo,
+            hi_ms: hi,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = Recorder::with_config(RecorderConfig {
+            capacity: 4,
+            window_us: 100_000,
+        });
+        for i in 0..10u64 {
+            r.record(i, EventKind::Wake);
+        }
+        assert_eq!(r.recorded(), 4);
+        assert_eq!(r.dropped_events(), 6);
+        let ts: Vec<Micros> = r.events().map(|e| e.at).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9], "oldest events dropped first");
+    }
+
+    #[test]
+    fn batch_ids_are_monotone_and_tracked_per_worker() {
+        let mut r = Recorder::new();
+        assert_eq!(r.last_batch_for(0), None);
+        assert_eq!(r.begin_batch(0), 0);
+        assert_eq!(r.begin_batch(2), 1);
+        assert_eq!(r.begin_batch(0), 2);
+        assert_eq!(r.last_batch_for(0), Some(2));
+        assert_eq!(r.last_batch_for(1), None);
+        assert_eq!(r.last_batch_for(2), Some(1));
+    }
+
+    #[test]
+    fn sample_gate_fires_once_per_window() {
+        let mut r = Recorder::with_config(RecorderConfig {
+            capacity: 16,
+            window_us: 1_000,
+        });
+        assert!(r.sample_due(0));
+        assert!(!r.sample_due(999));
+        assert!(r.sample_due(1_000));
+        assert!(!r.sample_due(1_500));
+        // A long idle gap skips straight to the current window.
+        assert!(r.sample_due(10_500));
+        assert!(!r.sample_due(10_900));
+        assert!(r.sample_due(11_000));
+    }
+
+    #[test]
+    fn calibration_joins_predictions_to_realizations() {
+        let mut r = Recorder::new();
+        r.record(0, formed(0, 0, 10.0, 8.0, 12.0));
+        r.record(
+            1_000,
+            EventKind::BatchDone {
+                batch: 0,
+                worker: 0,
+                batch_ms: 11.0,
+            },
+        );
+        r.record(2_000, formed(1, 0, 10.0, 8.0, 12.0));
+        r.record(
+            3_000,
+            EventKind::BatchDone {
+                batch: 1,
+                worker: 0,
+                batch_ms: 15.0,
+            },
+        );
+        // A formed-but-never-completed batch contributes nothing.
+        r.record(4_000, formed(2, 0, 10.0, 8.0, 12.0));
+        let pairs = r.prediction_pairs();
+        assert_eq!(pairs.len(), 2);
+        let cal = r.calibration();
+        assert_eq!(cal.len(), 1);
+        let row = &cal[0];
+        assert_eq!(row.n, 2);
+        assert!((row.mean_err_ms - 3.0).abs() < 1e-9, "errors +1 and +5");
+        assert!((row.coverage - 0.5).abs() < 1e-9, "11 in band, 15 out");
+        assert!(!calibration_table(&cal).is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_has_tracks() {
+        let mut r = Recorder::new();
+        r.record(
+            0,
+            EventKind::Arrival {
+                req: RequestId(1),
+                model: ModelId(0),
+                app: AppId(0),
+            },
+        );
+        let b = r.begin_batch(1);
+        r.record(10, formed(b, 1, 5.0, 4.0, 6.0));
+        r.record(
+            20,
+            EventKind::ExecStart { batch: b, worker: 1 },
+        );
+        r.record(
+            5_020,
+            EventKind::BatchDone {
+                batch: b,
+                worker: 1,
+                batch_ms: 5.0,
+            },
+        );
+        r.record(
+            5_020,
+            EventKind::Terminal {
+                req: RequestId(1),
+                outcome: Outcome::Finished,
+                worker: Some(1),
+            },
+        );
+        r.record(
+            6_000,
+            EventKind::ModelBacklog {
+                model: ModelId(0),
+                pending: 3,
+            },
+        );
+        let json = r.chrome_trace().to_string();
+        let parsed = Json::parse(&json).expect("chrome trace must be valid JSON");
+        let evs = parsed.get("traceEvents").as_arr().expect("traceEvents");
+        assert!(!evs.is_empty());
+        // One exec span with the prediction attached.
+        let exec: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("cat").as_str() == Some("exec"))
+            .collect();
+        assert_eq!(exec.len(), 1);
+        assert_eq!(exec[0].get("ts").as_u64(), Some(20));
+        assert_eq!(
+            exec[0].get("args").get("predicted_ms").as_f64(),
+            Some(5.0)
+        );
+        // Counter track for the model queue.
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").as_str() == Some("C")
+                && e.get("name").as_str() == Some("backlog m0")));
+    }
+
+    #[test]
+    fn time_series_buckets_by_window() {
+        let mut r = Recorder::with_config(RecorderConfig {
+            capacity: 64,
+            window_us: 1_000,
+        });
+        for i in 0..3u64 {
+            r.record(
+                i * 100,
+                EventKind::Arrival {
+                    req: RequestId(i),
+                    model: ModelId(0),
+                    app: AppId(0),
+                },
+            );
+        }
+        r.record(
+            1_500,
+            EventKind::Terminal {
+                req: RequestId(0),
+                outcome: Outcome::Finished,
+                worker: Some(0),
+            },
+        );
+        r.record(
+            1_600,
+            EventKind::Terminal {
+                req: RequestId(1),
+                outcome: Outcome::TimedOut,
+                worker: None,
+            },
+        );
+        let ts = r.time_series();
+        let wins = ts.get("windows").as_arr().expect("windows");
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[0].get("arrivals").as_u64(), Some(3));
+        assert_eq!(wins[1].get("finished").as_u64(), Some(1));
+        assert_eq!(wins[1].get("shed").as_u64(), Some(1));
+        assert_eq!(ts.get("dropped_events").as_u64(), Some(0));
+    }
+}

@@ -102,6 +102,13 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, $target, format_args!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +126,18 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn trace_macro_expands_and_gates() {
+        // `log_trace!` must expand (the call itself is the regression:
+        // the macro was missing while `Level::Trace` existed) and must be
+        // gated off at the default Info level.
+        assert!(!enabled(Level::Trace));
+        crate::log_trace!("logging::test", "suppressed at level {:?}", level());
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
         set_level(Level::Info); // restore default for other tests
     }
 }

@@ -157,6 +157,76 @@ fn warm_fib_heap_cycles_allocate_nothing() {
 }
 
 #[test]
+fn disabled_telemetry_idle_wake_allocates_nothing() {
+    // The telemetry recorder is threaded through the serve loop as an
+    // `Option<Box<Recorder>>`; disabled (the default) every hook is a
+    // single `None` branch. Guard that promise at the loop level: a warm,
+    // drained `ServingLoop` polled with `Event::Wake` must not touch the
+    // allocator at all — same bar as the scheduler-level idle poll above.
+    use orloj::clock::VirtualClock;
+    use orloj::serve::{router, Cluster, Event, ServingLoop};
+
+    let clock = VirtualClock::new();
+    let cluster = Cluster::new(vec![seeded_sched()]);
+    let mut core = ServingLoop::new(
+        clock.clone(),
+        cluster,
+        router::by_name("round_robin").unwrap(),
+    );
+    // Warm end to end: arrivals routed, batches dispatched and completed,
+    // so the completions vector and scheduler pools sit at their
+    // high-water capacity before measuring.
+    let mut t = 0u64;
+    for i in 0..300u64 {
+        clock.advance_to(t);
+        core.on_event(Event::Arrival(Request::new(
+            i,
+            AppId(0),
+            t,
+            ms_to_us(400.0),
+            10.0,
+        )));
+        let ds = core.on_event(Event::Wake);
+        t += ms_to_us(3.0);
+        clock.advance_to(t);
+        for _ in ds {
+            core.on_event(Event::BatchDone {
+                worker: 0,
+                batch_ms: 10.0,
+            });
+        }
+    }
+    let mut guard = 0;
+    while (core.pending() > 0 || core.in_flight() > 0) && guard < 10_000 {
+        t += ms_to_us(5.0);
+        clock.advance_to(t);
+        if core.in_flight() > 0 {
+            core.on_event(Event::BatchDone {
+                worker: 0,
+                batch_ms: 10.0,
+            });
+        }
+        core.on_event(Event::Wake);
+        guard += 1;
+    }
+    assert_eq!(core.pending(), 0, "warmup must drain");
+    assert_eq!(core.in_flight(), 0);
+    let (allocs, _) = count_allocs(|| {
+        for _ in 0..1_000 {
+            t += 100;
+            clock.advance_to(t);
+            let ds = core.on_event(Event::Wake);
+            assert!(ds.is_empty());
+            let _ = core.next_wake(t);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "idle serve-loop wake with telemetry disabled must be allocation-free"
+    );
+}
+
+#[test]
 fn dispatch_cycle_allocations_are_bounded_and_reported() {
     // Informational bound: a full arrival→dispatch cycle still allocates
     // (hull tree nodes, the returned batch Vec — see DESIGN.md §7), but

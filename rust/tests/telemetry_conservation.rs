@@ -1,0 +1,212 @@
+//! Telemetry conservation (DESIGN.md §9): the lifecycle recorder must
+//! agree exactly with the run's own bookkeeping. Every request in a
+//! seeded multi-model trace gets *exactly one* `Terminal` event, and the
+//! per-outcome tallies reconcile with `RunReport` — across all five
+//! systems × {1, 4} workers, so router fan-out, reaping and scheduler
+//! shed paths are all covered. The calibration report is recomputed
+//! independently from the raw `BatchFormed`/`BatchDone` pairs and must
+//! match `Recorder::calibration` row for row (the acceptance check for
+//! the estimator-calibration stream).
+
+use orloj::baselines::ALL_SYSTEMS;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::request::{Outcome, RequestId};
+use orloj::scheduler::SchedulerConfig;
+use orloj::sim::runner::{self, ClusterSpec};
+use orloj::telemetry::{calibration_table, EventKind, Recorder};
+use orloj::util::json::Json;
+use orloj::util::stats;
+use orloj::workload::azure::AzureTraceConfig;
+use orloj::workload::exectime::ExecTimeDist;
+use orloj::workload::trace::{ModelTraffic, TraceSpec};
+use std::collections::BTreeMap;
+
+/// A seeded two-model mix: a fast constant-latency majority model plus a
+/// multimodal minority one (the runner's multi-model unit mix, shortened).
+fn multimodel_spec(duration_s: f64) -> TraceSpec {
+    let mut spec = TraceSpec {
+        name: "tel-conservation".into(),
+        dists: Vec::new(),
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0,
+            duration_s,
+            ..Default::default()
+        },
+        seed: 78,
+        models: vec![
+            ModelTraffic::new(0, 0.7, vec![ExecTimeDist::constant("fast", 8.0)]),
+            ModelTraffic::new(
+                1,
+                0.3,
+                vec![ExecTimeDist::multimodal("slow", 2, 15.0, 80.0, 1.0, None)],
+            ),
+        ],
+    };
+    spec.scale_rate_to_load(BatchCostModel::gpu_like(), 0.6, 8);
+    spec
+}
+
+fn cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        cost_model: BatchCostModel::gpu_like(),
+        ..Default::default()
+    }
+}
+
+/// Count terminal events per request and per outcome.
+fn terminal_tallies(rec: &Recorder) -> (BTreeMap<RequestId, usize>, BTreeMap<&'static str, usize>) {
+    let mut per_req: BTreeMap<RequestId, usize> = BTreeMap::new();
+    let mut per_outcome: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for ev in rec.events() {
+        if let EventKind::Terminal { req, outcome, .. } = ev.kind {
+            *per_req.entry(req).or_default() += 1;
+            let key = match outcome {
+                Outcome::Finished => "finished",
+                Outcome::Late => "late",
+                Outcome::TimedOut => "timed_out",
+                Outcome::Aborted => "aborted",
+            };
+            *per_outcome.entry(key).or_default() += 1;
+        }
+    }
+    (per_req, per_outcome)
+}
+
+#[test]
+fn every_request_has_exactly_one_terminal_event() {
+    let spec = multimodel_spec(8.0);
+    let trace = spec.generate();
+    let total = trace.events.len();
+    assert!(total > 100, "trace too small to exercise anything: {total}");
+    for system in ALL_SYSTEMS {
+        for workers in [1usize, 4] {
+            let cluster = ClusterSpec::new(workers, "round_robin").with_telemetry();
+            let cell = runner::run_one(system, &spec, &trace, 3.0, &cfg(), spec.seed, &cluster);
+            let rec = cell
+                .telemetry
+                .as_ref()
+                .unwrap_or_else(|| panic!("{system} x{workers}: no recorder came back"));
+            assert_eq!(
+                rec.dropped_events(),
+                0,
+                "{system} x{workers}: ring overflowed ({} recorded)",
+                rec.recorded()
+            );
+            let (per_req, per_outcome) = terminal_tallies(rec);
+            // Exactly one terminal span per request — none missing, none
+            // double-terminated (the re-route and shed paths are the easy
+            // ways to get this wrong).
+            assert_eq!(
+                per_req.len(),
+                total,
+                "{system} x{workers}: {} of {total} requests reached a terminal event",
+                per_req.len()
+            );
+            for (req, n) in &per_req {
+                assert_eq!(*n, 1, "{system} x{workers}: request {req:?} terminated {n} times");
+            }
+            // The recorder's outcome tallies are the report's, recomputed
+            // from a completely separate stream.
+            let r = &cell.report;
+            let get = |k: &str| per_outcome.get(k).copied().unwrap_or(0);
+            assert_eq!(
+                (get("finished"), get("late"), get("timed_out"), get("aborted")),
+                (r.finished, r.late, r.timed_out, r.aborted),
+                "{system} x{workers}: terminal outcomes diverge from RunReport ({r})"
+            );
+            assert_eq!(r.total, total, "{system} x{workers}: completion conservation");
+        }
+    }
+}
+
+#[test]
+fn arrivals_are_recorded_once_per_request() {
+    let spec = multimodel_spec(6.0);
+    let trace = spec.generate();
+    let total = trace.events.len();
+    let cluster = ClusterSpec::new(2, "least_loaded").with_telemetry();
+    let cell = runner::run_one("orloj", &spec, &trace, 3.0, &cfg(), spec.seed, &cluster);
+    let rec = cell.telemetry.as_ref().expect("recorder");
+    let mut arrivals: BTreeMap<RequestId, usize> = BTreeMap::new();
+    for ev in rec.events() {
+        if let EventKind::Arrival { req, .. } = ev.kind {
+            *arrivals.entry(req).or_default() += 1;
+        }
+    }
+    assert_eq!(arrivals.len(), total, "every request must arrive");
+    assert!(
+        arrivals.values().all(|&n| n == 1),
+        "an arrival was recorded more than once (re-route must not re-arrive)"
+    );
+}
+
+/// The acceptance check: run the seeded two-model *drifting* mix through
+/// orloj with telemetry on, recompute the calibration report from the raw
+/// prediction pairs, and require it to match `Recorder::calibration`
+/// exactly; the Chrome trace export must round-trip through the JSON
+/// parser with a non-empty event list.
+#[test]
+fn calibration_reconciles_with_prediction_pairs_on_drift_trace() {
+    let spec = multimodel_spec(10.0).drift_rotating(2.0, 0.85);
+    let trace = spec.generate();
+    let cluster = ClusterSpec::new(2, "least_loaded").with_telemetry();
+    let cell = runner::run_one("orloj", &spec, &trace, 3.0, &cfg(), spec.seed, &cluster);
+    let rec = cell.telemetry.as_ref().expect("recorder");
+
+    let pairs = rec.prediction_pairs();
+    assert!(
+        pairs.len() > 20,
+        "drift run produced too few completed batches: {}",
+        pairs.len()
+    );
+    // Orloj predicts every batch: a zero-width (0,0,0) prediction would
+    // mean the formation hook lost the estimator's output.
+    assert!(
+        pairs.iter().all(|p| p.predicted_ms > 0.0 && p.hi_ms >= p.lo_ms),
+        "batch formed without a usable prediction"
+    );
+
+    // Independent recomputation of the per-(model, app) report.
+    let mut classes: BTreeMap<(u32, u32), (Vec<f64>, usize)> = BTreeMap::new();
+    for p in &pairs {
+        let (errs, covered) = classes.entry((p.model.0, p.app.0)).or_default();
+        errs.push(p.realized_ms - p.predicted_ms);
+        if p.realized_ms >= p.lo_ms && p.realized_ms <= p.hi_ms {
+            *covered += 1;
+        }
+    }
+    let rows = rec.calibration();
+    assert_eq!(rows.len(), classes.len(), "one calibration row per class");
+    for row in &rows {
+        let (errs, covered) = &classes[&(row.model.0, row.app.0)];
+        assert_eq!(row.n, errs.len());
+        assert!((row.mean_err_ms - stats::mean(errs)).abs() < 1e-9);
+        assert!((row.p10_ms - stats::percentile(errs, 10.0)).abs() < 1e-9);
+        assert!((row.p50_ms - stats::percentile(errs, 50.0)).abs() < 1e-9);
+        assert!((row.p90_ms - stats::percentile(errs, 90.0)).abs() < 1e-9);
+        let cov = *covered as f64 / errs.len() as f64;
+        assert!((row.coverage - cov).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&row.coverage));
+    }
+    // Both models saw traffic under the rotation, so both must calibrate.
+    let models: Vec<u32> = rows.iter().map(|r| r.model.0).collect();
+    assert!(models.contains(&0) && models.contains(&1), "rows: {models:?}");
+    let table = calibration_table(&rows);
+    assert!(table.contains("coverage"), "{table}");
+
+    // Chrome trace export: parses, and actually contains events.
+    let parsed = Json::parse(&rec.chrome_trace().to_string()).expect("chrome trace parses");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty(), "empty chrome trace");
+
+    // Time-series export: windows exist and totals reconcile.
+    let series = rec.time_series();
+    let windows = series.get("windows").as_arr().expect("windows array");
+    assert!(!windows.is_empty());
+    let arrivals: f64 = windows
+        .iter()
+        .map(|w| w.get("arrivals").as_f64().unwrap_or(0.0))
+        .sum();
+    assert_eq!(arrivals as usize, trace.events.len(), "windowed arrivals conserve");
+}
