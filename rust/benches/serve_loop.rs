@@ -17,7 +17,8 @@ use orloj::clock::VirtualClock;
 use orloj::core::batchmodel::BatchCostModel;
 use orloj::scheduler::SchedulerConfig;
 use orloj::serve::{
-    replay, router, Cluster, ElasticConfig, Placement, PlacementController, ServingLoop,
+    replay, router, AdmissionConfig, AdmissionController, Cluster, ElasticConfig, Placement,
+    PlacementController, ServingLoop,
 };
 use orloj::sim::worker::SimWorker;
 use orloj::util::benchmark::{json_report, quick_or};
@@ -237,6 +238,103 @@ fn bench_churn(system: &str, n_workers: usize, elastic: bool, cases: &mut Vec<Js
     ]));
 }
 
+/// Overload admission case (DESIGN.md §10): a 2-app trace at 2× one
+/// worker's capacity, gated through the admission controller vs the
+/// shed-at-formation baseline on the identical trace — the events/s
+/// delta is the per-arrival admission decision cost on the hot path.
+fn bench_admission(system: &str, n_workers: usize, gated: bool, cases: &mut Vec<Json>) {
+    let model = BatchCostModel::calibrated(35.0);
+    let mut spec = TraceSpec {
+        name: "bench-adm".into(),
+        dists: vec![
+            ExecTimeDist::multimodal("fast", 1, 10.0, 10.0, 1.0, None),
+            ExecTimeDist::multimodal("slow", 1, 60.0, 60.0, 1.0, None),
+        ],
+        arrivals: AzureTraceConfig {
+            apps: 2,
+            rate_per_s: 0.0,
+            duration_s: trace_duration_s(),
+            ..Default::default()
+        },
+        seed: 3,
+        models: Vec::new(),
+    };
+    spec.scale_rate_to_load(model, 2.0 * n_workers as f64, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    let trace = spec.generate();
+    let requests = trace.requests(2.0);
+    let n_req = requests.len();
+    let placement = Placement::parse("all", n_workers, 1).unwrap();
+    let mut cluster = Cluster::build_placed(system, &cfg, 1, placement).unwrap();
+    let mut ctl = gated.then(|| AdmissionController::new(AdmissionConfig::default()));
+    for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+        cluster.seed_app_profile(model, app, &hist, 1000);
+        if let Some(c) = ctl.as_mut() {
+            c.seed_profile(model, app, &hist);
+        }
+    }
+    let workers: Vec<SimWorker> = (0..n_workers)
+        .map(|w| {
+            SimWorker::new(cfg.cost_model, 0.0, 0x51 ^ (w as u64))
+                .with_model_costs(spec.model_cost_models())
+        })
+        .collect();
+    let mut core = ServingLoop::new(
+        VirtualClock::new(),
+        cluster,
+        router::by_name("least_loaded").unwrap(),
+    );
+    if let Some(c) = ctl {
+        core = core.with_admission(c);
+    }
+    let t0 = Instant::now();
+    let res = replay::run_cluster(core, workers, requests);
+    let wall = t0.elapsed().as_secs_f64();
+    let events = res.completions.len() + res.batches;
+    let mode = if gated { "gated" } else { "shed" };
+    let label = format!("{system}/overload/{mode}");
+    println!(
+        "  {label:>24} x{n_workers} ({:>19}): {n_req:>6} requests, {:>6} batches, \
+         {:>9.0} events/s, A/D/R {}/{}/{}",
+        "least_loaded",
+        res.batches,
+        events as f64 / wall,
+        res.admission.admitted,
+        res.admission.downgraded,
+        res.admission.early_rejected,
+    );
+    assert_eq!(res.completions.len(), n_req, "conservation in admission bench");
+    cases.push(Json::obj(vec![
+        ("label", Json::str(&label)),
+        ("system", Json::str(system)),
+        ("workers", Json::num(n_workers as f64)),
+        ("router", Json::str("least_loaded")),
+        ("placement", Json::str("all")),
+        ("models", Json::num(1.0)),
+        ("admission", Json::Bool(gated)),
+        ("requests", Json::num(n_req as f64)),
+        ("batches", Json::num(res.batches as f64)),
+        ("events", Json::num(events as f64)),
+        ("wall_s", Json::num(wall)),
+        ("events_per_s", Json::num(events as f64 / wall)),
+        ("req_per_s", Json::num(n_req as f64 / wall)),
+        ("us_per_event", Json::num(wall * 1e6 / events.max(1) as f64)),
+        ("admitted", Json::num(res.admission.admitted as f64)),
+        ("downgraded", Json::num(res.admission.downgraded as f64)),
+        (
+            "early_rejected",
+            Json::num(res.admission.early_rejected as f64),
+        ),
+        (
+            "best_effort_served",
+            Json::num(res.admission.best_effort_served as f64),
+        ),
+    ]));
+}
+
 fn main() {
     let mut cases: Vec<Json> = Vec::new();
     println!("### unified serving-loop dispatch benchmarks");
@@ -260,6 +358,12 @@ fn main() {
     for system in ["edf", "orloj"] {
         for elastic in [false, true] {
             bench_churn(system, 4, elastic, &mut cases);
+        }
+    }
+    println!("\noverload admission (2 apps at 2x load, gated vs shed-at-formation):");
+    for system in ["edf", "orloj"] {
+        for gated in [false, true] {
+            bench_admission(system, 1, gated, &mut cases);
         }
     }
     match json_report("BENCH_serve.json", "serve_loop", cases) {

@@ -142,6 +142,24 @@ impl Scheduler for ClipperScheduler {
         self.queue.pending_for(model)
     }
 
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        // Drain time under the controller's own beliefs: the queued lane
+        // served in AIMD-target-sized batches, each costing the decaying-
+        // max latency tracker (cost-model fallback before the first batch
+        // lands).
+        let n = self.queue.pending_for(model);
+        if n == 0 {
+            return 0.0;
+        }
+        let bs = (self.target.floor() as usize).clamp(1, self.max_bs());
+        let per_batch = if self.lat_track > 0.0 {
+            self.lat_track
+        } else {
+            self.cfg.cost_model.latency(bs, 10.0)
+        };
+        n.div_ceil(bs) as f64 * per_batch
+    }
+
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         self.last_prediction
     }

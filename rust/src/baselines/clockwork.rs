@@ -198,6 +198,17 @@ impl Scheduler for ClockworkScheduler {
         self.queue.pending_for(model)
     }
 
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        // Plan-ahead drain time: queued windows at the max batch size,
+        // each costing the profiled point estimate.
+        let n = self.queue.pending_for(model);
+        if n == 0 {
+            return 0.0;
+        }
+        let bs = *self.cfg.batch_sizes.iter().max().unwrap_or(&1);
+        n.div_ceil(bs) as f64 * self.est(bs)
+    }
+
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         self.last_prediction
     }

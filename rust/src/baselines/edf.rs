@@ -150,6 +150,18 @@ impl Scheduler for EdfScheduler {
         self.queue.pending_for(model)
     }
 
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        // Drain time at the max supported batch size under the online-mean
+        // belief (EDF is work-conserving: it fills as large as the head's
+        // slack allows, so max-batch drain is its steady-state ceiling).
+        let n = self.queue.pending_for(model);
+        if n == 0 {
+            return 0.0;
+        }
+        let bs = *self.cfg.batch_sizes.iter().max().unwrap_or(&1);
+        n.div_ceil(bs) as f64 * self.est(bs)
+    }
+
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         self.last_prediction
     }

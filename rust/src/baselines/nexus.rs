@@ -208,6 +208,16 @@ impl Scheduler for NexusScheduler {
         self.queue.pending_for(model)
     }
 
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        // Drain time on the current plan's cadence: queued work served as
+        // plan-sized batches at the planned batch latency.
+        let n = self.queue.pending_for(model);
+        if n == 0 {
+            return 0.0;
+        }
+        n.div_ceil(self.plan_bs.max(1)) as f64 * self.plan_latency_ms
+    }
+
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         self.last_prediction
     }

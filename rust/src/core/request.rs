@@ -121,6 +121,10 @@ pub struct Completion {
     pub batch_size: usize,
     /// Worker that executed the batch (None for scheduler-side drops).
     pub worker: Option<usize>,
+    /// Served from the admission controller's best-effort lane (DESIGN.md
+    /// §10): its outcome never counts toward the SLO finish rate. Always
+    /// false when admission control is off.
+    pub best_effort: bool,
 }
 
 impl Completion {
@@ -170,6 +174,7 @@ mod tests {
             at: 4_500,
             batch_size: 4,
             worker: Some(0),
+            best_effort: false,
         };
         assert!((c.latency_ms() - 3.5).abs() < 1e-12);
     }

@@ -55,6 +55,10 @@ pub struct ExpOptions {
     /// `TELEMETRY_<case>.json` / `TELEMETRY_<case>.trace.json` into this
     /// directory (`--telemetry[=dir]`; empty string = `results/`).
     pub telemetry: Option<String>,
+    /// Predictive admission control at this admit threshold
+    /// (`--admission[=p]`; bare flag = 0.5; DESIGN.md §10). The
+    /// `overload` experiment compares on/off regardless.
+    pub admission: Option<f64>,
 }
 
 impl Default for ExpOptions {
@@ -73,6 +77,7 @@ impl Default for ExpOptions {
             capacity: 2,
             drift_period_s: 0.0,
             telemetry: None,
+            admission: None,
         }
     }
 }
@@ -98,6 +103,9 @@ impl ExpOptions {
         }
         if self.telemetry.is_some() {
             spec = spec.with_telemetry();
+        }
+        if let Some(t) = self.admission {
+            spec = spec.with_admission(t);
         }
         spec
     }
@@ -243,7 +251,13 @@ pub fn export_telemetry(dir: &str, label: &str, cells: &[Cell]) {
         return;
     }
     let dir = if dir.is_empty() { "results" } else { dir };
-    std::fs::create_dir_all(dir).ok();
+    // Create the directory on demand and surface I/O failures instead of
+    // silently dropping the export: a user who asked for `--telemetry=dir`
+    // should hear about an unwritable dir, not find it empty later.
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("telemetry export: cannot create {dir}: {e}");
+        return;
+    }
     let slug: String = label
         .chars()
         .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
@@ -257,14 +271,20 @@ pub fn export_telemetry(dir: &str, label: &str, cells: &[Cell]) {
         ]))
     }));
     let path = std::path::Path::new(dir).join(format!("TELEMETRY_{slug}.json"));
-    std::fs::write(&path, series.to_pretty()).ok();
+    if let Err(e) = std::fs::write(&path, series.to_pretty()) {
+        eprintln!("telemetry export: cannot write {}: {e}", path.display());
+        return;
+    }
     let rep = cells
         .iter()
         .find(|c| c.system == "orloj" && c.telemetry.is_some())
         .or_else(|| cells.iter().find(|c| c.telemetry.is_some()));
     if let Some(rec) = rep.and_then(|c| c.telemetry.as_ref()) {
         let tpath = std::path::Path::new(dir).join(format!("TELEMETRY_{slug}.trace.json"));
-        std::fs::write(&tpath, rec.chrome_trace().to_string()).ok();
+        if let Err(e) = std::fs::write(&tpath, rec.chrome_trace().to_string()) {
+            eprintln!("telemetry export: cannot write {}: {e}", tpath.display());
+            return;
+        }
         println!(
             "(telemetry written to {} and {})",
             path.display(),
@@ -287,6 +307,16 @@ fn cells_to_json(case: &str, cells: &[Cell]) -> Json {
             ("timed_out", Json::num(c.report.timed_out as f64)),
             ("utilization", Json::num(c.utilization)),
             ("workers", Json::num(c.workers as f64)),
+            ("admitted", Json::num(c.admission.admitted as f64)),
+            ("downgraded", Json::num(c.admission.downgraded as f64)),
+            (
+                "early_rejected",
+                Json::num(c.admission.early_rejected as f64),
+            ),
+            (
+                "best_effort_served",
+                Json::num(c.admission.best_effort_served as f64),
+            ),
             ("load_actions", Json::num(c.placement.loads as f64)),
             ("unload_actions", Json::num(c.placement.unloads as f64)),
             ("rerouted", Json::num(c.placement.rerouted as f64)),
@@ -921,6 +951,154 @@ pub fn ablation(opts: &ExpOptions) -> Json {
     Json::arr(rows)
 }
 
+// ---------------------------------------------------------------------
+// Overload (beyond the paper): predictive admission vs shed-at-formation
+// ---------------------------------------------------------------------
+
+/// Early-reject precision: of the requests the gated run rejected at
+/// arrival, the fraction the ungated baseline also failed to finish on
+/// the identical trace (a shadow comparison over shared request ids).
+/// `None` when either run lacks telemetry or nothing was rejected.
+fn reject_precision(base: &Cell, adm: &Cell) -> Option<f64> {
+    use crate::core::request::Outcome;
+    use crate::telemetry::EventKind;
+    use std::collections::HashSet;
+    let arec = adm.telemetry.as_ref()?;
+    let brec = base.telemetry.as_ref()?;
+    let rejected: HashSet<u64> = arec
+        .events()
+        .filter_map(|e| match e.kind {
+            EventKind::EarlyReject { req, .. } => Some(req.0),
+            _ => None,
+        })
+        .collect();
+    if rejected.is_empty() {
+        return None;
+    }
+    let doomed = brec
+        .events()
+        .filter(|e| match e.kind {
+            EventKind::Terminal { req, outcome, .. } => {
+                rejected.contains(&req.0) && outcome != Outcome::Finished
+            }
+            _ => false,
+        })
+        .count();
+    Some(doomed as f64 / rejected.len() as f64)
+}
+
+/// Sweep offered load 1–3× of batched capacity and compare every system
+/// with predictive admission control (DESIGN.md §10) against its own
+/// shed-at-formation baseline on the same trace. Reports goodput
+/// (SLO-lane finishes per second of virtual time), wasted work
+/// (execution milliseconds burnt on completions that missed their
+/// deadline anyway), early-reject precision (see [`reject_precision`]),
+/// and the per-app admitted-share spread from the deficit-counter
+/// fairness guard (two apps: fast + slow).
+pub fn overload(opts: &ExpOptions) -> Json {
+    let threshold = opts.admission.unwrap_or(0.5);
+    let slo = *opts.slos.get(opts.slos.len() / 2).unwrap_or(&2.0);
+    // Quick runs (CI smoke) sweep three loads; full runs five.
+    let loads: &[f64] = if opts.duration_s <= 10.0 {
+        &[1.0, 2.0, 3.0]
+    } else {
+        &[1.0, 1.5, 2.0, 2.5, 3.0]
+    };
+    println!(
+        "### overload — predictive admission vs shed-at-formation \
+         (slo {slo}x, threshold {threshold}, 2 apps)\n"
+    );
+    let dur_s = opts.duration_s.max(1e-9);
+    let mut all = Vec::new();
+    for &load in loads {
+        let case = format!("overload-x{load:.1}");
+        let mut lopts = opts.clone();
+        // `util` is calibrated as a fraction of batched capacity; the
+        // sweep pushes the same workload past saturation.
+        lopts.util = opts.util.min(1.0) * load;
+        let (spec, cfg) = spec_for(&case, modal_apps(2, 1.0, None), &lopts, 0x0D);
+        let trace = spec.generate();
+        println!(
+            "{:>10} {:>6} {:>6} {:>8} {:>8} {:>9} {:>9} {:>6} {:>6} {:>6} {:>6} {:>7}  [{case}]",
+            "system",
+            "shed%",
+            "adm%",
+            "shedgp",
+            "admgp",
+            "shedwst",
+            "admwst",
+            "A",
+            "D",
+            "R",
+            "prec",
+            "spread"
+        );
+        let mut rows = Vec::new();
+        let mut adm_cells = Vec::new();
+        for system in ALL_SYSTEMS {
+            // Telemetry on both runs: the precision shadow comparison
+            // needs per-request outcomes from the baseline and reject ids
+            // from the gated run over the identical trace.
+            let base_cluster = ClusterSpec::new(opts.workers, &opts.router)
+                .with_placement(&opts.placement)
+                .with_telemetry();
+            let adm_cluster = base_cluster.clone().with_admission(threshold);
+            let base =
+                runner::run_one(system, &spec, &trace, slo, &cfg, spec.seed, &base_cluster);
+            let adm = runner::run_one(system, &spec, &trace, slo, &cfg, spec.seed, &adm_cluster);
+            let precision = reject_precision(&base, &adm);
+            let spread = adm.admission.admit_share_spread().map(|(lo, hi)| hi - lo);
+            let gp = |c: &Cell| c.report.finished as f64 / dur_s;
+            println!(
+                "{:>10} {:>6.2} {:>6.2} {:>8.1} {:>8.1} {:>9.0} {:>9.0} {:>6} {:>6} {:>6} {:>6} {:>7}",
+                system,
+                base.report.finish_rate(),
+                adm.report.finish_rate(),
+                gp(&base),
+                gp(&adm),
+                base.report.wasted_ms,
+                adm.report.wasted_ms,
+                adm.admission.admitted,
+                adm.admission.downgraded,
+                adm.admission.early_rejected,
+                precision.map_or("-".into(), |p| format!("{p:.2}")),
+                spread.map_or("-".into(), |s| format!("{s:.2}")),
+            );
+            rows.push(Json::obj(vec![
+                ("case", Json::str(&case)),
+                ("load", Json::num(load)),
+                ("system", Json::str(system)),
+                ("slo", Json::num(slo)),
+                ("shed_finish_rate", Json::num(base.report.finish_rate())),
+                ("adm_finish_rate", Json::num(adm.report.finish_rate())),
+                ("shed_goodput", Json::num(gp(&base))),
+                ("adm_goodput", Json::num(gp(&adm))),
+                ("shed_wasted_ms", Json::num(base.report.wasted_ms)),
+                ("adm_wasted_ms", Json::num(adm.report.wasted_ms)),
+                ("admitted", Json::num(adm.admission.admitted as f64)),
+                ("downgraded", Json::num(adm.admission.downgraded as f64)),
+                (
+                    "early_rejected",
+                    Json::num(adm.admission.early_rejected as f64),
+                ),
+                (
+                    "best_effort_served",
+                    Json::num(adm.admission.best_effort_served as f64),
+                ),
+                ("reject_precision", precision.map_or(Json::Null, Json::num)),
+                ("fairness_spread", spread.map_or(Json::Null, Json::num)),
+            ]));
+            adm_cells.push(adm);
+        }
+        if let Some(dir) = &opts.telemetry {
+            export_telemetry(dir, &case, &adm_cells);
+        }
+        println!();
+        all.push(Json::arr(rows));
+    }
+    Json::arr(all)
+}
+
 /// Run one experiment by id; returns its JSON rows.
 pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
     let rows = match id {
@@ -936,15 +1114,16 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
         "multimodel" => multimodel(opts),
         "elastic" => elastic(opts),
         "ablation" => ablation(opts),
+        "overload" => overload(opts),
         _ => return None,
     };
     Some(rows)
 }
 
 /// All experiment ids in run order.
-pub const ALL: [&str; 12] = [
+pub const ALL: [&str; 13] = [
     "fig2", "fig3", "fig6", "table2", "table3", "table4", "table5", "fig13", "fig14", "multimodel",
-    "elastic", "ablation",
+    "elastic", "ablation", "overload",
 ];
 
 #[cfg(test)]
@@ -1060,6 +1239,38 @@ mod tests {
         let trace = Json::parse(&tr).unwrap();
         assert!(!trace.get("traceEvents").as_arr().unwrap().is_empty());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overload_quick_compares_admission_against_shed_baseline() {
+        let mut opts = ExpOptions::quick();
+        opts.duration_s = 5.0;
+        opts.slos = vec![2.0];
+        let j = overload(&opts);
+        let cases = j.as_arr().unwrap();
+        assert_eq!(cases.len(), 3, "quick sweep: three loads");
+        for case in cases {
+            let rows = case.as_arr().unwrap();
+            assert_eq!(rows.len(), 5, "all five systems per load");
+            for row in rows {
+                let shed = row.get("shed_finish_rate").as_f64().unwrap();
+                let adm = row.get("adm_finish_rate").as_f64().unwrap();
+                assert!((0.0..=1.0).contains(&shed));
+                assert!((0.0..=1.0).contains(&adm));
+                assert!(row.get("shed_wasted_ms").as_f64().unwrap() >= 0.0);
+                assert!(row.get("adm_wasted_ms").as_f64().unwrap() >= 0.0);
+            }
+        }
+        // At 3x offered load the gate must actually engage for orloj:
+        // something gets downgraded or rejected rather than queued.
+        let last = cases.last().unwrap().as_arr().unwrap();
+        let orloj = last
+            .iter()
+            .find(|r| r.get("system").as_str() == Some("orloj"))
+            .unwrap();
+        let gated = orloj.get("downgraded").as_f64().unwrap()
+            + orloj.get("early_rejected").as_f64().unwrap();
+        assert!(gated > 0.0, "3x overload must downgrade or reject");
     }
 
     #[test]

@@ -30,6 +30,8 @@ fn usage() -> ! {
              --drift <s>           hot-model rotation period for the elastic experiment (default 8)\n\
              --telemetry[=dir]     record lifecycle telemetry; writes TELEMETRY_<case>.json and\n\
                                    a Perfetto-loadable TELEMETRY_<case>.trace.json (default dir: results)\n\
+             --admission[=p]       predictive admission control at admit threshold p (bare: 0.5);\n\
+                                   the `overload` experiment compares on/off regardless\n\
              --quick               fast settings for smoke runs\n\
            serve                 PJRT serving demo (needs `make artifacts`)\n\
              --artifacts <dir>     artifact directory        (default artifacts)\n\
@@ -44,12 +46,14 @@ fn usage() -> ! {
              --slo-ms <ms>         per-request SLO           (default 12x deep solo latency)\n\
              --gap-us <us>         inter-arrival gap         (default 500)\n\
              --telemetry[=dir]     record lifecycle telemetry (TELEMETRY_serve.json + .trace.json)\n\
+             --admission[=p]       gate arrivals through predictive admission control\n\
            trace                 generate a trace JSON\n\
              --out <path>          output path (default trace.json)\n\
              --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
              --models <n>          multi-model trace: n models with skewed shares (default 1)\n\
              --drift <s>           rotate the hot model every <s> seconds (multi-model only)\n\
              --telemetry[=dir]     also replay the trace through orloj and write telemetry files\n\
+             --admission[=p]       gate the replay through predictive admission control\n\
            list                  list experiment ids",
         experiments::ALL.join(", "),
         orloj::serve::router::ROUTERS.join("|"),
@@ -65,6 +69,19 @@ fn telemetry_opt(args: &Args) -> Option<String> {
         Some(String::new())
     } else {
         args.get("telemetry").map(str::to_string)
+    }
+}
+
+/// `--admission[=p]`: bare flag → the default 0.5 admit threshold,
+/// explicit value → that P(finish ≤ deadline) threshold (DESIGN.md §10).
+fn admission_opt(args: &Args) -> Option<f64> {
+    if args.flag("admission") {
+        Some(0.5)
+    } else {
+        args.get("admission").map(|s| {
+            s.parse::<f64>()
+                .unwrap_or_else(|_| panic!("--admission={s}: not a number"))
+        })
     }
 }
 
@@ -91,6 +108,7 @@ fn exp_options(args: &Args) -> ExpOptions {
     opts.capacity = args.get_usize("capacity", opts.capacity).max(1);
     opts.drift_period_s = args.get_f64("drift", opts.drift_period_s);
     opts.telemetry = telemetry_opt(args);
+    opts.admission = admission_opt(args);
     opts
 }
 
@@ -195,15 +213,20 @@ fn cmd_trace(args: &Args) {
             ..Default::default()
         };
         let slo = args.get_f64("slo", 3.0);
-        let cell = runner::run_one(
-            "orloj",
-            &spec,
-            &trace,
-            slo,
-            &cfg,
-            spec.seed,
-            &ClusterSpec::default().with_telemetry(),
-        );
+        let mut cluster = ClusterSpec::default().with_telemetry();
+        if let Some(t) = admission_opt(args) {
+            cluster = cluster.with_admission(t);
+        }
+        let cell = runner::run_one("orloj", &spec, &trace, slo, &cfg, spec.seed, &cluster);
+        if cell.admission.enabled {
+            println!(
+                "admission: {} admitted, {} downgraded, {} early-rejected, {} best-effort served",
+                cell.admission.admitted,
+                cell.admission.downgraded,
+                cell.admission.early_rejected,
+                cell.admission.best_effort_served
+            );
+        }
         let cells = [cell];
         print!(
             "{}",
@@ -294,6 +317,20 @@ fn cmd_serve(args: &Args) {
             ..Default::default()
         }));
     }
+    if let Some(t) = admission_opt(args) {
+        use orloj::core::histogram::Histogram;
+        use orloj::serve::{AdmissionConfig, AdmissionController};
+        let mut ctl = AdmissionController::new(AdmissionConfig::with_threshold(t));
+        // Seed per-(model, depth-app) profiles from the calibration pass:
+        // a point mass at each depth's measured mean latency.
+        for m in 0..n_models as u32 {
+            for (depth, mean) in &calib {
+                let h = Histogram::from_weights((mean - 0.5).max(0.0), 1.0, &[1.0]);
+                ctl.seed_profile(ModelId(m), AppId(*depth as u32 - 1), &h);
+            }
+        }
+        server = server.with_admission(ctl);
+    }
     let telemetry_dir = telemetry_opt(args);
     if telemetry_dir.is_some() {
         server = server.with_telemetry(orloj::telemetry::Recorder::with_config(
@@ -338,6 +375,15 @@ fn cmd_serve(args: &Args) {
             res.placement.unloads,
             res.placement.rerouted,
             res.placement.last_action_at as f64 / 1e6
+        );
+    }
+    if res.admission.enabled {
+        println!(
+            "  admission: {} admitted, {} downgraded, {} early-rejected, {} best-effort served",
+            res.admission.admitted,
+            res.admission.downgraded,
+            res.admission.early_rejected,
+            res.admission.best_effort_served
         );
     }
     for w in &report.per_worker {

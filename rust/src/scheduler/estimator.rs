@@ -211,6 +211,17 @@ impl Estimator {
     pub fn has_warmup(&self) -> bool {
         !self.warmup.is_empty()
     }
+
+    /// Mean solo execution time of `model`'s current traffic mixture, ms
+    /// (the admission backlog estimate's per-request cost). Pure read of
+    /// the precomputed mixture — no cache involvement; 10 ms cold-start
+    /// placeholder when the model has no profile yet.
+    pub fn model_mean_ms(&self, model: ModelId) -> f64 {
+        self.mixtures
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map_or(10.0, |(_, h)| h.mean())
+    }
 }
 
 fn cost_for_in(

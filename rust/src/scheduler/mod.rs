@@ -183,6 +183,19 @@ impl FifoQueues {
             .find(|(m, _)| *m == model)
             .map_or(0, |(_, lane)| lane.len())
     }
+
+    /// The earliest-arrived request among models satisfying `pred` — the
+    /// global FIFO head restricted to a subset of lanes. The best-effort
+    /// admission lane drains with this (only models the idle worker
+    /// actually hosts are eligible); O(models), no allocation.
+    pub fn front_matching(&self, pred: impl Fn(ModelId) -> bool) -> Option<&Request> {
+        self.lanes
+            .iter()
+            .filter(|(m, _)| pred(*m))
+            .filter_map(|(_, lane)| lane.front().map(|(seq, r)| (*seq, r)))
+            .min_by_key(|(seq, _)| *seq)
+            .map(|(_, r)| r)
+    }
 }
 
 /// A heap item ordered by (deadline, request id) — the tie-break the
@@ -427,6 +440,17 @@ pub trait Scheduler: Send {
     /// for the routers).
     fn pending_for(&self, model: ModelId) -> usize;
 
+    /// Estimated milliseconds to drain `model`'s currently queued work on
+    /// this replica under the policy's own latency belief, including any
+    /// cold-start surcharge the policy tracks (admission control reads
+    /// this on every arrival — it must be cheap and allocation-free).
+    /// `&mut` because distribution-backed policies answer from an
+    /// entry-cached estimator. Default: queued count at a 10 ms/request
+    /// placeholder, the same cold-start fallback the estimator uses.
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        self.pending_for(model) as f64 * 10.0
+    }
+
     /// The prediction made for the batch most recently returned by
     /// `next_batch` (telemetry; read by the serving core right after
     /// formation). None = this policy does not predict. Storing it must
@@ -477,6 +501,9 @@ impl<S: Scheduler + ?Sized> Scheduler for &mut S {
     fn pending_for(&self, model: ModelId) -> usize {
         (**self).pending_for(model)
     }
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        (**self).backlog_estimate(model)
+    }
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         (**self).last_batch_prediction()
     }
@@ -519,6 +546,9 @@ impl Scheduler for Box<dyn Scheduler> {
     fn pending_for(&self, model: ModelId) -> usize {
         (**self).pending_for(model)
     }
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        (**self).backlog_estimate(model)
+    }
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         (**self).last_batch_prediction()
     }
@@ -551,6 +581,27 @@ mod tests {
         let order: Vec<u64> = std::iter::from_fn(|| q.pop_front()).map(|r| r.id.0).collect();
         assert_eq!(order, vec![1, 3, 4, 5]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fifo_front_matching_filters_lanes() {
+        let mut q = FifoQueues::new();
+        for i in 0..6 {
+            q.push(req(i, (i % 3) as u32, 1_000_000));
+        }
+        // Unrestricted: the global head.
+        assert_eq!(q.front_matching(|_| true).unwrap().id.0, 0);
+        // Restricted to model 2: earliest arrival in that lane (id 2).
+        assert_eq!(q.front_matching(|m| m == ModelId(2)).unwrap().id.0, 2);
+        // Earliest across a subset of lanes.
+        assert_eq!(
+            q.front_matching(|m| m == ModelId(1) || m == ModelId(2))
+                .unwrap()
+                .id
+                .0,
+            1
+        );
+        assert!(q.front_matching(|m| m == ModelId(9)).is_none());
     }
 
     #[test]

@@ -796,6 +796,26 @@ impl Scheduler for OrlojScheduler {
             .map_or(0, |g| g.members)
     }
 
+    fn backlog_estimate(&mut self, model: ModelId) -> f64 {
+        // Drain time under the estimator's distribution tables: resident
+        // entries served at the max supported batch size, each request
+        // costing the model's mixture mean, plus any pending cold-start
+        // surcharge (elastic installs). All pure reads — the entry cache
+        // and the dispatch decisions are untouched.
+        let n = self.pending_for(model);
+        let warm = self.estimator.warmup_ms(model);
+        if n == 0 {
+            return warm;
+        }
+        // `batch_sizes` is kept sorted ascending; last = max.
+        let bs = *self.batch_sizes.last().unwrap_or(&1);
+        let per_batch = self
+            .estimator
+            .cost_for(model)
+            .latency(bs, self.estimator.model_mean_ms(model));
+        n.div_ceil(bs) as f64 * per_batch + warm
+    }
+
     fn last_batch_prediction(&self) -> Option<BatchPrediction> {
         self.last_prediction
     }

@@ -1,0 +1,504 @@
+//! Predictive admission control (DESIGN.md §10).
+//!
+//! Orloj's thesis — empirical exec-time distributions make deadline
+//! feasibility computable — is applied here *at arrival time* instead of
+//! batch formation: the controller combines the per-(model, app) solo
+//! exec-time distribution with the best candidate replica's backlog
+//! estimate ([`Scheduler::backlog_estimate`](crate::scheduler::Scheduler::backlog_estimate),
+//! cold-start surcharges included) into P(finish ≤ deadline), then routes
+//! each arrival to one of three fates:
+//!
+//! * **Admit** (p ≥ threshold): the request enters the SLO lane — the
+//!   normal router → scheduler path, bit-identical to admission-off.
+//! * **Early-reject** (p < threshold·reject_ratio): hopeless under the
+//!   current backlog; terminate now instead of wasting queue space and
+//!   GPU time on a request that would miss anyway.
+//! * **Downgrade** (in between): parked in a best-effort FIFO lane that
+//!   is served only when the SLO lane would leave a worker idle; its
+//!   completions never count toward the SLO finish rate.
+//!
+//! A per-app deficit counter guards fairness under sustained overload:
+//! every arrival accrues 1/|apps| credit to *each* app, and an admission
+//! spends one credit. When the probability gate has been failing recently
+//! (the contention signal), an app whose credit is exhausted yields its
+//! marginal admissions (downgrade), and an app far *under* its fair share
+//! gets its not-hopeless requests admitted anyway — so one hot app cannot
+//! starve others of admission. Under light load the guard never bites.
+//!
+//! The decision path is allocation-free once the per-app table and lane
+//! buffers are warm (the zero-alloc audit's bar); the only growth is
+//! first-seen app/model entries, same as the telemetry recorder.
+
+use crate::clock::{us_to_ms, Micros};
+use crate::core::histogram::Histogram;
+use crate::core::request::{AppId, ModelId, Request};
+use crate::scheduler::FifoQueues;
+
+/// Admission thresholds and fairness knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Admit when P(finish ≤ deadline) is at least this (CLI
+    /// `--admission[=threshold]`; bare flag = 0.5).
+    pub threshold: f64,
+    /// Early-reject below `threshold · reject_ratio`; the band in between
+    /// downgrades to best-effort.
+    pub reject_ratio: f64,
+    /// Per-app deficit-credit ceiling (bounds how much burst an idle app
+    /// can bank).
+    pub deficit_cap: f64,
+    /// Credit level at which a starving app's below-threshold (but not
+    /// hopeless) requests are admitted anyway.
+    pub boost: f64,
+    /// Max best-effort batch size (model-pure fills from the lane).
+    pub be_batch: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            threshold: 0.5,
+            reject_ratio: 0.25,
+            deficit_cap: 8.0,
+            boost: 4.0,
+            be_batch: 8,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Default knobs at a caller-chosen admit threshold.
+    pub fn with_threshold(threshold: f64) -> Self {
+        AdmissionConfig {
+            threshold: threshold.clamp(0.0, 1.0),
+            ..Default::default()
+        }
+    }
+}
+
+/// The three fates of an arrival under admission control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    Downgrade,
+    Reject,
+}
+
+impl Decision {
+    /// One-letter code used by the golden decision-sequence snapshots.
+    pub fn letter(self) -> &'static str {
+        match self {
+            Decision::Admit => "A",
+            Decision::Downgrade => "D",
+            Decision::Reject => "R",
+        }
+    }
+}
+
+/// Per-app admission tallies (fairness accounting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AppAdmission {
+    pub arrivals: usize,
+    pub admitted: usize,
+    pub downgraded: usize,
+    pub rejected: usize,
+}
+
+/// Run-level admission outcome counts, flowing through
+/// `EngineResult`/`ServeResult`/`Cell` into the experiment JSON.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdmissionStats {
+    /// Whether an admission controller was attached at all (stats from an
+    /// admission-off run are all-zero *and* disabled).
+    pub enabled: bool,
+    pub admitted: usize,
+    pub downgraded: usize,
+    pub early_rejected: usize,
+    /// Downgraded requests that actually executed in a best-effort batch.
+    pub best_effort_served: usize,
+    pub best_effort_batches: usize,
+    /// Per-app tallies in first-seen order.
+    pub per_app: Vec<(u32, AppAdmission)>,
+}
+
+impl AdmissionStats {
+    /// Largest/smallest per-app admitted share among apps with arrivals —
+    /// the fairness spread the overload experiment reports (1.0 = exactly
+    /// even; meaningful only with ≥ 2 active apps).
+    pub fn admit_share_spread(&self) -> Option<(f64, f64)> {
+        let shares: Vec<f64> = self
+            .per_app
+            .iter()
+            .filter(|(_, a)| a.arrivals > 0)
+            .map(|(_, a)| a.admitted as f64 / a.arrivals as f64)
+            .collect();
+        if shares.len() < 2 {
+            return None;
+        }
+        let max = shares.iter().cloned().fold(f64::MIN, f64::max);
+        let min = shares.iter().cloned().fold(f64::MAX, f64::min);
+        Some((min, max))
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct AppState {
+    deficit: f64,
+    adm: AppAdmission,
+}
+
+/// The admission controller: probability gate + fairness guard +
+/// best-effort lane. Owned by the serving loop as
+/// `Option<AdmissionController>` — `None` (the default) keeps the arrival
+/// path bit-exact with the pre-admission loop.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// Per-(model, app) solo exec-time distributions, seeded from the same
+    /// deployment-time profiles the schedulers get (linear probe — a
+    /// handful of traffic classes, no hashing).
+    profiles: Vec<((u32, u32), Histogram)>,
+    /// Per-app fairness state in first-seen order.
+    apps: Vec<(u32, AppState)>,
+    /// Saturating contention signal: probability-gate failures push it up,
+    /// passes bleed it down. The fairness guard only bites while this is
+    /// high, so light load is never distorted.
+    pressure: u32,
+    /// Best-effort lane: per-model FIFO sub-queues (the scheduler-side
+    /// queue machinery, reused).
+    lane: FifoQueues,
+    admitted: usize,
+    downgraded: usize,
+    early_rejected: usize,
+    best_effort_served: usize,
+    best_effort_batches: usize,
+}
+
+impl AdmissionController {
+    const PRESSURE_CAP: u32 = 64;
+    const PRESSURE_GATE: u32 = 8;
+    /// Unprofiled-class placeholder (the estimator's cold-start fallback).
+    const FALLBACK_EXEC_MS: f64 = 10.0;
+
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController {
+            cfg,
+            profiles: Vec::new(),
+            apps: Vec::new(),
+            pressure: 0,
+            lane: FifoQueues::new(),
+            admitted: 0,
+            downgraded: 0,
+            early_rejected: 0,
+            best_effort_served: 0,
+            best_effort_batches: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Install the deployment-time exec-time distribution for one
+    /// (model, app) traffic class — same seeding call sites as the
+    /// schedulers' `seed_app_profile`.
+    pub fn seed_profile(&mut self, model: ModelId, app: AppId, hist: &Histogram) {
+        let key = (model.0, app.0);
+        match self.profiles.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, h)) => *h = hist.clone(),
+            None => self.profiles.push((key, hist.clone())),
+        }
+    }
+
+    /// P(finish ≤ deadline) given `slack_ms` = deadline − now − backlog:
+    /// the class distribution's CDF at the remaining slack. Falls back to
+    /// the model's first profiled class, then to a 10 ms point mass.
+    fn attain_probability(&self, model: ModelId, app: AppId, slack_ms: f64) -> f64 {
+        if slack_ms <= 0.0 {
+            return 0.0;
+        }
+        let key = (model.0, app.0);
+        let hist = self
+            .profiles
+            .iter()
+            .find(|(k, _)| *k == key)
+            .or_else(|| self.profiles.iter().find(|((m, _), _)| *m == model.0))
+            .map(|(_, h)| h);
+        match hist {
+            Some(h) => h.cdf(slack_ms),
+            None if slack_ms >= Self::FALLBACK_EXEC_MS => 1.0,
+            None => 0.0,
+        }
+    }
+
+    fn app_index(&mut self, app: AppId) -> usize {
+        match self.apps.iter().position(|(a, _)| *a == app.0) {
+            Some(i) => i,
+            None => {
+                // First-seen growth only — the warm path never allocates.
+                self.apps.push((app.0, AppState::default()));
+                self.apps.len() - 1
+            }
+        }
+    }
+
+    /// Decide one arrival's fate. `backlog_ms` is the *best* (minimum)
+    /// candidate replica's drain estimate; `f64::INFINITY` when no replica
+    /// hosts the model. Returns the decision plus the estimated
+    /// P(finish ≤ deadline) (telemetry records it).
+    pub fn decide(&mut self, req: &Request, backlog_ms: f64, now: Micros) -> (Decision, f64) {
+        let slack_ms = us_to_ms(req.deadline.saturating_sub(now)) - backlog_ms;
+        let p = self.attain_probability(req.model, req.app, slack_ms);
+        let ai = self.app_index(req.app);
+        // Every arrival is one admission opportunity; credit all apps
+        // their fair share of it.
+        let share = 1.0 / self.apps.len() as f64;
+        let cap = self.cfg.deficit_cap;
+        for (_, st) in self.apps.iter_mut() {
+            st.deficit = (st.deficit + share).min(cap);
+        }
+        self.apps[ai].1.adm.arrivals += 1;
+        let gate = p >= self.cfg.threshold;
+        if gate {
+            self.pressure = self.pressure.saturating_sub(1);
+        } else {
+            self.pressure = (self.pressure + 2).min(Self::PRESSURE_CAP);
+        }
+        let contended = self.pressure >= Self::PRESSURE_GATE;
+        let floor = self.cfg.threshold * self.cfg.reject_ratio;
+        let spend = |st: &mut AppState| st.deficit = (st.deficit - 1.0).max(0.0);
+        let decision = if gate {
+            if contended && self.apps[ai].1.deficit < 1.0 {
+                // Fair share spent under contention: the hot app yields
+                // this slot to best-effort instead of starving others.
+                Decision::Downgrade
+            } else {
+                spend(&mut self.apps[ai].1);
+                Decision::Admit
+            }
+        } else if p < floor {
+            Decision::Reject
+        } else if contended && self.apps[ai].1.deficit >= self.cfg.boost {
+            // Starvation guard: an app far under its fair share gets its
+            // marginal (below-threshold but not hopeless) requests in.
+            spend(&mut self.apps[ai].1);
+            Decision::Admit
+        } else {
+            Decision::Downgrade
+        };
+        match decision {
+            Decision::Admit => {
+                self.admitted += 1;
+                self.apps[ai].1.adm.admitted += 1;
+            }
+            Decision::Downgrade => {
+                self.downgraded += 1;
+                self.apps[ai].1.adm.downgraded += 1;
+            }
+            Decision::Reject => {
+                self.early_rejected += 1;
+                self.apps[ai].1.adm.rejected += 1;
+            }
+        }
+        (decision, p)
+    }
+
+    /// Park a downgraded request in the best-effort lane.
+    pub fn push_best_effort(&mut self, req: Request) {
+        self.lane.push(req);
+    }
+
+    /// Requests parked in the best-effort lane.
+    pub fn best_effort_pending(&self) -> usize {
+        self.lane.len()
+    }
+
+    /// Form a model-pure best-effort batch for an idle worker: the
+    /// earliest-parked request among models `hosts` accepts heads it, FIFO
+    /// within its model, capped at `be_batch`. None = nothing servable.
+    pub fn next_best_effort(&mut self, hosts: impl Fn(ModelId) -> bool) -> Option<Vec<Request>> {
+        let model = self.lane.front_matching(&hosts)?.model;
+        let batch = self.lane.drain_model(model, self.cfg.be_batch);
+        debug_assert!(!batch.is_empty(), "front_matching promised a head");
+        self.best_effort_batches += 1;
+        self.best_effort_served += batch.len();
+        Some(batch)
+    }
+
+    /// Remove every parked request whose model `hosted` rejects — an
+    /// elastic unload can orphan lane entries that could otherwise never
+    /// execute (and would wedge the pumps' drain check). The caller must
+    /// complete the returned requests. Allocation-free when nothing is
+    /// orphaned (the common case: an empty `Vec` does not allocate).
+    pub fn evict_unhosted(&mut self, hosted: impl Fn(ModelId) -> bool) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.lane.front_matching(|m| !hosted(m)) {
+            let model = r.model;
+            let n = self.lane.pending_for(model);
+            out.extend(self.lane.drain_model(model, n));
+        }
+        out
+    }
+
+    /// Flush every still-parked best-effort request (end-of-run drain —
+    /// they terminate as unserved, keeping completion conservation exact).
+    pub fn drain_best_effort(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.lane.len());
+        while let Some(r) = self.lane.pop_front() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Snapshot the run-level stats (one allocation; called at teardown).
+    pub fn stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            enabled: true,
+            admitted: self.admitted,
+            downgraded: self.downgraded,
+            early_rejected: self.early_rejected,
+            best_effort_served: self.best_effort_served,
+            best_effort_batches: self.best_effort_batches,
+            per_app: self.apps.iter().map(|(a, st)| (*a, st.adm)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ms_to_us;
+
+    const M0: ModelId = ModelId(0);
+    const A0: AppId = AppId(0);
+    const A1: AppId = AppId(1);
+
+    fn req(id: u64, app: AppId, release: Micros, slo_ms: f64) -> Request {
+        Request::new(id, app, release, ms_to_us(slo_ms), 10.0)
+    }
+
+    /// A controller with a profiled 8–12 ms class (mean 10).
+    fn seeded() -> AdmissionController {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        c.seed_profile(M0, A0, &Histogram::from_weights(8.0, 1.0, &[1.0, 1.0, 1.0, 1.0]));
+        c
+    }
+
+    #[test]
+    fn threshold_bands_route_to_three_fates() {
+        let mut c = seeded();
+        // Plenty of slack, empty backlog → admit.
+        let (d, p) = c.decide(&req(0, A0, 0, 100.0), 0.0, 0);
+        assert_eq!(d, Decision::Admit);
+        assert!(p > 0.99, "p={p}");
+        // Backlog eats the whole budget → hopeless → reject.
+        let (d, p) = c.decide(&req(1, A0, 0, 100.0), 99.0, 0);
+        assert_eq!(d, Decision::Reject);
+        assert!(p < 0.125, "p={p}");
+        // Marginal slack (between the floors) → downgrade.
+        let (d, p) = c.decide(&req(2, A0, 0, 100.0), 91.0, 0);
+        assert_eq!(d, Decision::Downgrade, "p={p}");
+        let s = c.stats();
+        assert!(s.enabled);
+        assert_eq!((s.admitted, s.downgraded, s.early_rejected), (1, 1, 1));
+        assert_eq!(s.per_app.len(), 1);
+        assert_eq!(s.per_app[0].1.arrivals, 3);
+    }
+
+    #[test]
+    fn no_host_is_hopeless() {
+        let mut c = seeded();
+        let (d, p) = c.decide(&req(0, A0, 0, 1_000.0), f64::INFINITY, 0);
+        assert_eq!(d, Decision::Reject);
+        assert_eq!(p, 0.0);
+    }
+
+    #[test]
+    fn unprofiled_class_uses_point_fallback() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        let (d, _) = c.decide(&req(0, A0, 0, 100.0), 0.0, 0);
+        assert_eq!(d, Decision::Admit, "10 ms placeholder fits 100 ms slack");
+        let (d, _) = c.decide(&req(1, A0, 0, 100.0), 95.0, 0);
+        assert_eq!(d, Decision::Reject, "placeholder cannot fit 5 ms");
+    }
+
+    #[test]
+    fn light_load_never_triggers_the_fairness_guard() {
+        // A hot app at 3× the cold app's rate, but everything passes the
+        // gate: every single request is admitted — the deficit guard must
+        // not distort uncontended traffic.
+        let mut c = seeded();
+        c.seed_profile(M0, A1, &Histogram::from_weights(8.0, 1.0, &[1.0; 4]));
+        for i in 0..400u64 {
+            let app = if i % 4 == 3 { A1 } else { A0 };
+            let (d, _) = c.decide(&req(i, app, 0, 200.0), 0.0, 0);
+            assert_eq!(d, Decision::Admit, "arrival {i}");
+        }
+        let s = c.stats();
+        assert_eq!(s.admitted, 400);
+        assert_eq!(s.downgraded + s.early_rejected, 0);
+    }
+
+    #[test]
+    fn contended_hot_app_yields_to_fair_share() {
+        // Sustained contention: every request is marginal (gate fails but
+        // not hopeless), one app arrives 3× as often. The starvation boost
+        // admits each app's share; the hot app's surplus downgrades.
+        let mut c = seeded();
+        c.seed_profile(M0, A1, &Histogram::from_weights(8.0, 1.0, &[1.0; 4]));
+        for i in 0..600u64 {
+            let app = if i % 4 == 3 { A1 } else { A0 };
+            // backlog 91 ms on a 100 ms SLO → p ≈ 0.25..0.5 band.
+            let _ = c.decide(&req(i, app, 0, 100.0), 91.0, 0);
+        }
+        let s = c.stats();
+        let hot = s.per_app.iter().find(|(a, _)| *a == 0).unwrap().1;
+        let cold = s.per_app.iter().find(|(a, _)| *a == 1).unwrap().1;
+        assert!(hot.arrivals > 2 * cold.arrivals);
+        // Absolute admissions are near-equal (each app spends the same
+        // credit stream), so the hot app cannot starve the cold one.
+        let (lo, hi) = (hot.admitted.min(cold.admitted), hot.admitted.max(cold.admitted));
+        assert!(cold.admitted > 0, "cold app starved: {cold:?}");
+        assert!(
+            hi as f64 <= lo as f64 * 1.5 + 4.0,
+            "admission shares diverged: hot={hot:?} cold={cold:?}"
+        );
+        assert!(hot.downgraded > 0, "hot app's surplus must downgrade");
+    }
+
+    #[test]
+    fn best_effort_lane_drains_model_pure_fifo() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        for i in 0..5u64 {
+            let m = ModelId((i % 2) as u32);
+            c.push_best_effort(req(i, A0, i, 1_000.0).with_model(m));
+        }
+        assert_eq!(c.best_effort_pending(), 5);
+        // Worker hosting only model 1: earliest model-1 head (id 1) leads
+        // a model-pure fill.
+        let b = c.next_best_effort(|m| m == ModelId(1)).unwrap();
+        assert_eq!(b.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(b.iter().all(|r| r.model == ModelId(1)));
+        assert_eq!(c.best_effort_pending(), 3);
+        // Nothing hosted → nothing served.
+        assert!(c.next_best_effort(|m| m == ModelId(7)).is_none());
+        // End-of-run flush returns the rest in arrival order.
+        let rest = c.drain_best_effort();
+        assert_eq!(rest.iter().map(|r| r.id.0).collect::<Vec<_>>(), vec![0, 2, 4]);
+        let s = c.stats();
+        assert_eq!(s.best_effort_served, 2);
+        assert_eq!(s.best_effort_batches, 1);
+    }
+
+    #[test]
+    fn best_effort_batch_respects_cap() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            be_batch: 2,
+            ..Default::default()
+        });
+        for i in 0..5u64 {
+            c.push_best_effort(req(i, A0, i, 1_000.0));
+        }
+        let b = c.next_best_effort(|_| true).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(c.best_effort_pending(), 3);
+    }
+}

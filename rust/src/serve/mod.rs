@@ -27,6 +27,7 @@
 //! wall-clock threads (the PJRT serving path). All completion, drop and
 //! outcome bookkeeping lives here, once.
 
+pub mod admission;
 pub mod placement;
 pub mod realtime;
 pub mod replay;
@@ -38,6 +39,7 @@ use crate::core::histogram::Histogram;
 use crate::core::request::{AppId, Completion, ModelId, Outcome, Request};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::telemetry::{EventKind, Recorder};
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionStats, Decision};
 pub use placement::{
     ColdStartCost, ElasticConfig, Placement, PlacementAction, PlacementController, WorkerView,
 };
@@ -173,6 +175,10 @@ struct InFlight {
     batch: Vec<Request>,
     /// Telemetry batch id assigned at formation (None when disabled).
     telemetry_batch: Option<u32>,
+    /// Formed from the admission controller's best-effort lane: its
+    /// completions never count toward the SLO finish rate and its realized
+    /// latency is not fed back to the scheduler's profiler.
+    best_effort: bool,
 }
 
 struct Slot<S> {
@@ -303,6 +309,10 @@ pub struct ServingLoop<C: Clock, S: Scheduler> {
     completions: Vec<Completion>,
     /// Elastic placement controller (None = static placement).
     elastic: Option<ElasticState>,
+    /// Predictive admission controller (None = every arrival is routed
+    /// straight to a scheduler, bit-identical to the pre-admission loop —
+    /// the golden snapshots and zero-alloc audit pin this).
+    admission: Option<AdmissionController>,
     /// Reused per-arrival candidate snapshot (routing sits on the dispatch
     /// hot path — one request, one route call; no allocation).
     loads_buf: Vec<WorkerLoad>,
@@ -322,6 +332,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             router,
             completions: Vec::new(),
             elastic: None,
+            admission: None,
             loads_buf: Vec::with_capacity(n),
             telemetry: None,
         }
@@ -363,6 +374,28 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         self
     }
 
+    /// Enable predictive admission control (DESIGN.md §10): every arrival
+    /// is gated on its estimated P(finish ≤ deadline) and either admitted
+    /// to the SLO lane, downgraded to the controller's best-effort lane,
+    /// or early-rejected. Seed the controller's profiles before attaching.
+    pub fn with_admission(mut self, ctl: AdmissionController) -> Self {
+        self.admission = Some(ctl);
+        self
+    }
+
+    /// Whether an admission controller is installed.
+    pub fn admission_enabled(&self) -> bool {
+        self.admission.is_some()
+    }
+
+    /// Run-level admission tallies (disabled + all-zero when off).
+    pub fn admission_stats(&self) -> AdmissionStats {
+        self.admission
+            .as_ref()
+            .map(|c| c.stats())
+            .unwrap_or_default()
+    }
+
     pub fn clock(&self) -> &C {
         &self.clock
     }
@@ -395,9 +428,20 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             .unwrap_or_default()
     }
 
-    /// Requests queued (not executing) across all replicas.
+    /// Requests queued (not executing) across all replicas, plus any
+    /// parked in the admission controller's best-effort lane — pumps poll
+    /// this to decide when the run has drained, so lane residents must
+    /// count or they would strand at shutdown.
     pub fn pending(&self) -> usize {
-        self.cluster.slots.iter().map(|s| s.sched.pending()).sum()
+        self.cluster
+            .slots
+            .iter()
+            .map(|s| s.sched.pending())
+            .sum::<usize>()
+            + self
+                .admission
+                .as_ref()
+                .map_or(0, |c| c.best_effort_pending())
     }
 
     /// Number of replicas with a batch in flight.
@@ -482,6 +526,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 at: now,
                 batch_size: 0,
                 worker: None,
+                best_effort: false,
             });
             return;
         }
@@ -499,6 +544,105 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             );
         }
         self.cluster.slots[w].sched.on_arrival(req, now);
+    }
+
+    /// Admission-controlled arrival (DESIGN.md §10): gate the request on
+    /// its estimated P(finish ≤ deadline) against the *best* candidate
+    /// replica's backlog, then admit / downgrade / early-reject it.
+    fn admit(&mut self, req: Request, now: Micros) {
+        // Minimum drain estimate over ready replicas hosting the model
+        // (each scheduler's estimate includes its cold-start surcharge);
+        // no ready host → infinite backlog → hopeless → reject.
+        let mut backlog_ms = f64::INFINITY;
+        let placement = &self.cluster.placement;
+        for (w, slot) in self.cluster.slots.iter_mut().enumerate() {
+            if placement.hosts(w, req.model) {
+                backlog_ms = backlog_ms.min(slot.sched.backlog_estimate(req.model));
+            }
+        }
+        let ctl = self
+            .admission
+            .as_mut()
+            .expect("admit() is only called with a controller installed");
+        let (decision, p) = ctl.decide(&req, backlog_ms, now);
+        match decision {
+            Decision::Admit => {
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.record(now, EventKind::Admitted { req: req.id, p });
+                }
+                self.route(req, now);
+            }
+            Decision::Downgrade => {
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.record(now, EventKind::Downgraded { req: req.id, p });
+                }
+                // The controller owns the best-effort lane; the request
+                // leaves the SLO path here and only executes when a worker
+                // would otherwise idle.
+                self.admission
+                    .as_mut()
+                    .expect("controller checked above")
+                    .push_best_effort(req);
+            }
+            Decision::Reject => {
+                // Early rejection is terminal: exactly one Terminal event
+                // and one Completion, same as every other fate (the
+                // conservation invariant covers this path too).
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.record(now, EventKind::EarlyReject { req: req.id, p });
+                    tel.record(
+                        now,
+                        EventKind::Terminal {
+                            req: req.id,
+                            outcome: Outcome::TimedOut,
+                            worker: None,
+                        },
+                    );
+                }
+                self.completions.push(Completion {
+                    request: req,
+                    outcome: Outcome::TimedOut,
+                    at: now,
+                    batch_size: 0,
+                    worker: None,
+                    best_effort: false,
+                });
+            }
+        }
+    }
+
+    /// Sweep best-effort lane entries whose model lost its last ready
+    /// host (an elastic unload can orphan them): they can never execute,
+    /// so they terminate now instead of wedging the pumps' drain check.
+    fn evict_unhosted_best_effort(&mut self, now: Micros) {
+        let Some(ctl) = self.admission.as_mut() else {
+            return;
+        };
+        if ctl.best_effort_pending() == 0 {
+            return;
+        }
+        let placement = &self.cluster.placement;
+        let orphans = ctl.evict_unhosted(|m| placement.hosts_anywhere(m));
+        for r in orphans {
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(
+                    now,
+                    EventKind::Terminal {
+                        req: r.id,
+                        outcome: Outcome::TimedOut,
+                        worker: None,
+                    },
+                );
+            }
+            self.completions.push(Completion {
+                request: r,
+                outcome: Outcome::TimedOut,
+                at: now,
+                batch_size: 0,
+                worker: None,
+                best_effort: true,
+            });
+        }
     }
 
     /// Feed one event; returns the dispatch decisions the pump must
@@ -523,7 +667,11 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                         },
                     );
                 }
-                self.route(req, now);
+                if self.admission.is_some() {
+                    self.admit(req, now);
+                } else {
+                    self.route(req, now);
+                }
                 Vec::new()
             }
             Event::BatchDone { worker, batch_ms } => {
@@ -545,6 +693,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 }
                 self.sample_telemetry(now);
                 self.control_placement(now, &mut out);
+                self.evict_unhosted_best_effort(now);
                 // Reaping keeps router-visible counts honest: busy
                 // replicas never reach `next_batch`, so their queues would
                 // hold already-doomed requests until the batch completes —
@@ -588,14 +737,52 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 next = Some(next.map_or(h, |n| n.min(h)));
             }
         }
+        // Parked best-effort work also wants an idle worker: keep the
+        // default poll cadence alive when the SLO lanes are quiet, or the
+        // lane would only drain on the next unrelated event.
+        if next.is_none()
+            && self
+                .admission
+                .as_ref()
+                .is_some_and(|c| c.best_effort_pending() > 0)
+            && self.cluster.slots.iter().any(|s| s.inflight.is_none())
+        {
+            next = Some(now + 1_000);
+        }
         next
     }
 
     /// Final drop sweep (call once when the pump decides the run is over).
+    /// Flushes the best-effort lane too: still-parked downgrades terminate
+    /// unserved, so completion conservation stays exact.
     pub fn drain_all(&mut self) {
         let now = self.clock.now();
         for w in 0..self.cluster.len() {
             self.drain_dropped(w, now);
+        }
+        let leftover = match self.admission.as_mut() {
+            Some(ctl) => ctl.drain_best_effort(),
+            None => Vec::new(),
+        };
+        for r in leftover {
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(
+                    now,
+                    EventKind::Terminal {
+                        req: r.id,
+                        outcome: Outcome::TimedOut,
+                        worker: None,
+                    },
+                );
+            }
+            self.completions.push(Completion {
+                request: r,
+                outcome: Outcome::TimedOut,
+                at: now,
+                batch_size: 0,
+                worker: None,
+                best_effort: true,
+            });
         }
     }
 
@@ -831,6 +1018,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 at: now,
                 batch_size: bs,
                 worker: Some(w),
+                best_effort: f.best_effort,
             });
         }
         // Busy time is the *execution* time, not dispatch-to-completion
@@ -840,13 +1028,22 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         // are identical (BatchDone lands exactly dispatch + batch_ms).
         slot.busy_us += crate::clock::ms_to_us(batch_ms);
         slot.batches += 1;
-        slot.sched.on_batch_complete(&f.batch, batch_ms, now);
+        if !f.best_effort {
+            // Best-effort batches bypass the scheduler entirely — feeding
+            // their latency back would pollute its online profile (AIMD
+            // targets, Welford means, Orloj's per-class histograms) with
+            // traffic it never planned.
+            slot.sched.on_batch_complete(&f.batch, batch_ms, now);
+        }
         self.drain_dropped(w, now);
     }
 
     /// If replica `w` is idle, ask its scheduler for a batch — repeating
     /// while the scheduler's state changes (e.g. Clockwork aborting a
-    /// planned batch frees it to plan another immediately).
+    /// planned batch frees it to plan another immediately). Only when the
+    /// SLO lane has truly nothing does the admission controller's
+    /// best-effort lane get the worker (DESIGN.md §10: best-effort work
+    /// never delays admitted work).
     fn dispatch_from(&mut self, w: WorkerId, now: Micros) -> Option<Dispatch> {
         if self.cluster.slots[w].inflight.is_some() {
             return None;
@@ -865,56 +1062,83 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                             .unwrap_or(true),
                         "worker {w} dispatched a batch for a model it does not host"
                     );
-                    let telemetry_batch = match self.telemetry.as_mut() {
-                        Some(tel) => {
-                            let id = tel.begin_batch(w);
-                            // The scheduler stored its prediction for this
-                            // batch when forming it; a policy that does not
-                            // predict reports a zero-width nothing.
-                            let (pm, lo, hi) =
-                                match self.cluster.slots[w].sched.last_batch_prediction() {
-                                    Some(p) => (p.ms, p.lo_ms, p.hi_ms),
-                                    None => (0.0, 0.0, 0.0),
-                                };
-                            tel.record(
-                                now,
-                                EventKind::BatchFormed {
-                                    batch: id,
-                                    worker: w as u32,
-                                    model: batch[0].model,
-                                    app: batch[0].app,
-                                    size: batch.len() as u32,
-                                    predicted_ms: pm,
-                                    lo_ms: lo,
-                                    hi_ms: hi,
-                                },
-                            );
-                            for r in &batch {
-                                tel.record(
-                                    now,
-                                    EventKind::InBatch {
-                                        req: r.id,
-                                        batch: id,
-                                    },
-                                );
-                            }
-                            Some(id)
+                    return Some(self.install_dispatch(w, batch, false, now));
+                }
+                None => {
+                    if self.drain_dropped(w, now) {
+                        continue;
+                    }
+                    // SLO lane idle: offer the slot to the best-effort
+                    // lane (model-pure FIFO over the models `w` hosts).
+                    let be = match self.admission.as_mut() {
+                        Some(ctl) => {
+                            let placement = &self.cluster.placement;
+                            ctl.next_best_effort(|m| placement.hosts(w, m))
                         }
                         None => None,
                     };
-                    self.cluster.slots[w].inflight = Some(InFlight {
-                        batch: batch.clone(),
-                        telemetry_batch,
-                    });
-                    return Some(Dispatch::Execute { worker: w, batch });
-                }
-                None => {
-                    if !self.drain_dropped(w, now) {
-                        return None;
-                    }
+                    return be.map(|batch| self.install_dispatch(w, batch, true, now));
                 }
             }
         }
+    }
+
+    /// Record a batch's formation (telemetry) and install it as `w`'s
+    /// in-flight work, yielding the pump's dispatch.
+    fn install_dispatch(
+        &mut self,
+        w: WorkerId,
+        batch: Vec<Request>,
+        best_effort: bool,
+        now: Micros,
+    ) -> Dispatch {
+        let telemetry_batch = match self.telemetry.as_mut() {
+            Some(tel) => {
+                let id = tel.begin_batch(w);
+                // The scheduler stored its prediction for this batch when
+                // forming it; a policy that does not predict — and the
+                // best-effort lane, which bypasses the scheduler — reports
+                // a zero-width nothing.
+                let (pm, lo, hi) = if best_effort {
+                    (0.0, 0.0, 0.0)
+                } else {
+                    match self.cluster.slots[w].sched.last_batch_prediction() {
+                        Some(p) => (p.ms, p.lo_ms, p.hi_ms),
+                        None => (0.0, 0.0, 0.0),
+                    }
+                };
+                tel.record(
+                    now,
+                    EventKind::BatchFormed {
+                        batch: id,
+                        worker: w as u32,
+                        model: batch[0].model,
+                        app: batch[0].app,
+                        size: batch.len() as u32,
+                        predicted_ms: pm,
+                        lo_ms: lo,
+                        hi_ms: hi,
+                    },
+                );
+                for r in &batch {
+                    tel.record(
+                        now,
+                        EventKind::InBatch {
+                            req: r.id,
+                            batch: id,
+                        },
+                    );
+                }
+                Some(id)
+            }
+            None => None,
+        };
+        self.cluster.slots[w].inflight = Some(InFlight {
+            batch: batch.clone(),
+            telemetry_batch,
+            best_effort,
+        });
+        Dispatch::Execute { worker: w, batch }
     }
 
     /// Record replica `w`'s scheduler-side drops; true if any.
@@ -938,6 +1162,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 at: now,
                 batch_size: 0,
                 worker: None,
+                best_effort: false,
             });
         }
         any

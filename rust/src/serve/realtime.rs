@@ -14,7 +14,7 @@
 //! blocks the scheduling loop — N batches run concurrently, one per
 //! replica.
 
-use super::{Dispatch, Event, PlacementStats, ServingLoop, WorkerStats};
+use super::{AdmissionStats, Dispatch, Event, PlacementStats, ServingLoop, WorkerStats};
 use crate::clock::{Clock, Micros};
 use crate::core::request::{Completion, ModelId, Request};
 use crate::scheduler::Scheduler;
@@ -43,6 +43,9 @@ pub struct ServeResult {
     pub per_worker: Vec<WorkerStats>,
     /// Elastic placement counters (all zero on static runs).
     pub placement: PlacementStats,
+    /// Admission-control tallies (disabled + all-zero when no controller
+    /// was installed).
+    pub admission: AdmissionStats,
     /// Wall-clock length of the run (µs since the serving clock's epoch).
     pub end_time: Micros,
     /// Lifecycle recorder, present when the loop was built with
@@ -273,12 +276,14 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
     core.drain_all();
     let end_time = core.now();
     let placement = core.placement_stats();
+    let admission = core.admission_stats();
     let telemetry = core.take_telemetry();
     let (completions, per_worker) = core.into_completions();
     ServeResult {
         completions,
         per_worker,
         placement,
+        admission,
         end_time,
         telemetry,
     }

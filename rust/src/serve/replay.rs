@@ -178,6 +178,7 @@ where
 
     let end_time = clock.now();
     let placement = core.placement_stats();
+    let admission = core.admission_stats();
     let telemetry = core.take_telemetry();
     let (completions, per_worker) = core.into_completions();
     let batches = per_worker.iter().map(|w| w.batches).sum();
@@ -189,6 +190,7 @@ where
         busy_us,
         per_worker,
         placement,
+        admission,
         telemetry,
     }
 }

@@ -46,6 +46,11 @@ impl ModelRates {
 ///   summary (global and per-model) and `mean_batch_size`: they ran on a
 ///   worker, so they have a real latency and a real batch. `TimedOut` and
 ///   `Aborted` requests never executed and contribute to counts only.
+/// * Best-effort completions (admission-control downgrades; DESIGN.md §10)
+///   are carved out of every SLO tally: they count in `total` and
+///   `best_effort` only, and never move the finish rate in either
+///   direction. With admission off, `best_effort` is zero and every number
+///   here is bit-identical to the pre-admission report.
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub total: usize,
@@ -53,6 +58,13 @@ pub struct RunReport {
     pub late: usize,
     pub timed_out: usize,
     pub aborted: usize,
+    /// Completions served from (or drained out of) the best-effort lane.
+    pub best_effort: usize,
+    /// GPU time (solo exec ms, the batch-amortization-free proxy) spent
+    /// executing requests that still missed their deadline — the overload
+    /// experiment's wasted-work metric. Both lanes count: a late SLO batch
+    /// and a late best-effort batch both burned the GPU for nothing.
+    pub wasted_ms: f64,
     /// Latency summary over serviced (finished + late) requests, ms.
     pub latency: Summary,
     /// Mean batch size over serviced requests (request-weighted, not
@@ -70,11 +82,14 @@ pub struct RunReport {
 
 impl RunReport {
     /// Finish rate: requests completed within their SLO / total (§5.2).
+    /// Best-effort completions are outside the SLO contract and leave the
+    /// denominator (identical to total when admission is off).
     pub fn finish_rate(&self) -> f64 {
-        if self.total == 0 {
+        let slo_total = self.total - self.best_effort;
+        if slo_total == 0 {
             0.0
         } else {
-            self.finished as f64 / self.total as f64
+            self.finished as f64 / slo_total as f64
         }
     }
 
@@ -83,11 +98,20 @@ impl RunReport {
         let mut late = 0;
         let mut timed_out = 0;
         let mut aborted = 0;
+        let mut best_effort = 0;
+        let mut wasted_ms = 0.0;
         let mut latencies = Vec::new();
         let mut per_app: BTreeMap<u32, (usize, usize)> = BTreeMap::new();
         let mut per_model_acc: BTreeMap<u32, (usize, usize, Vec<f64>)> = BTreeMap::new();
         let mut batch_sizes = Vec::new();
         for c in completions {
+            if c.batch_size > 0 && c.outcome == Outcome::Late {
+                wasted_ms += c.request.exec_ms;
+            }
+            if c.best_effort {
+                best_effort += 1;
+                continue;
+            }
             let AppId(app) = c.request.app;
             let slot = per_app.entry(app).or_insert((0, 0));
             slot.1 += 1;
@@ -133,6 +157,8 @@ impl RunReport {
             late,
             timed_out,
             aborted,
+            best_effort,
+            wasted_ms,
             latency: Summary::of(&latencies),
             mean_batch_size: crate::util::stats::mean(&batch_sizes),
             per_app,
@@ -172,6 +198,12 @@ impl std::fmt::Display for RunReport {
             self.latency.p99,
             self.mean_batch_size
         )?;
+        if self.best_effort > 0 {
+            write!(f, " be={}", self.best_effort)?;
+        }
+        if self.wasted_ms > 0.0 {
+            write!(f, " wasted={:.0}ms", self.wasted_ms)?;
+        }
         // Always show the per-model line when the breakdown exists —
         // hiding it on single-model runs made `m0`'s latency detail
         // unreachable from the printed report.
@@ -209,6 +241,7 @@ mod tests {
             at,
             batch_size: 4,
             worker: Some(0),
+            best_effort: false,
         }
     }
 
@@ -219,6 +252,7 @@ mod tests {
             at,
             batch_size: 2,
             worker: Some(0),
+            best_effort: false,
         }
     }
 
@@ -257,6 +291,7 @@ mod tests {
             at,
             batch_size,
             worker: Some(0),
+            best_effort: false,
         };
         let comps = vec![
             mk(1, Outcome::Finished, 100_000, 2),
@@ -294,6 +329,40 @@ mod tests {
         let shown = format!("{r}");
         assert!(shown.contains("models=["), "{shown}");
         assert!(shown.contains("m0=1.00"), "{shown}");
+    }
+
+    #[test]
+    fn best_effort_stays_out_of_slo_tallies() {
+        // Two SLO-lane completions plus two best-effort ones (one served
+        // on time, one late): the finish rate sees only the SLO lane, the
+        // late executions of *both* lanes count as wasted work.
+        let be = |id, outcome, at, batch_size| Completion {
+            request: Request::new(id, AppId(0), 0, 1_000_000, 5.0),
+            outcome,
+            at,
+            batch_size,
+            worker: Some(0),
+            best_effort: true,
+        };
+        let comps = vec![
+            comp(1, 0, Outcome::Finished, 100),
+            comp(2, 0, Outcome::Late, 2_000_000),
+            be(3, Outcome::Finished, 900, 2),
+            be(4, Outcome::Late, 3_000_000, 2),
+        ];
+        let r = RunReport::from_completions(&comps);
+        assert_eq!(r.total, 4);
+        assert_eq!(r.best_effort, 2);
+        assert_eq!((r.finished, r.late), (1, 1));
+        assert!((r.finish_rate() - 0.5).abs() < 1e-12, "{}", r.finish_rate());
+        // One late SLO request + one late best-effort request, 5 ms each.
+        assert!((r.wasted_ms - 10.0).abs() < 1e-12, "{}", r.wasted_ms);
+        // Latency/batch summaries stay SLO-lane-only.
+        assert_eq!(r.latency.count, 2);
+        assert_eq!(r.per_app[&0], (1, 2));
+        let shown = format!("{r}");
+        assert!(shown.contains("be=2"), "{shown}");
+        assert!(shown.contains("wasted=10ms"), "{shown}");
     }
 
     #[test]

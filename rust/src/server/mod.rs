@@ -14,7 +14,7 @@ use crate::core::request::Request;
 use crate::scheduler::Scheduler;
 use crate::serve::realtime::{self, ServeResult};
 use crate::serve::router::{self, Router};
-use crate::serve::{Cluster, Placement, PlacementController, ServingLoop};
+use crate::serve::{AdmissionController, Cluster, Placement, PlacementController, ServingLoop};
 use crate::sim::worker::Worker;
 use std::sync::mpsc::{self, Receiver, Sender};
 
@@ -45,6 +45,8 @@ pub struct Server<S: Scheduler, W: Worker> {
     placement: Option<Placement>,
     /// Elastic placement controller (requires `with_placement`).
     elastic: Option<PlacementController>,
+    /// Predictive admission gate (off by default; DESIGN.md §10).
+    admission: Option<AdmissionController>,
     /// Lifecycle recorder handed to the serving loop (off by default).
     telemetry: Option<crate::telemetry::Recorder>,
     /// Anchored at construction so callers can stamp release times before
@@ -61,6 +63,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             router: router::by_name("round_robin").expect("registry has round_robin"),
             placement: None,
             elastic: None,
+            admission: None,
             telemetry: None,
             clock: RealClock::new(),
         }
@@ -76,6 +79,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             router,
             placement: None,
             elastic: None,
+            admission: None,
             telemetry: None,
             clock: RealClock::new(),
         }
@@ -98,6 +102,14 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             "elastic serving needs with_placement first"
         );
         self.elastic = Some(ctl);
+        self
+    }
+
+    /// Gate arrivals through predictive admission control (`ctl` decides
+    /// admit / best-effort downgrade / early-reject per arrival; the
+    /// tallies come back on [`ServeResult::admission`]; DESIGN.md §10).
+    pub fn with_admission(mut self, ctl: AdmissionController) -> Self {
+        self.admission = Some(ctl);
         self
     }
 
@@ -129,6 +141,9 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
         let mut core = ServingLoop::new(self.clock, cluster, self.router);
         if let Some(ctl) = self.elastic {
             core = core.with_elastic(ctl);
+        }
+        if let Some(ctl) = self.admission {
+            core = core.with_admission(ctl);
         }
         if let Some(rec) = self.telemetry {
             core = core.with_telemetry(rec);

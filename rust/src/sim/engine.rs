@@ -12,7 +12,9 @@ use super::worker::Worker;
 use crate::clock::{Micros, VirtualClock};
 use crate::core::request::{Completion, Request};
 use crate::scheduler::Scheduler;
-use crate::serve::{replay, router, Cluster, PlacementStats, ServingLoop, WorkerStats};
+use crate::serve::{
+    replay, router, AdmissionStats, Cluster, PlacementStats, ServingLoop, WorkerStats,
+};
 
 /// Result of an engine run.
 #[derive(Debug)]
@@ -29,6 +31,9 @@ pub struct EngineResult {
     pub per_worker: Vec<WorkerStats>,
     /// Elastic placement counters (all zero on static runs).
     pub placement: PlacementStats,
+    /// Admission-control tallies (disabled + all-zero when no controller
+    /// was installed).
+    pub admission: AdmissionStats,
     /// Lifecycle recorder, present when the run was built with
     /// [`ServingLoop::with_telemetry`]; `None` (the default) costs one
     /// branch per hook on the hot path.

@@ -11,8 +11,8 @@
 use crate::clock::VirtualClock;
 use crate::scheduler::SchedulerConfig;
 use crate::serve::{
-    replay, router, Cluster, ElasticConfig, Placement, PlacementController, PlacementStats,
-    ServingLoop,
+    replay, router, AdmissionConfig, AdmissionController, AdmissionStats, Cluster, ElasticConfig,
+    Placement, PlacementController, PlacementStats, ServingLoop,
 };
 use crate::server::metrics::RunReport;
 use crate::sim::worker::SimWorker;
@@ -36,6 +36,10 @@ pub struct ClusterSpec {
     /// costs one branch per hook even when disabled, and real memory when
     /// enabled).
     pub telemetry: bool,
+    /// Predictive admission control at this P(finish ≤ deadline) admit
+    /// threshold (None = off; DESIGN.md §10). The controller is seeded
+    /// with the same deployment-time histograms as the schedulers.
+    pub admission: Option<f64>,
 }
 
 impl Default for ClusterSpec {
@@ -46,6 +50,7 @@ impl Default for ClusterSpec {
             placement: "all".into(),
             elastic: None,
             telemetry: false,
+            admission: None,
         }
     }
 }
@@ -58,6 +63,7 @@ impl ClusterSpec {
             placement: "all".into(),
             elastic: None,
             telemetry: false,
+            admission: None,
         }
     }
 
@@ -80,6 +86,12 @@ impl ClusterSpec {
         self.telemetry = true;
         self
     }
+
+    /// Enable predictive admission control at `threshold` (DESIGN.md §10).
+    pub fn with_admission(mut self, threshold: f64) -> Self {
+        self.admission = Some(threshold);
+        self
+    }
 }
 
 /// One (system, slo) cell of a results table.
@@ -93,6 +105,9 @@ pub struct Cell {
     pub workers: usize,
     /// Elastic placement counters (all zero on static runs).
     pub placement: PlacementStats,
+    /// Admission-control tallies (disabled + all-zero without a
+    /// controller).
+    pub admission: AdmissionStats,
     /// Filled lifecycle recorder (only when the [`ClusterSpec`] asked
     /// for telemetry).
     pub telemetry: Option<Box<Recorder>>,
@@ -125,6 +140,9 @@ pub fn run_one(
     }
     let mut replicas = Cluster::build_placed(system, &cfg, seed, placement)
         .unwrap_or_else(|| panic!("unknown system {system}"));
+    let mut admission_ctl = cluster
+        .admission
+        .map(|t| AdmissionController::new(AdmissionConfig::with_threshold(t)));
     for (model, app, hist) in spec.seed_histograms(cfg.bins) {
         if cluster.elastic.is_some() {
             // Any replica may acquire any model at runtime: deployment-
@@ -132,6 +150,11 @@ pub fn run_one(
             replicas.seed_app_profile_everywhere(model, app, &hist, 1000);
         } else {
             replicas.seed_app_profile(model, app, &hist, 1000);
+        }
+        if let Some(ctl) = admission_ctl.as_mut() {
+            // The gate sees the same deployment-time profiles as the
+            // schedulers; it refines nothing at runtime (DESIGN.md §10).
+            ctl.seed_profile(model, app, &hist);
         }
     }
     let workers: Vec<SimWorker> = (0..n)
@@ -145,6 +168,9 @@ pub fn run_one(
     let mut core = ServingLoop::new(VirtualClock::new(), replicas, route);
     if let Some(ecfg) = &cluster.elastic {
         core = core.with_elastic(PlacementController::new(ecfg.clone()));
+    }
+    if let Some(ctl) = admission_ctl {
+        core = core.with_admission(ctl);
     }
     let requests = trace.requests(slo_multiple);
     if cluster.telemetry {
@@ -172,6 +198,7 @@ pub fn run_one(
         utilization,
         workers: n,
         placement: res.placement,
+        admission: res.admission,
         telemetry: res.telemetry,
     }
 }

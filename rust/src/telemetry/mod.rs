@@ -108,6 +108,18 @@ pub enum EventKind {
     QueueSample { worker: u32, pending: u32 },
     /// Windowed sample: cluster-wide backlog for one model.
     ModelBacklog { model: ModelId, pending: u32 },
+    /// Admission gate passed (admission-control runs only); `p` is the
+    /// estimated P(finish ≤ deadline) at arrival. The request continues
+    /// down the normal routed path.
+    Admitted { req: RequestId, p: f64 },
+    /// Admission parked the request in the best-effort lane: it only
+    /// executes when the SLO lane would leave a worker idle, and never
+    /// counts toward the SLO finish rate.
+    Downgraded { req: RequestId, p: f64 },
+    /// Admission rejected the request at arrival as hopeless under the
+    /// current backlog. Terminal — a `Terminal { outcome: TimedOut }`
+    /// for the same request is recorded alongside.
+    EarlyReject { req: RequestId, p: f64 },
 }
 
 /// Ring capacity and sampling window for a [`Recorder`].
@@ -463,11 +475,28 @@ impl Recorder {
                         pending as f64,
                     ));
                 }
+                EventKind::Downgraded { req, p } | EventKind::EarlyReject { req, p } => {
+                    let verb = if matches!(ev.kind, EventKind::Downgraded { .. }) {
+                        "downgrade"
+                    } else {
+                        "early-reject"
+                    };
+                    out.push(Json::obj(vec![
+                        ("name", Json::str(format!("{verb} r{} p={p:.2}", req.0))),
+                        ("cat", Json::str("admission")),
+                        ("ph", Json::str("i")),
+                        ("s", Json::str("t")),
+                        ("ts", Json::num(ev.at as f64)),
+                        ("pid", Json::num(1.0)),
+                        ("tid", Json::num(0.0)),
+                    ]));
+                }
                 EventKind::Arrival { .. }
                 | EventKind::Routed { .. }
                 | EventKind::RouteDrop { .. }
                 | EventKind::InBatch { .. }
                 | EventKind::Wake
+                | EventKind::Admitted { .. }
                 | EventKind::Reap { .. } => {}
             }
         }
@@ -486,6 +515,9 @@ impl Recorder {
         struct Win {
             arrivals: u64,
             routed: u64,
+            admitted: u64,
+            downgraded: u64,
+            early_reject: u64,
             finished: u64,
             late: u64,
             shed: u64,
@@ -503,6 +535,12 @@ impl Recorder {
             match ev.kind {
                 EventKind::Arrival { .. } => win.arrivals += 1,
                 EventKind::Routed { .. } => win.routed += 1,
+                EventKind::Admitted { .. } => win.admitted += 1,
+                EventKind::Downgraded { .. } => win.downgraded += 1,
+                // EarlyReject is always paired with a Terminal{TimedOut}
+                // for the same request — the Terminal feeds the shed rate,
+                // this counter isolates the admission-side cause.
+                EventKind::EarlyReject { .. } => win.early_reject += 1,
                 // RouteDrop is always followed by a Terminal{TimedOut} for
                 // the same request — only the Terminal feeds the shed rate.
                 EventKind::BatchFormed { size, .. } => {
@@ -542,6 +580,9 @@ impl Recorder {
                 ("t_ms", Json::num(idx as f64 * window_ms)),
                 ("arrivals", Json::num(w.arrivals as f64)),
                 ("routed", Json::num(w.routed as f64)),
+                ("admitted", Json::num(w.admitted as f64)),
+                ("downgraded", Json::num(w.downgraded as f64)),
+                ("early_reject", Json::num(w.early_reject as f64)),
                 ("finished", Json::num(w.finished as f64)),
                 ("late", Json::num(w.late as f64)),
                 ("shed", Json::num(w.shed as f64)),

@@ -20,8 +20,8 @@ use orloj::core::histogram::Histogram;
 use orloj::core::request::{AppId, ModelId, Request};
 use orloj::scheduler::SchedulerConfig;
 use orloj::serve::{
-    replay, router, Cluster, ColdStartCost, Dispatch, ElasticConfig, Placement,
-    PlacementController, ServingLoop,
+    replay, router, AdmissionConfig, AdmissionController, Cluster, ColdStartCost, Dispatch,
+    ElasticConfig, Placement, PlacementController, ServingLoop,
 };
 use orloj::sim::worker::SimWorker;
 use orloj::util::json::Json;
@@ -188,6 +188,167 @@ fn elastic_dispatch_sequence(system: &str, workers: usize) -> Json {
 
 fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/dispatch_sequences.json")
+}
+
+/// A fixed seeded ~2× overload trace for the admission snapshot: tight
+/// SLOs land in the reject/downgrade bands of the seeded histograms,
+/// roomy ones in the admit band, and the 2 ms mean gap builds real
+/// backlog so the decisions shift over the run.
+fn overload_trace() -> Vec<Request> {
+    let mut rng = Rng::new(0xAD0C);
+    let mut reqs = Vec::new();
+    let mut t: Micros = 0;
+    for i in 0..500u64 {
+        t += ms_to_us(rng.exponential(1.0 / 2.0)); // ~2 ms mean gap
+        let model = ModelId(rng.index(2) as u32);
+        let app = AppId(rng.index(2) as u32);
+        let exec = 4.0 + rng.f64() * 22.0;
+        let slo_ms = if rng.chance(0.3) {
+            4.0 + rng.f64() * 10.0 // tight: downgrade/reject bands
+        } else {
+            40.0 + rng.f64() * 200.0 // roomy: admit band
+        };
+        reqs.push(Request::new(i, app, t, ms_to_us(slo_ms), exec).with_model(model));
+    }
+    reqs
+}
+
+/// One system's admission-enabled run on the fixed overload trace: the
+/// per-arrival A/D/R decision sequence (from the telemetry stream, in
+/// arrival order) plus the resulting dispatch sequence — SLO-lane and
+/// best-effort batches alike.
+fn admission_sequence(system: &str, workers: usize) -> Json {
+    use orloj::telemetry::{EventKind, Recorder, RecorderConfig};
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::new(0.5, 0.5),
+        ..Default::default()
+    };
+    let mut cluster = Cluster::build(system, &cfg, 7, workers).expect("known system");
+    let mut ctl = AdmissionController::new(AdmissionConfig::default());
+    for (model, app, hist) in seed_hists() {
+        cluster.seed_app_profile(model, app, &hist, 500);
+        ctl.seed_profile(model, app, &hist);
+    }
+    let sim_workers: Vec<SimWorker> = (0..workers)
+        .map(|w| SimWorker::new(cfg.cost_model, 0.0, 0x90 + w as u64))
+        .collect();
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        cluster,
+        router::by_name("round_robin").unwrap(),
+    )
+    .with_admission(ctl)
+    .with_telemetry(Recorder::with_config(RecorderConfig {
+        // Generous ring: a wrapped ring would silently lose the oldest
+        // decisions and break the one-decision-per-arrival check.
+        capacity: 1 << 16,
+        ..Default::default()
+    }));
+    let mut dispatches: Vec<Json> = Vec::new();
+    let res = replay::run_cluster_traced(core, sim_workers, overload_trace(), |t, d| {
+        let Dispatch::Execute { worker, batch } = d else {
+            panic!("admission golden run produced a placement dispatch: {d:?}");
+        };
+        dispatches.push(Json::arr(vec![
+            Json::num(t as f64),
+            Json::num(*worker as f64),
+            Json::Arr(batch.iter().map(|r| Json::num(r.id.0 as f64)).collect()),
+        ]));
+    });
+    assert_eq!(
+        res.completions.len(),
+        500,
+        "conservation for admission {system} x{workers}"
+    );
+    let rec = res.telemetry.expect("recorder");
+    let decisions: Vec<Json> = rec
+        .events()
+        .filter_map(|ev| {
+            let (req, letter) = match ev.kind {
+                EventKind::Admitted { req, .. } => (req, "A"),
+                EventKind::Downgraded { req, .. } => (req, "D"),
+                EventKind::EarlyReject { req, .. } => (req, "R"),
+                _ => return None,
+            };
+            Some(Json::arr(vec![Json::num(req.0 as f64), Json::str(letter)]))
+        })
+        .collect();
+    assert_eq!(
+        decisions.len(),
+        500,
+        "one admission decision per arrival for {system} x{workers}"
+    );
+    Json::obj(vec![
+        ("decisions", Json::Arr(decisions)),
+        ("dispatches", Json::Arr(dispatches)),
+    ])
+}
+
+fn admission_golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/admission_sequences.json")
+}
+
+/// Admission-enabled golden gate — same snapshot protocol as the dispatch
+/// gate but a SEPARATE file, so re-recording one never silently rewrites
+/// the other.
+#[test]
+fn admission_sequences_are_deterministic_and_match_golden() {
+    let mut got: BTreeMap<String, Json> = BTreeMap::new();
+    for system in ALL_SYSTEMS {
+        let a = admission_sequence(system, 2);
+        let b = admission_sequence(system, 2);
+        assert_eq!(a, b, "nondeterministic admission sequence for {system}");
+        got.insert(format!("{system}/w2"), a);
+    }
+    // The fixed 2x-overload trace must exercise all three fates somewhere
+    // in the sweep, or the snapshot guards nothing.
+    for letter in ["A", "D", "R"] {
+        assert!(
+            got.values().any(|v| {
+                v.get("decisions")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .any(|d| d.as_arr().unwrap()[1].as_str() == Some(letter))
+            }),
+            "decision {letter} never taken on the overload trace"
+        );
+    }
+    let got = Json::Obj(got);
+
+    let path = admission_golden_path();
+    let force_record = std::env::var("ORLOJ_GOLDEN_RECORD")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if force_record || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.to_pretty()).unwrap();
+        eprintln!(
+            "recorded golden admission sequences to {} — COMMIT this file so the \
+             regression gate actually compares on fresh checkouts (until it is \
+             committed, this test only asserts run-to-run determinism)",
+            path.display()
+        );
+        return;
+    }
+    let want = Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .expect("admission golden file parses");
+    let want_obj = want.as_obj().expect("admission golden file is an object");
+    let got_obj = got.as_obj().unwrap();
+    for (key, w) in want_obj {
+        let g = got.get(key);
+        assert_eq!(
+            g, w,
+            "admission sequence for {key} diverged from the golden snapshot; \
+             if the policy change is intentional, re-record with \
+             ORLOJ_GOLDEN_RECORD=1 cargo test --test golden_dispatch"
+        );
+    }
+    assert_eq!(
+        got_obj.len(),
+        want_obj.len(),
+        "configuration set changed; re-record the admission golden snapshot"
+    );
 }
 
 #[test]

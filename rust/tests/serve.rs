@@ -11,8 +11,8 @@ use orloj::scheduler::SchedulerConfig;
 use orloj::serve::realtime;
 use orloj::serve::replay;
 use orloj::serve::{
-    router, Cluster, ColdStartCost, Dispatch, ElasticConfig, Placement, PlacementController,
-    ServingLoop,
+    router, AdmissionConfig, AdmissionController, Cluster, ColdStartCost, Dispatch, ElasticConfig,
+    Placement, PlacementController, ServingLoop,
 };
 use orloj::sim::worker::SimWorker;
 use orloj::util::proptest::check_cases;
@@ -365,6 +365,212 @@ fn prop_elastic_no_dispatch_before_load_and_conservation() {
     assert!(
         total_rerouted > 0 || total_actions > 0,
         "evict-drain path never exercised"
+    );
+}
+
+/// An admission controller seeded with the same deployment-time
+/// histograms the schedulers get (DESIGN.md §10).
+fn admission_ctl(s: &TraceSpec, cfg: &SchedulerConfig, threshold: f64) -> AdmissionController {
+    let mut ctl = AdmissionController::new(AdmissionConfig::with_threshold(threshold));
+    for (model, app, hist) in s.seed_histograms(cfg.bins) {
+        ctl.seed_profile(model, app, &hist);
+    }
+    ctl
+}
+
+/// Admission-gated overload conservation (virtual clock): at 2× offered
+/// load, for all five systems × worker counts {1, 4}, every trace request
+/// still completes exactly once, every arrival gets exactly one admission
+/// fate (admitted + downgraded + early-rejected = arrivals), every
+/// downgraded request terminates in the best-effort lane, and the
+/// SLO-lane outcome counts (finished + late + shed) reconcile with the
+/// admitted + rejected population.
+#[test]
+fn prop_admission_conservation_virtual_clock() {
+    use orloj::core::request::Outcome;
+    let (s, cfg) = spec(0xAD, 6.0, 2.0);
+    let trace = s.generate();
+    let requests = trace.requests(2.0);
+    let want: BTreeMap<u64, usize> = requests.iter().map(|r| (r.id.0, 1)).collect();
+    for system in ALL_SYSTEMS {
+        for n in [1usize, 4] {
+            let core = ServingLoop::new(
+                VirtualClock::new(),
+                seeded_cluster(system, &s, &cfg, 9, n),
+                router::by_name("least_loaded").unwrap(),
+            )
+            .with_admission(admission_ctl(&s, &cfg, 0.5));
+            let res = replay::run_cluster(core, sim_workers(&cfg, 3, n), requests.clone());
+            let mut got: BTreeMap<u64, usize> = BTreeMap::new();
+            for c in &res.completions {
+                *got.entry(c.request.id.0).or_insert(0) += 1;
+            }
+            assert_eq!(
+                got, want,
+                "{system} x{n}: lost/duplicated requests under admission"
+            );
+            let st = &res.admission;
+            assert!(st.enabled);
+            assert_eq!(
+                st.admitted + st.downgraded + st.early_rejected,
+                requests.len(),
+                "{system} x{n}: every arrival needs exactly one admission fate"
+            );
+            let best_effort = res.completions.iter().filter(|c| c.best_effort).count();
+            assert_eq!(
+                best_effort, st.downgraded,
+                "{system} x{n}: every downgraded request must terminate in the \
+                 best-effort lane (and only those)"
+            );
+            assert!(
+                st.best_effort_served <= st.downgraded,
+                "{system} x{n}: can't serve more best-effort requests than were downgraded"
+            );
+            // SLO lane reconciliation: the non-best-effort completions are
+            // exactly the admitted + early-rejected arrivals, split across
+            // the four outcomes.
+            let mut slo_outcomes = [0usize; 4];
+            for c in res.completions.iter().filter(|c| !c.best_effort) {
+                let i = match c.outcome {
+                    Outcome::Finished => 0,
+                    Outcome::Late => 1,
+                    Outcome::TimedOut => 2,
+                    Outcome::Aborted => 3,
+                };
+                slo_outcomes[i] += 1;
+            }
+            assert_eq!(
+                slo_outcomes.iter().sum::<usize>(),
+                st.admitted + st.early_rejected,
+                "{system} x{n}: SLO-lane completions must equal admitted + rejected"
+            );
+        }
+    }
+}
+
+/// The same admission conservation property on the real clock: the
+/// wall-clock pump must not lose, duplicate, or strand requests in the
+/// best-effort lane when the intake channel closes.
+#[test]
+fn prop_admission_conservation_real_clock() {
+    use orloj::core::histogram::Histogram;
+    for system in ALL_SYSTEMS {
+        for n in [1usize, 4] {
+            let cfg = SchedulerConfig {
+                cost_model: BatchCostModel::calibrated(10.0),
+                ..Default::default()
+            };
+            let mut cluster = Cluster::build(system, &cfg, 11, n).expect("known system");
+            let mut ctl = AdmissionController::new(AdmissionConfig::with_threshold(0.5));
+            for app in 0..2u32 {
+                let hist = Histogram::constant(10.0);
+                cluster.seed_app_profile(ModelId::DEFAULT, AppId(app), &hist, 100);
+                ctl.seed_profile(ModelId::DEFAULT, AppId(app), &hist);
+            }
+            let core = ServingLoop::new(
+                RealClock::new(),
+                cluster,
+                router::by_name("least_loaded").unwrap(),
+            )
+            .with_admission(ctl);
+            let workers = sim_workers(&cfg, 17, n);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let n_req = 80u64;
+            let mut rng = Rng::new(0xADC0 + n as u64);
+            for i in 0..n_req {
+                // Mix of comfortable, marginal, and hopeless SLOs so all
+                // three admission fates run.
+                let slo_ms = if rng.chance(0.6) {
+                    800.0
+                } else if rng.chance(0.5) {
+                    12.0
+                } else {
+                    0.05
+                };
+                tx.send(Request::new(
+                    i,
+                    AppId((i % 2) as u32),
+                    0,
+                    ms_to_us(slo_ms),
+                    10.0,
+                ))
+                .unwrap();
+            }
+            drop(tx);
+            let res = realtime::serve_cluster(core, workers, rx);
+            assert_eq!(
+                res.completions.len(),
+                n_req as usize,
+                "{system} x{n}: lost/duplicated requests under admission"
+            );
+            let mut seen = std::collections::BTreeSet::new();
+            for c in &res.completions {
+                assert!(
+                    seen.insert(c.request.id.0),
+                    "{system} x{n}: request {} completed twice",
+                    c.request.id.0
+                );
+            }
+            let st = &res.admission;
+            assert_eq!(
+                st.admitted + st.downgraded + st.early_rejected,
+                n_req as usize,
+                "{system} x{n}: every arrival needs exactly one admission fate"
+            );
+        }
+    }
+}
+
+/// Deficit-counter fairness: two identical apps at 3× load must end with
+/// comparable admitted shares — the gate may shed aggressively, but it
+/// may not starve one app to feed the other.
+#[test]
+fn admission_fairness_two_apps_at_overload() {
+    let model = BatchCostModel::calibrated(20.0);
+    let mut s = TraceSpec {
+        name: "fairness".into(),
+        dists: vec![
+            ExecTimeDist::multimodal("a0", 1, 20.0, 20.0, 1.0, None),
+            ExecTimeDist::multimodal("a1", 1, 20.0, 20.0, 1.0, None),
+        ],
+        arrivals: AzureTraceConfig {
+            apps: 2,
+            rate_per_s: 0.0,
+            duration_s: 6.0,
+            ..Default::default()
+        },
+        seed: 0xFA1,
+        models: Vec::new(),
+    };
+    s.scale_rate_to_load(model, 3.0, 8);
+    let cfg = SchedulerConfig {
+        cost_model: model,
+        ..Default::default()
+    };
+    let trace = s.generate();
+    let requests = trace.requests(2.0);
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        seeded_cluster("orloj", &s, &cfg, 4, 1),
+        router::by_name("least_loaded").unwrap(),
+    )
+    .with_admission(admission_ctl(&s, &cfg, 0.5));
+    let res = replay::run_cluster(core, sim_workers(&cfg, 3, 1), requests);
+    let st = &res.admission;
+    assert_eq!(st.per_app.len(), 2, "both apps must arrive");
+    for (app, a) in &st.per_app {
+        assert!(
+            a.admitted > 0,
+            "app {app}: starved under the fairness guard ({a:?})"
+        );
+    }
+    let (lo, hi) = st
+        .admit_share_spread()
+        .expect("two active apps give a spread");
+    assert!(
+        hi - lo < 0.30,
+        "identical apps at 3x load must keep comparable admitted shares: \
+         spread {lo:.2}..{hi:.2}"
     );
 }
 

@@ -12,7 +12,10 @@
 //!   allocations (the consolidate scratch buffers are reused);
 //! * the per-dispatch cycle's scheduler-owned bookkeeping reuses pooled
 //!   buffers — measured here informationally (the hull's tree nodes and
-//!   the returned batch `Vec` remain, see DESIGN.md §7).
+//!   the returned batch `Vec` remain, see DESIGN.md §7);
+//! * a warm admission controller decides arrival fates (DESIGN.md §10)
+//!   with **zero** allocations — the per-app table and class profiles
+//!   only grow on first sight.
 
 use orloj::clock::ms_to_us;
 use orloj::core::batchmodel::BatchCostModel;
@@ -224,6 +227,47 @@ fn disabled_telemetry_idle_wake_allocates_nothing() {
         allocs, 0,
         "idle serve-loop wake with telemetry disabled must be allocation-free"
     );
+}
+
+#[test]
+fn warm_admission_decisions_allocate_nothing() {
+    // The admission gate sits on the arrival hot path (DESIGN.md §10):
+    // once every app has its fairness entry, `decide()` is linear probes
+    // over small warm tables — no hashing, no growth, no allocator.
+    use orloj::serve::{AdmissionConfig, AdmissionController};
+
+    let mut c = AdmissionController::new(AdmissionConfig::default());
+    let h = Histogram::from_weights(8.0, 1.0, &[1.0, 2.0, 1.0, 1.0]);
+    for app in 0..4u32 {
+        c.seed_profile(ModelId(0), AppId(app), &h);
+    }
+    // Warm: first-seen app entries are the only growth on the decision
+    // path; touch all four apps and all three fate bands.
+    let backlog_for = |i: u64| match i % 3 {
+        0 => 0.0,   // plenty of slack → admit
+        1 => 91.0,  // marginal → downgrade
+        _ => 99.0,  // hopeless → reject
+    };
+    let mut t = 0u64;
+    for i in 0..200u64 {
+        let r = Request::new(i, AppId((i % 4) as u32), t, ms_to_us(100.0), 10.0);
+        let _ = c.decide(&r, backlog_for(i), t);
+        t += ms_to_us(1.0);
+    }
+    // Measured: decisions across every app and every band, warm tables.
+    let (allocs, _) = count_allocs(|| {
+        for i in 0..1_000u64 {
+            let r = Request::new(10_000 + i, AppId((i % 4) as u32), t, ms_to_us(100.0), 10.0);
+            let _ = c.decide(&r, backlog_for(i), t);
+            t += ms_to_us(1.0);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "warm admission decide() must be allocation-free"
+    );
+    let s = c.stats();
+    assert!(s.admitted > 0 && s.downgraded > 0 && s.early_rejected > 0);
 }
 
 #[test]

@@ -120,6 +120,83 @@ fn every_request_has_exactly_one_terminal_event() {
     }
 }
 
+/// The conservation invariant extended to the admission paths (DESIGN.md
+/// §10): with the gate on at 2× overload, every request still gets
+/// exactly one `Terminal` event — including early-rejected arrivals
+/// (paired `EarlyReject` + `Terminal { TimedOut }`) and downgraded
+/// requests that live and die in the best-effort lane — and the
+/// `EarlyReject`/`Downgraded` event counts reconcile with the run's
+/// `AdmissionStats`, across all five systems × {1, 4} workers.
+#[test]
+fn admission_rejects_record_exactly_one_terminal() {
+    let mut spec = multimodel_spec(8.0);
+    // Re-scale the same mix to 2x capacity so all three admission fates
+    // (admit / downgrade / early-reject) actually fire.
+    spec.scale_rate_to_load(BatchCostModel::gpu_like(), 2.0, 8);
+    let trace = spec.generate();
+    let total = trace.events.len();
+    for system in ALL_SYSTEMS {
+        for workers in [1usize, 4] {
+            let cluster = ClusterSpec::new(workers, "round_robin")
+                .with_telemetry()
+                .with_admission(0.5);
+            let cell = runner::run_one(system, &spec, &trace, 2.0, &cfg(), spec.seed, &cluster);
+            let rec = cell
+                .telemetry
+                .as_ref()
+                .unwrap_or_else(|| panic!("{system} x{workers}: no recorder came back"));
+            assert_eq!(
+                rec.dropped_events(),
+                0,
+                "{system} x{workers}: ring overflowed ({} recorded)",
+                rec.recorded()
+            );
+            let (per_req, _) = terminal_tallies(rec);
+            assert_eq!(
+                per_req.len(),
+                total,
+                "{system} x{workers}: {} of {total} requests reached a terminal event",
+                per_req.len()
+            );
+            for (req, n) in &per_req {
+                assert_eq!(
+                    *n, 1,
+                    "{system} x{workers}: request {req:?} terminated {n} times"
+                );
+            }
+            let mut rejects: BTreeMap<RequestId, usize> = BTreeMap::new();
+            let mut downgrades = 0usize;
+            let mut terminal_outcome: BTreeMap<RequestId, Outcome> = BTreeMap::new();
+            for ev in rec.events() {
+                match ev.kind {
+                    EventKind::EarlyReject { req, .. } => *rejects.entry(req).or_default() += 1,
+                    EventKind::Downgraded { .. } => downgrades += 1,
+                    EventKind::Terminal { req, outcome, .. } => {
+                        terminal_outcome.insert(req, outcome);
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(
+                rejects.values().sum::<usize>(),
+                cell.admission.early_rejected,
+                "{system} x{workers}: EarlyReject events diverge from AdmissionStats"
+            );
+            assert_eq!(
+                downgrades, cell.admission.downgraded,
+                "{system} x{workers}: Downgraded events diverge from AdmissionStats"
+            );
+            for req in rejects.keys() {
+                assert_eq!(
+                    terminal_outcome.get(req),
+                    Some(&Outcome::TimedOut),
+                    "{system} x{workers}: early-rejected {req:?} must terminate TimedOut"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn arrivals_are_recorded_once_per_request() {
     let spec = multimodel_spec(6.0);
