@@ -134,6 +134,12 @@ impl Scheduler for ClipperScheduler {
         self.queue.front().map(|r| r.deadline)
     }
 
+    fn earliest_deadline(&self) -> Option<Micros> {
+        // FIFO discipline: the head is the request this policy acts on
+        // next, so its deadline bounds the useful idle advance.
+        self.queue.front().map(|r| r.deadline)
+    }
+
     fn pending(&self) -> usize {
         self.queue.len()
     }

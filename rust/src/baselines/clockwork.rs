@@ -190,6 +190,10 @@ impl Scheduler for ClockworkScheduler {
         self.queue.min_deadline()
     }
 
+    fn earliest_deadline(&self) -> Option<Micros> {
+        self.queue.min_deadline()
+    }
+
     fn pending(&self) -> usize {
         self.queue.len()
     }

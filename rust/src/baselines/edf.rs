@@ -142,6 +142,10 @@ impl Scheduler for EdfScheduler {
         self.queue.min_deadline()
     }
 
+    fn earliest_deadline(&self) -> Option<Micros> {
+        self.queue.min_deadline()
+    }
+
     fn pending(&self) -> usize {
         self.queue.len()
     }

@@ -200,6 +200,12 @@ impl Scheduler for NexusScheduler {
         }
     }
 
+    fn earliest_deadline(&self) -> Option<Micros> {
+        // FIFO within the plan's head model: the global head's deadline
+        // bounds the useful idle advance.
+        self.queue.front().map(|r| r.deadline)
+    }
+
     fn pending(&self) -> usize {
         self.queue.len()
     }

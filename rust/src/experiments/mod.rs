@@ -59,6 +59,10 @@ pub struct ExpOptions {
     /// (`--admission[=p]`; bare flag = 0.5; DESIGN.md §10). The
     /// `overload` experiment compares on/off regardless.
     pub admission: Option<f64>,
+    /// Parallel event lanes for the virtual-time pump (`--shards`;
+    /// DESIGN.md §11). 0 = auto (the `cluster` experiment picks the
+    /// machine's parallelism; everything else stays sequential).
+    pub shards: usize,
 }
 
 impl Default for ExpOptions {
@@ -78,6 +82,7 @@ impl Default for ExpOptions {
             drift_period_s: 0.0,
             telemetry: None,
             admission: None,
+            shards: 0,
         }
     }
 }
@@ -106,6 +111,9 @@ impl ExpOptions {
         }
         if let Some(t) = self.admission {
             spec = spec.with_admission(t);
+        }
+        if self.shards > 1 {
+            spec = spec.with_shards(self.shards);
         }
         spec
     }
@@ -1099,6 +1107,158 @@ pub fn overload(opts: &ExpOptions) -> Json {
     Json::arr(all)
 }
 
+/// `experiment cluster` (DESIGN.md §11): simulator-throughput scale
+/// sweep. Replays a bursty azure arrival trace through every cell of a
+/// (workers × models) grid twice — once on the sequential virtual-time
+/// pump, once on the sharded pump — and reports wall-clock events/s,
+/// discrete-event step counts and the process peak RSS. A machine-
+/// readable copy lands in `BENCH_serve.json` (bench `cluster_scale`;
+/// `ORLOJ_BENCH_OUT` redirects the directory). The timed section is the
+/// replay only: trace generation, scheduler build and profile seeding
+/// happen outside the clock, identically for both pumps.
+fn cluster_scale(opts: &ExpOptions) -> Json {
+    use crate::clock::VirtualClock;
+    use crate::serve::{replay, router, Cluster, Placement, ServingLoop};
+    use crate::sim::engine::EngineResult;
+    use crate::sim::worker::SimWorker;
+    use crate::util::benchmark;
+    use std::time::Instant;
+
+    let quick = benchmark::quick_mode() || opts.duration_s <= 10.0;
+    let (worker_grid, model_grid, duration_s): (&[usize], &[usize], f64) = if quick {
+        (&[4, 16], &[10, 50], 2.0)
+    } else {
+        (
+            &[4, 16, 64, 256],
+            &[10, 100, 1000],
+            opts.duration_s.clamp(4.0, 16.0),
+        )
+    };
+    let system = "orloj";
+    let slo_multiple = 4.0;
+    let auto_shards = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    println!("### cluster scale sweep ({system}, round_robin, placement=all)");
+    println!(
+        "{:>8} {:>7} {:>9} {:>7} {:>12} {:>12} {:>8} {:>9}",
+        "workers", "models", "requests", "shards", "seq_ev/s", "par_ev/s", "speedup", "rss_mb"
+    );
+    let mut rows = Vec::new();
+    for &workers in worker_grid {
+        for &models in model_grid {
+            let cost_model = BatchCostModel::calibrated(10.0);
+            let mut cfg = SchedulerConfig {
+                cost_model,
+                ..Default::default()
+            };
+            let mut spec = TraceSpec {
+                name: format!("cluster-w{workers}-m{models}"),
+                dists: Vec::new(),
+                arrivals: AzureTraceConfig {
+                    apps: 1,
+                    rate_per_s: 0.0,
+                    duration_s,
+                    burst_sigma: 0.6,
+                    ..Default::default()
+                },
+                seed: opts.seed ^ ((workers as u64) << 20) ^ models as u64,
+                models: (0..models)
+                    .map(|m| {
+                        ModelTraffic::new(
+                            m as u32,
+                            1.0 / models as f64,
+                            vec![ExecTimeDist::constant("unit", 10.0)],
+                        )
+                    })
+                    .collect(),
+            };
+            // Offered load is calibrated per worker, then multiplied out
+            // to the cluster: N workers see N× the single-worker trace.
+            spec.scale_rate_to_load(cost_model, opts.util.min(0.7), 8);
+            spec.arrivals.rate_per_s *= workers as f64;
+            cfg.model_costs = spec.model_cost_models();
+            let trace = spec.generate();
+            let n_requests = trace.events.len();
+
+            let build = || {
+                let placement = Placement::parse_checked("all", workers, models)
+                    .expect("'all' placement always parses");
+                let mut replicas = Cluster::build_placed(system, &cfg, spec.seed, placement)
+                    .expect("known system");
+                for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+                    replicas.seed_app_profile(model, app, &hist, 1000);
+                }
+                let sim_workers: Vec<SimWorker> = (0..workers)
+                    .map(|w| {
+                        SimWorker::new(
+                            cfg.cost_model,
+                            0.0,
+                            spec.seed ^ 0x5151 ^ ((w as u64) << 16),
+                        )
+                        .with_model_costs(cfg.model_costs.clone())
+                    })
+                    .collect();
+                let core = ServingLoop::new(
+                    VirtualClock::new(),
+                    replicas,
+                    router::by_name("round_robin").expect("registry has round_robin"),
+                );
+                (core, sim_workers)
+            };
+            let timed = |shards: usize| {
+                let (core, sim_workers) = build();
+                let requests = trace.requests(slo_multiple);
+                let t0 = Instant::now();
+                let res = replay::run_cluster_sharded(core, sim_workers, requests, shards);
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                assert_eq!(res.completions.len(), n_requests, "conservation");
+                (res, wall)
+            };
+            let shards = if opts.shards > 0 {
+                opts.shards
+            } else {
+                auto_shards
+            }
+            .min(workers);
+            let (seq, seq_wall) = timed(1);
+            let (par, par_wall) = timed(shards);
+            // Events the pump delivered: one arrival per request plus one
+            // completion per executed batch.
+            let events = |res: &EngineResult| (n_requests + res.batches) as f64;
+            let seq_eps = events(&seq) / seq_wall;
+            let par_eps = events(&par) / par_wall;
+            let speedup = par_eps / seq_eps.max(1e-9);
+            let rss_mb = benchmark::peak_rss_bytes() as f64 / (1024.0 * 1024.0);
+            println!(
+                "{workers:>8} {models:>7} {n_requests:>9} {shards:>7} {seq_eps:>12.0} {par_eps:>12.0} {speedup:>8.2} {rss_mb:>9.0}"
+            );
+            rows.push(Json::obj(vec![
+                ("workers", Json::num(workers as f64)),
+                ("models", Json::num(models as f64)),
+                ("requests", Json::num(n_requests as f64)),
+                ("shards", Json::num(shards as f64)),
+                ("seq_wall_s", Json::num(seq_wall)),
+                ("par_wall_s", Json::num(par_wall)),
+                ("seq_events_per_s", Json::num(seq_eps)),
+                ("par_events_per_s", Json::num(par_eps)),
+                ("seq_req_per_s", Json::num(n_requests as f64 / seq_wall)),
+                ("par_req_per_s", Json::num(n_requests as f64 / par_wall)),
+                ("speedup", Json::num(speedup)),
+                ("seq_steps", Json::num(seq.steps as f64)),
+                ("par_steps", Json::num(par.steps as f64)),
+                ("batches", Json::num(seq.batches as f64)),
+                ("peak_rss_mb", Json::num(rss_mb)),
+            ]));
+        }
+    }
+    match benchmark::json_report("BENCH_serve.json", "cluster_scale", rows.clone()) {
+        Ok(p) => println!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+    Json::arr(rows)
+}
+
 /// Run one experiment by id; returns its JSON rows.
 pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
     let rows = match id {
@@ -1115,15 +1275,16 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
         "elastic" => elastic(opts),
         "ablation" => ablation(opts),
         "overload" => overload(opts),
+        "cluster" => cluster_scale(opts),
         _ => return None,
     };
     Some(rows)
 }
 
 /// All experiment ids in run order.
-pub const ALL: [&str; 13] = [
+pub const ALL: [&str; 14] = [
     "fig2", "fig3", "fig6", "table2", "table3", "table4", "table5", "fig13", "fig14", "multimodel",
-    "elastic", "ablation", "overload",
+    "elastic", "ablation", "overload", "cluster",
 ];
 
 #[cfg(test)]

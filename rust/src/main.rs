@@ -32,6 +32,8 @@ fn usage() -> ! {
                                    a Perfetto-loadable TELEMETRY_<case>.trace.json (default dir: results)\n\
              --admission[=p]       predictive admission control at admit threshold p (bare: 0.5);\n\
                                    the `overload` experiment compares on/off regardless\n\
+             --shards <n>          parallel event lanes for the virtual-time pump (default: 1;\n\
+                                   the `cluster` experiment auto-picks the machine's parallelism)\n\
              --quick               fast settings for smoke runs\n\
            serve                 PJRT serving demo (needs `make artifacts`)\n\
              --artifacts <dir>     artifact directory        (default artifacts)\n\
@@ -109,6 +111,7 @@ fn exp_options(args: &Args) -> ExpOptions {
     opts.drift_period_s = args.get_f64("drift", opts.drift_period_s);
     opts.telemetry = telemetry_opt(args);
     opts.admission = admission_opt(args);
+    opts.shards = args.get_usize("shards", opts.shards);
     opts
 }
 

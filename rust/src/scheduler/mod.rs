@@ -433,6 +433,17 @@ pub trait Scheduler: Send {
     /// (milestones, windows). None = only poll on arrivals/completions.
     fn wake_hint(&self, now: Micros) -> Option<Micros>;
 
+    /// Deadline of the queued request this policy would act on soonest
+    /// (its own dequeue discipline's head). The virtual-time pumps use it
+    /// as the idle-advance bound when `wake_hint` is silent: with queued
+    /// work but no hint the clock jumps here instead of crawling in 1 ms
+    /// hops. Advisory only — the pump re-polls at the returned time, so a
+    /// loose bound costs extra polls, never correctness. None = no queued
+    /// work, or the policy does not track deadlines.
+    fn earliest_deadline(&self) -> Option<Micros> {
+        None
+    }
+
     /// Number of queued (not yet executing) requests.
     fn pending(&self) -> usize;
 
@@ -495,6 +506,9 @@ impl<S: Scheduler + ?Sized> Scheduler for &mut S {
     fn wake_hint(&self, now: Micros) -> Option<Micros> {
         (**self).wake_hint(now)
     }
+    fn earliest_deadline(&self) -> Option<Micros> {
+        (**self).earliest_deadline()
+    }
     fn pending(&self) -> usize {
         (**self).pending()
     }
@@ -539,6 +553,9 @@ impl Scheduler for Box<dyn Scheduler> {
     }
     fn wake_hint(&self, now: Micros) -> Option<Micros> {
         (**self).wake_hint(now)
+    }
+    fn earliest_deadline(&self) -> Option<Micros> {
+        (**self).earliest_deadline()
     }
     fn pending(&self) -> usize {
         (**self).pending()

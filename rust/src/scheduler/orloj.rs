@@ -785,6 +785,11 @@ impl Scheduler for OrlojScheduler {
         }
     }
 
+    fn earliest_deadline(&self) -> Option<Micros> {
+        // O(1): the candidate index caches the earliest deadline.
+        self.index.earliest_deadline()
+    }
+
     fn pending(&self) -> usize {
         self.entries.len()
     }

@@ -237,6 +237,25 @@ impl<S: Scheduler> Cluster<S> {
         self.slots.is_empty()
     }
 
+    /// Take the cluster apart into its (seeded) schedulers and placement
+    /// so the sharded pump can re-group them into per-shard sub-clusters.
+    /// Only valid on an un-driven cluster: a slot with work in flight
+    /// cannot move between event lanes.
+    pub(crate) fn into_parts(self) -> (Vec<S>, Placement) {
+        let scheds = self
+            .slots
+            .into_iter()
+            .map(|s| {
+                assert!(
+                    s.inflight.is_none() && s.loading.is_none() && s.batches == 0,
+                    "sharding must start from idle replicas"
+                );
+                s.sched
+            })
+            .collect();
+        (scheds, self.placement)
+    }
+
     pub fn placement(&self) -> &Placement {
         &self.placement
     }
@@ -703,14 +722,7 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
                 // historical shed-at-batch-formation timing exactly.
                 let reap = self.cluster.len() > 1;
                 for w in 0..self.cluster.len() {
-                    if reap && self.cluster.slots[w].inflight.is_some() {
-                        self.cluster.slots[w].sched.reap(now);
-                        if let Some(tel) = self.telemetry.as_mut() {
-                            tel.record(now, EventKind::Reap { worker: w as u32 });
-                        }
-                    }
-                    self.drain_dropped(w, now);
-                    if let Some(d) = self.dispatch_from(w, now) {
+                    if let Some(d) = self.poll_slot(w, reap) {
                         out.push(d);
                     }
                 }
@@ -729,10 +741,16 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
         let mut next: Option<Micros> = None;
         for slot in &self.cluster.slots {
             if slot.inflight.is_none() && slot.sched.pending() > 0 {
+                // Hint first; with no (future) hint, jump to the earliest
+                // deadline the policy tracks — a hintless scheduler would
+                // otherwise crawl toward its queued work in 1 ms hops. The
+                // 1 ms cadence survives only as the last resort for
+                // policies that track neither.
                 let h = slot
                     .sched
                     .wake_hint(now)
                     .filter(|&h| h > now)
+                    .or_else(|| slot.sched.earliest_deadline().filter(|&d| d > now))
                     .unwrap_or(now + 1_000);
                 next = Some(next.map_or(h, |n| n.min(h)));
             }
@@ -750,6 +768,70 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             next = Some(now + 1_000);
         }
         next
+    }
+
+    /// Whether this loop's configuration lets the sharded pump run its
+    /// replicas in parallel event lanes (DESIGN.md §11): routing must be
+    /// replayable by the coordinator before any scheduler state exists
+    /// (load-oblivious router), and nothing may mutate global state from
+    /// inside a lane (no admission gate, no elastic controller, no shared
+    /// telemetry ring). Anything else falls back to the sequential pump,
+    /// which is the conservative merge in the limit.
+    pub fn parallel_safe(&self) -> bool {
+        self.router.load_oblivious()
+            && self.elastic.is_none()
+            && self.admission.is_none()
+            && self.telemetry.is_none()
+    }
+
+    /// Poll one replica: reap its doomed queue entries (multi-replica
+    /// clusters only — `reap` is the *global* cluster-size gate, passed in
+    /// because a shard sees only its own slots), sweep drops, and form the
+    /// next batch if the worker is free. This is exactly the per-worker
+    /// body of the `Event::Wake` arm, exposed so the per-slot pump can
+    /// poll replicas on their own event cadence instead of all at once.
+    pub(crate) fn poll_slot(&mut self, w: WorkerId, reap: bool) -> Option<Dispatch> {
+        let now = self.clock.now();
+        if reap && self.cluster.slots[w].inflight.is_some() {
+            self.cluster.slots[w].sched.reap(now);
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.record(now, EventKind::Reap { worker: w as u32 });
+            }
+        }
+        self.drain_dropped(w, now);
+        self.dispatch_from(w, now)
+    }
+
+    /// Next time replica `w` wants to be polled without a delivery of its
+    /// own: its scheduler's wake hint, then the earliest tracked deadline,
+    /// then the 1 ms last-resort cadence — the per-slot counterpart of
+    /// [`ServingLoop::next_wake`]. None = busy (its `BatchDone` is the
+    /// next event) or empty (nothing to wake for).
+    pub(crate) fn slot_wake(&self, w: WorkerId, now: Micros) -> Option<Micros> {
+        let slot = &self.cluster.slots[w];
+        if slot.inflight.is_some() || slot.sched.pending() == 0 {
+            return None;
+        }
+        Some(
+            slot.sched
+                .wake_hint(now)
+                .filter(|&h| h > now)
+                .or_else(|| slot.sched.earliest_deadline().filter(|&d| d > now))
+                .unwrap_or(now + 1_000),
+        )
+    }
+
+    /// Decompose a freshly built loop into the parts the sharded pump
+    /// re-assembles per shard. Only valid before any event was delivered
+    /// (shards must start from virgin replicas) and only for
+    /// [`ServingLoop::parallel_safe`] configurations.
+    pub(crate) fn into_shard_parts(self) -> (C, Vec<S>, Placement, Box<dyn Router>) {
+        assert!(
+            self.completions.is_empty(),
+            "sharding must start from an un-driven loop"
+        );
+        let (scheds, placement) = self.cluster.into_parts();
+        (self.clock, scheds, placement, self.router)
     }
 
     /// Final drop sweep (call once when the pump decides the run is over).

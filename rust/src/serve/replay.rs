@@ -1,5 +1,5 @@
 //! Virtual-time pump: replays a recorded trace through a
-//! [`ServingLoop`](super::ServingLoop) cluster, advancing a shared
+//! [`ServingLoop`](super::ServingLoop) cluster, advancing a
 //! [`VirtualClock`] from event to event (the discrete-event substrate
 //! behind every table and figure reproduction).
 //!
@@ -10,23 +10,41 @@
 //! `PlacementDone` at `now + load latency`, so cold starts share the one
 //! event heap with batch completions.
 //!
-//! **Hot loop (§Perf).** The pump is driven by a single min-heap of
-//! pending `(finish time, worker)` completions plus a draining iterator
-//! over the release-sorted trace: each iteration touches only the events
-//! that are actually due, instead of re-scanning every worker slot and
-//! re-deriving the next event time from all N of them. Requests are moved
-//! out of the trace by value — the historical per-arrival `Request` clone
-//! is gone.
+//! **Sharded replay (DESIGN.md §11).** Cluster-scale sweeps (hundreds of
+//! replicas, millions of requests) are bounded by the single sequential
+//! pump, so [`run_cluster_sharded`] partitions the replicas into
+//! contiguous *event lanes*, each with its own virtual-time domain,
+//! running on std scoped threads. The only cross-lane edge in a
+//! [`ServingLoop::parallel_safe`] configuration is the router's arrival
+//! stream, and a load-oblivious router's decisions depend only on the
+//! arrival sequence and each model's static candidate set — so the
+//! coordinator replays the router over the whole trace up front
+//! (pre-routing), hands every lane its own arrival sub-stream, and merges
+//! the per-lane completion streams afterwards with a stable time-ordered
+//! merge. A single lane covering all replicas is the same code driven by
+//! the same pre-routed stream, so sharded and sequential runs produce
+//! byte-identical completion sequences by construction. Configurations
+//! with genuine cross-replica coupling (load-aware routers, admission,
+//! elastic placement, telemetry) conservatively collapse to the
+//! sequential pump — the merge barrier in the limit.
+//!
+//! **Hot loop (§Perf).** Each lane is driven by per-slot event state (one
+//! optional in-flight completion per replica plus a cached per-slot wake
+//! time) and a draining iterator over the release-sorted trace: each
+//! iteration touches only the replicas that actually have an event due,
+//! instead of re-scanning every slot. Traces arriving already
+//! release-sorted (every generator emits them sorted) skip the historical
+//! unconditional O(n log n) re-sort.
 
-use super::{Dispatch, Event, ServingLoop};
+use super::{Dispatch, Event, Placement, Router, ServingLoop, WorkerLoad};
 use crate::clock::{ms_to_us, Micros, VirtualClock};
-use crate::core::request::{ModelId, Request};
+use crate::core::request::{Completion, ModelId, Outcome, Request};
 use crate::scheduler::Scheduler;
 use crate::sim::engine::EngineResult;
 use crate::sim::worker::Worker;
 use crate::telemetry::EventKind;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// Run the trace to completion on a cluster; `workers[i]` executes the
 /// batches of replica `i`.
@@ -35,17 +53,42 @@ pub fn run_cluster<S: Scheduler, W: Worker>(
     workers: Vec<W>,
     requests: Vec<Request>,
 ) -> EngineResult {
-    run_cluster_traced(core, workers, requests, |_, _| {})
+    run_cluster_sharded(core, workers, requests, 1)
+}
+
+/// [`run_cluster`] over `shards` parallel event lanes (DESIGN.md §11).
+/// `shards = 1` is the sequential pump; larger values run contiguous
+/// replica ranges on scoped threads when the configuration is
+/// [`ServingLoop::parallel_safe`], and conservatively fall back to the
+/// sequential pump otherwise. Either way the completion sequence is
+/// byte-identical to the sequential run's.
+pub fn run_cluster_sharded<S: Scheduler, W: Worker>(
+    core: ServingLoop<VirtualClock, S>,
+    workers: Vec<W>,
+    requests: Vec<Request>,
+    shards: usize,
+) -> EngineResult {
+    assert_eq!(
+        workers.len(),
+        core.workers(),
+        "one executor per scheduling replica"
+    );
+    if core.parallel_safe() {
+        run_prerouted(core, workers, requests, shards, &mut |_, _| {})
+    } else {
+        run_sequential(core, workers, requests, &mut |_, _| {})
+    }
 }
 
 /// [`run_cluster`] with a dispatch observer: `on_dispatch(now, d)` fires
 /// for every dispatch decision — batch executions *and* placement
 /// loads/unloads — in virtual-time order (the golden dispatch-sequence
-/// regression tests record these).
+/// regression tests record these). Observed runs always use a single
+/// event lane: the observer is one global time-ordered stream.
 pub fn run_cluster_traced<S, W, F>(
-    mut core: ServingLoop<VirtualClock, S>,
-    mut workers: Vec<W>,
-    mut requests: Vec<Request>,
+    core: ServingLoop<VirtualClock, S>,
+    workers: Vec<W>,
+    requests: Vec<Request>,
     mut on_dispatch: F,
 ) -> EngineResult
 where
@@ -58,7 +101,38 @@ where
         core.workers(),
         "one executor per scheduling replica"
     );
-    requests.sort_by_key(|r| r.release);
+    if core.parallel_safe() {
+        run_prerouted(core, workers, requests, 1, &mut on_dispatch)
+    } else {
+        run_sequential(core, workers, requests, &mut on_dispatch)
+    }
+}
+
+/// Sort by release only when the trace is not already sorted: every
+/// generator emits release-sorted streams, so million-request traces
+/// skip the O(n log n) re-sort and stream straight into the pump.
+fn ensure_release_sorted(requests: &mut [Request]) {
+    if !requests.windows(2).all(|w| w[0].release <= w[1].release) {
+        requests.sort_by_key(|r| r.release);
+    }
+}
+
+/// The sequential pump: one event loop, one virtual-time domain, every
+/// coupling (load-aware routing, admission, elastic placement, telemetry)
+/// observed at exact global event order. This is the reference semantics
+/// the sharded pump must reproduce.
+fn run_sequential<S, W, F>(
+    mut core: ServingLoop<VirtualClock, S>,
+    mut workers: Vec<W>,
+    mut requests: Vec<Request>,
+    on_dispatch: &mut F,
+) -> EngineResult
+where
+    S: Scheduler,
+    W: Worker,
+    F: FnMut(Micros, &Dispatch),
+{
+    ensure_release_sorted(&mut requests);
     let clock = core.clock().clone();
     let n = workers.len();
     // The event heap holds one (finish time, worker) entry per in-flight
@@ -77,6 +151,7 @@ where
     // never moves a batch completion there.
     let mut busy_until: Vec<Micros> = vec![0; n];
     let mut arrivals = requests.into_iter().peekable();
+    let mut steps = 0usize;
 
     loop {
         let now = clock.now();
@@ -159,6 +234,9 @@ where
             break;
         }
         // Advance to the next event: arrival, completion, load, or wake.
+        // `next_wake` jumps to the earliest tracked deadline when a
+        // policy's wake hint is silent, so a sparse trace completes in
+        // O(events) advances instead of crawling in 1 ms hops.
         let mut next: Option<Micros> = arrivals.peek().map(|r| r.release);
         if let Some(&Reverse((t, _))) = done.peek() {
             next = Some(next.map_or(t, |v| v.min(t)));
@@ -169,9 +247,12 @@ where
         if let Some(h) = core.next_wake(now) {
             next = Some(next.map_or(h, |v| v.min(h)));
         }
+        steps += 1;
         match next {
             Some(t) if t > now => clock.advance_to(t),
             Some(_) => clock.advance_to(now + 1), // same-time event loop guard
+            // Unreachable in practice (`next_wake` returns Some whenever
+            // queued work remains) — kept as a defensive slow crawl.
             None => clock.advance_to(now + 1_000),
         }
     }
@@ -192,6 +273,317 @@ where
         placement,
         admission,
         telemetry,
+        steps,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded pump (parallel-safe configurations; DESIGN.md §11)
+// ---------------------------------------------------------------------
+
+/// Replays the coordinator's pre-computed routing decisions inside a
+/// shard's sub-loop: `route` pops the next target slot (in the shard's
+/// local ids) and returns its rank in the candidate snapshot. Decisions
+/// were made once, globally, in arrival order — this router never
+/// re-decides, so shard-local candidate sets cannot skew routing.
+struct Prerouted {
+    targets: VecDeque<u32>,
+}
+
+impl Router for Prerouted {
+    fn name(&self) -> &'static str {
+        "prerouted"
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> usize {
+        let target = self
+            .targets
+            .pop_front()
+            .expect("one pre-routed target per arrival") as usize;
+        loads
+            .iter()
+            .position(|l| l.worker == target)
+            .expect("pre-routed target hosts the model")
+    }
+
+    fn load_oblivious(&self) -> bool {
+        true
+    }
+}
+
+/// One lane's results, in the lane's local processing order.
+struct ShardOut {
+    completions: Vec<Completion>,
+    per_worker: Vec<crate::serve::WorkerStats>,
+    end_time: Micros,
+    steps: usize,
+}
+
+/// Drive one shard (a contiguous replica range re-indexed from 0) to
+/// completion on its own virtual-time domain. `arrivals` carries each
+/// request's pre-routed local slot so the pump knows which replica to
+/// poll; `reap` is the *global* multi-replica gate (a one-slot shard of a
+/// four-replica cluster still reaps). The per-slot cadence — deliver all
+/// of a slot's due events, then poll it once — is identical whether the
+/// shard covers one replica or all of them, which is what makes sharded
+/// and sequential runs byte-identical.
+fn shard_pump<S, W, F>(
+    mut core: ServingLoop<VirtualClock, S>,
+    mut workers: Vec<W>,
+    arrivals: Vec<(Request, u32)>,
+    reap: bool,
+    on_dispatch: &mut F,
+) -> ShardOut
+where
+    S: Scheduler,
+    W: Worker,
+    F: FnMut(Micros, &Dispatch),
+{
+    let clock = core.clock().clone();
+    let n = workers.len();
+    // Per-slot event state: at most one batch in flight per replica, so a
+    // plain option per slot replaces the global heap.
+    let mut done: Vec<Option<(Micros, f64)>> = vec![None; n];
+    let mut busy_until: Vec<Micros> = vec![0; n];
+    // Cached per-slot wake time, recomputed only when the slot's state
+    // changes (delivery or poll) — the advance step takes the min without
+    // re-asking every scheduler.
+    let mut wake: Vec<Option<Micros>> = vec![None; n];
+    let mut touched = vec![false; n];
+    let mut arrivals = arrivals.into_iter().peekable();
+    let mut steps = 0usize;
+
+    loop {
+        let now = clock.now();
+        // Deliver all arrivals due now; remember which slots they hit.
+        while arrivals.peek().is_some_and(|(r, _)| r.release <= now) {
+            let (req, slot) = arrivals.next().unwrap();
+            touched[slot as usize] = true;
+            core.on_event(Event::Arrival(req));
+        }
+        // Complete every in-flight batch that is due.
+        for w in 0..n {
+            if done[w].is_some_and(|(t, _)| t <= now) {
+                let (_, ms) = done[w].take().unwrap();
+                touched[w] = true;
+                core.on_event(Event::BatchDone {
+                    worker: w,
+                    batch_ms: ms,
+                });
+            }
+        }
+        // Poll exactly the slots with an event or a due wake: deliver-all-
+        // then-poll-once per slot, so same-time arrivals still co-batch.
+        for w in 0..n {
+            let wake_due = wake[w].is_some_and(|t| t <= now);
+            if !(touched[w] || wake_due) {
+                continue;
+            }
+            touched[w] = false;
+            if let Some(d) = core.poll_slot(w, reap) {
+                on_dispatch(now, &d);
+                match d {
+                    Dispatch::Execute { worker, batch } => {
+                        let ms = workers[worker].execute(&batch);
+                        let fin = busy_until[worker].max(now) + ms_to_us(ms);
+                        busy_until[worker] = fin;
+                        done[worker] = Some((fin, ms));
+                    }
+                    other => unreachable!("parallel-safe run produced {other:?}"),
+                }
+            }
+            wake[w] = core.slot_wake(w, now);
+        }
+        // Everything delivered and drained → done.
+        if arrivals.peek().is_none() && done.iter().all(Option::is_none) && core.pending() == 0 {
+            core.drain_all();
+            break;
+        }
+        // Advance to this lane's next event: arrival, completion, or wake.
+        let mut next: Option<Micros> = arrivals.peek().map(|(r, _)| r.release);
+        for w in 0..n {
+            for t in done[w].map(|(t, _)| t).into_iter().chain(wake[w]) {
+                next = Some(next.map_or(t, |v| v.min(t)));
+            }
+        }
+        steps += 1;
+        match next {
+            Some(t) if t > now => clock.advance_to(t),
+            Some(_) => clock.advance_to(now + 1), // same-time event loop guard
+            None => unreachable!("no next event but the lane has not drained"),
+        }
+    }
+
+    let end_time = clock.now();
+    let (completions, per_worker) = core.into_completions();
+    ShardOut {
+        completions,
+        per_worker,
+        end_time,
+        steps,
+    }
+}
+
+/// The sharded pump for [`ServingLoop::parallel_safe`] configurations:
+/// pre-route the whole arrival stream on the coordinator (the router is
+/// load-oblivious, so its decisions need only each model's static
+/// candidate set), partition the replicas into `shards` contiguous lanes,
+/// drive every lane independently — on scoped threads when `shards > 1` —
+/// and merge the completion streams with a stable time-ordered merge.
+/// One lane reproduces the sequential pump exactly; K lanes reproduce one
+/// lane exactly because every decision a lane makes is local to it.
+fn run_prerouted<S, W, F>(
+    core: ServingLoop<VirtualClock, S>,
+    workers: Vec<W>,
+    mut requests: Vec<Request>,
+    shards: usize,
+    on_dispatch: &mut F,
+) -> EngineResult
+where
+    S: Scheduler,
+    W: Worker,
+    F: FnMut(Micros, &Dispatch),
+{
+    ensure_release_sorted(&mut requests);
+    let n = workers.len();
+    let shards = shards.clamp(1, n);
+    let (_clock, scheds, placement, mut router) = core.into_shard_parts();
+
+    // Contiguous replica ranges: shard s covers [lo[s], lo[s + 1]).
+    let mut lo = vec![0usize; shards + 1];
+    for (s, bound) in lo.iter_mut().enumerate().skip(1) {
+        *bound = s * n / shards;
+    }
+    lo[shards] = n;
+    let shard_of = |w: usize| -> usize {
+        // Ranges are near-equal, so a scan over `shards` entries is fine
+        // off the per-arrival path; on it we cache per model below.
+        (1..=shards).find(|&s| w < lo[s]).unwrap() - 1
+    };
+
+    // Pre-route: replay the router over the whole trace in arrival order.
+    // Candidate sets are static (no elastic placement), so they are cached
+    // per model; the load fields are zeroed — a load-oblivious router must
+    // not read them (`Router::load_oblivious` contract).
+    let mut cands: HashMap<u32, Vec<usize>> = HashMap::new();
+    let mut loads_buf: Vec<WorkerLoad> = Vec::with_capacity(n);
+    let mut coord_drops: Vec<Completion> = Vec::new();
+    let mut lanes: Vec<Vec<(Request, u32)>> = (0..shards).map(|_| Vec::new()).collect();
+    let mut lane_targets: Vec<VecDeque<u32>> = (0..shards).map(|_| VecDeque::new()).collect();
+    for req in requests {
+        let c = cands.entry(req.model.0).or_insert_with(|| {
+            (0..n).filter(|&w| placement.hosts(w, req.model)).collect()
+        });
+        if c.is_empty() {
+            // No replica hosts this model: terminal drop at the arrival
+            // instant, exactly where the sequential route() drops it.
+            coord_drops.push(Completion {
+                at: req.release,
+                request: req,
+                outcome: Outcome::TimedOut,
+                batch_size: 0,
+                worker: None,
+                best_effort: false,
+            });
+            continue;
+        }
+        loads_buf.clear();
+        loads_buf.extend(c.iter().map(|&w| WorkerLoad {
+            worker: w,
+            pending: 0,
+            pending_model: 0,
+            in_flight: 0,
+        }));
+        let i = router.route(&req, &loads_buf);
+        assert!(i < c.len(), "router index out of candidate range");
+        let w = c[i];
+        let s = shard_of(w);
+        let local = (w - lo[s]) as u32;
+        lanes[s].push((req, local));
+        lane_targets[s].push_back(local);
+    }
+
+    // Re-assemble per-shard sub-loops from the seeded schedulers. Each
+    // lane owns a fresh virtual clock (its own time domain), the replica
+    // range's placement restriction, and the pre-routed target stream.
+    let reap = n > 1;
+    let mut scheds = scheds;
+    let mut workers = workers;
+    let mut shard_inputs = Vec::with_capacity(shards);
+    for s in (0..shards).rev() {
+        let scheds_s: Vec<S> = scheds.split_off(lo[s]);
+        let workers_s: Vec<W> = workers.split_off(lo[s]);
+        let sub_placement = if placement.is_unconstrained() {
+            Placement::unconstrained(scheds_s.len())
+        } else {
+            Placement::new(
+                (lo[s]..lo[s + 1])
+                    .map(|w| placement.hosted_on(w).map(<[ModelId]>::to_vec).unwrap_or_default())
+                    .collect(),
+            )
+        };
+        let sub_core = ServingLoop::new(
+            VirtualClock::new(),
+            crate::serve::Cluster::with_placement(scheds_s, sub_placement),
+            Box::new(Prerouted {
+                targets: std::mem::take(&mut lane_targets[s]),
+            }),
+        );
+        shard_inputs.push((sub_core, workers_s, std::mem::take(&mut lanes[s])));
+    }
+    shard_inputs.reverse();
+
+    let outs: Vec<ShardOut> = if shards == 1 {
+        let (sub_core, workers_s, lane) = shard_inputs.pop().unwrap();
+        vec![shard_pump(sub_core, workers_s, lane, reap, on_dispatch)]
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shard_inputs
+                .into_iter()
+                .map(|(sub_core, workers_s, lane)| {
+                    scope.spawn(move || {
+                        shard_pump(sub_core, workers_s, lane, reap, &mut |_, _| {})
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard lane panicked"))
+                .collect()
+        })
+    };
+
+    // Stable time-ordered merge: every stream is already sorted by
+    // completion time, and at equal times the concatenation order
+    // (coordinator drops, then lanes in replica order) is exactly the
+    // sequential pump's processing order — a stable sort by `at` is the
+    // k-way merge.
+    let mut completions = coord_drops;
+    let mut per_worker = Vec::with_capacity(n);
+    let mut end_time = 0;
+    let mut steps = 0usize;
+    for (s, out) in outs.into_iter().enumerate() {
+        completions.extend(out.completions);
+        per_worker.extend(out.per_worker.into_iter().map(|mut ws| {
+            ws.worker += lo[s];
+            ws
+        }));
+        end_time = end_time.max(out.end_time);
+        steps += out.steps;
+    }
+    completions.sort_by_key(|c| c.at);
+    let batches = per_worker.iter().map(|w| w.batches).sum();
+    let busy_us = per_worker.iter().map(|w| w.busy_us).sum();
+    EngineResult {
+        completions,
+        end_time,
+        batches,
+        busy_us,
+        per_worker,
+        placement: Default::default(),
+        admission: Default::default(),
+        telemetry: None,
+        steps,
     }
 }
 
@@ -263,6 +655,7 @@ mod tests {
             res.per_worker.iter().map(|w| w.busy_us).sum::<u64>()
         );
         assert_eq!(res.placement.actions(), 0, "static runs take no actions");
+        assert!(res.steps > 0, "the pump reports its advance count");
     }
 
     #[test]
@@ -317,6 +710,56 @@ mod tests {
         let four = finished(4);
         assert!(four > one, "4 workers ({four}) must beat 1 ({one})");
         assert!(four > 150, "4 workers should clear most of the load: {four}");
+    }
+
+    #[test]
+    fn sharded_lanes_match_the_sequential_pump() {
+        // The by-construction determinism claim, in miniature: identical
+        // completion sequences (order included) for 1, 2 and 4 lanes over
+        // a bursty round-robin trace with drops.
+        let run = |shards: usize| {
+            let core = ServingLoop::new(
+                VirtualClock::new(),
+                cluster(4),
+                router::by_name("round_robin").unwrap(),
+            );
+            run_cluster_sharded(core, workers(4), requests(300, 0.8, 40.0), shards)
+        };
+        let seq = run(1);
+        assert_eq!(seq.completions.len(), 300, "conservation");
+        let seq_dbg = format!("{:?}", seq.completions);
+        for shards in [2, 4] {
+            let par = run(shards);
+            assert_eq!(
+                format!("{:?}", par.completions),
+                seq_dbg,
+                "{shards} lanes must replay the sequential completion sequence"
+            );
+            assert_eq!(par.end_time, seq.end_time, "{shards} lanes: end time");
+            assert_eq!(
+                format!("{:?}", par.per_worker),
+                format!("{:?}", seq.per_worker),
+                "{shards} lanes: per-replica stats"
+            );
+        }
+    }
+
+    #[test]
+    fn sharding_a_coupled_config_falls_back_to_sequential() {
+        // A load-aware router is a cross-lane edge on every arrival: the
+        // sharded entry point must produce the sequential pump's result
+        // verbatim (conservative fallback).
+        let run = |shards: usize| {
+            let core = ServingLoop::new(
+                VirtualClock::new(),
+                cluster(3),
+                router::by_name("least_loaded").unwrap(),
+            );
+            run_cluster_sharded(core, workers(3), requests(150, 1.5, 200.0), shards)
+        };
+        let a = format!("{:?}", run(1).completions);
+        let b = format!("{:?}", run(4).completions);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -29,6 +29,17 @@ pub trait Router: Send {
     /// Pick the candidate index for `req` given the current per-replica
     /// load of every replica hosting `req.model`.
     fn route(&mut self, req: &Request, loads: &[WorkerLoad]) -> usize;
+
+    /// Whether this router's decisions depend only on the *candidate set*
+    /// (its size and order) and the arrival sequence — never on the live
+    /// load fields. Load-oblivious routers can be replayed by the sharded
+    /// pump's coordinator before any scheduler state exists, which is what
+    /// lets shards run without a barrier at every arrival (DESIGN.md §11).
+    /// A router answering `true` here must not read `pending`,
+    /// `pending_model` or `in_flight` in `route`.
+    fn load_oblivious(&self) -> bool {
+        false
+    }
 }
 
 /// Among the candidates minimizing `key`, pick one on a rotating cursor
@@ -82,6 +93,10 @@ impl Router for RoundRobin {
         let i = *cursor % loads.len();
         *cursor = cursor.wrapping_add(1);
         i
+    }
+
+    fn load_oblivious(&self) -> bool {
+        true
     }
 }
 
@@ -243,6 +258,16 @@ mod tests {
         let mut jsq = JoinShortestQueue::new();
         let picks: Vec<usize> = (0..4).map(|_| jsq.route(&req(), &ls)).collect();
         assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn only_round_robin_is_load_oblivious() {
+        // The sharded pump's coordinator replays load-oblivious routers
+        // ahead of execution; a load-aware router claiming obliviousness
+        // would silently change sharded routing decisions.
+        assert!(by_name("round_robin").unwrap().load_oblivious());
+        assert!(!by_name("least_loaded").unwrap().load_oblivious());
+        assert!(!by_name("join_shortest_queue").unwrap().load_oblivious());
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct EngineResult {
     /// [`ServingLoop::with_telemetry`]; `None` (the default) costs one
     /// branch per hook on the hot path.
     pub telemetry: Option<Box<crate::telemetry::Recorder>>,
+    /// Virtual-clock advances the pump performed (summed across event
+    /// lanes on sharded runs) — the discrete-event step count. A pump
+    /// that crawls instead of jumping to the next event shows up here.
+    pub steps: usize,
 }
 
 /// Run the trace to completion on a single worker.

@@ -40,6 +40,15 @@ pub struct ClusterSpec {
     /// threshold (None = off; DESIGN.md §10). The controller is seeded
     /// with the same deployment-time histograms as the schedulers.
     pub admission: Option<f64>,
+    /// Parallel event lanes for the virtual-time pump (DESIGN.md §11).
+    /// 1 = sequential; >1 shards the replicas across scoped threads when
+    /// the configuration is parallel-safe (and falls back to the
+    /// sequential pump otherwise — results are identical either way).
+    pub shards: usize,
+    /// Also run the sequential pump and assert the sharded run produced a
+    /// byte-identical completion sequence (costs a second full replay;
+    /// meaningful only with `shards > 1`).
+    pub cross_check: bool,
 }
 
 impl Default for ClusterSpec {
@@ -51,6 +60,8 @@ impl Default for ClusterSpec {
             elastic: None,
             telemetry: false,
             admission: None,
+            shards: 1,
+            cross_check: false,
         }
     }
 }
@@ -64,6 +75,8 @@ impl ClusterSpec {
             elastic: None,
             telemetry: false,
             admission: None,
+            shards: 1,
+            cross_check: false,
         }
     }
 
@@ -90,6 +103,20 @@ impl ClusterSpec {
     /// Enable predictive admission control at `threshold` (DESIGN.md §10).
     pub fn with_admission(mut self, threshold: f64) -> Self {
         self.admission = Some(threshold);
+        self
+    }
+
+    /// Shard the virtual-time pump across `shards` parallel event lanes
+    /// (DESIGN.md §11; no-op on configurations that are not parallel-safe).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Re-run the sequential pump alongside the sharded one and assert
+    /// identical completion sequences (determinism cross-check).
+    pub fn with_cross_check(mut self) -> Self {
+        self.cross_check = true;
         self
     }
 }
@@ -138,52 +165,72 @@ pub fn run_one(
     if cfg.model_costs.is_empty() {
         cfg.model_costs = spec.model_cost_models();
     }
-    let mut replicas = Cluster::build_placed(system, &cfg, seed, placement)
-        .unwrap_or_else(|| panic!("unknown system {system}"));
-    let mut admission_ctl = cluster
-        .admission
-        .map(|t| AdmissionController::new(AdmissionConfig::with_threshold(t)));
-    for (model, app, hist) in spec.seed_histograms(cfg.bins) {
-        if cluster.elastic.is_some() {
-            // Any replica may acquire any model at runtime: deployment-
-            // time profiles go everywhere, hosting or not.
-            replicas.seed_app_profile_everywhere(model, app, &hist, 1000);
-        } else {
-            replicas.seed_app_profile(model, app, &hist, 1000);
-        }
-        if let Some(ctl) = admission_ctl.as_mut() {
-            // The gate sees the same deployment-time profiles as the
-            // schedulers; it refines nothing at runtime (DESIGN.md §10).
-            ctl.seed_profile(model, app, &hist);
-        }
-    }
-    let workers: Vec<SimWorker> = (0..n)
-        .map(|w| {
-            SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151 ^ ((w as u64) << 16))
-                .with_model_costs(cfg.model_costs.clone())
-        })
-        .collect();
-    let route = router::by_name(&cluster.router)
-        .unwrap_or_else(|| panic!("unknown router {}", cluster.router));
-    let mut core = ServingLoop::new(VirtualClock::new(), replicas, route);
-    if let Some(ecfg) = &cluster.elastic {
-        core = core.with_elastic(PlacementController::new(ecfg.clone()));
-    }
-    if let Some(ctl) = admission_ctl {
-        core = core.with_admission(ctl);
-    }
     let requests = trace.requests(slo_multiple);
-    if cluster.telemetry {
-        // Generous ring: every request produces a handful of lifecycle
-        // events plus per-batch and per-wake events; undersizing would
-        // drop the early Terminals that the conservation checks need.
-        let capacity = (requests.len() * 16).max(1 << 14);
-        core = core.with_telemetry(Recorder::with_config(RecorderConfig {
-            capacity,
-            ..Default::default()
-        }));
-    }
-    let res = replay::run_cluster(core, workers, requests);
+    // Identical seeding on every call: the determinism cross-check
+    // rebuilds the whole core and must get byte-identical state.
+    let build = |requests_len: usize| {
+        let mut replicas = Cluster::build_placed(system, &cfg, seed, placement.clone())
+            .unwrap_or_else(|| panic!("unknown system {system}"));
+        let mut admission_ctl = cluster
+            .admission
+            .map(|t| AdmissionController::new(AdmissionConfig::with_threshold(t)));
+        for (model, app, hist) in spec.seed_histograms(cfg.bins) {
+            if cluster.elastic.is_some() {
+                // Any replica may acquire any model at runtime: deployment-
+                // time profiles go everywhere, hosting or not.
+                replicas.seed_app_profile_everywhere(model, app, &hist, 1000);
+            } else {
+                replicas.seed_app_profile(model, app, &hist, 1000);
+            }
+            if let Some(ctl) = admission_ctl.as_mut() {
+                // The gate sees the same deployment-time profiles as the
+                // schedulers; it refines nothing at runtime (DESIGN.md §10).
+                ctl.seed_profile(model, app, &hist);
+            }
+        }
+        let workers: Vec<SimWorker> = (0..n)
+            .map(|w| {
+                SimWorker::new(cfg.cost_model, 0.0, seed ^ 0x5151 ^ ((w as u64) << 16))
+                    .with_model_costs(cfg.model_costs.clone())
+            })
+            .collect();
+        let route = router::by_name(&cluster.router)
+            .unwrap_or_else(|| panic!("unknown router {}", cluster.router));
+        let mut core = ServingLoop::new(VirtualClock::new(), replicas, route);
+        if let Some(ecfg) = &cluster.elastic {
+            core = core.with_elastic(PlacementController::new(ecfg.clone()));
+        }
+        if let Some(ctl) = admission_ctl {
+            core = core.with_admission(ctl);
+        }
+        if cluster.telemetry {
+            // Generous ring: every request produces a handful of lifecycle
+            // events plus per-batch and per-wake events; undersizing would
+            // drop the early Terminals that the conservation checks need.
+            let capacity = (requests_len * 16).max(1 << 14);
+            core = core.with_telemetry(Recorder::with_config(RecorderConfig {
+                capacity,
+                ..Default::default()
+            }));
+        }
+        (core, workers)
+    };
+    let shards = cluster.shards.max(1);
+    let res = if cluster.cross_check && shards > 1 {
+        let (core, workers) = build(requests.len());
+        let (core_seq, workers_seq) = build(requests.len());
+        let seq = replay::run_cluster_sharded(core_seq, workers_seq, requests.clone(), 1);
+        let res = replay::run_cluster_sharded(core, workers, requests, shards);
+        assert_eq!(
+            format!("{:?}", res.completions),
+            format!("{:?}", seq.completions),
+            "{system}: sharded replay diverged from the sequential pump"
+        );
+        res
+    } else {
+        let (core, workers) = build(requests.len());
+        replay::run_cluster_sharded(core, workers, requests, shards)
+    };
     let report =
         RunReport::from_completions(&res.completions).with_worker_stats(&res.per_worker, res.end_time);
     let utilization = if res.end_time > 0 {

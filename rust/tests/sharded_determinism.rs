@@ -1,0 +1,290 @@
+//! Determinism property tests for the sharded virtual-time pump
+//! (DESIGN.md §11): sharded replays must produce byte-identical
+//! completion sequences and run reports to the sequential pump, across
+//! every system, and the idle-advance path must jump to the next event
+//! instead of crawling in 1 ms hops.
+
+use orloj::clock::{ms_to_us, Micros, VirtualClock};
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::request::{AppId, Outcome, Request};
+use orloj::scheduler::{Scheduler, SchedulerConfig};
+use orloj::serve::{replay, router, Cluster, ElasticConfig, ServingLoop};
+use orloj::sim::engine;
+use orloj::sim::runner::{run_one, Cell, ClusterSpec};
+use orloj::sim::worker::{SimWorker, Worker};
+use orloj::workload::azure::AzureTraceConfig;
+use orloj::workload::exectime::ExecTimeDist;
+use orloj::workload::trace::{ModelTraffic, TraceSpec};
+
+/// All five systems: the four paper baselines plus the EDF control.
+const SYSTEMS: [&str; 5] = ["clipper", "nexus", "clockwork", "edf", "orloj"];
+
+fn spec(seed: u64, duration_s: f64) -> TraceSpec {
+    let mut spec = TraceSpec {
+        name: "shard-unit".into(),
+        dists: Vec::new(),
+        arrivals: AzureTraceConfig {
+            apps: 1,
+            rate_per_s: 0.0, // set by scaling below
+            duration_s,
+            ..Default::default()
+        },
+        seed,
+        models: vec![
+            ModelTraffic::new(0, 0.6, vec![ExecTimeDist::constant("fast", 8.0)]),
+            ModelTraffic::new(
+                1,
+                0.4,
+                vec![ExecTimeDist::multimodal("slow", 2, 12.0, 60.0, 1.0, None)],
+            ),
+        ],
+    };
+    spec.scale_rate_to_load(BatchCostModel::gpu_like(), 0.6, 8);
+    spec
+}
+
+fn cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        cost_model: BatchCostModel::gpu_like(),
+        ..Default::default()
+    }
+}
+
+/// Everything a run observably produced: the full report (latency
+/// percentiles, per-model and per-worker stats) — completions are
+/// compared inside `run_one`'s cross-check, byte for byte.
+fn fingerprint(cell: &Cell) -> String {
+    format!(
+        "report={:?} util={:.9} placement={:?} admission={:?}",
+        cell.report, cell.utilization, cell.placement, cell.admission
+    )
+}
+
+/// Satellite 4 (core property): every system × {4, 8} workers × shards
+/// ∈ {2, 4} on the virtual clock reproduces the sequential pump exactly.
+/// `with_cross_check` makes `run_one` itself assert byte-identical
+/// completion sequences; on top we pin the derived reports.
+#[test]
+fn sharded_replay_matches_sequential_for_all_systems() {
+    let spec = spec(41, 10.0);
+    let trace = spec.generate();
+    for system in SYSTEMS {
+        for workers in [4usize, 8] {
+            let base = run_one(
+                system,
+                &spec,
+                &trace,
+                3.0,
+                &cfg(),
+                7,
+                &ClusterSpec::new(workers, "round_robin"),
+            );
+            for shards in [2usize, 4] {
+                let sharded = run_one(
+                    system,
+                    &spec,
+                    &trace,
+                    3.0,
+                    &cfg(),
+                    7,
+                    &ClusterSpec::new(workers, "round_robin")
+                        .with_shards(shards)
+                        .with_cross_check(),
+                );
+                assert_eq!(
+                    fingerprint(&base),
+                    fingerprint(&sharded),
+                    "{system} x{workers}w: shards={shards} diverged from sequential"
+                );
+            }
+        }
+    }
+}
+
+/// Coupled configurations (load-aware router + elastic placement) are
+/// not parallel-safe: sharding must conservatively fall back to the
+/// sequential pump and still produce identical results.
+#[test]
+fn elastic_runs_are_shard_invariant() {
+    let spec = spec(42, 8.0).drift_rotating(4.0, 0.9);
+    let trace = spec.generate();
+    let ecfg = ElasticConfig {
+        capacity: 1,
+        interval_us: 250_000,
+        alpha: 0.5,
+        min_dwell_us: 1_000_000,
+        ..Default::default()
+    };
+    for system in ["edf", "orloj"] {
+        let base = run_one(
+            system,
+            &spec,
+            &trace,
+            3.0,
+            &cfg(),
+            11,
+            &ClusterSpec::new(4, "least_loaded")
+                .with_placement("partition")
+                .with_elastic(ecfg.clone()),
+        );
+        let sharded = run_one(
+            system,
+            &spec,
+            &trace,
+            3.0,
+            &cfg(),
+            11,
+            &ClusterSpec::new(4, "least_loaded")
+                .with_placement("partition")
+                .with_elastic(ecfg.clone())
+                .with_shards(4)
+                .with_cross_check(),
+        );
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&sharded),
+            "{system}: elastic run must be shard-invariant"
+        );
+    }
+}
+
+/// Admission control reads cluster-wide backlog on every arrival — also
+/// a coupled configuration. Sharded runs must match, fallback or not.
+#[test]
+fn admission_runs_are_shard_invariant() {
+    let spec = spec(43, 8.0);
+    let trace = spec.generate();
+    for system in ["clipper", "orloj"] {
+        let base = run_one(
+            system,
+            &spec,
+            &trace,
+            2.0,
+            &cfg(),
+            13,
+            &ClusterSpec::new(4, "round_robin").with_admission(0.5),
+        );
+        let sharded = run_one(
+            system,
+            &spec,
+            &trace,
+            2.0,
+            &cfg(),
+            13,
+            &ClusterSpec::new(4, "round_robin")
+                .with_admission(0.5)
+                .with_shards(2)
+                .with_cross_check(),
+        );
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&sharded),
+            "{system}: admission run must be shard-invariant"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: the idle-advance fallback must jump to the scheduler's
+// earliest deadline, not crawl in 1 ms hops.
+// ---------------------------------------------------------------------
+
+/// A policy that holds every request until its deadline, publishes no
+/// wake hint, but reports its earliest queued deadline. Before the
+/// earliest-deadline fallback the pump crawled through such idle spans
+/// at 1 ms per step; now it jumps straight to the deadline.
+struct HoldUntilDeadline {
+    queue: Vec<Request>,
+}
+
+impl Scheduler for HoldUntilDeadline {
+    fn name(&self) -> &'static str {
+        "hold_until_deadline"
+    }
+    fn on_arrival(&mut self, req: Request, _now: Micros) {
+        self.queue.push(req);
+    }
+    fn next_batch(&mut self, now: Micros) -> Option<Vec<Request>> {
+        let due = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.deadline <= now)
+            .min_by_key(|(_, r)| r.deadline)
+            .map(|(i, _)| i)?;
+        Some(vec![self.queue.swap_remove(due)])
+    }
+    fn on_batch_complete(&mut self, _batch: &[Request], _batch_ms: f64, _now: Micros) {}
+    fn drain_dropped(&mut self) -> Vec<(Request, Outcome)> {
+        Vec::new()
+    }
+    /// Deliberately silent: the pump must fall back to
+    /// [`Scheduler::earliest_deadline`].
+    fn wake_hint(&self, _now: Micros) -> Option<Micros> {
+        None
+    }
+    fn earliest_deadline(&self) -> Option<Micros> {
+        self.queue.iter().map(|r| r.deadline).min()
+    }
+    fn pending(&self) -> usize {
+        self.queue.len()
+    }
+    fn pending_for(&self, model: orloj::core::request::ModelId) -> usize {
+        self.queue.iter().filter(|r| r.model == model).count()
+    }
+}
+
+/// A sparse trace: 20 requests a full second apart, each held until its
+/// deadline 500 ms after release. With 1 ms crawling the pump would need
+/// ~500 advances per idle span (> 10,000 total); jumping to the earliest
+/// deadline needs a small constant number per request.
+fn sparse_requests() -> Vec<Request> {
+    (0..20u64)
+        .map(|i| {
+            Request::new(
+                i,
+                AppId(0),
+                ms_to_us(i as f64 * 1_000.0),
+                ms_to_us(500.0),
+                10.0,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn sparse_trace_completes_in_few_steps_prerouted_pump() {
+    let mut sched = HoldUntilDeadline { queue: Vec::new() };
+    let mut worker = SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, 0);
+    // round_robin is load-oblivious → this drives the per-slot pump.
+    let res = engine::run(&mut sched, &mut worker, sparse_requests());
+    assert_eq!(res.completions.len(), 20);
+    assert!(
+        res.steps < 200,
+        "prerouted pump crawled: {} clock advances for 20 sparse events",
+        res.steps
+    );
+}
+
+#[test]
+fn sparse_trace_completes_in_few_steps_sequential_pump() {
+    let mut sched = HoldUntilDeadline { queue: Vec::new() };
+    let mut worker = SimWorker::new(BatchCostModel::new(0.0, 1.0), 0.0, 0);
+    // least_loaded is load-aware → this drives the sequential pump.
+    let core = ServingLoop::new(
+        VirtualClock::new(),
+        Cluster::new(vec![&mut sched as &mut dyn Scheduler]),
+        router::by_name("least_loaded").expect("registry has least_loaded"),
+    );
+    let res = replay::run_cluster(
+        core,
+        vec![&mut worker as &mut dyn Worker],
+        sparse_requests(),
+    );
+    assert_eq!(res.completions.len(), 20);
+    assert!(
+        res.steps < 200,
+        "sequential pump crawled: {} clock advances for 20 sparse events",
+        res.steps
+    );
+}
