@@ -47,7 +47,10 @@ impl<C: Clock + ?Sized> Clock for &C {
     }
 }
 
-/// Wall clock anchored at construction time.
+/// Wall clock anchored at construction time. `Copy` (an `Instant` is just
+/// a timestamp), so the ingress shards and the serving core can stamp
+/// against the same epoch without sharing a handle.
+#[derive(Clone, Copy)]
 pub struct RealClock {
     start: Instant,
 }

@@ -1229,11 +1229,14 @@ fn cluster_scale(opts: &ExpOptions) -> Json {
             let seq_eps = events(&seq) / seq_wall;
             let par_eps = events(&par) / par_wall;
             let speedup = par_eps / seq_eps.max(1e-9);
-            let rss_mb = benchmark::peak_rss_bytes() as f64 / (1024.0 * 1024.0);
+            // `None` off-Linux: print "-" and omit the JSON field rather
+            // than report a garbage zero.
+            let rss_mb = benchmark::peak_rss_bytes().map(|b| b as f64 / (1024.0 * 1024.0));
+            let rss_col = rss_mb.map_or_else(|| "-".to_string(), |m| format!("{m:.0}"));
             println!(
-                "{workers:>8} {models:>7} {n_requests:>9} {shards:>7} {seq_eps:>12.0} {par_eps:>12.0} {speedup:>8.2} {rss_mb:>9.0}"
+                "{workers:>8} {models:>7} {n_requests:>9} {shards:>7} {seq_eps:>12.0} {par_eps:>12.0} {speedup:>8.2} {rss_col:>9}"
             );
-            rows.push(Json::obj(vec![
+            let mut fields = vec![
                 ("workers", Json::num(workers as f64)),
                 ("models", Json::num(models as f64)),
                 ("requests", Json::num(n_requests as f64)),
@@ -1248,11 +1251,265 @@ fn cluster_scale(opts: &ExpOptions) -> Json {
                 ("seq_steps", Json::num(seq.steps as f64)),
                 ("par_steps", Json::num(par.steps as f64)),
                 ("batches", Json::num(seq.batches as f64)),
-                ("peak_rss_mb", Json::num(rss_mb)),
-            ]));
+            ];
+            if let Some(m) = rss_mb {
+                fields.push(("peak_rss_mb", Json::num(m)));
+            }
+            rows.push(Json::obj(fields));
         }
     }
     match benchmark::json_report("BENCH_serve.json", "cluster_scale", rows.clone()) {
+        Ok(p) => println!("bench json: {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+    Json::arr(rows)
+}
+
+/// Soft open-file limit (Linux `/proc/self/limits`), the conservative
+/// 1024 elsewhere — the ingress sweep runs client and server in one
+/// process, so a 10k-connection cell needs ~2× that in descriptors.
+fn fd_budget() -> usize {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(s) = std::fs::read_to_string("/proc/self/limits") {
+            for line in s.lines() {
+                if line.starts_with("Max open files") {
+                    if let Some(v) = line
+                        .split_whitespace()
+                        .nth(3)
+                        .and_then(|v| v.parse::<usize>().ok())
+                    {
+                        return v;
+                    }
+                }
+            }
+        }
+        1024
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        1024
+    }
+}
+
+/// `experiment ingress` (DESIGN.md §12): loopback wire-speed sweep.
+/// Starts a real `serve --listen`-style stack in-process — sharded TCP
+/// ingress feeding the orloj serving core over the lock-free arrival
+/// ring, sim workers — and drives it with the open-loop `loadgen` over a
+/// connections × offered-load grid. Reports sustained req/s,
+/// server-side arrival→done p50/p99, client-side wire→wire p50/p99, the
+/// wire tail inflation vs an in-process (mpsc, no sockets) baseline at
+/// the same offered load, and the ingress drop/error counters. Rows land
+/// in `BENCH_serve.json` (bench `ingress`). Conservation is asserted on
+/// the server: every frame parsed off the wire is either completed by
+/// the core or counted as a wire drop.
+fn ingress_wire(opts: &ExpOptions) -> Json {
+    use crate::clock::{us_to_ms, RealClock};
+    use crate::core::request::{Completion, Outcome, Request};
+    use crate::serve::ingress::{Ingress, IngressConfig};
+    use crate::serve::{realtime, router, Cluster, Placement, ServingLoop};
+    use crate::sim::worker::SimWorker;
+    use crate::util::benchmark;
+    use crate::util::stats;
+    use crate::workload::loadgen::{self, LoadgenConfig};
+    use std::time::{Duration, Instant};
+
+    let quick = benchmark::quick_mode() || opts.duration_s <= 10.0;
+    let (conn_grid, rate_grid, duration_s, shards): (&[usize], &[f64], f64, usize) = if quick {
+        (&[16, 64], &[20_000.0], 1.2, 2)
+    } else {
+        (&[64, 1_000, 10_000], &[60_000.0, 150_000.0], 4.0, 4)
+    };
+    let shards = if opts.shards > 0 { opts.shards } else { shards };
+    let workers = if opts.workers > 1 { opts.workers } else { 4 };
+    let system = "orloj";
+    let apps = 2usize;
+    let exec_ms = 5.0;
+    let slo_multiple = 10.0;
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::calibrated(exec_ms),
+        ..Default::default()
+    };
+    let seed_spec = TraceSpec {
+        name: "ingress".to_string(),
+        dists: (0..apps)
+            .map(|_| ExecTimeDist::constant("loadgen", exec_ms))
+            .collect(),
+        arrivals: AzureTraceConfig {
+            apps,
+            rate_per_s: 0.0,
+            duration_s,
+            ..Default::default()
+        },
+        seed: opts.seed,
+        models: Vec::new(),
+    };
+    let build_core = |clock: RealClock| {
+        let placement = Placement::parse_checked("all", workers, 1).expect("'all' always parses");
+        let mut replicas =
+            Cluster::build_placed(system, &cfg, opts.seed, placement).expect("known system");
+        for (model, app, hist) in seed_spec.seed_histograms(cfg.bins) {
+            replicas.seed_app_profile(model, app, &hist, 1000);
+        }
+        let core = ServingLoop::new(
+            clock,
+            replicas,
+            router::by_name("round_robin").expect("registry has round_robin"),
+        );
+        let sim_workers: Vec<SimWorker> = (0..workers)
+            .map(|w| SimWorker::new(cfg.cost_model, 0.0, opts.seed ^ ((w as u64) << 8)))
+            .collect();
+        (core, sim_workers)
+    };
+    let arrival_done = |completions: &[Completion]| {
+        let mut lat: Vec<f64> = completions
+            .iter()
+            .filter(|c| matches!(c.outcome, Outcome::Finished | Outcome::Late))
+            .map(|c| us_to_ms(c.at.saturating_sub(c.request.release)))
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if lat.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                stats::percentile_sorted(&lat, 50.0),
+                stats::percentile_sorted(&lat, 99.0),
+            )
+        }
+    };
+
+    println!("### ingress wire-speed sweep ({system}, {workers} sim workers, {shards} shards)");
+    println!(
+        "{:>7} {:>11} {:>10} {:>12} {:>10} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "conns",
+        "offered/s",
+        "replies/s",
+        "wire_drops",
+        "a2d_p50ms",
+        "a2d_p99ms",
+        "wire_p50",
+        "wire_p99",
+        "inproc99",
+        "inflate"
+    );
+    let fd_budget = fd_budget();
+    let mut rows = Vec::new();
+    for &rate in rate_grid {
+        // In-process baseline at this offered load: same core, same sim
+        // workers, same schedule — arrivals over an mpsc channel from a
+        // pacing thread that re-stamps release at submit time. What the
+        // wire path's tail is inflated *against*.
+        let (inproc_p50, inproc_p99) = {
+            let schedule: Vec<Request> = {
+                let mut s = seed_spec.clone();
+                s.arrivals.rate_per_s = rate;
+                s.generate().requests(slo_multiple)
+            };
+            let clock = RealClock::new();
+            let (core, sim_workers) = build_core(clock);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let pacer = std::thread::spawn(move || {
+                use crate::clock::Clock;
+                let epoch = Instant::now();
+                for mut r in schedule {
+                    let target = r.release;
+                    loop {
+                        let now = epoch.elapsed().as_micros() as u64;
+                        if now >= target {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros((target - now).min(500)));
+                    }
+                    let slo = r.slo();
+                    let now = clock.now();
+                    r.release = now;
+                    r.deadline = now + slo;
+                    if tx.send(r).is_err() {
+                        break;
+                    }
+                }
+            });
+            let res = realtime::serve_cluster(core, sim_workers, rx);
+            pacer.join().expect("pacer panicked");
+            arrival_done(&res.completions)
+        };
+        for &conns in conn_grid {
+            // Client and server share this process: ~2 fds per
+            // connection plus listener/channel slack.
+            if conns * 2 + 64 > fd_budget {
+                println!(
+                    "{conns:>7} {rate:>11.0}  skipped: needs ~{} fds, soft limit is {fd_budget}",
+                    conns * 2 + 64
+                );
+                continue;
+            }
+            let clock = RealClock::new();
+            let (core, sim_workers) = build_core(clock);
+            let icfg = IngressConfig {
+                shards,
+                ..Default::default()
+            };
+            let net = Ingress::bind("127.0.0.1:0", icfg, clock).expect("bind loopback");
+            let addr = net.local_addr().to_string();
+            let ctl = net.controller();
+            let pump = std::thread::spawn(move || realtime::serve_ingress(core, sim_workers, net));
+            let lg = loadgen::run(&LoadgenConfig {
+                addr,
+                conns,
+                rate_per_s: rate,
+                duration_s,
+                apps,
+                models: 1,
+                slo_multiple,
+                exec_ms,
+                payload: 0,
+                seed: opts.seed ^ ((conns as u64) << 24),
+                workers: 0,
+                drain_timeout_s: 5.0,
+            })
+            .expect("loadgen against loopback");
+            ctl.begin_drain();
+            let (res, counts) = pump.join().expect("ingress pump panicked");
+            assert_eq!(
+                counts.frames,
+                res.completions.len() as u64 + counts.wire_drops,
+                "wire conservation: every parsed frame completes or is a counted drop"
+            );
+            let (a2d_p50, a2d_p99) = arrival_done(&res.completions);
+            let inflation = lg.wire_p99_ms / inproc_p99.max(1e-9);
+            println!(
+                "{conns:>7} {rate:>11.0} {:>10.0} {:>12} {a2d_p50:>10.3} {a2d_p99:>10.3} {:>10.3} {:>10.3} {inproc_p99:>10.3} {inflation:>9.2}",
+                lg.reply_rps, counts.wire_drops, lg.wire_p50_ms, lg.wire_p99_ms
+            );
+            rows.push(Json::obj(vec![
+                ("conns", Json::num(conns as f64)),
+                ("shards", Json::num(shards as f64)),
+                ("workers", Json::num(workers as f64)),
+                ("offered_rps", Json::num(rate)),
+                ("sent", Json::num(lg.sent as f64)),
+                ("frames", Json::num(counts.frames as f64)),
+                ("completions", Json::num(res.completions.len() as f64)),
+                ("finished", Json::num(lg.finished as f64)),
+                ("late", Json::num(lg.late as f64)),
+                ("shed", Json::num(lg.shed as f64)),
+                ("wire_drops", Json::num(counts.wire_drops as f64)),
+                ("proto_errors", Json::num(counts.proto_errors as f64)),
+                ("sustained_rps", Json::num(lg.reply_rps)),
+                ("arrival_done_p50_ms", Json::num(a2d_p50)),
+                ("arrival_done_p99_ms", Json::num(a2d_p99)),
+                ("wire_p50_ms", Json::num(lg.wire_p50_ms)),
+                ("wire_p99_ms", Json::num(lg.wire_p99_ms)),
+                ("inproc_p50_ms", Json::num(inproc_p50)),
+                ("inproc_p99_ms", Json::num(inproc_p99)),
+                ("wire_tail_inflation", Json::num(inflation)),
+                (
+                    "client_conservation_violations",
+                    Json::num(lg.conservation_violations as f64),
+                ),
+            ]));
+        }
+    }
+    match benchmark::json_report("BENCH_serve.json", "ingress", rows.clone()) {
         Ok(p) => println!("bench json: {}", p.display()),
         Err(e) => eprintln!("bench json write failed: {e}"),
     }
@@ -1276,15 +1533,16 @@ pub fn run(id: &str, opts: &ExpOptions) -> Option<Json> {
         "ablation" => ablation(opts),
         "overload" => overload(opts),
         "cluster" => cluster_scale(opts),
+        "ingress" => ingress_wire(opts),
         _ => return None,
     };
     Some(rows)
 }
 
 /// All experiment ids in run order.
-pub const ALL: [&str; 14] = [
+pub const ALL: [&str; 15] = [
     "fig2", "fig3", "fig6", "table2", "table3", "table4", "table5", "fig13", "fig14", "multimodel",
-    "elastic", "ablation", "overload", "cluster",
+    "elastic", "ablation", "overload", "cluster", "ingress",
 ];
 
 #[cfg(test)]

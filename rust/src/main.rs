@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   experiment <id|all>   regenerate a paper table/figure (see DESIGN.md §5)
 //!   serve                 end-to-end PJRT serving demo on real artifacts
+//!   serve --listen        wire-facing server: sharded TCP ingress + sim workers (§12)
+//!   loadgen               open-loop wire load generator against a --listen server
 //!   trace                 generate + save a replayable workload trace
 //!   list                  list experiment ids
 
@@ -49,6 +51,20 @@ fn usage() -> ! {
              --gap-us <us>         inter-arrival gap         (default 500)\n\
              --telemetry[=dir]     record lifecycle telemetry (TELEMETRY_serve.json + .trace.json)\n\
              --admission[=p]       gate arrivals through predictive admission control\n\
+             --listen <addr>       serve the binary wire protocol instead (DESIGN.md §12);\n\
+                                   sim workers, no PJRT needed. Extra options:\n\
+               --shards <n>          ingress shard threads     (default 2)\n\
+               --duration <s>        drain + exit after s seconds (default: until SIGINT)\n\
+               --apps <n>            app profiles to seed      (default 2)\n\
+               --exec-ms <ms>        per-request sim cost      (default 5)\n\
+           loadgen               open-loop load generator for a --listen server\n\
+             --addr <host:port>    target server             (default 127.0.0.1:7433)\n\
+             --conns <n>           client connections        (default 64)\n\
+             --rate <r/s>          offered load              (default 20000)\n\
+             --duration <s>        send window               (default 3)\n\
+             --apps <n> --models <n> --payload <bytes> --exec-ms <ms>\n\
+             --slo <mult>          SLO multiple of p99 exec  (default 10)\n\
+             --threads <n>         client threads (0 = auto)\n\
            trace                 generate a trace JSON\n\
              --out <path>          output path (default trace.json)\n\
              --apps <n> --rate <r/s> --duration <s> --modes <k>\n\
@@ -237,6 +253,184 @@ fn cmd_trace(args: &Args) {
         );
         orloj::experiments::export_telemetry(&dir, "trace", &cells);
     }
+}
+
+/// `serve --listen <addr>` — the wire-facing serving loop (DESIGN.md
+/// §12): sharded TCP ingress in front of the serving core, sim workers
+/// standing in for accelerators (no PJRT needed). Runs until SIGINT or
+/// `--duration` elapses, then drains everything in flight, flushes the
+/// reply rings, and prints the final report plus the ingress counters
+/// and a conservation verdict (exit 1 on violation).
+fn cmd_serve_listen(args: &Args) {
+    use orloj::core::batchmodel::BatchCostModel;
+    use orloj::scheduler::{Scheduler, SchedulerConfig};
+    use orloj::serve::ingress::{ctrlc, IngressConfig};
+    use orloj::serve::{router, Placement};
+    use orloj::server::metrics::RunReport;
+    use orloj::server::Server;
+    use orloj::sim::worker::SimWorker;
+    use orloj::workload::azure::AzureTraceConfig;
+    use orloj::workload::exectime::ExecTimeDist;
+    use orloj::workload::trace::{ModelTraffic, TraceSpec};
+
+    let addr = args.get("listen").expect("--listen takes <host:port>").to_string();
+    let system = args.get_or("system", "orloj").to_string();
+    let n_workers = args.get_usize("workers", 2).max(1);
+    let n_models = args.get_usize("models", 1).max(1);
+    let apps = args.get_usize("apps", 2).max(1);
+    let router_name = args.get_or("router", "round_robin").to_string();
+    let n_shards = args.get_usize("shards", 2).max(1);
+    let duration_s = args.get_f64("duration", 0.0);
+    let exec_ms = args.get_f64("exec-ms", 5.0);
+    let seed = args.get_u64("seed", 42);
+    let placement_spec = args.get_or("placement", "all").to_string();
+
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::calibrated(exec_ms),
+        ..Default::default()
+    };
+    // Seed per-(model, app) exec-time profiles so the predictive
+    // schedulers have a prior before the first wire completions arrive —
+    // the same spec shape `loadgen` synthesizes its traffic from.
+    let dists: Vec<ExecTimeDist> = (0..apps)
+        .map(|_| ExecTimeDist::constant("wire", exec_ms))
+        .collect();
+    let models = if n_models <= 1 {
+        Vec::new()
+    } else {
+        (0..n_models as u32)
+            .map(|m| ModelTraffic::new(m, 1.0 / n_models as f64, dists.clone()))
+            .collect()
+    };
+    let seed_spec = TraceSpec {
+        name: "listen".into(),
+        dists,
+        arrivals: AzureTraceConfig {
+            apps,
+            rate_per_s: 0.0,
+            duration_s: 1.0,
+            ..Default::default()
+        },
+        seed,
+        models,
+    };
+    let hists = seed_spec.seed_histograms(cfg.bins);
+    let placement = match Placement::parse_checked(&placement_spec, n_workers, n_models) {
+        Ok(p) => p,
+        Err(why) => panic!("invalid placement: {why}"),
+    };
+    let replicas: Vec<(Box<dyn Scheduler>, SimWorker)> = (0..n_workers)
+        .map(|w| {
+            let mut sched =
+                orloj::baselines::by_name(&system, cfg.clone(), seed ^ ((w as u64) << 24))
+                    .unwrap_or_else(|| panic!("unknown system '{system}'"));
+            for (model, app, hist) in &hists {
+                sched.seed_app_profile(*model, *app, hist, 1000);
+            }
+            (sched, SimWorker::new(cfg.cost_model, 0.0, seed ^ ((w as u64) << 8)))
+        })
+        .collect();
+    let router = router::by_name(&router_name).expect("known router");
+    let server = Server::cluster(replicas, router).with_placement(placement);
+    let icfg = IngressConfig {
+        shards: n_shards,
+        ..Default::default()
+    };
+    let bound = server.listen(&addr, icfg).expect("bind listen address");
+    let ctl = bound.controller();
+    println!(
+        "listening on {} ({n_shards} shards, {n_workers} workers, system={system})",
+        bound.local_addr()
+    );
+
+    // Shutdown: SIGINT latch (the handler only sets a flag; this watcher
+    // does the drain) or the --duration deadline, whichever fires first.
+    ctrlc::install();
+    let deadline = (duration_s > 0.0)
+        .then(|| std::time::Instant::now() + std::time::Duration::from_secs_f64(duration_s));
+    let watcher = std::thread::spawn(move || loop {
+        if ctrlc::triggered() {
+            eprintln!("SIGINT: draining in-flight requests");
+            ctl.begin_drain();
+            return;
+        }
+        if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            eprintln!("duration elapsed: draining in-flight requests");
+            ctl.begin_drain();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    });
+    let (res, counts) = bound.run();
+    watcher.join().ok();
+
+    let report = RunReport::from_completions(&res.completions)
+        .with_worker_stats(&res.per_worker, res.end_time);
+    println!("[{system} x{n_workers} router={router_name} wire] {report}");
+    println!(
+        "  ingress: {} conns, {} frames in, {} replies out ({} dead), {} wire drops, \
+         {} proto errors, {:.1} MiB in / {:.1} MiB out",
+        counts.accepted_conns,
+        counts.frames,
+        counts.replies_written,
+        counts.replies_dead,
+        counts.wire_drops,
+        counts.proto_errors,
+        counts.bytes_in as f64 / (1024.0 * 1024.0),
+        counts.bytes_out as f64 / (1024.0 * 1024.0),
+    );
+    let completions = res.completions.len() as u64;
+    if counts.frames == completions + counts.wire_drops {
+        println!(
+            "ingress conservation: OK ({} frames = {completions} completions + {} wire drops)",
+            counts.frames, counts.wire_drops
+        );
+    } else {
+        println!(
+            "ingress conservation: VIOLATION ({} frames != {completions} completions + {} wire drops)",
+            counts.frames, counts.wire_drops
+        );
+        std::process::exit(1);
+    }
+}
+
+/// `loadgen` — open-loop wire load generator against a `serve --listen`
+/// server; prints throughput, outcome mix, wire→wire percentiles, and a
+/// conservation verdict (exit 1 if any request went unanswered).
+fn cmd_loadgen(args: &Args) {
+    use orloj::workload::loadgen::{self, LoadgenConfig};
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:7433").to_string(),
+        conns: args.get_usize("conns", 64).max(1),
+        rate_per_s: args.get_f64("rate", 20_000.0),
+        duration_s: args.get_f64("duration", 3.0),
+        apps: args.get_usize("apps", 2).max(1),
+        models: args.get_usize("models", 1).max(1),
+        slo_multiple: args.get_f64("slo", 10.0),
+        exec_ms: args.get_f64("exec-ms", 5.0),
+        payload: args.get_usize("payload", 0),
+        seed: args.get_u64("seed", 42),
+        workers: args.get_usize("threads", 0),
+        drain_timeout_s: args.get_f64("drain-timeout", 5.0),
+    };
+    let rep = loadgen::run(&cfg).unwrap_or_else(|e| panic!("loadgen: {e}"));
+    println!(
+        "loadgen: {} sent / {} replies in {:.2}s ({:.0} sent/s, {:.0} replies/s)",
+        rep.sent, rep.replies, rep.wall_s, rep.sent_rps, rep.reply_rps
+    );
+    println!(
+        "  outcomes: {} finished, {} late, {} shed, {} wire-dropped; \
+         wire p50={:.3} ms p99={:.3} ms",
+        rep.finished, rep.late, rep.shed, rep.wire_dropped, rep.wire_p50_ms, rep.wire_p99_ms
+    );
+    if rep.conservation_violations > 0 {
+        println!(
+            "  conservation: {} requests got no reply",
+            rep.conservation_violations
+        );
+        std::process::exit(1);
+    }
+    println!("  conservation: OK (every request answered)");
 }
 
 /// The PJRT demo needs the vendored runtime; without the `pjrt` feature
@@ -432,7 +626,11 @@ fn main() {
     match args.command.as_deref() {
         Some("experiment") => cmd_experiment(&args),
         Some("trace") => cmd_trace(&args),
+        // `--listen` routes to the wire-facing loop (sim workers, no
+        // PJRT); the bare command stays the PJRT demo.
+        Some("serve") if args.get("listen").is_some() => cmd_serve_listen(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("list") => println!("{}", experiments::ALL.join("\n")),
         _ => usage(),
     }

@@ -1,0 +1,900 @@
+//! Wire-speed network ingress (DESIGN.md §12): a dependency-free TCP
+//! front end feeding the serving core at raw speed.
+//!
+//! Pure `std::net`, like everything else in the crate (no tokio/mio —
+//! the offline constraint of §3): N *shard* threads each own a
+//! `try_clone`d nonblocking listener plus every connection they accept,
+//! and sweep them with non-blocking reads. Each shard parses the fixed
+//! 28-byte request frame straight off its read buffer into a stack
+//! [`Request`] — no per-request heap allocation on the warm path — and
+//! publishes it to the serving pump over one bounded lock-free
+//! [`ArrivalRing`]. The backpressure contract is explicit: a full ring
+//! is a **counted early drop at the wire** (the client gets an immediate
+//! `WIRE_DROP` reply), never a block inside a shard loop.
+//!
+//! Completions flow back through per-shard reply rings and are written
+//! on the originating connection, so a request's full wire→wire
+//! lifecycle is measurable (telemetry `WireIn`/`WireOut`). Reply routing
+//! carries **zero extra state**: the shard packs `(shard, slot,
+//! generation, client seq)` into the 64-bit [`RequestId`] at parse time
+//! and [`reply_for`] unpacks it from the completion — no maps, no
+//! allocation, and a slot generation guard against delivering a stale
+//! completion to a recycled connection slot.
+//!
+//! ## Frame format (all little-endian)
+//!
+//! Request, 28-byte header + `payload_len` opaque bytes (discarded):
+//!
+//! ```text
+//! 0  magic   u32 = 0x4F52_4C51          16 slo_us      u32 (> 0)
+//! 4  seq     u32 (client correlation)   20 exec_us     u32 (solo exec hint)
+//! 8  app     u32                        24 payload_len u32 (≤ max_payload)
+//! 12 model   u32
+//! ```
+//!
+//! Reply, fixed 24 bytes:
+//!
+//! ```text
+//! 0  magic u32 = 0x4F52_4C50    10 batch_size  u16
+//! 4  seq   u32 (echoed)         12 latency_us  u32 (release→done)
+//! 8  outcome u8                 16 done_at_us  u64 (server clock)
+//! 9  best_effort u8
+//! ```
+//!
+//! Outcome codes: 0 Finished, 1 Late, 2 TimedOut, 3 Aborted,
+//! 0xFF wire drop (arrival ring full). A malformed frame (bad magic,
+//! zero SLO, oversized payload) closes the connection and counts
+//! `proto_errors`; it never panics the shard.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::clock::{Clock, RealClock};
+use crate::core::request::{AppId, Completion, ModelId, Outcome, Request};
+use crate::serve::ring::ArrivalRing;
+
+/// Request-frame magic ("ORLQ").
+pub const REQ_MAGIC: u32 = 0x4F52_4C51;
+/// Reply-frame magic ("ORLP").
+pub const REPLY_MAGIC: u32 = 0x4F52_4C50;
+/// Request header length in bytes.
+pub const REQ_HEADER_LEN: usize = 28;
+/// Reply frame length in bytes.
+pub const REPLY_LEN: usize = 24;
+/// Reply outcome code for an arrival-ring-full early drop.
+pub const WIRE_DROP: u8 = 0xFF;
+
+/// Tuning knobs for the ingress front end. All buffers derive from these
+/// at bind time; nothing resizes on the warm path.
+#[derive(Debug, Clone, Copy)]
+pub struct IngressConfig {
+    /// Acceptor/reader shard threads.
+    pub shards: usize,
+    /// Arrival ring capacity (shared, MPSC into the pump).
+    pub ring_capacity: usize,
+    /// Per-shard reply ring capacity (pump → shard).
+    pub reply_capacity: usize,
+    /// Largest accepted `payload_len`; larger frames are protocol errors.
+    pub max_payload: usize,
+    /// Per-shard open-connection cap (slot space is u16).
+    pub max_conns_per_shard: usize,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            shards: 2,
+            ring_capacity: 1 << 16,
+            reply_capacity: 1 << 15,
+            max_payload: 256 * 1024,
+            max_conns_per_shard: 16 * 1024,
+        }
+    }
+}
+
+/// Parsed request-frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReqFrame {
+    pub seq: u32,
+    pub app: u32,
+    pub model: u32,
+    pub slo_us: u32,
+    pub exec_us: u32,
+    pub payload_len: u32,
+}
+
+/// Why a frame was rejected (connection is closed on any of these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    BadMagic,
+    ZeroSlo,
+    OversizedPayload,
+}
+
+/// Decode a 28-byte request header. Allocation-free; `max_payload` bounds
+/// the opaque payload a client may attach.
+pub fn decode_frame(buf: &[u8; REQ_HEADER_LEN], max_payload: usize) -> Result<ReqFrame, FrameError> {
+    let u32_at = |o: usize| u32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]);
+    if u32_at(0) != REQ_MAGIC {
+        return Err(FrameError::BadMagic);
+    }
+    let f = ReqFrame {
+        seq: u32_at(4),
+        app: u32_at(8),
+        model: u32_at(12),
+        slo_us: u32_at(16),
+        exec_us: u32_at(20),
+        payload_len: u32_at(24),
+    };
+    if f.slo_us == 0 {
+        return Err(FrameError::ZeroSlo);
+    }
+    if f.payload_len as usize > max_payload {
+        return Err(FrameError::OversizedPayload);
+    }
+    Ok(f)
+}
+
+/// Encode a request header (loadgen / tests).
+pub fn encode_frame(f: &ReqFrame) -> [u8; REQ_HEADER_LEN] {
+    let mut b = [0u8; REQ_HEADER_LEN];
+    b[0..4].copy_from_slice(&REQ_MAGIC.to_le_bytes());
+    b[4..8].copy_from_slice(&f.seq.to_le_bytes());
+    b[8..12].copy_from_slice(&f.app.to_le_bytes());
+    b[12..16].copy_from_slice(&f.model.to_le_bytes());
+    b[16..20].copy_from_slice(&f.slo_us.to_le_bytes());
+    b[20..24].copy_from_slice(&f.exec_us.to_le_bytes());
+    b[24..28].copy_from_slice(&f.payload_len.to_le_bytes());
+    b
+}
+
+/// A completion (or wire drop) headed back to one connection. `slot`/`gen`
+/// route it inside the shard; the rest is the client-visible frame body.
+#[derive(Debug, Clone, Copy)]
+pub struct Reply {
+    pub slot: u16,
+    pub gen: u8,
+    pub seq: u32,
+    pub outcome: u8,
+    pub best_effort: u8,
+    pub batch_size: u16,
+    pub latency_us: u32,
+    pub done_at_us: u64,
+}
+
+/// Encode the client-visible 24-byte reply frame.
+pub fn encode_reply(r: &Reply) -> [u8; REPLY_LEN] {
+    let mut b = [0u8; REPLY_LEN];
+    b[0..4].copy_from_slice(&REPLY_MAGIC.to_le_bytes());
+    b[4..8].copy_from_slice(&r.seq.to_le_bytes());
+    b[8] = r.outcome;
+    b[9] = r.best_effort;
+    b[10..12].copy_from_slice(&r.batch_size.to_le_bytes());
+    b[12..16].copy_from_slice(&r.latency_us.to_le_bytes());
+    b[16..24].copy_from_slice(&r.done_at_us.to_le_bytes());
+    b
+}
+
+/// Decoded reply, as the load generator sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplyFrame {
+    pub seq: u32,
+    pub outcome: u8,
+    pub best_effort: bool,
+    pub batch_size: u16,
+    pub latency_us: u32,
+    pub done_at_us: u64,
+}
+
+/// Decode a 24-byte reply frame (loadgen / tests).
+pub fn decode_reply(buf: &[u8; REPLY_LEN]) -> Option<ReplyFrame> {
+    let u32_at = |o: usize| u32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]);
+    if u32_at(0) != REPLY_MAGIC {
+        return None;
+    }
+    let mut done = [0u8; 8];
+    done.copy_from_slice(&buf[16..24]);
+    Some(ReplyFrame {
+        seq: u32_at(4),
+        outcome: buf[8],
+        best_effort: buf[9] != 0,
+        batch_size: u16::from_le_bytes([buf[10], buf[11]]),
+        latency_us: u32_at(12),
+        done_at_us: u64::from_le_bytes(done),
+    })
+}
+
+// --- RequestId bit-packing -------------------------------------------------
+//
+// id = shard(8) | slot(16) | gen(8) | seq(32). The id carries everything a
+// completion needs to find its way back to the right connection, so the
+// reply path keeps no per-request state at all.
+
+/// Pack ingress routing into a `RequestId` payload.
+pub fn encode_id(shard: u8, slot: u16, gen: u8, seq: u32) -> u64 {
+    ((shard as u64) << 56) | ((slot as u64) << 40) | ((gen as u64) << 32) | seq as u64
+}
+
+pub fn id_shard(id: u64) -> u8 {
+    (id >> 56) as u8
+}
+
+pub fn id_slot(id: u64) -> u16 {
+    (id >> 40) as u16
+}
+
+pub fn id_gen(id: u64) -> u8 {
+    (id >> 32) as u8
+}
+
+pub fn id_seq(id: u64) -> u32 {
+    id as u32
+}
+
+/// Map a serving-core completion back onto its shard + wire reply.
+pub fn reply_for(c: &Completion) -> (usize, Reply) {
+    let id = c.request.id.0;
+    let outcome = match c.outcome {
+        Outcome::Finished => 0,
+        Outcome::Late => 1,
+        Outcome::TimedOut => 2,
+        Outcome::Aborted => 3,
+    };
+    let reply = Reply {
+        slot: id_slot(id),
+        gen: id_gen(id),
+        seq: id_seq(id),
+        outcome,
+        best_effort: c.best_effort as u8,
+        batch_size: c.batch_size.min(u16::MAX as usize) as u16,
+        latency_us: c.at.saturating_sub(c.request.release).min(u32::MAX as u64) as u32,
+        done_at_us: c.at,
+    };
+    (id_shard(id) as usize, reply)
+}
+
+// --- shared state ----------------------------------------------------------
+
+#[derive(Default)]
+struct Stats {
+    accepted_conns: AtomicU64,
+    open_conns: AtomicU64,
+    frames: AtomicU64,
+    wire_drops: AtomicU64,
+    proto_errors: AtomicU64,
+    replies_written: AtomicU64,
+    replies_dead: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// Snapshot of the ingress counters, returned by [`Ingress::finish`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngressCounts {
+    /// Connections ever accepted.
+    pub accepted_conns: u64,
+    /// Complete request frames parsed off the wire.
+    pub frames: u64,
+    /// Frames dropped at the wire because the arrival ring was full
+    /// (each one got an immediate `WIRE_DROP` reply).
+    pub wire_drops: u64,
+    /// Malformed frames (connection closed, no reply).
+    pub proto_errors: u64,
+    /// Reply frames written into connection buffers.
+    pub replies_written: u64,
+    /// Replies whose connection was already gone (slot freed or
+    /// generation mismatch).
+    pub replies_dead: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+struct Shared {
+    arrivals: ArrivalRing<Request>,
+    replies: Vec<ArrivalRing<Reply>>,
+    /// Listeners accept new connections while set.
+    accepting: AtomicBool,
+    /// Set by [`IngressController::begin_drain`]: stop reading new frames,
+    /// keep flushing replies.
+    draining: AtomicBool,
+    /// Set by [`Ingress::finish`]: shards flush what they can and exit.
+    shutdown: AtomicBool,
+    clock: RealClock,
+    cfg: IngressConfig,
+    stats: Stats,
+}
+
+impl Shared {
+    fn counts(&self) -> IngressCounts {
+        IngressCounts {
+            accepted_conns: self.stats.accepted_conns.load(Ordering::Relaxed),
+            frames: self.stats.frames.load(Ordering::Relaxed),
+            wire_drops: self.stats.wire_drops.load(Ordering::Relaxed),
+            proto_errors: self.stats.proto_errors.load(Ordering::Relaxed),
+            replies_written: self.stats.replies_written.load(Ordering::Relaxed),
+            replies_dead: self.stats.replies_dead.load(Ordering::Relaxed),
+            bytes_in: self.stats.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shutdown/drain handle, cloneable into watcher threads (SIGINT,
+/// `--duration` timers) while the pump owns the [`Ingress`] itself.
+#[derive(Clone)]
+pub struct IngressController {
+    shared: Arc<Shared>,
+}
+
+impl IngressController {
+    /// Stop accepting and stop reading new frames; in-flight work drains
+    /// and replies still flush. The pump observes this via
+    /// [`Ingress::drain_requested`] and exits once the core is empty.
+    pub fn begin_drain(&self) {
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has been requested.
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Live counter snapshot.
+    pub fn counts(&self) -> IngressCounts {
+        self.shared.counts()
+    }
+}
+
+/// The bound front end: shard threads + rings. Owned by the serving pump
+/// ([`crate::serve::realtime::serve_ingress`]), which pops arrivals,
+/// pushes replies, and calls [`Ingress::finish`] on exit.
+pub struct Ingress {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl Ingress {
+    /// Bind `addr` and spawn the shard threads. `clock` must be the same
+    /// epoch the serving core stamps with, so `release`/`deadline` are
+    /// directly comparable to `ServingLoop::now()`.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        cfg: IngressConfig,
+        clock: RealClock,
+    ) -> io::Result<Ingress> {
+        let shards = cfg.shards.max(1);
+        let cfg = IngressConfig {
+            shards,
+            max_conns_per_shard: cfg.max_conns_per_shard.clamp(1, u16::MAX as usize + 1),
+            ..cfg
+        };
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            arrivals: ArrivalRing::new(cfg.ring_capacity),
+            replies: (0..shards)
+                .map(|_| ArrivalRing::new(cfg.reply_capacity))
+                .collect(),
+            accepting: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            clock,
+            cfg,
+            stats: Stats::default(),
+        });
+        let mut handles = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let listener = listener.try_clone()?;
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ingress-s{shard}"))
+                .spawn(move || shard_loop(shard as u8, listener, shared))?;
+            handles.push(handle);
+        }
+        drop(listener);
+        Ok(Ingress {
+            shared,
+            handles,
+            local_addr,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Shard count (indexes [`Ingress::push_reply`]).
+    pub fn shards(&self) -> usize {
+        self.shared.cfg.shards
+    }
+
+    /// A cloneable drain handle.
+    pub fn controller(&self) -> IngressController {
+        IngressController {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Single-consumer arrival drain — only the pump thread may call this.
+    pub fn pop_arrival(&self) -> Option<Request> {
+        self.shared.arrivals.pop()
+    }
+
+    /// Whether the arrival ring is currently empty.
+    pub fn arrivals_empty(&self) -> bool {
+        self.shared.arrivals.is_empty()
+    }
+
+    /// Whether [`IngressController::begin_drain`] has been called.
+    pub fn drain_requested(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Queue a reply to `shard`. Spins (yielding) if the reply ring is
+    /// momentarily full — the shard drains it every sweep, so this is a
+    /// bounded stall on the pump, never a loss.
+    pub fn push_reply(&self, shard: usize, reply: Reply) {
+        let ring = &self.shared.replies[shard.min(self.shared.replies.len() - 1)];
+        let mut r = reply;
+        loop {
+            match ring.push(r) {
+                Ok(()) => return,
+                Err(back) => {
+                    r = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Live counter snapshot.
+    pub fn counts(&self) -> IngressCounts {
+        self.shared.counts()
+    }
+
+    /// Flush reply rings (bounded grace), stop the shards, join them, and
+    /// return the final counters.
+    pub fn finish(self) -> IngressCounts {
+        let grace = Instant::now() + Duration::from_millis(500);
+        while Instant::now() < grace && self.shared.replies.iter().any(|r| !r.is_empty()) {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for h in self.handles {
+            let _ = h.join();
+        }
+        self.shared.counts()
+    }
+}
+
+// --- shard loop ------------------------------------------------------------
+
+/// Per-connection state. Buffers are allocated once at accept and
+/// retained for the connection's lifetime — the frame parse/reply path
+/// never grows them on the warm path (`wbuf` keeps its capacity across
+/// flushes).
+struct Conn {
+    stream: TcpStream,
+    rbuf: Box<[u8]>,
+    rlen: usize,
+    /// Opaque payload bytes still to discard before the next header.
+    skip: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    dead: bool,
+}
+
+const RBUF_LEN: usize = 4096;
+const ACCEPTS_PER_SWEEP: usize = 64;
+const READS_PER_CONN: usize = 4;
+const REPLIES_PER_SWEEP: usize = 4096;
+/// A connection whose peer stops reading accumulates replies; past this
+/// the shard declares it dead rather than buffer without bound.
+const WBUF_CAP: usize = 1 << 20;
+
+fn shard_loop(shard: u8, listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut gens: Vec<u8> = Vec::new();
+    let mut free: Vec<u16> = Vec::new();
+    loop {
+        let mut progress = false;
+        let shutdown = shared.shutdown.load(Ordering::SeqCst);
+        if shared.accepting.load(Ordering::SeqCst) && !shutdown {
+            progress |= accept_sweep(&listener, &shared, &mut conns, &mut gens, &mut free);
+        }
+        let draining = shared.draining.load(Ordering::SeqCst);
+        if !draining && !shutdown {
+            for slot in 0..conns.len() {
+                if let Some(conn) = conns[slot].as_mut() {
+                    progress |= read_sweep(&shared, shard, slot as u16, gens[slot], conn);
+                }
+            }
+        }
+        progress |= reply_sweep(&shared, shard, &mut conns, &gens);
+        for conn in conns.iter_mut().flatten() {
+            progress |= flush(&shared, conn);
+        }
+        for slot in 0..conns.len() {
+            if conns[slot].as_ref().is_some_and(|c| c.dead) {
+                conns[slot] = None;
+                gens[slot] = gens[slot].wrapping_add(1);
+                free.push(slot as u16);
+                shared.stats.open_conns.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        if shutdown {
+            // Final courtesy flush of whatever is still buffered, then out.
+            let deadline = Instant::now() + Duration::from_millis(500);
+            let mut remaining = true;
+            while remaining && Instant::now() < deadline {
+                remaining = false;
+                reply_sweep(&shared, shard, &mut conns, &gens);
+                for conn in conns.iter_mut().flatten() {
+                    flush(&shared, conn);
+                    remaining |= !conn.dead && conn.wbuf.len() > conn.wpos;
+                }
+                remaining |= !shared.replies[shard as usize].is_empty();
+                if remaining {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+            return;
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+fn accept_sweep(
+    listener: &TcpListener,
+    shared: &Shared,
+    conns: &mut Vec<Option<Conn>>,
+    gens: &mut Vec<u8>,
+    free: &mut Vec<u16>,
+) -> bool {
+    let mut progress = false;
+    for _ in 0..ACCEPTS_PER_SWEEP {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                progress = true;
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let slot = match free.pop() {
+                    Some(s) => s,
+                    None if conns.len() < shared.cfg.max_conns_per_shard => {
+                        conns.push(None);
+                        gens.push(0);
+                        (conns.len() - 1) as u16
+                    }
+                    // Shard full: refuse by dropping the socket (peer
+                    // sees EOF before any reply).
+                    None => continue,
+                };
+                conns[slot as usize] = Some(Conn {
+                    stream,
+                    rbuf: vec![0u8; RBUF_LEN].into_boxed_slice(),
+                    rlen: 0,
+                    skip: 0,
+                    wbuf: Vec::with_capacity(4096),
+                    wpos: 0,
+                    dead: false,
+                });
+                shared.stats.accepted_conns.fetch_add(1, Ordering::Relaxed);
+                shared.stats.open_conns.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    progress
+}
+
+fn read_sweep(shared: &Shared, shard: u8, slot: u16, gen: u8, conn: &mut Conn) -> bool {
+    if conn.dead {
+        return false;
+    }
+    let mut progress = false;
+    for _ in 0..READS_PER_CONN {
+        let n = match conn.stream.read(&mut conn.rbuf[conn.rlen..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        };
+        progress = true;
+        conn.rlen += n;
+        shared.stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+        if !drain_frames(shared, shard, slot, gen, conn) {
+            conn.dead = true;
+            break;
+        }
+    }
+    progress
+}
+
+/// Parse every complete frame buffered on `conn`, stamping and publishing
+/// each request. Returns `false` on a protocol error (caller kills the
+/// connection). Allocation-free: requests are built on the stack and
+/// moved into the pre-sized arrival ring; wire-drop replies append to the
+/// connection's retained write buffer.
+fn drain_frames(shared: &Shared, shard: u8, slot: u16, gen: u8, conn: &mut Conn) -> bool {
+    let mut rpos = 0usize;
+    let mut ok = true;
+    loop {
+        if conn.skip > 0 {
+            let take = conn.skip.min(conn.rlen - rpos);
+            rpos += take;
+            conn.skip -= take;
+            if conn.skip > 0 {
+                break;
+            }
+        }
+        if conn.rlen - rpos < REQ_HEADER_LEN {
+            break;
+        }
+        let mut hdr = [0u8; REQ_HEADER_LEN];
+        hdr.copy_from_slice(&conn.rbuf[rpos..rpos + REQ_HEADER_LEN]);
+        let frame = match decode_frame(&hdr, shared.cfg.max_payload) {
+            Ok(f) => f,
+            Err(_) => {
+                shared.stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+                ok = false;
+                break;
+            }
+        };
+        rpos += REQ_HEADER_LEN;
+        conn.skip = frame.payload_len as usize;
+        shared.stats.frames.fetch_add(1, Ordering::Relaxed);
+        let release = shared.clock.now();
+        let id = encode_id(shard, slot, gen, frame.seq);
+        let req = Request::new(
+            id,
+            AppId(frame.app),
+            release,
+            frame.slo_us as u64,
+            frame.exec_us as f64 / 1000.0,
+        )
+        .with_model(ModelId(frame.model));
+        if shared.arrivals.push(req).is_err() {
+            // Backpressure: never block the shard — count the drop and
+            // tell the client immediately.
+            shared.stats.wire_drops.fetch_add(1, Ordering::Relaxed);
+            let drop_reply = Reply {
+                slot,
+                gen,
+                seq: frame.seq,
+                outcome: WIRE_DROP,
+                best_effort: 0,
+                batch_size: 0,
+                latency_us: 0,
+                done_at_us: release,
+            };
+            conn.wbuf.extend_from_slice(&encode_reply(&drop_reply));
+            shared.stats.replies_written.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if rpos > 0 {
+        conn.rbuf.copy_within(rpos..conn.rlen, 0);
+        conn.rlen -= rpos;
+    }
+    ok
+}
+
+fn reply_sweep(shared: &Shared, shard: u8, conns: &mut [Option<Conn>], gens: &[u8]) -> bool {
+    let ring = &shared.replies[shard as usize];
+    let mut progress = false;
+    for _ in 0..REPLIES_PER_SWEEP {
+        let Some(reply) = ring.pop() else { break };
+        progress = true;
+        let slot = reply.slot as usize;
+        let live = slot < conns.len()
+            && gens[slot] == reply.gen
+            && conns[slot].as_ref().is_some_and(|c| !c.dead);
+        if live {
+            let conn = conns[slot].as_mut().unwrap();
+            conn.wbuf.extend_from_slice(&encode_reply(&reply));
+            shared.stats.replies_written.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shared.stats.replies_dead.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    progress
+}
+
+fn flush(shared: &Shared, conn: &mut Conn) -> bool {
+    if conn.dead || conn.wbuf.len() == conn.wpos {
+        return false;
+    }
+    let mut progress = false;
+    loop {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                progress = true;
+                conn.wpos += n;
+                shared.stats.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                if conn.wpos == conn.wbuf.len() {
+                    conn.wbuf.clear();
+                    conn.wpos = 0;
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.wbuf.len() - conn.wpos > WBUF_CAP {
+        conn.dead = true;
+    }
+    progress
+}
+
+// --- SIGINT latch ----------------------------------------------------------
+
+/// Minimal ctrl-c latch for `serve --listen` (DESIGN.md §12): the handler
+/// only sets an atomic (async-signal-safe); a watcher thread polls
+/// [`ctrlc::triggered`] and turns it into [`IngressController::begin_drain`],
+/// so shutdown reuses the pump's ordinary drain/exit machinery.
+pub mod ctrlc {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn on_sigint(_sig: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the SIGINT handler. No-op off Unix (callers fall back to
+    /// `--duration`-style timers there). Uses the libc `signal` symbol std
+    /// already links — no new dependency.
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+
+    /// Whether ctrl-c has been pressed since [`install`].
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::RequestId;
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = ReqFrame {
+            seq: 7,
+            app: 2,
+            model: 3,
+            slo_us: 50_000,
+            exec_us: 4_000,
+            payload_len: 128,
+        };
+        let bytes = encode_frame(&f);
+        assert_eq!(decode_frame(&bytes, 1024).unwrap(), f);
+    }
+
+    #[test]
+    fn frame_rejects_bad_input() {
+        let f = ReqFrame {
+            seq: 1,
+            app: 0,
+            model: 0,
+            slo_us: 1_000,
+            exec_us: 100,
+            payload_len: 0,
+        };
+        let mut bad_magic = encode_frame(&f);
+        bad_magic[0] ^= 0xFF;
+        assert_eq!(
+            decode_frame(&bad_magic, 1024),
+            Err(FrameError::BadMagic)
+        );
+        let zero_slo = encode_frame(&ReqFrame { slo_us: 0, ..f });
+        assert_eq!(decode_frame(&zero_slo, 1024), Err(FrameError::ZeroSlo));
+        let big = encode_frame(&ReqFrame {
+            payload_len: 2048,
+            ..f
+        });
+        assert_eq!(
+            decode_frame(&big, 1024),
+            Err(FrameError::OversizedPayload)
+        );
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let r = Reply {
+            slot: 9,
+            gen: 3,
+            seq: 41,
+            outcome: 1,
+            best_effort: 1,
+            batch_size: 8,
+            latency_us: 12_345,
+            done_at_us: 999_999,
+        };
+        let bytes = encode_reply(&r);
+        let f = decode_reply(&bytes).unwrap();
+        assert_eq!(f.seq, 41);
+        assert_eq!(f.outcome, 1);
+        assert!(f.best_effort);
+        assert_eq!(f.batch_size, 8);
+        assert_eq!(f.latency_us, 12_345);
+        assert_eq!(f.done_at_us, 999_999);
+        let mut bad = bytes;
+        bad[1] ^= 0xFF;
+        assert!(decode_reply(&bad).is_none());
+    }
+
+    #[test]
+    fn id_packing_roundtrips() {
+        let id = encode_id(5, 60_000, 200, u32::MAX - 3);
+        assert_eq!(id_shard(id), 5);
+        assert_eq!(id_slot(id), 60_000);
+        assert_eq!(id_gen(id), 200);
+        assert_eq!(id_seq(id), u32::MAX - 3);
+    }
+
+    #[test]
+    fn reply_for_unpacks_routing() {
+        let id = encode_id(2, 17, 9, 1234);
+        let req = Request::new(id, AppId(0), 1_000, 5_000, 1.0);
+        assert_eq!(req.id, RequestId(id));
+        let c = Completion {
+            request: req,
+            outcome: Outcome::Late,
+            at: 8_000,
+            batch_size: 70_000,
+            worker: Some(0),
+            best_effort: false,
+        };
+        let (shard, reply) = reply_for(&c);
+        assert_eq!(shard, 2);
+        assert_eq!(reply.slot, 17);
+        assert_eq!(reply.gen, 9);
+        assert_eq!(reply.seq, 1234);
+        assert_eq!(reply.outcome, 1);
+        assert_eq!(reply.batch_size, u16::MAX, "saturates");
+        assert_eq!(reply.latency_us, 7_000);
+    }
+}

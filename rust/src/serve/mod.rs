@@ -28,9 +28,11 @@
 //! outcome bookkeeping lives here, once.
 
 pub mod admission;
+pub mod ingress;
 pub mod placement;
 pub mod realtime;
 pub mod replay;
+pub mod ring;
 pub mod router;
 
 use crate::baselines;

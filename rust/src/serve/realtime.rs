@@ -14,6 +14,7 @@
 //! blocks the scheduling loop — N batches run concurrently, one per
 //! replica.
 
+use super::ingress::{self, Ingress, IngressCounts};
 use super::{AdmissionStats, Dispatch, Event, PlacementStats, ServingLoop, WorkerStats};
 use crate::clock::{Clock, Micros};
 use crate::core::request::{Completion, ModelId, Request};
@@ -109,6 +110,108 @@ fn ingest<C: Clock, S: Scheduler>(core: &mut ServingLoop<C, S>, msg: Msg, open: 
     }
 }
 
+/// Spawn one executor thread per replica inside `scope`; each exits when
+/// its dispatch channel closes. Shared by both real-time pumps.
+fn spawn_executors<'scope, W: Worker + 'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    workers: Vec<W>,
+    etx: &Sender<Msg>,
+) -> Vec<Sender<Work>> {
+    let mut dispatch_txs: Vec<Sender<Work>> = Vec::with_capacity(workers.len());
+    for (w, mut worker) in workers.into_iter().enumerate() {
+        let (dtx, drx) = mpsc::channel::<Work>();
+        dispatch_txs.push(dtx);
+        let etx = etx.clone();
+        scope.spawn(move || {
+            while let Ok(work) = drx.recv() {
+                let msg = match work {
+                    Work::Batch(batch) => {
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            worker.execute(&batch)
+                        }));
+                        match result {
+                            Ok(ms) => Msg::Done {
+                                worker: w,
+                                batch_ms: ms,
+                            },
+                            Err(_) => Msg::WorkerPanicked { worker: w },
+                        }
+                    }
+                    Work::Load(model, hint_ms) => {
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            worker.load_model(model, hint_ms)
+                        }));
+                        match result {
+                            Ok(ms) => Msg::Loaded {
+                                worker: w,
+                                model,
+                                load_ms: ms,
+                            },
+                            Err(_) => Msg::WorkerPanicked { worker: w },
+                        }
+                    }
+                    Work::Unload(model) => {
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            worker.unload_model(model)
+                        }));
+                        match result {
+                            Ok(()) => continue, // fire-and-forget
+                            Err(_) => Msg::WorkerPanicked { worker: w },
+                        }
+                    }
+                };
+                let fatal = matches!(msg, Msg::WorkerPanicked { .. });
+                if etx.send(msg).is_err() || fatal {
+                    break;
+                }
+            }
+        });
+    }
+    dispatch_txs
+}
+
+/// Ship a wake's dispatches to the executor threads, recording `ExecStart`
+/// for batches (they start the moment they are shipped — the replica
+/// thread was idle). A send can only fail if the replica's thread died,
+/// which `WorkerPanicked` should have surfaced already — fail loudly,
+/// don't strand the batch as forever-in-flight.
+fn ship_dispatches<C: Clock, S: Scheduler>(
+    core: &mut ServingLoop<C, S>,
+    dispatch_txs: &[Sender<Work>],
+) -> usize {
+    let dispatches = core.on_event(Event::Wake);
+    let shipped = dispatches.len();
+    for d in dispatches {
+        let (worker, work) = match d {
+            Dispatch::Execute { worker, batch } => {
+                let now = core.now();
+                if let Some(tel) = core.telemetry_mut() {
+                    if let Some(b) = tel.last_batch_for(worker) {
+                        tel.record(
+                            now,
+                            crate::telemetry::EventKind::ExecStart {
+                                batch: b,
+                                worker: worker as u32,
+                            },
+                        );
+                    }
+                }
+                (worker, Work::Batch(batch))
+            }
+            Dispatch::Load {
+                worker,
+                model,
+                cost_ms,
+            } => (worker, Work::Load(model, cost_ms)),
+            Dispatch::Unload { worker, model } => (worker, Work::Unload(model)),
+        };
+        dispatch_txs[worker]
+            .send(work)
+            .unwrap_or_else(|_| panic!("worker thread {worker} is gone"));
+    }
+    shipped
+}
+
 /// Serve until the submitters hang up and everything drains. `workers[i]`
 /// executes the batches of replica `i` on its own thread.
 pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
@@ -121,61 +224,7 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
     let (etx, erx) = mpsc::channel::<Msg>();
 
     std::thread::scope(|scope| {
-        // One executor thread per replica; exits when its dispatch channel
-        // closes.
-        let mut dispatch_txs: Vec<Sender<Work>> = Vec::with_capacity(n);
-        for (w, mut worker) in workers.into_iter().enumerate() {
-            let (dtx, drx) = mpsc::channel::<Work>();
-            dispatch_txs.push(dtx);
-            let etx = etx.clone();
-            scope.spawn(move || {
-                while let Ok(work) = drx.recv() {
-                    let msg = match work {
-                        Work::Batch(batch) => {
-                            let result =
-                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                    worker.execute(&batch)
-                                }));
-                            match result {
-                                Ok(ms) => Msg::Done {
-                                    worker: w,
-                                    batch_ms: ms,
-                                },
-                                Err(_) => Msg::WorkerPanicked { worker: w },
-                            }
-                        }
-                        Work::Load(model, hint_ms) => {
-                            let result =
-                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                    worker.load_model(model, hint_ms)
-                                }));
-                            match result {
-                                Ok(ms) => Msg::Loaded {
-                                    worker: w,
-                                    model,
-                                    load_ms: ms,
-                                },
-                                Err(_) => Msg::WorkerPanicked { worker: w },
-                            }
-                        }
-                        Work::Unload(model) => {
-                            let result =
-                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                    worker.unload_model(model)
-                                }));
-                            match result {
-                                Ok(()) => continue, // fire-and-forget
-                                Err(_) => Msg::WorkerPanicked { worker: w },
-                            }
-                        }
-                    };
-                    let fatal = matches!(msg, Msg::WorkerPanicked { .. });
-                    if etx.send(msg).is_err() || fatal {
-                        break;
-                    }
-                }
-            });
-        }
+        let dispatch_txs = spawn_executors(scope, workers, &etx);
         // Forward external arrivals onto the internal event channel so the
         // scheduling loop can block on a single receiver. The bounded wait
         // lets the forwarder notice shutdown even while submitters hold
@@ -219,40 +268,8 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
                     }
                 }
             }
-            // Drain drops; dispatch to every idle replica. A send can only
-            // fail if the replica's thread died, which WorkerPanicked
-            // should have surfaced already — fail loudly, don't strand the
-            // batch as forever-in-flight.
-            for d in core.on_event(Event::Wake) {
-                let (worker, work) = match d {
-                    Dispatch::Execute { worker, batch } => {
-                        // The batch starts executing as soon as it is
-                        // shipped — the replica thread was idle.
-                        let now = core.now();
-                        if let Some(tel) = core.telemetry_mut() {
-                            if let Some(b) = tel.last_batch_for(worker) {
-                                tel.record(
-                                    now,
-                                    crate::telemetry::EventKind::ExecStart {
-                                        batch: b,
-                                        worker: worker as u32,
-                                    },
-                                );
-                            }
-                        }
-                        (worker, Work::Batch(batch))
-                    }
-                    Dispatch::Load {
-                        worker,
-                        model,
-                        cost_ms,
-                    } => (worker, Work::Load(model, cost_ms)),
-                    Dispatch::Unload { worker, model } => (worker, Work::Unload(model)),
-                };
-                dispatch_txs[worker]
-                    .send(work)
-                    .unwrap_or_else(|_| panic!("worker thread {worker} is gone"));
-            }
+            // Drain drops; dispatch to every idle replica.
+            ship_dispatches(&mut core, &dispatch_txs);
             if !open && core.pending() == 0 && core.in_flight() == 0 && core.loading() == 0 {
                 break;
             }
@@ -287,6 +304,152 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
         end_time,
         telemetry,
     }
+}
+
+/// Forward every not-yet-forwarded completion back to its ingress shard
+/// as a wire reply (`forwarded` is the pump's cursor into
+/// `core.completions()`), recording `WireOut` when telemetry is on.
+/// Returns how many were forwarded this call.
+fn forward_replies<C: Clock, S: Scheduler>(
+    core: &mut ServingLoop<C, S>,
+    ingress: &Ingress,
+    forwarded: &mut usize,
+) -> usize {
+    let mut sent = 0usize;
+    loop {
+        let (shard, reply, req, at) = {
+            let comps = core.completions();
+            if *forwarded >= comps.len() {
+                break;
+            }
+            let c = &comps[*forwarded];
+            let (shard, reply) = ingress::reply_for(c);
+            (shard, reply, c.request.id, c.at)
+        };
+        *forwarded += 1;
+        ingress.push_reply(shard, reply);
+        if let Some(tel) = core.telemetry_mut() {
+            tel.record(
+                at,
+                crate::telemetry::EventKind::WireOut {
+                    req,
+                    shard: shard as u16,
+                },
+            );
+        }
+        sent += 1;
+    }
+    sent
+}
+
+/// How many wire arrivals the pump ingests per sweep before giving the
+/// scheduler a wake — bounds scheduling latency under arrival floods.
+const ARRIVALS_PER_SWEEP: usize = 1024;
+
+/// Serve a network [`Ingress`]: the pump drains the lock-free arrival
+/// ring directly (no mpsc hop, no forwarder thread), ships dispatches to
+/// per-replica executor threads exactly like [`serve_cluster`], and
+/// forwards every completion back to its originating shard/connection as
+/// a wire reply. Runs until [`ingress::IngressController::begin_drain`]
+/// is observed *and* everything in flight has drained — the same
+/// exit-wait discipline as the in-process pump — then stops the shards
+/// and returns the final ingress counters alongside the serve result.
+pub fn serve_ingress<C: Clock, S: Scheduler, W: Worker>(
+    mut core: ServingLoop<C, S>,
+    workers: Vec<W>,
+    net: Ingress,
+) -> (ServeResult, IngressCounts) {
+    let n = workers.len();
+    assert_eq!(n, core.workers(), "one executor per scheduling replica");
+    let (etx, erx) = mpsc::channel::<Msg>();
+    let mut forwarded = 0usize;
+
+    std::thread::scope(|scope| {
+        let dispatch_txs = spawn_executors(scope, workers, &etx);
+        drop(etx);
+
+        // `open` only exists for `ingest`'s signature; no Msg::Arrival /
+        // ArrivalsClosed flows here — arrivals come off the ring.
+        let mut open = true;
+        loop {
+            let mut progress = false;
+            // Worker-thread events first: completions free replicas.
+            loop {
+                match erx.try_recv() {
+                    Ok(msg) => {
+                        ingest(&mut core, msg, &mut open);
+                        progress = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break,
+                }
+            }
+            // Bounded arrival sweep off the lock-free ring.
+            let mut popped = 0usize;
+            while popped < ARRIVALS_PER_SWEEP {
+                let Some(req) = net.pop_arrival() else { break };
+                popped += 1;
+                let (id, at) = (req.id, req.release);
+                if let Some(tel) = core.telemetry_mut() {
+                    tel.record(
+                        at,
+                        crate::telemetry::EventKind::WireIn {
+                            req: id,
+                            shard: ingress::id_shard(id.0) as u16,
+                        },
+                    );
+                }
+                core.on_event(Event::Arrival(req));
+            }
+            progress |= popped > 0;
+            progress |= ship_dispatches(&mut core, &dispatch_txs) > 0;
+            progress |= forward_replies(&mut core, &net, &mut forwarded) > 0;
+            if net.drain_requested()
+                && net.arrivals_empty()
+                && core.pending() == 0
+                && core.in_flight() == 0
+                && core.loading() == 0
+            {
+                break;
+            }
+            if !progress {
+                // Idle: block briefly for worker events or the next wake
+                // hint; the clamp keeps arrival-ring polling tight.
+                let now = core.now();
+                let wait_us = core
+                    .next_wake(now)
+                    .map(|h| h.saturating_sub(now).clamp(50, 1_000))
+                    .unwrap_or(200);
+                match erx.recv_timeout(Duration::from_micros(wait_us)) {
+                    Ok(msg) => ingest(&mut core, msg, &mut open),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {}
+                }
+            }
+        }
+        drop(dispatch_txs);
+    });
+
+    // Terminal drops from the final drain still owe the wire a reply.
+    core.drain_all();
+    forward_replies(&mut core, &net, &mut forwarded);
+    let counts = net.finish();
+    let end_time = core.now();
+    let placement = core.placement_stats();
+    let admission = core.admission_stats();
+    let telemetry = core.take_telemetry();
+    let (completions, per_worker) = core.into_completions();
+    (
+        ServeResult {
+            completions,
+            per_worker,
+            placement,
+            admission,
+            end_time,
+            telemetry,
+        },
+        counts,
+    )
 }
 
 #[cfg(test)]

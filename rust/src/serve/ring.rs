@@ -1,0 +1,248 @@
+//! Bounded lock-free MPSC ring — the arrival path from the ingress shards
+//! into the serving core (DESIGN.md §12), vendored in-crate like every
+//! other utility (the offline set has no crossbeam).
+//!
+//! A fixed-capacity Vyukov-style bounded queue: every cell carries a
+//! sequence number, producers claim a slot with one CAS on the head
+//! counter, and the single consumer advances the tail with plain stores.
+//! All storage is allocated at construction; `push`/`pop` never touch the
+//! allocator, never block, and never spin unboundedly — a full ring fails
+//! the push immediately (`Err(item)` back to the caller), which is the
+//! backpressure contract at the wire: ring-full ⇒ counted early drop,
+//! never a stalled shard loop.
+//!
+//! The same type doubles as the per-shard *reply* ring (single producer —
+//! the pump — single consumer — the shard): MPSC is a superset of SPSC,
+//! and one vetted ring beats two.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Pads the head and tail counters onto their own cache lines so
+/// producers and the consumer don't false-share.
+#[repr(align(64))]
+struct Pad<T>(T);
+
+struct Slot<T> {
+    /// Vyukov sequence: `pos` when empty and claimable by the producer of
+    /// ticket `pos`, `pos + 1` when filled, `pos + capacity` after the
+    /// consumer frees it for the next lap.
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free multi-producer single-consumer ring.
+pub struct ArrivalRing<T> {
+    mask: usize,
+    slots: Box<[Slot<T>]>,
+    head: Pad<AtomicUsize>,
+    tail: Pad<AtomicUsize>,
+}
+
+// SAFETY: slots are handed off between threads through the seq protocol
+// (Release on publish, Acquire on observe); a value is owned by exactly
+// one side at a time, so Send on T is all that's required.
+unsafe impl<T: Send> Send for ArrivalRing<T> {}
+unsafe impl<T: Send> Sync for ArrivalRing<T> {}
+
+impl<T> ArrivalRing<T> {
+    /// A ring holding at least `capacity` items (rounded up to a power of
+    /// two, minimum 2). All storage is allocated here, once.
+    pub fn new(capacity: usize) -> ArrivalRing<T> {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        ArrivalRing {
+            mask: cap - 1,
+            slots,
+            head: Pad(AtomicUsize::new(0)),
+            tail: Pad(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Items currently queued (approximate under concurrent pushes —
+    /// exact when producers are quiescent).
+    pub fn len(&self) -> usize {
+        self.head
+            .0
+            .load(Ordering::Acquire)
+            .saturating_sub(self.tail.0.load(Ordering::Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Multi-producer push. `Err(item)` when the ring is full — the caller
+    /// owns the drop decision; this never blocks or allocates.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut pos = self.head.0.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                match self.head.0.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: the CAS claimed ticket `pos`; no other
+                        // producer writes this slot until seq wraps a lap.
+                        unsafe { (*slot.val.get()).write(item) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                // The slot still holds the previous lap's value: full.
+                return Err(item);
+            } else {
+                // Another producer claimed this ticket; reload and retry.
+                pos = self.head.0.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Single-consumer pop. Only one thread may call this (the serving
+    /// pump); never blocks or allocates.
+    pub fn pop(&self) -> Option<T> {
+        let pos = self.tail.0.load(Ordering::Relaxed);
+        let slot = &self.slots[pos & self.mask];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if (seq as isize) - ((pos + 1) as isize) < 0 {
+            return None; // empty (or the producer hasn't published yet)
+        }
+        self.tail.0.store(pos + 1, Ordering::Relaxed);
+        // SAFETY: seq == pos + 1 means the producer published this value
+        // and no other consumer exists.
+        let val = unsafe { (*slot.val.get()).assume_init_read() };
+        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+        Some(val)
+    }
+}
+
+impl<T> Drop for ArrivalRing<T> {
+    fn drop(&mut self) {
+        // Run destructors for anything still queued.
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_one_producer() {
+        let r: ArrivalRing<u64> = ArrivalRing::new(8);
+        for i in 0..8 {
+            r.push(i).unwrap();
+        }
+        assert!(r.push(99).is_err(), "full ring rejects");
+        for i in 0..8 {
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_up_and_wraps() {
+        let r: ArrivalRing<u32> = ArrivalRing::new(5);
+        assert_eq!(r.capacity(), 8);
+        // Several laps through the ring keep FIFO order.
+        let mut next_in = 0u32;
+        let mut next_out = 0u32;
+        for _ in 0..5 {
+            while r.push(next_in).is_ok() {
+                next_in += 1;
+            }
+            while let Some(v) = r.pop() {
+                assert_eq!(v, next_out);
+                next_out += 1;
+            }
+        }
+        assert_eq!(next_in, next_out);
+        assert!(next_in >= 40);
+    }
+
+    #[test]
+    fn drop_releases_queued_items() {
+        let token = Arc::new(());
+        {
+            let r: ArrivalRing<Arc<()>> = ArrivalRing::new(4);
+            for _ in 0..3 {
+                r.push(token.clone()).unwrap();
+            }
+            assert_eq!(Arc::strong_count(&token), 4);
+        }
+        assert_eq!(Arc::strong_count(&token), 1, "Drop drains the ring");
+    }
+
+    #[test]
+    fn multi_producer_conserves_items() {
+        let r = Arc::new(ArrivalRing::<u64>::new(64));
+        let producers = 4u64;
+        let per = 5_000u64;
+        let mut sums = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for p in 0..producers {
+                let r = r.clone();
+                handles.push(s.spawn(move || {
+                    let mut pushed_sum = 0u64;
+                    for i in 0..per {
+                        let v = p * per + i;
+                        let mut item = v;
+                        loop {
+                            match r.push(item) {
+                                Ok(()) => {
+                                    pushed_sum += v;
+                                    break;
+                                }
+                                Err(back) => {
+                                    item = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                    pushed_sum
+                }));
+            }
+            // Consumer on this thread.
+            let mut got = 0u64;
+            let mut sum = 0u64;
+            while got < producers * per {
+                match r.pop() {
+                    Some(v) => {
+                        sum += v;
+                        got += 1;
+                    }
+                    None => std::thread::yield_now(),
+                }
+            }
+            assert_eq!(r.pop(), None);
+            sums.push(sum);
+            for h in handles {
+                sums.push(h.join().unwrap());
+            }
+        });
+        let consumed = sums[0];
+        let pushed: u64 = sums[1..].iter().sum();
+        assert_eq!(consumed, pushed, "every pushed item popped exactly once");
+    }
+}

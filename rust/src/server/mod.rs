@@ -12,6 +12,7 @@ pub mod metrics;
 use crate::clock::RealClock;
 use crate::core::request::Request;
 use crate::scheduler::Scheduler;
+use crate::serve::ingress::{Ingress, IngressConfig, IngressController, IngressCounts};
 use crate::serve::realtime::{self, ServeResult};
 use crate::serve::router::{self, Router};
 use crate::serve::{AdmissionController, Cluster, Placement, PlacementController, ServingLoop};
@@ -149,6 +150,57 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             core = core.with_telemetry(rec);
         }
         realtime::serve_cluster(core, self.workers, rx)
+    }
+
+    /// Bind the network front end (DESIGN.md §12) on `addr` and return a
+    /// [`BoundServer`] ready to pump it. Two-phase so the caller can grab
+    /// the bound address and an [`IngressController`] (SIGINT watchers,
+    /// `--duration` timers) before [`BoundServer::run`] blocks. The
+    /// ingress shards stamp release times on this server's clock, so
+    /// wire timestamps and core timestamps share one epoch.
+    pub fn listen(self, addr: &str, cfg: IngressConfig) -> std::io::Result<BoundServer<S, W>> {
+        let net = Ingress::bind(addr, cfg, self.clock)?;
+        Ok(BoundServer { server: self, net })
+    }
+}
+
+/// A [`Server`] with its network ingress bound and its shard threads
+/// already accepting; [`BoundServer::run`] starts the serving pump.
+pub struct BoundServer<S: Scheduler, W: Worker> {
+    server: Server<S, W>,
+    net: Ingress,
+}
+
+impl<S: Scheduler, W: Worker> BoundServer<S, W> {
+    /// The bound socket address (useful with `:0`).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.net.local_addr()
+    }
+
+    /// A drain/shutdown handle, cloneable into watcher threads.
+    pub fn controller(&self) -> IngressController {
+        self.net.controller()
+    }
+
+    /// Serve the wire until a drain is requested and everything in flight
+    /// completes; returns the serve result plus the ingress counters.
+    pub fn run(self) -> (ServeResult, IngressCounts) {
+        let s = self.server;
+        let cluster = match s.placement {
+            Some(p) => Cluster::with_placement(s.scheds, p),
+            None => Cluster::new(s.scheds),
+        };
+        let mut core = ServingLoop::new(s.clock, cluster, s.router);
+        if let Some(ctl) = s.elastic {
+            core = core.with_elastic(ctl);
+        }
+        if let Some(ctl) = s.admission {
+            core = core.with_admission(ctl);
+        }
+        if let Some(rec) = s.telemetry {
+            core = core.with_telemetry(rec);
+        }
+        realtime::serve_ingress(core, s.workers, self.net)
     }
 }
 

@@ -33,7 +33,7 @@ use crate::clock::{us_to_ms, Micros};
 use crate::core::request::{AppId, ModelId, Outcome, RequestId};
 use crate::util::json::Json;
 use crate::util::stats;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One recorded event: a clock-generic timestamp plus the payload.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -120,6 +120,13 @@ pub enum EventKind {
     /// current backlog. Terminal — a `Terminal { outcome: TimedOut }`
     /// for the same request is recorded alongside.
     EarlyReject { req: RequestId, p: f64 },
+    /// Request frame parsed off the wire by ingress `shard` (network
+    /// serving path only; recorded at the shard's `release` stamp).
+    WireIn { req: RequestId, shard: u16 },
+    /// Reply frame queued back to ingress `shard` for the originating
+    /// connection; together with `WireIn` this bounds the wire→wire
+    /// lifecycle in chrome traces.
+    WireOut { req: RequestId, shard: u16 },
 }
 
 /// Ring capacity and sampling window for a [`Recorder`].
@@ -344,6 +351,12 @@ impl Recorder {
         }
         let mut formed: BTreeMap<u32, Formed> = BTreeMap::new();
         let mut loads: BTreeMap<(u32, u32), Micros> = BTreeMap::new();
+        // Wire lifecycle (network serving path): WireIn start times joined
+        // to WireOut, drawn on dedicated ingress tracks (tid 100 + shard,
+        // clear of the worker tids).
+        const INGRESS_TID_BASE: f64 = 100.0;
+        let mut wire_in: BTreeMap<u64, Micros> = BTreeMap::new();
+        let mut ingress_shards: BTreeSet<u16> = BTreeSet::new();
         let span = |name: String, cat: &str, tid: u32, ts: Micros, dur_us: f64, args: Json| {
             Json::obj(vec![
                 ("name", Json::str(name)),
@@ -491,6 +504,23 @@ impl Recorder {
                         ("tid", Json::num(0.0)),
                     ]));
                 }
+                EventKind::WireIn { req, shard } => {
+                    ingress_shards.insert(shard);
+                    wire_in.insert(req.0, ev.at);
+                }
+                EventKind::WireOut { req, shard } => {
+                    ingress_shards.insert(shard);
+                    let start = wire_in.remove(&req.0).unwrap_or(ev.at);
+                    out.push(Json::obj(vec![
+                        ("name", Json::str(format!("wire r{}", req.0))),
+                        ("cat", Json::str("ingress")),
+                        ("ph", Json::str("X")),
+                        ("ts", Json::num(start as f64)),
+                        ("dur", Json::num(ev.at.saturating_sub(start) as f64)),
+                        ("pid", Json::num(1.0)),
+                        ("tid", Json::num(INGRESS_TID_BASE + shard as f64)),
+                    ]));
+                }
                 EventKind::Arrival { .. }
                 | EventKind::Routed { .. }
                 | EventKind::RouteDrop { .. }
@@ -499,6 +529,9 @@ impl Recorder {
                 | EventKind::Admitted { .. }
                 | EventKind::Reap { .. } => {}
             }
+        }
+        for &shard in &ingress_shards {
+            out.push(meta(INGRESS_TID_BASE + shard as f64, &format!("ingress s{shard}")));
         }
         Json::obj(vec![
             ("traceEvents", Json::arr(out)),
@@ -524,6 +557,8 @@ impl Recorder {
             batches: u64,
             batched_reqs: u64,
             busy_ms: f64,
+            wire_in: u64,
+            wire_out: u64,
             queue: BTreeMap<u32, u32>,
             backlog: BTreeMap<u32, u32>,
         }
@@ -559,6 +594,8 @@ impl Recorder {
                 EventKind::ModelBacklog { model, pending } => {
                     win.backlog.insert(model.0, pending);
                 }
+                EventKind::WireIn { .. } => win.wire_in += 1,
+                EventKind::WireOut { .. } => win.wire_out += 1,
                 _ => {}
             }
         }
@@ -593,6 +630,8 @@ impl Recorder {
                     "utilization",
                     Json::num(w.busy_ms / (window_ms * workers as f64)),
                 ),
+                ("wire_in", Json::num(w.wire_in as f64)),
+                ("wire_out", Json::num(w.wire_out as f64)),
                 ("queue_depth", Json::num(queue_depth as f64)),
                 ("backlog", backlog),
             ])

@@ -110,30 +110,25 @@ pub fn time_batched<T, F: FnMut(usize) -> T>(warmup: usize, iters: usize, mut f:
 }
 
 /// Peak resident set size of this process in bytes (`VmHWM` from
-/// `/proc/self/status`), 0 where the proc filesystem is unavailable.
-/// A high-water mark: it only ever grows over the process lifetime, so
-/// per-phase deltas need a reading before and after.
-pub fn peak_rss_bytes() -> u64 {
+/// `/proc/self/status`); `None` off Linux or when the proc filesystem is
+/// unavailable/unparseable — callers should omit the metric rather than
+/// report a garbage zero. A high-water mark: it only ever grows over the
+/// process lifetime, so per-phase deltas need a reading before and after.
+pub fn peak_rss_bytes() -> Option<u64> {
     #[cfg(target_os = "linux")]
     {
-        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
-            for line in status.lines() {
-                if let Some(rest) = line.strip_prefix("VmHWM:") {
-                    let kb: u64 = rest
-                        .trim()
-                        .trim_end_matches("kB")
-                        .trim()
-                        .parse()
-                        .unwrap_or(0);
-                    return kb * 1024;
-                }
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+                return Some(kb * 1024);
             }
         }
-        0
+        None
     }
     #[cfg(not(target_os = "linux"))]
     {
-        0
+        None
     }
 }
 

@@ -1,0 +1,437 @@
+//! Open-loop wire load generator for the network ingress (DESIGN.md §12).
+//!
+//! Reuses the workload synthesis stack — [`TraceSpec`] / [`ModelTraffic`]
+//! with the Azure-burst arrival process — to produce a release-time
+//! schedule, then replays it **open-loop** over real TCP connections
+//! against a `serve --listen` endpoint: requests are sent at their
+//! scheduled times regardless of how fast replies come back, which is
+//! what makes offered load meaningful under overload.
+//!
+//! Connections are partitioned across a small pool of sender threads;
+//! each thread owns its connections outright (non-blocking sockets,
+//! partial-write backlogs, partial-reply reassembly) and paces sends
+//! against one shared epoch. Wire→wire latency is measured per request:
+//! reply receive time minus actual send time, correlated through the
+//! echoed frame `seq` (dense per connection).
+
+use crate::clock::ms_to_us;
+use crate::serve::ingress::{
+    decode_reply, encode_frame, ReqFrame, REPLY_LEN, REQ_HEADER_LEN, WIRE_DROP,
+};
+use crate::util::stats;
+use crate::workload::azure::AzureTraceConfig;
+use crate::workload::exectime::ExecTimeDist;
+use crate::workload::trace::{ModelTraffic, TraceSpec};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// What to offer, where, and over how many connections.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Target `host:port`.
+    pub addr: String,
+    /// Concurrent connections.
+    pub conns: usize,
+    /// Offered aggregate request rate (req/s).
+    pub rate_per_s: f64,
+    /// Schedule length (seconds).
+    pub duration_s: f64,
+    /// Applications multiplexed per model.
+    pub apps: usize,
+    /// Models in the traffic mix (1 = single-model).
+    pub models: usize,
+    /// SLO = `slo_multiple ×` the schedule's per-model p99 exec time.
+    pub slo_multiple: f64,
+    /// Solo execution-time hint carried in each frame (ms).
+    pub exec_ms: f64,
+    /// Opaque payload bytes appended to each frame.
+    pub payload: usize,
+    pub seed: u64,
+    /// Sender threads (0 = auto: `min(8, parallelism)`, capped by conns).
+    pub workers: usize,
+    /// How long to wait for outstanding replies after the schedule ends.
+    pub drain_timeout_s: f64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7433".to_string(),
+            conns: 64,
+            rate_per_s: 20_000.0,
+            duration_s: 3.0,
+            apps: 2,
+            models: 1,
+            slo_multiple: 10.0,
+            exec_ms: 5.0,
+            payload: 0,
+            seed: 42,
+            workers: 0,
+            drain_timeout_s: 5.0,
+        }
+    }
+}
+
+/// Client-side view of one run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub replies: u64,
+    pub finished: u64,
+    pub late: u64,
+    /// TimedOut + Aborted replies (server-side sheds).
+    pub shed: u64,
+    /// `WIRE_DROP` replies — the ingress ring was full at arrival.
+    pub wire_dropped: u64,
+    /// Full wall time of the run, schedule + drain (seconds).
+    pub wall_s: f64,
+    pub sent_rps: f64,
+    pub reply_rps: f64,
+    /// Wire→wire latency over all replies (send→reply, client clock).
+    pub wire_p50_ms: f64,
+    pub wire_p99_ms: f64,
+    /// Requests sent on the wire that never got a reply (or a counted
+    /// wire drop) within the drain timeout. Zero on a healthy run.
+    pub conservation_violations: u64,
+}
+
+/// One scheduled send, pre-resolved to its owning connection.
+struct Shot {
+    release: u64,
+    conn: usize,
+    frame: ReqFrame,
+}
+
+struct ClientConn {
+    stream: TcpStream,
+    /// Unsent/unacked outbound bytes (partial writes land here).
+    out: Vec<u8>,
+    opos: usize,
+    /// Partial-reply reassembly carry.
+    carry: Vec<u8>,
+    /// Send timestamp per seq (dense, push on send).
+    sent_at: Vec<u64>,
+    seq: u32,
+    dead: bool,
+}
+
+struct WorkerResult {
+    sent: u64,
+    replies: u64,
+    finished: u64,
+    late: u64,
+    shed: u64,
+    wire_dropped: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Run the load generator to completion. Blocks the calling thread for
+/// roughly `duration_s + drain_timeout_s`.
+pub fn run(cfg: &LoadgenConfig) -> io::Result<LoadgenReport> {
+    let addr = cfg
+        .addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "unresolvable address"))?;
+    let conns = cfg.conns.max(1);
+    let nworkers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .min(8)
+    }
+    .min(conns)
+    .max(1);
+
+    // The schedule: same synthesis stack the experiments use.
+    let dists: Vec<ExecTimeDist> = (0..cfg.apps.max(1))
+        .map(|_| ExecTimeDist::constant("loadgen", cfg.exec_ms))
+        .collect();
+    let models = if cfg.models <= 1 {
+        Vec::new()
+    } else {
+        (0..cfg.models as u32)
+            .map(|m| ModelTraffic::new(m, 1.0 / cfg.models as f64, dists.clone()))
+            .collect()
+    };
+    let spec = TraceSpec {
+        name: "loadgen".to_string(),
+        dists,
+        arrivals: AzureTraceConfig {
+            apps: cfg.apps.max(1),
+            rate_per_s: cfg.rate_per_s,
+            duration_s: cfg.duration_s,
+            ..Default::default()
+        },
+        seed: cfg.seed,
+        models,
+    };
+    let requests = spec.generate().requests(cfg.slo_multiple);
+
+    // Request i rides connection i % conns; worker w owns the connections
+    // with conn % nworkers == w, so each shot list stays release-sorted.
+    let mut shots: Vec<Vec<Shot>> = (0..nworkers).map(|_| Vec::new()).collect();
+    for (i, r) in requests.iter().enumerate() {
+        let conn = i % conns;
+        shots[conn % nworkers].push(Shot {
+            release: r.release,
+            conn: conn / nworkers,
+            frame: ReqFrame {
+                seq: 0, // assigned densely per connection at send time
+                app: r.app.0,
+                model: r.model.0,
+                slo_us: r.slo().min(u32::MAX as u64) as u32,
+                exec_us: ms_to_us(r.exec_ms).min(u32::MAX as u64) as u32,
+                payload_len: cfg.payload as u32,
+            },
+        });
+    }
+    let conns_of = |w: usize| conns / nworkers + usize::from(w < conns % nworkers);
+
+    let started = Instant::now();
+    let mut results: Vec<WorkerResult> = Vec::with_capacity(nworkers);
+    let mut connect_err: Option<io::Error> = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (w, shots) in shots.into_iter().enumerate() {
+            let n_conns = conns_of(w);
+            let payload = vec![0u8; cfg.payload];
+            let drain_timeout = Duration::from_secs_f64(cfg.drain_timeout_s.max(0.0));
+            handles.push(scope.spawn(move || {
+                let conns = connect_all(&addr, n_conns)?;
+                Ok::<WorkerResult, io::Error>(drive(
+                    conns,
+                    shots,
+                    &payload,
+                    started,
+                    drain_timeout,
+                ))
+            }));
+        }
+        for h in handles {
+            match h.join().expect("loadgen worker panicked") {
+                Ok(r) => results.push(r),
+                Err(e) => connect_err = Some(e),
+            }
+        }
+    });
+    if let Some(e) = connect_err {
+        return Err(e);
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+
+    let mut rep = LoadgenReport {
+        wall_s,
+        ..Default::default()
+    };
+    let mut lat: Vec<f64> = Vec::new();
+    for r in results {
+        rep.sent += r.sent;
+        rep.replies += r.replies;
+        rep.finished += r.finished;
+        rep.late += r.late;
+        rep.shed += r.shed;
+        rep.wire_dropped += r.wire_dropped;
+        lat.extend(r.latencies_ms);
+    }
+    rep.sent_rps = rep.sent as f64 / wall_s.max(1e-9);
+    rep.reply_rps = rep.replies as f64 / wall_s.max(1e-9);
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if !lat.is_empty() {
+        rep.wire_p50_ms = stats::percentile_sorted(&lat, 50.0);
+        rep.wire_p99_ms = stats::percentile_sorted(&lat, 99.0);
+    }
+    rep.conservation_violations = rep.sent.saturating_sub(rep.replies);
+    Ok(rep)
+}
+
+/// Connect this worker's connections, with retry/backoff so a 10k-conn
+/// burst survives transient accept-backlog overflow.
+fn connect_all(addr: &SocketAddr, n: usize) -> io::Result<Vec<ClientConn>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut last_err = None;
+        let mut stream = None;
+        for attempt in 0..50u64 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(1 + attempt));
+                }
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => return Err(last_err.unwrap()),
+        };
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true)?;
+        out.push(ClientConn {
+            stream,
+            out: Vec::with_capacity(4096),
+            opos: 0,
+            carry: Vec::with_capacity(REPLY_LEN * 64),
+            sent_at: Vec::new(),
+            seq: 0,
+            dead: false,
+        });
+    }
+    Ok(out)
+}
+
+/// Pace the schedule, sweep replies, then drain.
+fn drive(
+    mut conns: Vec<ClientConn>,
+    shots: Vec<Shot>,
+    payload: &[u8],
+    epoch: Instant,
+    drain_timeout: Duration,
+) -> WorkerResult {
+    let mut res = WorkerResult {
+        sent: 0,
+        replies: 0,
+        finished: 0,
+        late: 0,
+        shed: 0,
+        wire_dropped: 0,
+        latencies_ms: Vec::new(),
+    };
+    let now_us = |epoch: Instant| epoch.elapsed().as_micros() as u64;
+    let mut next = 0usize;
+    while next < shots.len() {
+        let now = now_us(epoch);
+        while next < shots.len() && shots[next].release <= now {
+            let shot = &shots[next];
+            next += 1;
+            let conn = &mut conns[shot.conn];
+            if conn.dead {
+                continue;
+            }
+            let mut frame = shot.frame;
+            frame.seq = conn.seq;
+            conn.seq = conn.seq.wrapping_add(1);
+            conn.sent_at.push(now_us(epoch));
+            conn.out.extend_from_slice(&encode_frame(&frame));
+            conn.out.extend_from_slice(payload);
+            res.sent += 1;
+        }
+        for conn in conns.iter_mut() {
+            flush_out(conn);
+            sweep_replies(conn, epoch, &mut res);
+        }
+        if next < shots.len() {
+            let wait = shots[next].release.saturating_sub(now_us(epoch));
+            if wait > 0 {
+                std::thread::sleep(Duration::from_micros(wait.min(500)));
+            }
+        }
+    }
+    // Drain: keep sweeping until every sent request got its reply (or a
+    // wire drop), the server hung up, or the timeout expires.
+    let deadline = Instant::now() + drain_timeout;
+    loop {
+        let mut alive = false;
+        for conn in conns.iter_mut() {
+            flush_out(conn);
+            sweep_replies(conn, epoch, &mut res);
+            alive |= !conn.dead;
+        }
+        let outstanding = res.sent.saturating_sub(res.replies);
+        if outstanding == 0 || !alive || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    res
+}
+
+fn flush_out(conn: &mut ClientConn) {
+    if conn.dead || conn.out.len() == conn.opos {
+        return;
+    }
+    loop {
+        match conn.stream.write(&conn.out[conn.opos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.opos += n;
+                if conn.opos == conn.out.len() {
+                    conn.out.clear();
+                    conn.opos = 0;
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn sweep_replies(conn: &mut ClientConn, epoch: Instant, res: &mut WorkerResult) {
+    if conn.dead {
+        return;
+    }
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        };
+        conn.carry.extend_from_slice(&buf[..n]);
+        let mut pos = 0usize;
+        while conn.carry.len() - pos >= REPLY_LEN {
+            let mut frame = [0u8; REPLY_LEN];
+            frame.copy_from_slice(&conn.carry[pos..pos + REPLY_LEN]);
+            pos += REPLY_LEN;
+            let Some(reply) = decode_reply(&frame) else {
+                // Desynchronized stream: nothing downstream can be
+                // trusted, stop reading this connection.
+                conn.dead = true;
+                break;
+            };
+            res.replies += 1;
+            match reply.outcome {
+                0 => res.finished += 1,
+                1 => res.late += 1,
+                WIRE_DROP => res.wire_dropped += 1,
+                _ => res.shed += 1,
+            }
+            if let Some(&at) = conn.sent_at.get(reply.seq as usize) {
+                let now = epoch.elapsed().as_micros() as u64;
+                res.latencies_ms.push(now.saturating_sub(at) as f64 / 1000.0);
+            }
+        }
+        conn.carry.drain(..pos);
+        if n < buf.len() {
+            break;
+        }
+    }
+}
+
+/// Bytes one request occupies on the wire (header + payload) — handy for
+/// sizing sanity checks in tests and the experiment.
+pub fn wire_bytes_per_request(payload: usize) -> usize {
+    REQ_HEADER_LEN + payload
+}

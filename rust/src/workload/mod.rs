@@ -4,4 +4,5 @@
 
 pub mod azure;
 pub mod exectime;
+pub mod loadgen;
 pub mod trace;

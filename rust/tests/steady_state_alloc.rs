@@ -271,6 +271,65 @@ fn warm_admission_decisions_allocate_nothing() {
 }
 
 #[test]
+fn warm_ingress_ring_and_frame_codec_allocate_nothing() {
+    // The wire arrival path (DESIGN.md §12): header bytes → `decode_frame`
+    // → stack `Request` → `ArrivalRing::push`, and on the way back
+    // `encode_reply` into a fixed buffer. The ring's slots are allocated
+    // once at construction; a frame parse is pure stack work — so the
+    // whole warm path must never touch the allocator.
+    use orloj::serve::ingress::{
+        decode_frame, encode_frame, encode_reply, Reply, ReqFrame, REQ_HEADER_LEN,
+    };
+    use orloj::serve::ring::ArrivalRing;
+
+    let ring: ArrivalRing<Request> = ArrivalRing::new(256);
+    let frame_bytes: [u8; REQ_HEADER_LEN] = encode_frame(&ReqFrame {
+        seq: 9,
+        app: 1,
+        model: 0,
+        slo_us: 250_000,
+        exec_us: 5_000,
+        payload_len: 0,
+    });
+    let (allocs, moved) = count_allocs(|| {
+        let mut moved = 0usize;
+        let mut reply_bytes = 0usize;
+        for i in 0..1_000u64 {
+            let f = decode_frame(&frame_bytes, 1 << 20).expect("valid frame");
+            let req = Request::new(
+                i,
+                AppId(f.app),
+                i * 100,
+                u64::from(f.slo_us),
+                f.exec_us as f64 / 1000.0,
+            )
+            .with_model(ModelId(f.model));
+            ring.push(req).expect("ring has room");
+            let popped = ring.pop().expect("we just pushed");
+            moved += usize::from(popped.app == AppId(f.app));
+            let out = encode_reply(&Reply {
+                slot: 0,
+                gen: 0,
+                seq: f.seq,
+                outcome: 0,
+                best_effort: 0,
+                batch_size: 1,
+                latency_us: 1_000,
+                done_at_us: i,
+            });
+            reply_bytes += out.len();
+        }
+        assert!(reply_bytes > 0);
+        moved
+    });
+    assert_eq!(moved, 1_000);
+    assert_eq!(
+        allocs, 0,
+        "warm ring transfer + frame parse/encode must be allocation-free"
+    );
+}
+
+#[test]
 fn dispatch_cycle_allocations_are_bounded_and_reported() {
     // Informational bound: a full arrival→dispatch cycle still allocates
     // (hull tree nodes, the returned batch Vec — see DESIGN.md §7), but
