@@ -1482,6 +1482,7 @@ fn ingress_wire(opts: &ExpOptions) -> Json {
                 lg.reply_rps, counts.wire_drops, lg.wire_p50_ms, lg.wire_p99_ms
             );
             rows.push(Json::obj(vec![
+                ("sweep", Json::str("wire")),
                 ("conns", Json::num(conns as f64)),
                 ("shards", Json::num(shards as f64)),
                 ("workers", Json::num(workers as f64)),
@@ -1509,6 +1510,113 @@ fn ingress_wire(opts: &ExpOptions) -> Json {
             ]));
         }
     }
+    // --- pump_shards sub-sweep (DESIGN.md §13): hold the offered load at
+    // a rate that saturates one scheduling thread and scale the number of
+    // scheduling shards; sustained req/s should climb until the workers
+    // (not the scheduling loop) are the ceiling. Least-loaded routing via
+    // the LoadBoard keeps this an apples-to-apples perf story against the
+    // sequential pump's load-aware path. Rides the same report (one
+    // json_report call — it overwrites) discriminated by `sweep`.
+    let (sched_grid, pump_rate, pump_conns): (&[usize], f64, usize) = if quick {
+        (&[1, 2, 4], 80_000.0, 64)
+    } else {
+        (&[1, 2, 4, 8], 150_000.0, 256)
+    };
+    let pump_workers = workers.max(sched_grid.iter().copied().max().unwrap_or(1));
+    println!("### pump_shards sweep ({system}, {pump_workers} sim workers, least_loaded router)");
+    println!(
+        "{:>12} {:>11} {:>10} {:>12} {:>10} {:>10}",
+        "sched_shards", "offered/s", "replies/s", "wire_drops", "occupancy", "a2d_p99ms"
+    );
+    if pump_conns * 2 + 64 > fd_budget {
+        println!("  skipped: needs ~{} fds, soft limit is {fd_budget}", pump_conns * 2 + 64);
+    } else {
+        for &sched_shards in sched_grid {
+            let clock = RealClock::new();
+            let placement =
+                Placement::parse_checked("all", pump_workers, 1).expect("'all' always parses");
+            let mut replicas = Cluster::build_placed(system, &cfg, opts.seed, placement)
+                .expect("known system");
+            for (model, app, hist) in seed_spec.seed_histograms(cfg.bins) {
+                replicas.seed_app_profile(model, app, &hist, 1000);
+            }
+            let core = ServingLoop::new(
+                clock,
+                replicas,
+                router::by_name("least_loaded").expect("registry has least_loaded"),
+            );
+            let sim_workers: Vec<SimWorker> = (0..pump_workers)
+                .map(|w| SimWorker::new(cfg.cost_model, 0.0, opts.seed ^ ((w as u64) << 8)))
+                .collect();
+            let icfg = IngressConfig {
+                shards,
+                ..Default::default()
+            };
+            let net = Ingress::bind("127.0.0.1:0", icfg, clock).expect("bind loopback");
+            let addr = net.local_addr().to_string();
+            let ctl = net.controller();
+            let pump = std::thread::spawn(move || {
+                realtime::serve_ingress_sharded(core, sim_workers, net, sched_shards)
+            });
+            let lg = loadgen::run(&LoadgenConfig {
+                addr,
+                conns: pump_conns,
+                rate_per_s: pump_rate,
+                duration_s,
+                apps,
+                models: 1,
+                slo_multiple,
+                exec_ms,
+                payload: 0,
+                seed: opts.seed ^ ((sched_shards as u64) << 16),
+                workers: 0,
+                drain_timeout_s: 5.0,
+            })
+            .expect("loadgen against loopback");
+            ctl.begin_drain();
+            let (res, counts) = pump.join().expect("sharded ingress pump panicked");
+            assert_eq!(
+                counts.frames,
+                res.completions.len() as u64 + counts.wire_drops,
+                "wire conservation across {sched_shards} scheduling shards"
+            );
+            for ss in &res.shards {
+                assert!(ss.conserved(), "shard {} ledger imbalance: {ss:?}", ss.shard);
+            }
+            // Mean scheduling-loop occupancy; the sequential pump (S=1
+            // delegates) has no shard ledger, reported as 0.
+            let occupancy = if res.shards.is_empty() {
+                0.0
+            } else {
+                res.shards.iter().map(|s| s.occupancy()).sum::<f64>() / res.shards.len() as f64
+            };
+            let (_, a2d_p99) = arrival_done(&res.completions);
+            println!(
+                "{sched_shards:>12} {pump_rate:>11.0} {:>10.0} {:>12} {:>10.3} {a2d_p99:>10.3}",
+                lg.reply_rps, counts.wire_drops, occupancy
+            );
+            rows.push(Json::obj(vec![
+                ("sweep", Json::str("pump_shards")),
+                ("sched_shards", Json::num(sched_shards as f64)),
+                ("shards", Json::num(shards as f64)),
+                ("conns", Json::num(pump_conns as f64)),
+                ("workers", Json::num(pump_workers as f64)),
+                ("offered_rps", Json::num(pump_rate)),
+                ("sent", Json::num(lg.sent as f64)),
+                ("frames", Json::num(counts.frames as f64)),
+                ("completions", Json::num(res.completions.len() as f64)),
+                ("wire_drops", Json::num(counts.wire_drops as f64)),
+                ("sustained_rps", Json::num(lg.reply_rps)),
+                ("sched_occupancy", Json::num(occupancy)),
+                ("arrival_done_p99_ms", Json::num(a2d_p99)),
+                (
+                    "client_conservation_violations",
+                    Json::num(lg.conservation_violations as f64),
+                ),
+            ]));
+        }
+    }
+
     match benchmark::json_report("BENCH_serve.json", "ingress", rows.clone()) {
         Ok(p) => println!("bench json: {}", p.display()),
         Err(e) => eprintln!("bench json write failed: {e}"),

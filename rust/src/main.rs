@@ -54,6 +54,8 @@ fn usage() -> ! {
              --listen <addr>       serve the binary wire protocol instead (DESIGN.md §12);\n\
                                    sim workers, no PJRT needed. Extra options:\n\
                --shards <n>          ingress shard threads     (default 2)\n\
+               --sched-shards <n>    scheduling shards (parallel lanes over the LoadBoard,\n\
+                                     DESIGN.md §13; default 1 = sequential pump)\n\
                --duration <s>        drain + exit after s seconds (default: until SIGINT)\n\
                --apps <n>            app profiles to seed      (default 2)\n\
                --exec-ms <ms>        per-request sim cost      (default 5)\n\
@@ -280,6 +282,7 @@ fn cmd_serve_listen(args: &Args) {
     let apps = args.get_usize("apps", 2).max(1);
     let router_name = args.get_or("router", "round_robin").to_string();
     let n_shards = args.get_usize("shards", 2).max(1);
+    let sched_shards = args.get_usize("sched-shards", 1).max(1);
     let duration_s = args.get_f64("duration", 0.0);
     let exec_ms = args.get_f64("exec-ms", 5.0);
     let seed = args.get_u64("seed", 42);
@@ -331,7 +334,9 @@ fn cmd_serve_listen(args: &Args) {
         })
         .collect();
     let router = router::by_name(&router_name).expect("known router");
-    let server = Server::cluster(replicas, router).with_placement(placement);
+    let server = Server::cluster(replicas, router)
+        .with_placement(placement)
+        .with_shards(sched_shards);
     let icfg = IngressConfig {
         shards: n_shards,
         ..Default::default()
@@ -339,7 +344,8 @@ fn cmd_serve_listen(args: &Args) {
     let bound = server.listen(&addr, icfg).expect("bind listen address");
     let ctl = bound.controller();
     println!(
-        "listening on {} ({n_shards} shards, {n_workers} workers, system={system})",
+        "listening on {} ({n_shards} shards x {sched_shards} sched shards, {n_workers} workers, \
+         system={system})",
         bound.local_addr()
     );
 
@@ -379,17 +385,40 @@ fn cmd_serve_listen(args: &Args) {
         counts.bytes_in as f64 / (1024.0 * 1024.0),
         counts.bytes_out as f64 / (1024.0 * 1024.0),
     );
+    // Sharded runs: per-shard ledgers and conservation verdicts first
+    // (they localize a violation to the shard that lost a request).
+    let mut shard_violation = false;
+    for ss in &res.shards {
+        let verdict = if ss.conserved() { "OK" } else { "VIOLATION" };
+        shard_violation |= !ss.conserved();
+        println!(
+            "  shard {}: workers {}..{}, {} popped + {} handoff in = {} completions \
+             + {} handoff out [{verdict}], occupancy {:.1}%",
+            ss.shard,
+            ss.lo,
+            ss.lo + ss.workers,
+            ss.popped,
+            ss.handoff_in,
+            ss.completions,
+            ss.handoff_out,
+            ss.occupancy() * 100.0,
+        );
+    }
     let completions = res.completions.len() as u64;
-    if counts.frames == completions + counts.wire_drops {
+    let total_ok = counts.frames == completions + counts.wire_drops;
+    if total_ok && !shard_violation {
         println!(
             "ingress conservation: OK ({} frames = {completions} completions + {} wire drops)",
             counts.frames, counts.wire_drops
         );
-    } else {
+    } else if !total_ok {
         println!(
             "ingress conservation: VIOLATION ({} frames != {completions} completions + {} wire drops)",
             counts.frames, counts.wire_drops
         );
+        std::process::exit(1);
+    } else {
+        println!("ingress conservation: VIOLATION (per-shard ledger imbalance, see shard lines)");
         std::process::exit(1);
     }
 }

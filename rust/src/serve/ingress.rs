@@ -7,9 +7,12 @@
 //! and sweep them with non-blocking reads. Each shard parses the fixed
 //! 28-byte request frame straight off its read buffer into a stack
 //! [`Request`] — no per-request heap allocation on the warm path — and
-//! publishes it to the serving pump over one bounded lock-free
-//! [`ArrivalRing`]. The backpressure contract is explicit: a full ring
-//! is a **counted early drop at the wire** (the client gets an immediate
+//! publishes it to the serving pump over its shard's own bounded
+//! lock-free [`ArrivalRing`] partition (one per ingress shard, so a
+//! sharded scheduling pump can map partitions onto scheduler shards and
+//! a frame goes wire→ring→schedule without crossing threads; DESIGN.md
+//! §13). The backpressure contract is explicit: a full partition is a
+//! **counted early drop at the wire** (the client gets an immediate
 //! `WIRE_DROP` reply), never a block inside a shard loop.
 //!
 //! Completions flow back through per-shard reply rings and are written
@@ -48,7 +51,7 @@
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -74,7 +77,9 @@ pub const WIRE_DROP: u8 = 0xFF;
 pub struct IngressConfig {
     /// Acceptor/reader shard threads.
     pub shards: usize,
-    /// Arrival ring capacity (shared, MPSC into the pump).
+    /// Total arrival-ring capacity, split evenly into one partition per
+    /// ingress shard (each partition gets `ring_capacity / shards`
+    /// slots, minimum 2 — the ring's own floor).
     pub ring_capacity: usize,
     /// Per-shard reply ring capacity (pump → shard).
     pub reply_capacity: usize,
@@ -294,7 +299,12 @@ pub struct IngressCounts {
 }
 
 struct Shared {
-    arrivals: ArrivalRing<Request>,
+    /// One arrival partition per ingress shard; each shard pushes only to
+    /// its own. The unsharded pump sweeps all of them round-robin
+    /// (`pop_cursor`); the sharded pump assigns each partition exactly
+    /// one consuming scheduler shard (the ring is single-consumer).
+    arrivals: Vec<ArrivalRing<Request>>,
+    pop_cursor: AtomicUsize,
     replies: Vec<ArrivalRing<Reply>>,
     /// Listeners accept new connections while set.
     accepting: AtomicBool,
@@ -377,8 +387,12 @@ impl Ingress {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
+        let partition_cap = (cfg.ring_capacity / shards).max(2);
         let shared = Arc::new(Shared {
-            arrivals: ArrivalRing::new(cfg.ring_capacity),
+            arrivals: (0..shards)
+                .map(|_| ArrivalRing::new(partition_cap))
+                .collect(),
+            pop_cursor: AtomicUsize::new(0),
             replies: (0..shards)
                 .map(|_| ArrivalRing::new(cfg.reply_capacity))
                 .collect(),
@@ -423,14 +437,45 @@ impl Ingress {
         }
     }
 
-    /// Single-consumer arrival drain — only the pump thread may call this.
+    /// Single-consumer arrival drain — only one pump thread may call
+    /// this, and it must then be the sole consumer of *every* partition
+    /// (don't mix with [`Ingress::pop_arrival_from`]). Sweeps partitions
+    /// on a rotating cursor so no ingress shard is starved.
     pub fn pop_arrival(&self) -> Option<Request> {
-        self.shared.arrivals.pop()
+        let parts = self.shared.arrivals.len();
+        let start = self.shared.pop_cursor.load(Ordering::Relaxed);
+        for i in 0..parts {
+            let p = (start + i) % parts;
+            if let Some(req) = self.shared.arrivals[p].pop() {
+                self.shared
+                    .pop_cursor
+                    .store((p + 1) % parts, Ordering::Relaxed);
+                return Some(req);
+            }
+        }
+        None
     }
 
-    /// Whether the arrival ring is currently empty.
+    /// Number of arrival partitions (== ingress shard count).
+    pub fn arrival_partitions(&self) -> usize {
+        self.shared.arrivals.len()
+    }
+
+    /// Pop from one specific partition. The sharded pump maps each
+    /// partition onto exactly one scheduler shard; that shard must be
+    /// the partition's only consumer (the ring is single-consumer).
+    pub fn pop_arrival_from(&self, part: usize) -> Option<Request> {
+        self.shared.arrivals[part].pop()
+    }
+
+    /// Whether one specific arrival partition is currently empty.
+    pub fn arrivals_empty_in(&self, part: usize) -> bool {
+        self.shared.arrivals[part].is_empty()
+    }
+
+    /// Whether every arrival partition is currently empty.
     pub fn arrivals_empty(&self) -> bool {
-        self.shared.arrivals.is_empty()
+        self.shared.arrivals.iter().all(|r| r.is_empty())
     }
 
     /// Whether [`IngressController::begin_drain`] has been called.
@@ -674,7 +719,7 @@ fn drain_frames(shared: &Shared, shard: u8, slot: u16, gen: u8, conn: &mut Conn)
             frame.exec_us as f64 / 1000.0,
         )
         .with_model(ModelId(frame.model));
-        if shared.arrivals.push(req).is_err() {
+        if shared.arrivals[shard as usize].push(req).is_err() {
             // Backpressure: never block the shard — count the drop and
             // tell the client immediately.
             shared.stats.wire_drops.fetch_add(1, Ordering::Relaxed);

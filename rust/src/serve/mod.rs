@@ -504,6 +504,18 @@ impl<C: Clock, S: Scheduler> ServingLoop<C, S> {
             .collect()
     }
 
+    /// One replica's load snapshot without allocating — the sharded
+    /// pump's `LoadBoard` publish source (DESIGN.md §13).
+    pub(crate) fn load_of(&self, w: WorkerId) -> WorkerLoad {
+        Self::slot_load(w, &self.cluster.slots[w], None)
+    }
+
+    /// The installed router's registry name (picks the sharded pump's
+    /// board policy; see `serve::router::BoardPolicy::from_router_name`).
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
     /// Rebuild the reusable routing snapshot in place, restricted to the
     /// replicas hosting `req`'s model. Warming replicas (load in flight)
     /// are not yet hosting, so they are naturally excluded.

@@ -15,12 +15,16 @@
 //! replica.
 
 use super::ingress::{self, Ingress, IngressCounts};
-use super::{AdmissionStats, Dispatch, Event, PlacementStats, ServingLoop, WorkerStats};
+use super::ring::ArrivalRing;
+use super::router::{BoardPolicy, BoardRouter, LoadBoard, Pinned};
+use super::{
+    AdmissionStats, Cluster, Dispatch, Event, Placement, PlacementStats, ServingLoop, WorkerStats,
+};
 use crate::clock::{Clock, Micros};
 use crate::core::request::{Completion, ModelId, Request};
 use crate::scheduler::Scheduler;
 use crate::sim::worker::Worker;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
@@ -52,6 +56,55 @@ pub struct ServeResult {
     /// Lifecycle recorder, present when the loop was built with
     /// [`ServingLoop::with_telemetry`].
     pub telemetry: Option<Box<crate::telemetry::Recorder>>,
+    /// Per-shard counters from the sharded wall-clock pump
+    /// ([`serve_ingress_sharded`]); empty on unsharded runs — including
+    /// S=1, which delegates to the sequential pump unchanged.
+    pub shards: Vec<ShardStats>,
+}
+
+/// One scheduling shard's ledger (DESIGN.md §13). Every request a shard
+/// takes responsibility for — popped off its own ingress partitions or
+/// received over the handoff ring — must leave as exactly one completion
+/// or one handoff to a peer; [`ShardStats::conserved`] is that per-shard
+/// conservation verdict and the sharded pump's exit invariant.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    /// Shard index.
+    pub shard: usize,
+    /// First global replica id this shard owns.
+    pub lo: usize,
+    /// Number of replicas owned (contiguous from `lo`).
+    pub workers: usize,
+    /// Arrivals popped off this shard's own ingress partitions.
+    pub popped: u64,
+    /// Requests received from peer shards over the handoff ring.
+    pub handoff_in: u64,
+    /// Requests routed to a peer shard's replica and handed off.
+    pub handoff_out: u64,
+    /// Completions recorded by this shard's sub-core.
+    pub completions: u64,
+    /// Time spent in sweeps that made progress (µs).
+    pub busy_us: u64,
+    /// Shard-loop lifetime (µs).
+    pub wall_us: u64,
+}
+
+impl ShardStats {
+    /// Fraction of the shard's lifetime spent doing work — the
+    /// scheduling-loop occupancy the `pump_shards` sweep reports.
+    pub fn occupancy(&self) -> f64 {
+        if self.wall_us == 0 {
+            0.0
+        } else {
+            self.busy_us as f64 / self.wall_us as f64
+        }
+    }
+
+    /// Per-shard conservation: in (pops + handoffs received) equals out
+    /// (completions + handoffs sent).
+    pub fn conserved(&self) -> bool {
+        self.popped + self.handoff_in == self.completions + self.handoff_out
+    }
 }
 
 /// Work items shipped to a replica's executor thread.
@@ -108,6 +161,33 @@ fn ingest<C: Clock, S: Scheduler>(core: &mut ServingLoop<C, S>, msg: Msg, open: 
             panic!("worker thread {worker} panicked during batch execution");
         }
     }
+}
+
+/// Batch-drain the event channel: ingest every message already waiting so
+/// a burst of worker completions costs one scheduling sweep, not one loop
+/// iteration per message. Returns how many were ingested; a disconnect
+/// clears `open` (the ingress pump never reads it, the in-process pump
+/// uses it as its arrivals-closed latch).
+fn drain_events<C: Clock, S: Scheduler>(
+    erx: &Receiver<Msg>,
+    core: &mut ServingLoop<C, S>,
+    open: &mut bool,
+) -> usize {
+    let mut drained = 0usize;
+    loop {
+        match erx.try_recv() {
+            Ok(msg) => {
+                ingest(core, msg, open);
+                drained += 1;
+            }
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                *open = false;
+                break;
+            }
+        }
+    }
+    drained
 }
 
 /// Spawn one executor thread per replica inside `scope`; each exits when
@@ -258,16 +338,7 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
         let mut open = true;
         loop {
             // Ingest everything currently ready.
-            loop {
-                match erx.try_recv() {
-                    Ok(msg) => ingest(&mut core, msg, &mut open),
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        open = false;
-                        break;
-                    }
-                }
-            }
+            drain_events(&erx, &mut core, &mut open);
             // Drain drops; dispatch to every idle replica.
             ship_dispatches(&mut core, &dispatch_txs);
             if !open && core.pending() == 0 && core.in_flight() == 0 && core.loading() == 0 {
@@ -280,7 +351,12 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
                 .map(|h| h.saturating_sub(now).clamp(100, 5_000))
                 .unwrap_or(1_000);
             match erx.recv_timeout(Duration::from_micros(wait_us)) {
-                Ok(msg) => ingest(&mut core, msg, &mut open),
+                Ok(msg) => {
+                    // Take whatever arrived with it too — one wakeup, one
+                    // sweep, regardless of burst size.
+                    ingest(&mut core, msg, &mut open);
+                    drain_events(&erx, &mut core, &mut open);
+                }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => open = false,
             }
@@ -303,6 +379,7 @@ pub fn serve_cluster<C: Clock, S: Scheduler, W: Worker>(
         admission,
         end_time,
         telemetry,
+        shards: Vec::new(),
     }
 }
 
@@ -372,18 +449,8 @@ pub fn serve_ingress<C: Clock, S: Scheduler, W: Worker>(
         // ArrivalsClosed flows here — arrivals come off the ring.
         let mut open = true;
         loop {
-            let mut progress = false;
             // Worker-thread events first: completions free replicas.
-            loop {
-                match erx.try_recv() {
-                    Ok(msg) => {
-                        ingest(&mut core, msg, &mut open);
-                        progress = true;
-                    }
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => break,
-                }
-            }
+            let mut progress = drain_events(&erx, &mut core, &mut open) > 0;
             // Bounded arrival sweep off the lock-free ring.
             let mut popped = 0usize;
             while popped < ARRIVALS_PER_SWEEP {
@@ -421,7 +488,10 @@ pub fn serve_ingress<C: Clock, S: Scheduler, W: Worker>(
                     .map(|h| h.saturating_sub(now).clamp(50, 1_000))
                     .unwrap_or(200);
                 match erx.recv_timeout(Duration::from_micros(wait_us)) {
-                    Ok(msg) => ingest(&mut core, msg, &mut open),
+                    Ok(msg) => {
+                        ingest(&mut core, msg, &mut open);
+                        drain_events(&erx, &mut core, &mut open);
+                    }
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {}
                 }
@@ -447,6 +517,405 @@ pub fn serve_ingress<C: Clock, S: Scheduler, W: Worker>(
             admission,
             end_time,
             telemetry,
+            shards: Vec::new(),
+        },
+        counts,
+    )
+}
+
+// --- sharded wall-clock pump (DESIGN.md §13) -------------------------------
+
+/// Handoff-ring capacity per scheduling shard. Pushes spin (never drop):
+/// a handed-off request was already counted as a frame, so dropping it
+/// here would break wire conservation — the ring only bounds memory.
+const HANDOFF_CAP: usize = 1 << 12;
+
+/// Everything a scheduling shard shares with its peers, by reference into
+/// the coordinator's stack frame (the pump scope outlives the shards).
+struct ShardCtx<'a> {
+    /// Shard index and first global replica id owned.
+    k: usize,
+    lo: usize,
+    /// Ingress arrival partitions this shard is the sole consumer of.
+    parts: Vec<usize>,
+    net: &'a Ingress,
+    /// One handoff ring per shard; shard `k` pops only `handoff[k]`, any
+    /// peer may push to it (the ring is multi-producer).
+    handoff: &'a [ArrivalRing<(usize, Request)>],
+    /// Shared board-backed router; `pick` returns global worker ids.
+    picker: &'a BoardRouter,
+    /// Global worker id → owning shard.
+    worker_shard: &'a [usize],
+    /// The full cluster placement (candidate sets span shards).
+    placement: &'a Placement,
+    /// Quiet-bit per shard + the stop latch (sharded-exit protocol).
+    quiet_mask: &'a AtomicU64,
+    stop: &'a AtomicBool,
+    full_mask: u64,
+}
+
+/// Global candidate set for `model`, cached per model on first sight (the
+/// only allocation on a shard's routing path, placement is static here —
+/// the sharded pump refuses elastic configs).
+fn model_candidates<'a>(
+    cache: &'a mut Vec<(ModelId, Vec<usize>)>,
+    placement: &Placement,
+    n: usize,
+    model: ModelId,
+) -> &'a [usize] {
+    let idx = match cache.iter().position(|(m, _)| *m == model) {
+        Some(i) => i,
+        None => {
+            let ws: Vec<usize> = (0..n).filter(|&w| placement.hosts(w, model)).collect();
+            cache.push((model, ws));
+            cache.len() - 1
+        }
+    };
+    &cache[idx].1
+}
+
+/// One scheduling shard: drains its own ingress partitions, routes via
+/// the shared [`LoadBoard`], delivers local picks to its sub-core (the
+/// `target` pin), hands remote picks to the owning shard's ring, runs its
+/// replicas' executors, and publishes its replicas' load every sweep.
+fn shard_pump<C: Clock, S: Scheduler, W: Worker>(
+    mut core: ServingLoop<C, S>,
+    workers: Vec<W>,
+    target: Arc<AtomicUsize>,
+    ctx: ShardCtx<'_>,
+) -> (Vec<Completion>, Vec<WorkerStats>, Micros, ShardStats) {
+    let bit = 1u64 << ctx.k;
+    let mut stats = ShardStats {
+        shard: ctx.k,
+        lo: ctx.lo,
+        workers: core.workers(),
+        ..Default::default()
+    };
+    let start = core.now();
+    let mut forwarded = 0usize;
+    let mut ewma_ms = 0.0f64;
+    let mut cand: Vec<(ModelId, Vec<usize>)> = Vec::new();
+    let (etx, erx) = mpsc::channel::<Msg>();
+
+    std::thread::scope(|scope| {
+        let dispatch_txs = spawn_executors(scope, workers, &etx);
+        drop(etx);
+        let mut open = true;
+        loop {
+            let sweep_start = core.now();
+            // Executor events first: completions free replicas.
+            let mut progress = drain_events(&erx, &mut core, &mut open) > 0;
+            // Bounded sweep over this shard's own ingress partitions.
+            let mut popped = 0usize;
+            for &p in &ctx.parts {
+                while popped < ARRIVALS_PER_SWEEP {
+                    let Some(req) = ctx.net.pop_arrival_from(p) else {
+                        break;
+                    };
+                    popped += 1;
+                    ewma_ms = if ewma_ms == 0.0 {
+                        req.exec_ms
+                    } else {
+                        0.9 * ewma_ms + 0.1 * req.exec_ms
+                    };
+                    let ws = model_candidates(
+                        &mut cand,
+                        ctx.placement,
+                        ctx.worker_shard.len(),
+                        req.model,
+                    );
+                    let w = if ws.is_empty() {
+                        // Unhosted model: deliver locally so the sub-core
+                        // records the terminal drop (completes exactly once).
+                        ctx.lo
+                    } else {
+                        ctx.picker.pick(ws)
+                    };
+                    if ctx.worker_shard[w] == ctx.k {
+                        target.store(w - ctx.lo, Ordering::Release);
+                        core.on_event(Event::Arrival(req));
+                    } else {
+                        // Remote pick: optimistic board bump, then hand off.
+                        // Spin on a full ring — the frame is counted, a drop
+                        // here would break conservation — but keep draining
+                        // our own inbound ring while waiting, so two shards
+                        // pushing into each other's full rings make mutual
+                        // progress instead of deadlocking.
+                        ctx.picker.board().note_routed(w);
+                        stats.handoff_out += 1;
+                        let mut item = (w, req);
+                        while let Err(back) = ctx.handoff[ctx.worker_shard[w]].push(item) {
+                            item = back;
+                            if let Some((wr, inbound)) = ctx.handoff[ctx.k].pop() {
+                                stats.handoff_in += 1;
+                                target.store(wr - ctx.lo, Ordering::Release);
+                                core.on_event(Event::Arrival(inbound));
+                            } else {
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            }
+            stats.popped += popped as u64;
+            // Requests peers routed to this shard's replicas.
+            let mut handed = 0usize;
+            while handed < ARRIVALS_PER_SWEEP {
+                let Some((w, req)) = ctx.handoff[ctx.k].pop() else {
+                    break;
+                };
+                handed += 1;
+                target.store(w - ctx.lo, Ordering::Release);
+                core.on_event(Event::Arrival(req));
+            }
+            stats.handoff_in += handed as u64;
+            progress |= popped + handed > 0;
+            progress |= ship_dispatches(&mut core, &dispatch_txs) > 0;
+            // Authoritative board publish for the replicas this shard owns.
+            for w_local in 0..core.workers() {
+                let l = core.load_of(w_local);
+                let est = ((l.pending + l.in_flight) as f64 * ewma_ms * 1_000.0) as u64;
+                ctx.picker
+                    .board()
+                    .publish(ctx.lo + w_local, l.pending, l.in_flight, est);
+            }
+            progress |= forward_replies(&mut core, ctx.net, &mut forwarded) > 0;
+
+            // Sharded-exit protocol: a shard is quiet when a drain was
+            // requested and it owes nothing — partitions and handoff ring
+            // empty, core drained. The last shard to go quiet re-verifies
+            // *all* rings before latching `stop` (a peer's handoff push
+            // happens-before its quiet bit, so a full mask plus empty
+            // rings means no request can still be in flight between
+            // shards); everyone exits on `stop` + own quiet.
+            let quiet = ctx.net.drain_requested()
+                && ctx.parts.iter().all(|&p| ctx.net.arrivals_empty_in(p))
+                && ctx.handoff[ctx.k].is_empty()
+                && core.pending() == 0
+                && core.in_flight() == 0
+                && core.loading() == 0;
+            if quiet {
+                let mask = ctx.quiet_mask.fetch_or(bit, Ordering::SeqCst) | bit;
+                if mask == ctx.full_mask
+                    && ctx.net.arrivals_empty()
+                    && ctx.handoff.iter().all(|r| r.is_empty())
+                {
+                    ctx.stop.store(true, Ordering::SeqCst);
+                }
+                if ctx.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            } else {
+                ctx.quiet_mask.fetch_and(!bit, Ordering::SeqCst);
+            }
+            if progress {
+                stats.busy_us += core.now().saturating_sub(sweep_start);
+            } else {
+                // Idle: block briefly for executor events or the next
+                // wake hint; the clamp keeps ring polling tight.
+                let now = core.now();
+                let wait_us = core
+                    .next_wake(now)
+                    .map(|h| h.saturating_sub(now).clamp(50, 1_000))
+                    .unwrap_or(200);
+                match erx.recv_timeout(Duration::from_micros(wait_us)) {
+                    Ok(msg) => {
+                        ingest(&mut core, msg, &mut open);
+                        drain_events(&erx, &mut core, &mut open);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {}
+                }
+            }
+        }
+        drop(dispatch_txs);
+    });
+
+    // Terminal drops from the final drain still owe the wire a reply.
+    core.drain_all();
+    forward_replies(&mut core, ctx.net, &mut forwarded);
+    let end_time = core.now();
+    let (completions, per_worker) = core.into_completions();
+    stats.completions = completions.len() as u64;
+    stats.wall_us = end_time.saturating_sub(start);
+    (completions, per_worker, end_time, stats)
+}
+
+/// Serve a network [`Ingress`] with `shards` independent scheduling
+/// shards, each owning a contiguous block of replicas on its own OS
+/// thread (DESIGN.md §13): a frame goes wire → its ingress shard's ring
+/// partition → the partition-owning scheduler shard → that shard's
+/// executors without an mpsc hop, and only a load-aware routing decision
+/// for a peer's replica crosses shards (over a lock-free handoff ring).
+/// Load-aware routing stays available through the [`LoadBoard`] —
+/// `least_loaded`/`join_shortest_queue` re-read as approximate board
+/// snapshots — unlike the replay pump's load-oblivious-only sharding.
+///
+/// Falls back to the sequential [`serve_ingress`] (behaviorally and
+/// byte-identical results) when `shards <= 1` or the configuration
+/// couples replicas through global state the shards can't split:
+/// elastic placement, admission control, telemetry, or a router with no
+/// board-backed equivalent.
+pub fn serve_ingress_sharded<C, S, W>(
+    core: ServingLoop<C, S>,
+    workers: Vec<W>,
+    net: Ingress,
+    shards: usize,
+) -> (ServeResult, IngressCounts)
+where
+    C: Clock + Clone + Send,
+    S: Scheduler,
+    W: Worker,
+{
+    let n = workers.len();
+    assert_eq!(n, core.workers(), "one executor per scheduling replica");
+    let s = shards.clamp(1, n.max(1)).min(63);
+    let policy = BoardPolicy::from_router_name(core.router_name());
+    if s <= 1
+        || core.elastic_enabled()
+        || core.admission_enabled()
+        || core.telemetry().is_some()
+        || policy.is_none()
+    {
+        return serve_ingress(core, workers, net);
+    }
+    let policy = policy.expect("checked above");
+
+    // Decompose the virgin core into per-shard sub-cores (contiguous
+    // replica blocks, same bounds arithmetic as the replay lanes, §11).
+    let (clock, mut scheds, placement, _router) = core.into_shard_parts();
+    let mut lo = vec![0usize; s + 1];
+    for (k, b) in lo.iter_mut().enumerate() {
+        *b = k * n / s;
+    }
+    lo[s] = n;
+    let mut worker_shard = vec![0usize; n];
+    for k in 0..s {
+        for w in lo[k]..lo[k + 1] {
+            worker_shard[w] = k;
+        }
+    }
+    let mut shard_scheds: Vec<Vec<S>> = Vec::with_capacity(s);
+    let mut shard_workers: Vec<Vec<W>> = Vec::with_capacity(s);
+    let mut workers = workers;
+    for k in (0..s).rev() {
+        shard_scheds.push(scheds.split_off(lo[k]));
+        shard_workers.push(workers.split_off(lo[k]));
+    }
+    shard_scheds.reverse();
+    shard_workers.reverse();
+
+    // Ingress partition → scheduler shard, contiguous (partition p of P
+    // goes to shard p·S/P), so each partition has exactly one consumer.
+    let parts = net.arrival_partitions();
+    let part_owner: Vec<usize> = (0..parts).map(|p| p * s / parts).collect();
+
+    let board = Arc::new(LoadBoard::new(n));
+    let picker = BoardRouter::new(board, policy);
+    let handoff: Vec<ArrivalRing<(usize, Request)>> =
+        (0..s).map(|_| ArrivalRing::new(HANDOFF_CAP)).collect();
+    let quiet_mask = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let full_mask = (1u64 << s) - 1;
+
+    struct ShardInput<C, S, W> {
+        core: ServingLoop<C, S>,
+        workers: Vec<W>,
+        target: Arc<AtomicUsize>,
+        k: usize,
+    }
+    let inputs: Vec<ShardInput<C, S, W>> = shard_scheds
+        .into_iter()
+        .zip(shard_workers)
+        .enumerate()
+        .map(|(k, (scheds_k, workers_k))| {
+            let len = lo[k + 1] - lo[k];
+            let sub_placement = if placement.is_unconstrained() {
+                Placement::unconstrained(len)
+            } else {
+                Placement::new(
+                    (lo[k]..lo[k + 1])
+                        .map(|w| {
+                            placement
+                                .hosted_on(w)
+                                .map(<[ModelId]>::to_vec)
+                                .unwrap_or_default()
+                        })
+                        .collect(),
+                )
+            };
+            let target = Arc::new(AtomicUsize::new(0));
+            let sub = ServingLoop::new(
+                clock.clone(),
+                Cluster::with_placement(scheds_k, sub_placement),
+                Box::new(Pinned::new(target.clone())),
+            );
+            ShardInput {
+                core: sub,
+                workers: workers_k,
+                target,
+                k,
+            }
+        })
+        .collect();
+
+    let results: Vec<(Vec<Completion>, Vec<WorkerStats>, Micros, ShardStats)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .into_iter()
+                .map(|inp| {
+                    let ctx = ShardCtx {
+                        k: inp.k,
+                        lo: lo[inp.k],
+                        parts: (0..parts).filter(|&p| part_owner[p] == inp.k).collect(),
+                        net: &net,
+                        handoff: &handoff,
+                        picker: &picker,
+                        worker_shard: &worker_shard,
+                        placement: &placement,
+                        quiet_mask: &quiet_mask,
+                        stop: &stop,
+                        full_mask,
+                    };
+                    scope.spawn(move || shard_pump(inp.core, inp.workers, inp.target, ctx))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("scheduler shard panicked"))
+                .collect()
+        });
+
+    // Merge: lift worker ids back to global, stable-sort completions by
+    // completion time (matching the sequential pump's order).
+    let mut completions = Vec::new();
+    let mut per_worker = Vec::new();
+    let mut shard_stats = Vec::with_capacity(s);
+    let mut end_time = 0;
+    for (k, (comps, ws, end, st)) in results.into_iter().enumerate() {
+        let base = lo[k];
+        completions.extend(comps.into_iter().map(|mut c| {
+            c.worker = c.worker.map(|w| w + base);
+            c
+        }));
+        per_worker.extend(ws.into_iter().map(|mut w| {
+            w.worker += base;
+            w
+        }));
+        end_time = end_time.max(end);
+        shard_stats.push(st);
+    }
+    completions.sort_by_key(|c| c.at);
+    let counts = net.finish();
+    (
+        ServeResult {
+            completions,
+            per_worker,
+            placement: PlacementStats::default(),
+            admission: AdmissionStats::default(),
+            end_time,
+            telemetry: None,
+            shards: shard_stats,
         },
         counts,
     )

@@ -13,7 +13,14 @@
 //!
 //! The same type doubles as the per-shard *reply* ring (single producer —
 //! the pump — single consumer — the shard): MPSC is a superset of SPSC,
-//! and one vetted ring beats two.
+//! and one vetted ring beats two. Two more reuses arrived with the
+//! sharded pump (DESIGN.md §13): the arrival ring is now one partition
+//! per ingress shard (each with a single consuming scheduling shard, so
+//! the single-consumer discipline survives S consumers), and the
+//! cross-shard *handoff* rings carry `(worker, request)` between
+//! scheduling shards — there the full-ring contract flips from
+//! counted-drop to spin-not-drop, because past the arrival pop a request
+//! is in the conservation ledger (see §13 for the deadlock argument).
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;

@@ -19,6 +19,9 @@
 //!   picking the first minimum herds every equal-load arrival burst onto
 //!   worker 0 (all loads are equal at startup).
 
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use super::WorkerLoad;
 use crate::core::request::{ModelId, Request};
 
@@ -161,6 +164,185 @@ pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
     }
 }
 
+/// One replica's published load, padded to its own cache line so shards
+/// publishing to adjacent replicas never false-share (same reasoning as
+/// the ring's padded cursors, DESIGN.md §12).
+#[repr(align(128))]
+#[derive(Default)]
+struct BoardSlot {
+    /// Requests queued at the replica's scheduler (not yet in a batch).
+    queued: AtomicU32,
+    /// Requests inside the currently executing batch (0 when idle).
+    inflight: AtomicU32,
+    /// Estimated outstanding work in microseconds (queued + inflight
+    /// scaled by the owning shard's exec-time EWMA).
+    est_work_us: AtomicU64,
+}
+
+/// Lock-free per-replica load board for sharded routing (DESIGN.md §13).
+///
+/// Each scheduling shard *owns* a contiguous range of replicas and is the
+/// only writer for their slots: it publishes authoritative snapshots after
+/// every dispatch/completion sweep (`publish`). Any shard may read any
+/// slot at route time (`queued`/`inflight`/`est_work_us`) — reads are
+/// approximate by design, staleness is bounded by one sweep of the owning
+/// shard. `note_routed` is the one cross-shard write: an optimistic
+/// `queued += 1` so that a burst routed between two publishes of the
+/// owner does not herd onto the same momentarily-idle replica; the next
+/// authoritative `publish` overwrites it (overwrite, not reconcile — the
+/// board is a hint, conservation never depends on it).
+pub struct LoadBoard {
+    slots: Box<[BoardSlot]>,
+}
+
+impl LoadBoard {
+    pub fn new(workers: usize) -> Self {
+        LoadBoard {
+            slots: (0..workers).map(|_| BoardSlot::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Authoritative snapshot write by the owning shard.
+    pub fn publish(&self, worker: usize, queued: usize, inflight: usize, est_work_us: u64) {
+        let s = &self.slots[worker];
+        let clamp = |v: usize| v.min(u32::MAX as usize) as u32;
+        s.queued.store(clamp(queued), Ordering::Release);
+        s.inflight.store(clamp(inflight), Ordering::Release);
+        s.est_work_us.store(est_work_us, Ordering::Release);
+    }
+
+    /// Optimistic bump between publishes; see the type-level contract.
+    pub fn note_routed(&self, worker: usize) {
+        self.slots[worker].queued.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn queued(&self, worker: usize) -> usize {
+        self.slots[worker].queued.load(Ordering::Acquire) as usize
+    }
+
+    pub fn inflight(&self, worker: usize) -> usize {
+        self.slots[worker].inflight.load(Ordering::Acquire) as usize
+    }
+
+    pub fn est_work_us(&self, worker: usize) -> u64 {
+        self.slots[worker].est_work_us.load(Ordering::Acquire)
+    }
+}
+
+/// Load-aware policies re-expressed against [`LoadBoard`] snapshots, for
+/// routing decisions taken outside the replica-owning thread. Mirrors the
+/// [`Router`] registry: every policy here has the same keying as its
+/// sequential counterpart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoardPolicy {
+    RoundRobin,
+    LeastLoaded,
+    JoinShortestQueue,
+}
+
+impl BoardPolicy {
+    /// Map a [`Router::name`] onto its board-backed equivalent. `None`
+    /// means the router has no lock-free re-implementation and the
+    /// sharded pump must fall back to the sequential path.
+    pub fn from_router_name(name: &str) -> Option<BoardPolicy> {
+        match name {
+            "round_robin" => Some(BoardPolicy::RoundRobin),
+            "least_loaded" => Some(BoardPolicy::LeastLoaded),
+            "join_shortest_queue" => Some(BoardPolicy::JoinShortestQueue),
+            _ => None,
+        }
+    }
+}
+
+/// Shared, lock-free router for the sharded wall-clock pump: picks among
+/// *global* worker ids by reading [`LoadBoard`] snapshots. Tie-breaking
+/// rotates on one shared atomic cursor — approximate fairness (shards
+/// race on the cursor) standing in for `rotate_min`'s exact rotation;
+/// like the board itself this trades exactness for never blocking.
+pub struct BoardRouter {
+    board: Arc<LoadBoard>,
+    policy: BoardPolicy,
+    rot: AtomicUsize,
+}
+
+impl BoardRouter {
+    pub fn new(board: Arc<LoadBoard>, policy: BoardPolicy) -> Self {
+        BoardRouter {
+            board,
+            policy,
+            rot: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn board(&self) -> &LoadBoard {
+        &self.board
+    }
+
+    /// Pick a worker from `candidates` (global ids, all hosting the
+    /// request's model). Allocation-free: two passes over the candidate
+    /// slice. Returns the chosen *global* worker id.
+    pub fn pick(&self, candidates: &[usize]) -> usize {
+        debug_assert!(!candidates.is_empty());
+        let key = |w: usize| -> usize {
+            match self.policy {
+                BoardPolicy::RoundRobin => 0,
+                // LeastLoaded keys total work in the system, JSQ queue
+                // depth only — same keys as the sequential routers (the
+                // board has no per-model queue split; DESIGN.md §13).
+                BoardPolicy::LeastLoaded => self.board.queued(w) + self.board.inflight(w),
+                BoardPolicy::JoinShortestQueue => self.board.queued(w),
+            }
+        };
+        if self.policy == BoardPolicy::RoundRobin {
+            let k = self.rot.fetch_add(1, Ordering::Relaxed);
+            return candidates[k % candidates.len()];
+        }
+        let best = candidates.iter().map(|&w| key(w)).min().unwrap_or(0);
+        let ties = candidates.iter().filter(|&&w| key(w) == best).count();
+        let k = self.rot.fetch_add(1, Ordering::Relaxed) % ties.max(1);
+        candidates
+            .iter()
+            .copied()
+            .filter(|&w| key(w) == best)
+            .nth(k)
+            .unwrap_or(candidates[0])
+    }
+}
+
+/// Internal router for a scheduling shard's sub-core: the shard has
+/// already picked the global worker via [`BoardRouter`], so the sub-core
+/// must deliver to exactly that replica. The shard stores the *local*
+/// replica id before pushing each arrival; `route` just finds it in the
+/// candidate snapshot.
+pub struct Pinned {
+    target: Arc<AtomicUsize>,
+}
+
+impl Pinned {
+    pub fn new(target: Arc<AtomicUsize>) -> Self {
+        Pinned { target }
+    }
+}
+
+impl Router for Pinned {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn route(&mut self, _req: &Request, loads: &[WorkerLoad]) -> usize {
+        let t = self.target.load(Ordering::Acquire);
+        loads.iter().position(|l| l.worker == t).unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +461,84 @@ mod tests {
         assert_eq!(by_name("jsq").unwrap().name(), "join_shortest_queue");
         assert_eq!(by_name("ll").unwrap().name(), "least_loaded");
         assert!(by_name("random").is_none());
+    }
+
+    #[test]
+    fn board_policy_covers_every_registered_router() {
+        // Every name in the registry must either map onto a board policy
+        // or the sharded pump knowingly falls back; today all three map.
+        for name in ROUTERS {
+            assert!(
+                BoardPolicy::from_router_name(name).is_some(),
+                "{name} has no board-backed equivalent"
+            );
+        }
+        assert!(BoardPolicy::from_router_name("pinned").is_none());
+    }
+
+    #[test]
+    fn board_router_keys_match_sequential_routers() {
+        let board = Arc::new(LoadBoard::new(3));
+        // worker 0: 3 queued; worker 1: 1 queued + 16 in flight;
+        // worker 2: 2 queued — same scenario as the sequential tests.
+        board.publish(0, 3, 0, 0);
+        board.publish(1, 1, 16, 0);
+        board.publish(2, 2, 0, 0);
+        let jsq = BoardRouter::new(board.clone(), BoardPolicy::JoinShortestQueue);
+        assert_eq!(jsq.pick(&[0, 1, 2]), 1, "JSQ ignores in-flight");
+        let ll = BoardRouter::new(board, BoardPolicy::LeastLoaded);
+        assert_eq!(ll.pick(&[0, 1, 2]), 2, "least-loaded counts in-flight");
+    }
+
+    #[test]
+    fn board_router_ties_rotate_and_round_robin_cycles() {
+        let board = Arc::new(LoadBoard::new(3));
+        let rr = BoardRouter::new(board.clone(), BoardPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| rr.pick(&[0, 1, 2])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // All-zero board: ties must cycle, not herd onto the first id.
+        let ll = BoardRouter::new(board, BoardPolicy::LeastLoaded);
+        let picks: Vec<usize> = (0..6).map(|_| ll.pick(&[0, 1, 2])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn note_routed_bumps_until_next_publish_overwrites() {
+        let board = Arc::new(LoadBoard::new(2));
+        board.publish(0, 0, 0, 0);
+        board.publish(1, 0, 0, 0);
+        let ll = BoardRouter::new(board.clone(), BoardPolicy::LeastLoaded);
+        // The optimistic bump steers the next pick away from worker 0...
+        board.note_routed(0);
+        assert_eq!(board.queued(0), 1);
+        assert_eq!(ll.pick(&[0, 1]), 1);
+        // ...and the owner's next authoritative publish overwrites it.
+        board.publish(0, 0, 0, 0);
+        assert_eq!(board.queued(0), 0);
+    }
+
+    #[test]
+    fn pinned_router_finds_global_id_in_candidate_snapshot() {
+        let target = Arc::new(AtomicUsize::new(2));
+        let mut r = Pinned::new(target.clone());
+        // Candidate set under a placement: global workers {1, 2, 5}.
+        let mut ls = loads(&[(0, 0), (0, 0), (0, 0)]);
+        ls[0].worker = 1;
+        ls[1].worker = 2;
+        ls[2].worker = 5;
+        assert_eq!(r.route(&req(), &ls), 1, "global id 2 sits at index 1");
+        target.store(5, Ordering::Release);
+        assert_eq!(r.route(&req(), &ls), 2);
+    }
+
+    #[test]
+    fn board_snapshot_roundtrip() {
+        let board = LoadBoard::new(1);
+        assert_eq!(board.len(), 1);
+        assert!(!board.is_empty());
+        board.publish(0, 7, 3, 12_500);
+        assert_eq!(board.queued(0), 7);
+        assert_eq!(board.inflight(0), 3);
+        assert_eq!(board.est_work_us(0), 12_500);
     }
 }

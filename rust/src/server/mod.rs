@@ -53,6 +53,9 @@ pub struct Server<S: Scheduler, W: Worker> {
     /// Anchored at construction so callers can stamp release times before
     /// the serving thread spins up.
     clock: RealClock,
+    /// Scheduling shards for the network pump (1 = the sequential pump;
+    /// see [`Server::with_shards`]).
+    shards: usize,
 }
 
 impl<S: Scheduler, W: Worker> Server<S, W> {
@@ -67,6 +70,7 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             admission: None,
             telemetry: None,
             clock: RealClock::new(),
+            shards: 1,
         }
     }
 
@@ -83,7 +87,19 @@ impl<S: Scheduler, W: Worker> Server<S, W> {
             admission: None,
             telemetry: None,
             clock: RealClock::new(),
+            shards: 1,
         }
+    }
+
+    /// Run the network pump as `n` independent scheduling shards, each
+    /// owning a contiguous block of replicas on its own thread with
+    /// load-aware routing over the lock-free `LoadBoard` (DESIGN.md §13).
+    /// Applies to [`BoundServer::run`] only; `n <= 1` — and any
+    /// configuration the shards can't split (elastic, admission,
+    /// telemetry, an unmapped router) — uses the sequential pump.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
     }
 
     /// Constrain which models each replica hosts (the router only routes a
@@ -200,7 +216,7 @@ impl<S: Scheduler, W: Worker> BoundServer<S, W> {
         if let Some(rec) = s.telemetry {
             core = core.with_telemetry(rec);
         }
-        realtime::serve_ingress(core, s.workers, self.net)
+        realtime::serve_ingress_sharded(core, s.workers, self.net, s.shards)
     }
 }
 

@@ -1,0 +1,166 @@
+//! Sharded wall-clock pump properties (DESIGN.md §13).
+//!
+//! Conservation under live loopback load for every system × shard count
+//! with load-aware routing over the `LoadBoard`: the total wire invariant
+//! (frames = completions + wire drops), every per-shard ledger (pops +
+//! handoffs in = completions + handoffs out), and the S=1 delegation
+//! contract — one scheduling shard must take the sequential pump path
+//! (empty shard ledger), which is what keeps the existing `serve_cluster`
+//! goldens byte-identical.
+
+use orloj::baselines;
+use orloj::core::batchmodel::BatchCostModel;
+use orloj::core::histogram::Histogram;
+use orloj::core::request::{AppId, ModelId};
+use orloj::scheduler::{Scheduler, SchedulerConfig};
+use orloj::serve::ingress::{IngressConfig, IngressController, IngressCounts};
+use orloj::serve::realtime::ServeResult;
+use orloj::serve::router;
+use orloj::server::Server;
+use orloj::sim::worker::SimWorker;
+use orloj::workload::loadgen::{self, LoadgenConfig};
+
+type ServerHandle = (
+    std::net::SocketAddr,
+    IngressController,
+    std::thread::JoinHandle<(ServeResult, IngressCounts)>,
+);
+
+/// A four-replica sim-worker server behind the TCP ingress on an
+/// ephemeral loopback port, pumping with `sched_shards` scheduling
+/// shards on its own thread(s).
+fn start_server(system: &str, router_name: &str, sched_shards: usize) -> ServerHandle {
+    let workers = 4;
+    let cfg = SchedulerConfig {
+        cost_model: BatchCostModel::calibrated(2.0),
+        ..Default::default()
+    };
+    let hist = Histogram::from_weights(1.5, 1.0, &[1.0]);
+    let replicas: Vec<(Box<dyn Scheduler>, SimWorker)> = (0..workers)
+        .map(|w| {
+            let mut sched =
+                baselines::by_name(system, cfg.clone(), w as u64).expect("known system");
+            for app in 0..4u32 {
+                sched.seed_app_profile(ModelId(0), AppId(app), &hist, 100);
+            }
+            (sched, SimWorker::new(cfg.cost_model, 0.0, w as u64))
+        })
+        .collect();
+    let server = Server::cluster(replicas, router::by_name(router_name).unwrap())
+        .with_shards(sched_shards);
+    let icfg = IngressConfig {
+        shards: 2,
+        ring_capacity: 1 << 12,
+        ..Default::default()
+    };
+    let bound = server.listen("127.0.0.1:0", icfg).expect("bind loopback");
+    let addr = bound.local_addr();
+    let ctl = bound.controller();
+    let handle = std::thread::spawn(move || bound.run());
+    (addr, ctl, handle)
+}
+
+fn drive(system: &str, router_name: &str, sched_shards: usize) -> (ServeResult, IngressCounts) {
+    let (addr, ctl, handle) = start_server(system, router_name, sched_shards);
+    let rep = loadgen::run(&LoadgenConfig {
+        addr: addr.to_string(),
+        conns: 8,
+        rate_per_s: 2_000.0,
+        duration_s: 0.3,
+        apps: 2,
+        models: 1,
+        slo_multiple: 50.0,
+        exec_ms: 2.0,
+        payload: 16,
+        seed: 11,
+        workers: 2,
+        drain_timeout_s: 10.0,
+    })
+    .expect("loadgen runs");
+    ctl.begin_drain();
+    let (res, counts) = handle.join().expect("server pump panicked");
+    let tag = format!("{system}/{router_name}/s{sched_shards}");
+    assert!(rep.sent > 0, "{tag}: loadgen sent nothing");
+    assert_eq!(
+        rep.conservation_violations, 0,
+        "{tag}: every request must be answered ({rep:?})"
+    );
+    assert!(rep.finished > 0, "{tag}: nothing finished ({rep:?})");
+    (res, counts)
+}
+
+#[test]
+fn sharded_conservation_across_systems() {
+    for system in ["orloj", "clipper", "clockwork", "nexus", "edf"] {
+        for sched_shards in [1usize, 2, 4] {
+            let (res, counts) = drive(system, "least_loaded", sched_shards);
+            let tag = format!("{system}/s{sched_shards}");
+            // Total wire invariant, shards or not.
+            assert_eq!(
+                counts.frames,
+                res.completions.len() as u64 + counts.wire_drops,
+                "{tag}: frames either complete or drop ({counts:?})"
+            );
+            if sched_shards <= 1 {
+                // S=1 must delegate to the sequential pump — the golden
+                // and byte-compat guarantee; no shard ledger exists.
+                assert!(res.shards.is_empty(), "{tag}: S=1 must not shard");
+            } else {
+                assert_eq!(res.shards.len(), sched_shards, "{tag}: one ledger per shard");
+                for ss in &res.shards {
+                    assert!(
+                        ss.conserved(),
+                        "{tag}: shard {} ledger imbalance ({ss:?})",
+                        ss.shard
+                    );
+                }
+                let shard_completions: u64 = res.shards.iter().map(|s| s.completions).sum();
+                assert_eq!(
+                    shard_completions,
+                    res.completions.len() as u64,
+                    "{tag}: merged completions must equal the shard ledgers"
+                );
+                let popped: u64 = res.shards.iter().map(|s| s.popped).sum();
+                assert_eq!(
+                    popped,
+                    counts.frames - counts.wire_drops,
+                    "{tag}: every undropped frame was popped by exactly one shard"
+                );
+                // Handoffs balance globally: nothing vanished in transit.
+                let out: u64 = res.shards.iter().map(|s| s.handoff_out).sum();
+                let inn: u64 = res.shards.iter().map(|s| s.handoff_in).sum();
+                assert_eq!(out, inn, "{tag}: handoff rings drained");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_jsq_routing_conserves_too() {
+    // The other board-backed load-aware policy takes the same path.
+    let (res, counts) = drive("orloj", "join_shortest_queue", 2);
+    assert_eq!(counts.frames, res.completions.len() as u64 + counts.wire_drops);
+    assert_eq!(res.shards.len(), 2);
+    assert!(res.shards.iter().all(|s| s.conserved()));
+}
+
+#[test]
+fn sharded_merge_lifts_worker_ids_to_global() {
+    // With 4 workers in 4 shards every completion's worker id is local 0
+    // in its sub-core; the merge must lift them back onto 0..4, and the
+    // per-worker stats must cover distinct global ids.
+    let (res, _counts) = drive("edf", "least_loaded", 4);
+    assert_eq!(res.per_worker.len(), 4);
+    let mut ids: Vec<usize> = res.per_worker.iter().map(|w| w.worker).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3], "global worker ids after the merge");
+    assert!(
+        res.completions.iter().filter_map(|c| c.worker).all(|w| w < 4),
+        "completion worker ids are global"
+    );
+    // Completions come back merged in completion-time order.
+    assert!(
+        res.completions.windows(2).all(|p| p[0].at <= p[1].at),
+        "merge sorts by completion time"
+    );
+}

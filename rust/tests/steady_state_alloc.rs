@@ -15,7 +15,10 @@
 //!   the returned batch `Vec` remain, see DESIGN.md §7);
 //! * a warm admission controller decides arrival fates (DESIGN.md §10)
 //!   with **zero** allocations — the per-app table and class profiles
-//!   only grow on first sight.
+//!   only grow on first sight;
+//! * the sharded pump's per-frame wire path — arrival partition, load
+//!   board, handoff ring (DESIGN.md §13) — runs with **zero** allocations
+//!   once its rings and board are built.
 
 use orloj::clock::ms_to_us;
 use orloj::core::batchmodel::BatchCostModel;
@@ -326,6 +329,81 @@ fn warm_ingress_ring_and_frame_codec_allocate_nothing() {
     assert_eq!(
         allocs, 0,
         "warm ring transfer + frame parse/encode must be allocation-free"
+    );
+}
+
+#[test]
+fn warm_sharded_wire_path_allocates_nothing() {
+    // The sharded pump's per-frame work (DESIGN.md §13): decode a wire
+    // frame, build the stack `Request`, push/pop an arrival partition,
+    // take a routing decision off the lock-free `LoadBoard`, note the
+    // optimistic cross-shard bump, hop the Vyukov handoff ring, publish
+    // the shard's refreshed loads, and encode the reply. Every structure
+    // is allocated at shard start-up; the warm per-frame cycle must never
+    // touch the allocator.
+    use orloj::serve::ingress::{
+        decode_frame, encode_frame, encode_reply, Reply, ReqFrame, REQ_HEADER_LEN,
+    };
+    use orloj::serve::ring::ArrivalRing;
+    use orloj::serve::router::{BoardPolicy, BoardRouter, LoadBoard};
+    use std::sync::Arc;
+
+    let partition: ArrivalRing<Request> = ArrivalRing::new(256);
+    let handoff: ArrivalRing<(usize, Request)> = ArrivalRing::new(256);
+    let board = Arc::new(LoadBoard::new(4));
+    let picker = BoardRouter::new(Arc::clone(&board), BoardPolicy::LeastLoaded);
+    for w in 0..4 {
+        board.publish(w, w, 1, 500 * w as u64);
+    }
+    let candidates: Vec<usize> = (0..4).collect();
+    let frame_bytes: [u8; REQ_HEADER_LEN] = encode_frame(&ReqFrame {
+        seq: 3,
+        app: 0,
+        model: 0,
+        slo_us: 250_000,
+        exec_us: 5_000,
+        payload_len: 0,
+    });
+    let (allocs, routed) = count_allocs(|| {
+        let mut routed = 0usize;
+        let mut reply_bytes = 0usize;
+        for i in 0..1_000u64 {
+            let f = decode_frame(&frame_bytes, 1 << 20).expect("valid frame");
+            let req = Request::new(
+                i,
+                AppId(f.app),
+                i * 100,
+                u64::from(f.slo_us),
+                f.exec_us as f64 / 1000.0,
+            )
+            .with_model(ModelId(f.model));
+            partition.push(req).expect("partition has room");
+            let req = partition.pop().expect("we just pushed");
+            let w = picker.pick(&candidates);
+            board.note_routed(w);
+            handoff.push((w, req)).expect("handoff has room");
+            let (w, _req) = handoff.pop().expect("we just handed off");
+            routed += usize::from(w < 4);
+            board.publish(w, 1, 1, 2_000);
+            let out = encode_reply(&Reply {
+                slot: 0,
+                gen: 0,
+                seq: f.seq,
+                outcome: 0,
+                best_effort: 0,
+                batch_size: 1,
+                latency_us: 1_000,
+                done_at_us: i,
+            });
+            reply_bytes += out.len();
+        }
+        assert!(reply_bytes > 0);
+        routed
+    });
+    assert_eq!(routed, 1_000);
+    assert_eq!(
+        allocs, 0,
+        "warm sharded wire path (partition + board + handoff) must be allocation-free"
     );
 }
 
